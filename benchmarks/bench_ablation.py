@@ -1,0 +1,41 @@
+"""Paper Table 3: component ablation (anchor / passing / compressor /
+query-embedding) on the synthetic retrieval task (E.MC proxy).
+
+A tiny transformer trained from scratch on passkey retrieval (the only
+way to get task-quality signal offline — DESIGN.md §7); the reproduction
+target is the paper's *orderings*:
+  * row 0 (everything on) is the best APB configuration,
+  * trained retaining heads beat random selection (0 > 2),
+  * removing the passing block hurts (0 > 4),
+  * removing the anchor block is catastrophic (6/7/8 near-fail).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from benchmarks.tiny_task import TABLE3, evaluate, train_tiny
+
+
+def run():
+    params = train_tiny()
+    acc = {}
+    for setting in TABLE3:
+        t0 = time.perf_counter()
+        acc[setting.name] = evaluate(params, setting, hosts=4)
+        emit(f"table3_{setting.name}",
+             (time.perf_counter() - t0) * 1e6 / 48,
+             f"acc={acc[setting.name]:.3f}")
+
+    full_apb = acc["0_A+P+R+Q"]
+    assert full_apb >= acc["2_A+P+Rd+Q"] - 0.05, acc   # R >= random
+    assert full_apb >= acc["4_A-P+Q"] - 0.05, acc      # passing helps
+    assert acc["8_-A-P"] <= full_apb, acc              # no anchor+passing
+    emit("table3_summary", 0.0,
+         f"apb={full_apb:.2f};random_C={acc['2_A+P+Rd+Q']:.2f};"
+         f"star={acc['4_A-P+Q']:.2f};none={acc['8_-A-P']:.2f};"
+         f"full={acc['full']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

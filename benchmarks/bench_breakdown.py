@@ -1,0 +1,121 @@
+"""Paper Figure 5 / Table 13: wall-time breakdown of one Transformer
+block's prefill into QKV projection / retaining heads / communication /
+attention / O projection / FFN.
+
+CPU-scaled dims (d=512, n=16K, H=8 emulated hosts -> l_b=2K); the
+reproduction target is the *structure*: APB attention < STARATTN
+attention < FULLATTN attention, with retaining-head + communication
+overheads small relative to the attention savings (Table 13: 1.72ms +
+0.62ms overhead vs 631ms attention saving at 128K).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import compressor as comp
+from repro.core.splitting import make_layout
+from repro.kernels import ops
+from repro.models import attention_layer as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models.ffn import ffn_apply, ffn_init
+from repro.configs.base import ModelConfig, ATTN
+
+N, HOSTS = 16_384, 8
+CFG = ModelConfig(
+    name="bench", family="dense", source="-", num_layers=1, d_model=512,
+    num_heads=8, num_kv_heads=2, head_dim=64, d_ff=2048, vocab_size=1000,
+    compressor_hidden=256)
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    lay = make_layout(N, 0, HOSTS)
+    la, lb, pcap, lp = lay.la, lay.lb, lay.pcap, lay.lp
+    d = CFG.d_model
+
+    from repro.models.attention_layer import attn_init, attn_qkv, attn_out
+    from repro.core.compressor import compressor_init, compressor_scores
+
+    p_attn = attn_init(key, CFG)
+    p_ret = compressor_init(jax.random.fold_in(key, 1), CFG)
+    p_ffn = ffn_init(jax.random.fold_in(key, 2), d, CFG.d_ff)
+
+    x_local = jax.random.normal(key, (1, lb, d)) * 0.1
+    x_star = jax.random.normal(key, (1, 2 * lb, d)) * 0.1     # anchor=block
+    x_apb = jax.random.normal(key, (1, la + lb, d)) * 0.1
+
+    t = {}
+    qkv_fn = jax.jit(lambda x: attn_qkv(p_attn, CFG, x,
+                                        jnp.arange(x.shape[1])[None]))
+    t["qkv"] = time_fn(qkv_fn, x_apb)
+    q, k, v = qkv_fn(x_apb)
+    qa, ql = q[:, :la], q[:, la:]
+    ka, kl = k[:, :la], k[:, la:]
+    va, vl = v[:, :la], v[:, la:]
+
+    ret_fn = jax.jit(lambda q_, k_, v_: compressor_scores(p_ret, q_, k_, v_))
+    t["retain"] = time_fn(ret_fn, ql, kl, vl)
+
+    scores = ret_fn(ql, kl, vl)
+    sel_fn = jax.jit(lambda s, k_, v_: comp.select_topk(s, k_, v_, lp))
+    ksel, vsel, _ = sel_fn(scores, kl, vl)
+    # "communication": emulated AllGather = stacking H compressed blocks
+    comm_fn = jax.jit(
+        lambda ks_, vs_: (jnp.concatenate([ks_] * HOSTS, 1),
+                          jnp.concatenate([vs_] * HOSTS, 1)))
+    t["comm"] = time_fn(comm_fn, ksel, vsel) + time_fn(sel_fn, scores,
+                                                       kl, vl)
+    kp, vp = comm_fn(ksel, vsel)
+
+    apb_attn = jax.jit(lambda *a: ops.apb_attention(
+        *a, anchor_valid=la, pass_valid=pcap, use_kernel=False))
+    t["attn_apb"] = time_fn(apb_attn, qa, ql, ka, kp, kl, va, vp, vl)
+
+    # STARATTN: anchor = block size, no passing
+    q2, k2, v2 = qkv_fn(x_star)
+    empty = k2[:, :0]
+    star_attn = jax.jit(lambda *a: ops.apb_attention(
+        a[0], a[1], a[2], a[3], a[4], a[5], a[6], a[7],
+        anchor_valid=lb, pass_valid=0, use_kernel=False))
+    t["attn_star"] = time_fn(star_attn, q2[:, :lb], q2[:, lb:], k2[:, :lb],
+                             empty, k2[:, lb:], v2[:, :lb], empty[:, :0],
+                             v2[:, lb:])
+
+    # FULLATTN: whole sequence on one host
+    xf = jax.random.normal(key, (1, N, d)) * 0.1
+    qf, kf, vf = qkv_fn(xf)
+    full_attn = jax.jit(lambda q_, k_, v_: ops.causal_flash_attention(
+        q_, k_, v_, use_kernel=False))
+    t["attn_full"] = time_fn(full_attn, qf, kf, vf)
+
+    o = apb_attn(qa, ql, ka, kp, kl, va, vp, vl)
+    o_cat = jnp.concatenate(o, 1)
+    oproj_fn = jax.jit(lambda a: attn_out(p_attn, CFG, a))
+    t["o_proj"] = time_fn(oproj_fn, o_cat)
+
+    ffn_fn = jax.jit(lambda x: ffn_apply(p_ffn, x))
+    t["ffn_apb"] = time_fn(ffn_fn, x_apb)
+    t["ffn_star"] = time_fn(ffn_fn, x_star)
+    t["ffn_local"] = time_fn(ffn_fn, x_local)
+
+    for name, us in t.items():
+        emit(f"fig5_{name}", us, "")
+
+    # Table 13 structural claims
+    assert t["attn_apb"] < t["attn_star"] < t["attn_full"], t
+    overhead = t["retain"] + t["comm"]
+    saving = t["attn_star"] - t["attn_apb"] + (t["ffn_star"] - t["ffn_apb"])
+    emit("fig5_overhead_vs_saving", 0.0,
+         f"overhead={overhead:.0f}us;saving={saving:.0f}us;"
+         f"net={'win' if saving > overhead else 'loss'}")
+    block_apb = (t["qkv"] + t["retain"] + t["comm"] + t["attn_apb"]
+                 + t["o_proj"] + t["ffn_apb"])
+    block_star = (t["qkv"] + t["attn_star"] + t["o_proj"] + t["ffn_star"])
+    emit("fig5_block_apb_vs_star", block_apb,
+         f"star={block_star:.0f}us;speedup={block_star/block_apb:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

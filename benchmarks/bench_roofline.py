@@ -1,0 +1,45 @@
+"""Roofline table (EXPERIMENTS.md §Roofline) — reads the dry-run JSONL
+records and prints the three terms per (arch x shape).  The dry-run
+itself (512 fake devices) must run in its own process:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun_1pod.jsonl
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def run():
+    found = False
+    for fname in ["dryrun_1pod.jsonl", "dryrun_2pod.jsonl"]:
+        path = os.path.join(RESULTS, fname)
+        if not os.path.exists(path):
+            continue
+        found = True
+        seen = {}
+        for line in open(path):
+            r = json.loads(line)
+            seen[(r["arch"], r["shape"], r["multi_pod"])] = r
+        for (arch, shape, mp), r in sorted(seen.items()):
+            tag = "2pod" if mp else "1pod"
+            if r["status"] != "ok":
+                emit(f"roofline_{arch}_{shape}_{tag}", 0.0, "ERROR")
+                continue
+            rf = r["roofline"]
+            emit(f"roofline_{arch}_{shape}_{tag}",
+                 max(rf["compute_s"], rf["memory_s"],
+                     rf["collective_s"]) * 1e6,
+                 f"dom={rf['dominant']};mem_gb="
+                 f"{r['bytes_per_device_gb']:.1f};useful="
+                 f"{rf['useful_flops_ratio']:.2f}")
+    if not found:
+        emit("roofline", 0.0, "no dryrun results yet (run dryrun --all)")
+
+
+if __name__ == "__main__":
+    run()

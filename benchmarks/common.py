@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: timing harness + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (one per
+paper table/figure entry) so ``python -m benchmarks.run`` output is
+machine-readable; "derived" carries the headline quantity the paper's
+table reports (a speedup, accuracy, or FLOPs ratio).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            **kw) -> float:
+    """Median wall-time per call in microseconds (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

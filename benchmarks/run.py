@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("flops_table6", "benchmarks.bench_flops_table6"),   # Table 6 / Fig 4c
+    ("prefill_speed", "benchmarks.bench_prefill_speed"), # Fig 1 / Table 11
+    ("breakdown", "benchmarks.bench_breakdown"),         # Fig 5 / Table 13
+    ("ablation", "benchmarks.bench_ablation"),           # Table 3
+    ("hosts", "benchmarks.bench_hosts"),                 # Table 4
+    ("roofline", "benchmarks.bench_roofline"),           # EXPERIMENTS §Roofline
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, module in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            import importlib
+            importlib.import_module(module).run()
+            print(f"# {name}: ok in {time.time()-t0:.0f}s", file=sys.stderr)
+        except Exception:
+            failed.append(name)
+            print(f"# {name}: FAILED\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

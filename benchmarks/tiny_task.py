@@ -1,0 +1,211 @@
+"""Shared tiny-model harness for the quality benchmarks (Tables 3/4).
+
+Trains a small GQA transformer from scratch on the synthetic passkey task
+(answer tokens supervised after the query), then trains its retaining
+heads per the paper's recipe.  Both artifacts are cached under
+``results/bench_tiny`` so the ablation and host-count benches share one
+training run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.core.splitting import APBLayout, make_layout
+from repro.data import synthetic
+from repro.models import model as model_lib
+from repro.models.transformer import RunCtx
+from repro.serving import cache as cache_lib
+from repro.training import checkpoint as ckpt
+from repro.training import optimizer as opt
+from repro.training import train_compressor as tc
+
+CKPT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "bench_tiny")
+
+CFG = ModelConfig(
+    name="tiny-retrieval", family="dense", source="-",
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+    d_ff=256, vocab_size=64, block_pattern=(ATTN,),
+    compressor_hidden=128, anchor_frac=0.25, passing_frac=0.125)
+
+N_DOC, LQ, ANS = 64, 8, 2
+TRAIN_STEPS = 2000
+COMP_STEPS = 120
+BATCH = 16
+
+
+def _task_batch(rng, batch, kind="passkey", n=N_DOC):
+    d, q, a = synthetic.batch_samples(rng, kind, batch, n, LQ,
+                                      CFG.vocab_size, key_len=3,
+                                      val_len=ANS)
+    return (jnp.asarray(d), jnp.asarray(q), jnp.asarray(a))
+
+
+def _train_batch(rng, batch):
+    """Training variant with dense induction signal: the needle appears
+    TWICE in the document; the second occurrence's value tokens are
+    supervised too (long-range copy practice), on top of the final
+    answer.  Eval uses the plain single-needle task."""
+    docs, queries, answers, masks = [], [], [], []
+    for _ in range(batch):
+        smp = synthetic.passkey_sample(rng, N_DOC, LQ, CFG.vocab_size,
+                                       key_len=3, val_len=ANS)
+        doc = smp.document.copy()
+        # locate the needle and plant a copy in the other half
+        needle = np.concatenate([[synthetic.KEY_MARK], smp.query[-3:],
+                                 smp.answer,
+                                 [synthetic.KEY_MARK]]).astype(np.int32)
+        first = int(smp.depth * (N_DOC - len(needle)))
+        lo, hi = ((N_DOC // 2, N_DOC - len(needle))
+                  if first < N_DOC // 2 - len(needle) else
+                  (0, N_DOC // 2 - len(needle)))
+        second = int(rng.integers(lo, max(lo + 1, hi)))
+        doc[second:second + len(needle)] = needle
+        mask = np.zeros(N_DOC + LQ + ANS - 1, np.float32)
+        later = max(first, second)
+        # value tokens of the LATER copy (predictable by induction)
+        mask[later + 3:later + 3 + ANS] = 1.0
+        mask[-ANS:] = 2.0                       # the real answer
+        docs.append(doc)
+        queries.append(smp.query)
+        answers.append(smp.answer)
+        masks.append(mask)
+    return (jnp.asarray(np.stack(docs)), jnp.asarray(np.stack(queries)),
+            jnp.asarray(np.stack(answers)), jnp.asarray(np.stack(masks)))
+
+
+def train_tiny(log_fn=print, force: bool = False):
+    """Returns trained params (model + retaining heads)."""
+    model = model_lib.build(CFG)
+    params0 = model.init(jax.random.PRNGKey(0))
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params0)
+    if not force and os.path.exists(os.path.join(CKPT_DIR,
+                                                 "manifest.json")):
+        params, _ = ckpt.restore(CKPT_DIR, like)
+        log_fn("[tiny] restored cached model")
+        return params
+
+    rng = np.random.default_rng(0)
+    rctx = RunCtx(strategy="full")
+
+    def loss_fn(params, d, q, a, w):
+        # LM over [doc, query, answer]; loss on the duplicated-needle
+        # value tokens (induction practice) + the final answer
+        seq = jnp.concatenate([d, q, a], axis=1)
+        from repro.models import transformer as tf
+        positions = jnp.arange(seq.shape[1])[None]
+        hidden, _, _ = tf.forward_prefill(params, CFG, seq[:, :-1],
+                                          positions[:, :-1], rctx)
+        lg = tf.logits(params, CFG, hidden)
+        ll = jax.nn.log_softmax(lg, axis=-1)
+        tgt = seq[:, 1:]
+        nll = -jnp.take_along_axis(ll, tgt[..., None], axis=-1)[..., 0]
+        # mask is over target positions: it was built for len(seq)-1
+        return jnp.sum(nll * w) / jnp.sum(w)
+
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=100, schedule="constant",
+                           total_steps=TRAIN_STEPS, clip_norm=1.0)
+    state = opt.adamw_init(params0)
+    params = params0
+
+    @jax.jit
+    def step(params, state, d, q, a, w):
+        loss, grads = jax.value_and_grad(loss_fn)(params, d, q, a, w)
+        params, state, _ = opt.adamw_update(ocfg, grads, state, params)
+        return params, state, loss
+
+    for i in range(TRAIN_STEPS):
+        d, q, a, w = _train_batch(rng, BATCH)
+        params, state, loss = step(params, state, d, q, a, w)
+        if i % 200 == 0 or i == TRAIN_STEPS - 1:
+            log_fn(f"[tiny] step {i} loss {float(loss):.4f}")
+
+    # ---- retaining heads (paper App. B.1 recipe) -------------------------
+    def gen():
+        while True:
+            d, q, a = _task_batch(rng, 4)
+            yield np.concatenate([np.asarray(d), np.asarray(q)], 1)
+
+    params, closs = tc.train_compressor(params, CFG, gen(),
+                                        steps=COMP_STEPS, lq=LQ,
+                                        log_every=40, log_fn=log_fn)
+    log_fn(f"[tiny] compressor loss {closs:.4f}")
+    ckpt.save(CKPT_DIR, params)
+    return params
+
+
+@dataclasses.dataclass(frozen=True)
+class Setting:
+    """One Table-3 row."""
+    name: str
+    anchor: bool = True
+    passing: bool = True
+    compressor: str = "retain"      # retain | random
+    query_embed: bool = True
+    strategy: str = "apb"           # apb | star | full
+
+
+TABLE3 = [
+    Setting("0_A+P+R+Q"),
+    Setting("1_A+P+R-Q", query_embed=False),
+    Setting("2_A+P+Rd+Q", compressor="random"),
+    Setting("3_A+P+Rd-Q", compressor="random", query_embed=False),
+    Setting("4_A-P+Q", passing=False, strategy="star"),
+    Setting("5_A-P-Q", passing=False, query_embed=False, strategy="star"),
+    Setting("6_-A+P+R", anchor=False, query_embed=False),
+    Setting("7_-A+P+Rd", anchor=False, compressor="random",
+            query_embed=False),
+    Setting("8_-A-P", anchor=False, passing=False, query_embed=False,
+            strategy="star"),
+    Setting("full", strategy="full"),
+]
+
+
+def evaluate(params, setting: Setting, hosts: int = 4, n_eval: int = 48,
+             n_doc: int = None, seed: int = 123, kind: str = "passkey"):
+    """Exact-match retrieval accuracy under one APB configuration."""
+    if n_doc is None:
+        n_doc = N_DOC
+    model = model_lib.build(CFG)
+    rng = np.random.default_rng(seed)
+    d, q, a = _task_batch(rng, n_eval, kind=kind, n=n_doc)
+
+    if setting.strategy == "full":
+        rctx = RunCtx(strategy="full")
+    else:
+        lay = make_layout(
+            n_doc, LQ if setting.query_embed else 0, hosts,
+            anchor_frac=CFG.anchor_frac if setting.anchor else 0.0,
+            passing_frac=CFG.passing_frac if setting.passing else 0.0)
+        rctx = RunCtx(strategy=setting.strategy, layout=lay,
+                      compressor_method=setting.compressor,
+                      rng=jax.random.PRNGKey(9))
+
+    @jax.jit
+    def run(params, d, q):
+        lg, caches, q_tails = model.prefill_step(params, d, q, rctx)
+        caches_d = cache_lib.absorb_query_states(
+            cache_lib.to_decode_caches(caches), q_tails)
+        tails = cache_lib.init_tails(q_tails)
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        outs = [tok]
+        pos0 = LQ + n_doc + LQ
+        for step in range(ANS - 1):
+            pos = jnp.full((d.shape[0], 1), pos0 + step, jnp.int32)
+            lg2, upd = model.serve_step(params, tok, pos, caches_d, tails,
+                                        rctx)
+            caches_d, tails = cache_lib.append_updates(caches_d, tails, upd)
+            tok = jnp.argmax(lg2, -1)[:, None].astype(jnp.int32)
+            outs.append(tok)
+        return jnp.concatenate(outs, axis=1)
+
+    pred = np.asarray(run(params, d, q))
+    return float((pred == np.asarray(a)).all(axis=1).mean())

@@ -1,0 +1,29 @@
+"""Needle-in-a-haystack quality comparison: FULL vs APB vs STARATTN vs
+APB-with-random-compressor, on a tiny model trained for retrieval
+(the paper's Table 3/4 story in one script).
+
+    PYTHONPATH=src python examples/needle_retrieval.py
+"""
+from benchmarks.tiny_task import Setting, evaluate, train_tiny
+
+
+def main():
+    params = train_tiny()
+    rows = [
+        ("full attention", Setting("full", strategy="full")),
+        ("APB (trained retaining heads)", Setting("apb")),
+        ("APB (random compressor)", Setting("rnd", compressor="random")),
+        ("STARATTN (anchor only)", Setting("star", passing=False,
+                                           strategy="star")),
+        ("no anchor, no passing", Setting("none", anchor=False,
+                                          passing=False, strategy="star",
+                                          query_embed=False)),
+    ]
+    print(f"{'setting':36s} H=2    H=4    H=8")
+    for name, s in rows:
+        accs = [evaluate(params, s, hosts=h) for h in (2, 4, 8)]
+        print(f"{name:36s} " + "  ".join(f"{a:.3f}" for a in accs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end serving driver (deliverable b): batched long-context
+requests served with APB sequence parallelism on a real (emulated
+8-device) mesh — the shard_map path, not the host-loop emulation.
+
+    PYTHONPATH=src python examples/serve_longcontext.py
+
+Compares APB / STARATTN / RINGATTN prefill wall-time on the same batch
+and verifies the generated answers against the full-attention reference.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.splitting import make_layout
+from repro.core.strategies import ParallelCtx
+from repro.data import synthetic
+from repro.launch.mesh import make_test_mesh
+from repro.models import model as model_lib
+from repro.models.transformer import RunCtx
+from repro.serving.engine import Engine
+
+HOSTS = 8
+N_DOC, LQ, B = 2048, 16, 2
+
+
+def main():
+    cfg = get_config("granite-3-2b").reduced()
+    mesh = make_test_mesh(n_model=HOSTS)
+    print(f"mesh: {dict(mesh.shape)}  devices={len(jax.devices())}")
+
+    model = model_lib.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pctx = ParallelCtx(mesh=mesh, seq_axis="model", batch_axes=("data",))
+    layout = make_layout(N_DOC, LQ, HOSTS, anchor_frac=cfg.anchor_frac,
+                         passing_frac=cfg.passing_frac)
+
+    rng = np.random.default_rng(0)
+    doc = jnp.asarray(rng.integers(10, cfg.vocab_size, (B, N_DOC)),
+                      jnp.int32)
+    query = jnp.asarray(rng.integers(10, cfg.vocab_size, (B, LQ)),
+                        jnp.int32)
+
+    results = {}
+    for strategy in ["apb", "star", "ring", "full"]:
+        rctx = RunCtx(
+            strategy=strategy, pctx=pctx if strategy != "full" else
+            ParallelCtx(),
+            layout=layout if strategy in ("apb", "star") else None,
+            cache_axes=("model",) if strategy != "full" else ())
+        engine = Engine(cfg, params, rctx)
+        res = engine.generate(doc, query, max_new_tokens=6)
+        results[strategy] = res
+        print(f"{strategy:6s} prefill {res.prefill_time_s*1e3:8.1f} ms  "
+              f"decode {res.decode_time_s*1e3:7.1f} ms  "
+              f"tokens[0]={res.tokens[0].tolist()}")
+
+    ref = results["full"].tokens
+    for s in ["ring"]:
+        match = (results[s].tokens == ref).mean()
+        print(f"{s} vs full token agreement: {match:.2%} (exact method)")
+    for s in ["apb", "star"]:
+        match = (results[s].tokens == ref).mean()
+        print(f"{s} vs full token agreement: {match:.2%} "
+              f"(approximate method, random weights)")
+
+
+if __name__ == "__main__":
+    main()

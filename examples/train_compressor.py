@@ -1,0 +1,58 @@
+"""Train the APB retaining-head compressor (paper App. B.1 recipe) with a
+frozen backbone, then show the effect on passkey retrieval quality.
+
+    PYTHONPATH=src python examples/train_compressor.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.splitting import make_layout
+from repro.data import synthetic
+from repro.models import model as model_lib
+from repro.models.transformer import RunCtx
+from repro.training import train_compressor as tc
+
+
+def main():
+    cfg = get_config("granite-3-2b").reduced()
+    model = model_lib.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    lq = 8
+
+    def gen():
+        while True:
+            d, q, _ = synthetic.batch_samples(rng, "passkey", 4, 120, lq,
+                                              cfg.vocab_size)
+            yield np.concatenate([d, q], 1)
+
+    print("training retaining heads (frozen backbone, regression + "
+          "smoothing loss, AdamW 5e-4, linear warmup)...")
+    params, loss = tc.train_compressor(params, cfg, gen(), steps=60,
+                                       lq=lq, log_every=20)
+    print(f"final compressor loss: {loss:.5f}")
+
+    # show the learned scores pick up the needle region
+    d, q, a = synthetic.batch_samples(rng, "passkey", 1, 120, lq,
+                                      cfg.vocab_size)
+    tokens = jnp.asarray(np.concatenate([d, q], 1))
+    captured = tc.capture_qkv(params, cfg, tokens,
+                              jnp.arange(tokens.shape[1])[None])
+    labels = tc.importance_labels(captured, lq)
+    retain = tc.extract_retain(params, cfg)
+    from repro.core.compressor import compressor_scores
+    slot = captured[0]
+    scores = jax.vmap(compressor_scores)(retain[0], slot["q"][:, :, :-lq],
+                                         slot["k"][:, :, :-lq],
+                                         slot["v"][:, :, :-lq])
+    top_pred = np.argsort(np.asarray(scores[0, 0]).sum(-1))[-12:]
+    top_true = np.argsort(np.asarray(labels[0][0, 0]).sum(-1))[-12:]
+    overlap = len(set(top_pred) & set(top_true)) / 12
+    print(f"top-12 overlap between retaining-head scores and the oracle "
+          f"(query-attention mass): {overlap:.0%}")
+
+
+if __name__ == "__main__":
+    main()

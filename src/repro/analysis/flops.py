@@ -1,0 +1,63 @@
+"""Analytic FLOPs formulas — reproduction of the paper's Table 6.
+
+FLOPs per forward call for FULLATTN / STARATTN / APB (paper notation:
+L layers, n input length, d model width, I FFN intermediate, g GQA group
+factor (heads per kv head... the paper uses 1/g for the kv projections),
+H hosts, l_a anchor length, l_p passing length).
+
+These formulas are validated against ``cost_analysis()`` of the compiled
+programs in benchmarks/bench_flops_table6.py and plotted-as-CSV to
+reproduce Figure 4(c).
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def fullattn_flops(l: int, n: int, d: int, i: int, g: float) -> float:
+    """Table 6 row 1: L · (4 n d² + 4/g n d² + 2 n² d + 6 n d I)."""
+    return l * (4 * n * d**2 + (4 / g) * n * d**2 + 2 * n**2 * d
+                + 6 * n * d * i)
+
+
+def starattn_flops(l: int, n: int, d: int, i: int, g: float,
+                   h: int) -> float:
+    """Table 6 row 2 (anchor = block = n/H):
+    L/H · [(8H−4) n d² + (8H−6)/g n d² + (8H−6)/H n² d + (12H−6) n d I]."""
+    return (l / h) * ((8 * h - 4) * n * d**2
+                      + ((8 * h - 6) / g) * n * d**2
+                      + ((8 * h - 6) / h) * n**2 * d
+                      + (12 * h - 6) * n * d * i)
+
+
+def apb_flops(l: int, n: int, d: int, i: int, g: float, h: int,
+              la: int, lp: int) -> float:
+    """Table 6 row 3.
+
+    Host 0 processes n/H tokens; hosts 1..H-1 process (n/H + l_a) tokens
+    (anchor included), each with projections, local attention, passing/
+    anchor attention and FFN; plus the passing-block attention term."""
+    nh = n / h
+    t0 = 4 * (1 + 1 / g + 0.5 * nh / d + 1.5 * i / d) * nh * d**2
+    t1 = 4 * (h - 1) * (1 + 1 / g + 0.5 * (nh + la) / d + 1.5 * i / d) \
+        * (nh + la) * d**2
+    t2 = lp * h * (h - 1) * (nh + la) * d
+    return l * (t0 + t1 + t2)
+
+
+def cfg_terms(cfg: ModelConfig):
+    """(L, d, I, g) for a config (attention layers only)."""
+    g = max(1, cfg.num_heads // max(cfg.num_kv_heads, 1))
+    n_attn = sum(1 for k in cfg.block_pattern
+                 if k.mixer == "attn") * cfg.num_blocks
+    return n_attn, cfg.d_model, cfg.d_ff, g
+
+
+def model_flops(cfg: ModelConfig, n_tokens: int, train: bool = False
+                ) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE); 3x for train (fwd+bwd)."""
+    n_params = cfg.active_param_count()
+    f = 2.0 * n_params * n_tokens          # fwd matmul MACs x2
+    if train:
+        f *= 3.0
+    return f

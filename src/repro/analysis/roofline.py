@@ -1,0 +1,154 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds (v5e constants):
+
+    compute    = HLO_FLOPs_per_chip   / 197e12        (bf16 MXU peak)
+    memory     = HLO_bytes_per_chip   / 819e9         (HBM bandwidth)
+    collective = collective_bytes_per_chip / 50e9     (per-link ICI)
+
+``cost_analysis()`` reports per-partition (per-chip) FLOPs/bytes after
+SPMD partitioning.  Collective bytes are NOT in cost_analysis: we parse
+the *optimized* HLO (``compiled.as_text()``) and sum the tensor sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (output size; 2x for all-reduce's
+reduce+broadcast phases — a standard ring-cost approximation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.5 = bf16[4,128,256]{2,1,0} all-gather(...)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")\(")
+# tuple-result collectives:  = (bf16[..], bf16[..]) all-to-all(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*(" + "|".join(_COLLECTIVES) + r")\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _numel(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum of collective tensor bytes by op kind (per chip)."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _INSTR_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            nbytes = _numel(dims) * _DTYPE_BYTES.get(dtype, 4)
+            out[kind] += nbytes * (2 if kind == "all-reduce" else 1)
+            counts[kind] += 1
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            nbytes = sum(_numel(d) * _DTYPE_BYTES.get(t, 4)
+                         for t, d in _SHAPE_RE.findall(shapes))
+            out[kind] += nbytes * (2 if kind == "all-reduce" else 1)
+            counts[kind] += 1
+    out["_counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per chip
+    hbm_bytes: float             # per chip
+    coll_bytes: float            # per chip
+    coll_breakdown: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float           # 6·N(_active)·D total, per chip
+    peak_s: Dict[str, float] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / max(self.flops, 1.0)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "coll_breakdown": {k: v for k, v in
+                               self.coll_breakdown.items()
+                               if k != "_counts"},
+            "coll_counts": self.coll_breakdown.get("_counts", {}),
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops_per_chip": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def analyze(compiled, model_flops_total: float, n_chips: int,
+            hlo_text: Optional[str] = None) -> Roofline:
+    """Build the three-term roofline from a compiled executable."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):                 # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    coll_total = sum(v for k, v in coll.items() if k != "_counts")
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=coll_total,
+        coll_breakdown=coll,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=hbm / HBM_BW,
+        collective_s=coll_total / ICI_BW,
+        model_flops=model_flops_total / n_chips,
+    )
+
+
+def memory_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["total_bytes"] = (out.get("argument_size_in_bytes", 0)
+                          + out.get("output_size_in_bytes", 0)
+                          + out.get("temp_size_in_bytes", 0)
+                          - out.get("alias_size_in_bytes", 0))
+    return out

@@ -1,0 +1,35 @@
+"""Architecture registry — ``--arch <id>`` resolves here.
+
+The ten assigned architectures (public-literature pool) plus the paper's
+own Llama-3.1-8B.  Every config cites its source in the module docstring.
+"""
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, get_shape
+
+_MODULES = {
+    "whisper-tiny": "whisper_tiny",
+    "mamba2-780m": "mamba2_780m",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    "granite-3-2b": "granite_3_2b",
+    "gemma2-2b": "gemma2_2b",
+    "dbrx-132b": "dbrx_132b",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "internvl2-2b": "internvl2_2b",
+    "deepseek-67b": "deepseek_67b",
+    "llama3-8b": "llama3_8b",
+}
+
+ARCHS = tuple(k for k in _MODULES if k != "llama3-8b")
+ALL_ARCHS = tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_MODULES)}")
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "get_shape",
+           "get_config", "ARCHS", "ALL_ARCHS"]

@@ -1,0 +1,259 @@
+"""Configuration system for the APB reproduction framework.
+
+Every architecture in the assigned pool is expressed as a ``ModelConfig``:
+a frozen dataclass describing the transformer backbone (and, for hybrid /
+SSM architectures, the layer-mixing pattern).  Configs are registered in
+``repro.configs`` and selectable via ``--arch <id>`` in every launcher.
+
+The input-shape grid (train_4k / prefill_32k / decode_32k / long_500k) is
+described by ``ShapeConfig`` and drives both the dry-run and the sharding
+policy selection in ``repro.parallel.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Layer pattern description
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    """One layer slot in the repeating block pattern of a model.
+
+    mixer   : "attn" for self-attention, "mamba" for a Mamba2/SSD mixer.
+    moe     : whether the FFN of this layer is a mixture-of-experts.
+    window  : sliding-window size for local attention (None = global).
+    """
+
+    mixer: str = "attn"
+    moe: bool = False
+    window: Optional[int] = None
+
+    def __post_init__(self):
+        if self.mixer not in ("attn", "mamba"):
+            raise ValueError(f"unknown mixer {self.mixer!r}")
+
+
+ATTN = LayerKind("attn")
+MAMBA = LayerKind("mamba")
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.  See repro/configs/<arch>.py for instances."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    source: str                      # citation (arXiv id / HF model card)
+
+    num_layers: int = 0              # decoder layers (total, incl. pattern)
+    d_model: int = 0
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+
+    # repeating layer pattern; num_layers % len(block_pattern) == 0.
+    block_pattern: Tuple[LayerKind, ...] = (ATTN,)
+
+    # attention options
+    qkv_bias: bool = False
+    attn_logit_softcap: Optional[float] = None     # gemma2: 50.0
+    final_logit_softcap: Optional[float] = None    # gemma2: 30.0
+    rope_theta: float = 10_000.0
+    use_rope: bool = True
+
+    # MoE options
+    moe_num_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0                # per-expert hidden size (0 -> d_ff)
+    moe_capacity_factor: float = 1.25
+
+    # SSM (Mamba2 / SSD) options
+    ssm_state: int = 0               # state dimension N
+    ssm_heads: int = 0               # number of SSD heads (0 -> derived)
+    ssm_head_dim: int = 64           # P: channels per SSD head
+    ssm_chunk: int = 256             # intra-chunk length for the SSD scan
+    ssm_conv_width: int = 4
+    ssm_expand: int = 2
+
+    # encoder-decoder (whisper-style)
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+
+    # modality frontend (stub per spec: precomputed embeddings)
+    frontend: Optional[str] = None   # None | "audio" | "vision"
+
+    # misc
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    activation: str = "silu"         # silu (SwiGLU) | gelu
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    # gemma2 normalises embeddings by sqrt(d_model)
+    scale_embeddings: bool = False
+
+    # APB technique knobs (paper §3, Table 5 hyperparameters)
+    apb_applicable: bool = True      # False for attention-free (mamba2)
+    anchor_frac: float = 0.25        # l_a = anchor_frac * l_b  (paper: 1/4 or 1/8)
+    passing_frac: float = 0.125      # l_p = passing_frac * l_b (paper: l_p = l_a/2)
+    # retaining-head (Locret) compressor
+    compressor_hidden: int = 1024    # paper App. B.1: intermediate size 1024
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        if self.num_layers and len(self.block_pattern):
+            if self.num_layers % len(self.block_pattern) != 0:
+                raise ValueError(
+                    f"{self.name}: num_layers={self.num_layers} not divisible "
+                    f"by pattern length {len(self.block_pattern)}")
+
+    # ------------------------------------------------------------------
+    @property
+    def num_blocks(self) -> int:
+        return self.num_layers // len(self.block_pattern)
+
+    @property
+    def q_per_kv(self) -> int:
+        return max(1, self.num_heads // max(1, self.num_kv_heads))
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def has_attention(self) -> bool:
+        return any(k.mixer == "attn" for k in self.block_pattern)
+
+    @property
+    def has_mamba(self) -> bool:
+        return any(k.mixer == "mamba" for k in self.block_pattern)
+
+    @property
+    def has_moe(self) -> bool:
+        return any(k.moe for k in self.block_pattern)
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        if self.ssm_heads:
+            return self.ssm_heads
+        return max(1, self.d_inner // self.ssm_head_dim)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS = 6·N·D)."""
+        n = 0
+        emb = self.vocab_size * self.d_model
+        n += emb
+        if not self.tie_embeddings:
+            n += emb
+        per_pattern = 0
+        dh = self.head_dim
+        for k in self.block_pattern:
+            if k.mixer == "attn":
+                per_pattern += self.d_model * dh * (self.num_heads + 2 * self.num_kv_heads)
+                per_pattern += self.num_heads * dh * self.d_model
+            else:  # mamba2 block
+                di, ns = self.d_inner, self.ssm_state
+                nh = self.n_ssm_heads
+                # in_proj -> [z, x, B, C, dt]
+                per_pattern += self.d_model * (2 * di + 2 * ns + nh)
+                per_pattern += di * self.d_model          # out_proj
+                per_pattern += self.ssm_conv_width * (di + 2 * ns)
+            if k.moe:
+                e, f = self.moe_num_experts, self.expert_d_ff
+                per_pattern += self.d_model * e           # router
+                per_pattern += 3 * self.d_model * f * e   # gate/up/down per expert
+            elif self.d_ff:
+                per_pattern += 3 * self.d_model * self.d_ff
+        n += per_pattern * self.num_blocks
+        if self.is_encoder_decoder:
+            enc = self.num_encoder_layers * (
+                4 * self.d_model * self.num_heads * dh + 3 * self.d_model * self.d_ff)
+            # decoder cross-attention
+            xattn = self.num_layers * (
+                self.d_model * dh * (self.num_heads + 2 * self.num_kv_heads)
+                + self.num_heads * dh * self.d_model)
+            n += enc + xattn
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE uses top-k of the experts)."""
+        if not self.has_moe:
+            return self.param_count()
+        n = self.param_count()
+        e, k, f = self.moe_num_experts, self.moe_top_k, self.expert_d_ff
+        n_moe_layers = sum(1 for lk in self.block_pattern if lk.moe) * self.num_blocks
+        inactive = 3 * self.d_model * f * (e - k) * n_moe_layers
+        return n - inactive
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: <=2 pattern repeats, d_model<=512, <=4 experts."""
+        pat = self.block_pattern
+        d_model = min(self.d_model, 256)
+        heads = max(2, min(self.num_heads, 4))
+        kv = max(1, min(self.num_kv_heads, 2))
+        hd = max(16, d_model // heads)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            num_layers=len(pat) * min(2, self.num_blocks),
+            d_model=d_model,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=hd,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            moe_num_experts=min(self.moe_num_experts, 4) if self.moe_num_experts else 0,
+            moe_top_k=min(self.moe_top_k, 2) if self.moe_top_k else 0,
+            moe_d_ff=min(self.expert_d_ff, 128) if self.moe_num_experts else 0,
+            ssm_state=min(self.ssm_state, 32) if self.ssm_state else 0,
+            ssm_heads=0,
+            ssm_head_dim=32,
+            ssm_chunk=32,
+            num_encoder_layers=min(2, self.num_encoder_layers),
+            compressor_hidden=64,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned grid)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str      # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",   524_288, 1,   "decode"),
+}
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; have {sorted(SHAPES)}")
+    return SHAPES[name]

@@ -1,0 +1,19 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained [hf:databricks/dbrx-base]."""
+from repro.configs.base import LayerKind, ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    source="hf:databricks/dbrx-base",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=10_752,
+    vocab_size=100_352,
+    block_pattern=(LayerKind("attn", moe=True),),
+    moe_num_experts=16,
+    moe_top_k=4,
+    moe_d_ff=10_752,
+)

@@ -1,0 +1,31 @@
+"""gemma2-2b [dense] — local+global alternating attention, logit softcap
+[arXiv:2408.00118].
+
+Local (sliding-window 4096) layers are already sub-quadratic: under APB
+they keep anchor visibility but skip the passing mechanism (DESIGN.md
+§Arch-applicability).  Attention/final softcaps are folded into the
+Pallas kernel / logits head.
+"""
+from repro.configs.base import LayerKind, ModelConfig
+
+_LOCAL = LayerKind("attn", window=4096)
+_GLOBAL = LayerKind("attn")
+
+CONFIG = ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    source="arXiv:2408.00118",
+    num_layers=26,
+    d_model=2304,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,                  # gemma2 uses 256 (not d_model/heads)
+    d_ff=9216,
+    vocab_size=256_000,
+    block_pattern=(_LOCAL, _GLOBAL),
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    activation="gelu",
+    tie_embeddings=True,
+    scale_embeddings=True,
+)

@@ -1,0 +1,21 @@
+"""granite-moe-3b-a800m [moe] — fine-grained MoE, 40 experts top-8,
+per-expert d_ff=512 [hf:ibm-granite/granite-3.0-1b-a400m-base family]."""
+from repro.configs.base import LayerKind, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49_155,
+    block_pattern=(LayerKind("attn", moe=True),),
+    moe_num_experts=40,
+    moe_top_k=8,
+    moe_d_ff=512,
+    tie_embeddings=True,
+)

@@ -1,0 +1,22 @@
+"""internvl2-2b [vlm] — InternViT (stub) + InternLM2 decoder [arXiv:2404.16821].
+
+The vision encoder + MLP projector are stubbed per spec: input_specs()
+provides precomputed patch/text embeddings; the InternLM2-1.8B-style
+decoder that consumes them is fully implemented, with full APB support.
+"""
+from repro.configs.base import ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    source="arXiv:2404.16821",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92_553,
+    block_pattern=(ATTN,),
+    frontend="vision",
+)

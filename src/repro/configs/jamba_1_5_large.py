@@ -1,0 +1,35 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attention 1:7 interleave, MoE
+every other layer, 16 experts top-2 [arXiv:2403.19887].
+
+The headline composite case: APB on the attention layers (1 in 8), exact
+SSD state-passing on the mamba layers, expert-parallel MoE.
+"""
+from repro.configs.base import LayerKind, ModelConfig
+
+_M = LayerKind("mamba")
+_Mm = LayerKind("mamba", moe=True)
+_A = LayerKind("attn")
+
+# 8-layer Jamba block: attention at index 3 of each period (1:7 ratio),
+# MoE on every other layer (odd indices).
+_PATTERN = (_M, _Mm, _M, _A, _M, _Mm, _M, _Mm)
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    source="arXiv:2403.19887",
+    num_layers=72,                 # 9 repetitions of the 8-layer block
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24_576,                   # non-MoE MLP width
+    vocab_size=65_536,
+    block_pattern=_PATTERN,
+    moe_num_experts=16,
+    moe_top_k=2,
+    moe_d_ff=24_576,
+    ssm_state=128,
+    ssm_head_dim=128,
+    ssm_chunk=256,
+)

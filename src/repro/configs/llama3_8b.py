@@ -1,0 +1,17 @@
+"""llama-3.1-8b — the paper's own primary evaluation model [arXiv:2407.21783]."""
+from repro.configs.base import ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b",
+    family="dense",
+    source="arXiv:2407.21783",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14_336,
+    vocab_size=128_256,
+    block_pattern=(ATTN,),
+    rope_theta=500_000.0,
+)

@@ -1,0 +1,25 @@
+"""mamba2-780m [ssm] — SSD (state-space duality), attention-free [arXiv:2405.21060].
+
+APB is inapplicable (no attention to approximate) — DESIGN.md
+§Arch-applicability; sequence parallelism is exact SSD state passing.
+"""
+from repro.configs.base import MAMBA, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    source="arXiv:2405.21060",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,                        # pure mamba blocks, no MLP
+    vocab_size=50_280,
+    block_pattern=(MAMBA,),
+    ssm_state=128,
+    ssm_head_dim=64,               # d_inner 3072 -> 48 SSD heads
+    ssm_chunk=256,
+    tie_embeddings=True,
+    apb_applicable=False,
+)

@@ -1,0 +1,18 @@
+"""qwen2.5-32b [dense] — GQA with QKV bias [hf:Qwen/Qwen2.5-0.5B family]."""
+from repro.configs.base import ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    source="hf:Qwen/Qwen2.5-0.5B",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=27_648,
+    vocab_size=152_064,
+    block_pattern=(ATTN,),
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+)

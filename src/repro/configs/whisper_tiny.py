@@ -1,0 +1,25 @@
+"""whisper-tiny [audio] — enc-dec with conv frontend (stub) [arXiv:2212.04356]."""
+from repro.configs.base import ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    source="arXiv:2212.04356",
+    num_layers=4,                 # decoder layers
+    num_encoder_layers=4,
+    is_encoder_decoder=True,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,               # GQA kv=6 (MHA)
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51_865,
+    block_pattern=(ATTN,),
+    qkv_bias=True,
+    use_rope=False,               # whisper: sinusoidal / learned positions
+    norm="layernorm",
+    activation="gelu",
+    tie_embeddings=True,
+    frontend="audio",             # mel+conv codec stubbed per spec
+    norm_eps=1e-5,
+)

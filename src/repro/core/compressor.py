@@ -1,0 +1,100 @@
+"""APB block compressor: Locret-style retaining heads (paper §3.4).
+
+A small per-layer MLP scores every KV-cache unit of the *local* block from
+``[Q, K, V]`` of its token; the top-``l_p`` units (per KV head) become the
+compressed block ``B_h^C`` that is AllGathered across hosts.  This is the
+component that replaces H2O/SnapKV-style *global*-view scoring, which is
+incompatible with sequence parallelism (paper Challenge 1).
+
+The retaining heads are trained with a frozen backbone on synthetic
+long-context data (repro.training.train_compressor) following the paper's
+App. B.1 recipe: regression towards "ground-truth importance" (attention
+mass received from query tokens) plus a temporal smoothing loss.
+
+A ``random`` selector (the paper's "Rd." ablation, Table 3) and an
+``oracle`` selector (query-attention mass, requires a global view — used
+only for analysis) are provided for the ablation benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def compressor_init(key, cfg, dtype=jnp.float32):
+    """Retaining-head MLP params for one layer.
+
+    Input per token: concat of its q heads, k heads, v heads
+    -> (H + 2*KV) * dh features; output: one score per KV head.
+    """
+    din = (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim
+    hidden = cfg.compressor_hidden
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": dense_init(k1, din, hidden, dtype),
+        "b1": jnp.zeros((hidden,), dtype),
+        "w2": dense_init(k2, hidden, cfg.num_kv_heads, dtype),
+        "b2": jnp.zeros((cfg.num_kv_heads,), dtype),
+    }
+
+
+def compressor_scores(params, q, k, v) -> jax.Array:
+    """Importance scores per KV unit.
+
+    q: (B, L, H, dh); k, v: (B, L, KV, dh)  ->  scores (B, L, KV).
+    """
+    b, l = q.shape[:2]
+    feats = jnp.concatenate(
+        [q.reshape(b, l, -1), k.reshape(b, l, -1), v.reshape(b, l, -1)],
+        axis=-1)
+    h = jax.nn.gelu(feats @ params["w1"] + params["b1"])
+    return (h @ params["w2"] + params["b2"]).astype(jnp.float32)
+
+
+def select_topk(scores, k_cache, v_cache, lp: int,
+                method: str = "retain",
+                rng: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Select the top-``lp`` KV units per KV head of the local block.
+
+    scores: (B, L, KV); k_cache/v_cache: (B, L, KV, dh).
+    Returns (k_sel, v_sel, indices) with shapes (B, lp, KV, dh) and
+    (B, lp, KV).  Selected units are re-ordered by original position so the
+    compressed block stays position-monotonic (RoPE positions preserved).
+    """
+    b, l, kvh = scores.shape
+    if method == "random":
+        assert rng is not None
+        scores = jax.random.uniform(rng, scores.shape)
+    elif method == "recent":
+        scores = jnp.broadcast_to(
+            jnp.arange(l, dtype=jnp.float32)[None, :, None], scores.shape)
+    _, idx = jax.lax.top_k(scores.transpose(0, 2, 1), lp)      # (B, KV, lp)
+    idx = jnp.sort(idx, axis=-1)                               # keep order
+    k_sel = jnp.take_along_axis(
+        k_cache.transpose(0, 2, 1, 3), idx[..., None], axis=2)
+    v_sel = jnp.take_along_axis(
+        v_cache.transpose(0, 2, 1, 3), idx[..., None], axis=2)
+    return (k_sel.transpose(0, 2, 1, 3), v_sel.transpose(0, 2, 1, 3),
+            idx.transpose(0, 2, 1))
+
+
+def oracle_scores(q_query, k_cache) -> jax.Array:
+    """Analysis-only oracle: attention mass the *query* puts on each unit.
+
+    q_query: (B, Lq, H, dh); k_cache: (B, L, KV, dh) -> (B, L, KV).
+    Requires the query — exactly the global view the retaining heads are
+    trained to approximate locally (also the training label generator).
+    """
+    b, lq, h, dh = q_query.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    qg = q_query.reshape(b, lq, kvh, g, dh).astype(jnp.float32)
+    logits = jnp.einsum("bqkgd,blkd->bqkgl", qg,
+                        k_cache.astype(jnp.float32)) / jnp.sqrt(dh)
+    attn = jax.nn.softmax(logits, axis=-1)
+    return jnp.sum(attn, axis=(1, 3)).transpose(0, 2, 1)       # (B, L, KV)

@@ -1,0 +1,147 @@
+"""Exact distributed decode — paper Algorithm 3 (STARATTN stage 2).
+
+The KV cache produced by the prefill stage lives sharded across the
+sequence-parallel axis (local blocks only; anchors and passing blocks were
+discarded).  Each decode step computes, on every shard, the new token's
+partial attention against the local cache shard, then merges the partial
+(out, lse) pairs across the cache-sharding axes with log-sum-exp weights.
+The same machinery, applied to ``lq > 1`` query tokens plus a pairwise
+merge with their causal self-attention, implements the query pass that
+ends the prefill (paper Alg. 1 lines 13-25 with x = q).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.strategies import ParallelCtx
+from repro.parallel import collectives
+
+NEG_INF = -1e30
+AxisName = Union[str, Sequence[str]]
+
+
+def partial_attention_lse(q, k, v, mask=None, *,
+                          softcap: Optional[float] = None):
+    """Attention of q against one KV shard, returning (out, lse).
+
+    q: (B, Lq, H, D); k/v: (B, S, KV, D); mask: (B, Lq, S) or (Lq, S) bool.
+    Fully-masked rows yield lse = -inf-ish so they vanish in merges.
+    """
+    b, lq, h, d = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None]
+        s = jnp.where(mask[:, None, :, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                    # (B,H,Lq)
+    e = jnp.exp(s - m[..., None])
+    if mask is not None:
+        e = jnp.where(mask[:, None, :, :], e, 0.0)
+    z = jnp.sum(e, axis=-1)                                    # (B,H,Lq)
+    o = jnp.einsum("bhqk,bkhd->bqhd", e / jnp.maximum(z, 1e-30)[..., None],
+                   v.astype(jnp.float32))
+    lse = m + jnp.log(jnp.maximum(z, 1e-30))
+    lse = jnp.where(z > 0, lse, NEG_INF)
+    return o.astype(q.dtype), lse
+
+
+def _local_decode(q, k_loc, v_loc, valid_len, shard_len, total_len,
+                  cache_axes, *, window, softcap):
+    """Per-shard body: local partial attention + masking by global pos."""
+    # global start of this shard's cache slice
+    offset = jnp.asarray(0, jnp.int32)
+    stride = shard_len
+    for ax in reversed(cache_axes):
+        offset = offset + jax.lax.axis_index(ax) * stride
+        stride = stride * jax.lax.axis_size(ax)
+    gpos = offset + jnp.arange(k_loc.shape[1])                  # (S_loc,)
+    vl = jnp.reshape(jnp.asarray(
+        valid_len if valid_len is not None else total_len), (-1, 1))
+    mask = gpos[None, :] < vl                                    # (B|1, S_loc)
+    if window and window > 0:
+        mask = mask & (gpos[None, :] >= vl - window)
+    mask = jnp.broadcast_to(mask, (q.shape[0], k_loc.shape[1]))
+    out, lse = partial_attention_lse(
+        q, k_loc, v_loc, mask[:, None, :] * jnp.ones((1, q.shape[1], 1), bool),
+        softcap=softcap)
+    return collectives.lse_merge_psum(out, lse, cache_axes)
+
+
+def decode_attention_distributed(q, k_cache, v_cache, *,
+                                 pctx: ParallelCtx,
+                                 cache_axes: Tuple[str, ...],
+                                 valid_len=None,
+                                 total_len: Optional[int] = None,
+                                 window: int = 0,
+                                 softcap: Optional[float] = None):
+    """One decode step's attention over a sharded KV cache.
+
+    q: (B, 1+, H, D) replicated over ``cache_axes``;
+    k_cache/v_cache: (B, S, KV, D) sharded on dim 1 over ``cache_axes``.
+    Returns (out, lse) replicated over ``cache_axes``.
+    """
+    mesh = pctx.mesh
+    if total_len is None:
+        total_len = k_cache.shape[1]
+    if mesh is None or not cache_axes:
+        vl = valid_len if valid_len is not None else total_len
+        gpos = jnp.arange(k_cache.shape[1])
+        vl_b = jnp.reshape(jnp.asarray(vl), (-1, 1))
+        mask = gpos[None, :] < vl_b
+        if window and window > 0:
+            mask = mask & (gpos[None, :] >= vl_b - window)
+        mask = jnp.broadcast_to(mask, (q.shape[0], k_cache.shape[1]))
+        return partial_attention_lse(
+            q, k_cache, v_cache, mask[:, None, :]
+            * jnp.ones((1, q.shape[1], 1), bool), softcap=softcap)
+
+    shard_len = total_len
+    for ax in cache_axes:
+        shard_len //= mesh.shape[ax]
+    bspec = pctx.batch_spec()
+    qspec = P(bspec, None, None, None)
+    cspec = P(bspec, cache_axes, None, None)
+    lspec = P(bspec, None, None)
+
+    def body(qq, kk, vv, vl):
+        return _local_decode(qq, kk, vv, vl, shard_len, total_len,
+                             cache_axes, window=window, softcap=softcap)
+
+    vl_arg = (jnp.asarray(valid_len) if valid_len is not None
+              else jnp.full((q.shape[0],), total_len, jnp.int32))
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(qspec, cspec, cspec, P(bspec)),
+                       out_specs=(qspec, lspec))
+    return fn(q, k_cache, v_cache, vl_arg)
+
+
+def query_context_attention(q, k_cache, v_cache, k_self, v_self, *,
+                            pctx: ParallelCtx,
+                            cache_axes: Tuple[str, ...],
+                            valid_len=None,
+                            softcap: Optional[float] = None):
+    """Query pass: lq tokens attend to the whole (sharded) doc cache plus
+    causally to themselves; the two parts are LSE-merged (paper Alg. 1).
+
+    q/k_self/v_self: (B, lq, ·, D) replicated over cache axes.
+    """
+    ctx_out, ctx_lse = decode_attention_distributed(
+        q, k_cache, v_cache, pctx=pctx, cache_axes=cache_axes,
+        valid_len=valid_len, softcap=softcap)
+    lq = q.shape[1]
+    causal = jnp.tril(jnp.ones((lq, lq), bool))
+    self_out, self_lse = partial_attention_lse(
+        q, k_self, v_self, causal, softcap=softcap)
+    out, _ = collectives.lse_merge_pair(ctx_out, ctx_lse, self_out, self_lse)
+    return out

@@ -1,0 +1,84 @@
+"""Host-loop reference implementation of APB (single device, any H).
+
+Emulates the paper's Algorithm 2 with an explicit Python loop over hosts
+instead of ``shard_map`` — the oracle for the distributed equivalence
+tests and the workhorse of the quality benchmarks (Table 3/4 ablations),
+which run on one CPU device with arbitrary emulated host counts.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressor as comp
+from repro.core.splitting import APBLayout
+from repro.kernels import ops
+
+
+def apb_attention_hostloop(q, k, v, retain_params, layout: APBLayout, *,
+                           strategy: str = "apb",
+                           compressor_method: str = "retain",
+                           rng: Optional[jax.Array] = None,
+                           window: int = 0,
+                           softcap: Optional[float] = None,
+                           q_query=None,
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Reference for strategies._apb_inner over the *global* augmented
+    arrays.
+
+    q: (B, H*(la+lb), Hh, D) — augmented layout, host-major.
+    Returns (attn_out (global augmented), k_cache, v_cache (B, n_doc, ...)).
+    ``compressor_method`` may also be "oracle" (needs q_query).
+    """
+    la, lb, lp, H = layout.la, layout.lb, layout.lp, layout.n_hosts
+    host_len = la + lb
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+
+    # ---- per-host compression (paper §3.4) -------------------------------
+    k_sel_all, v_sel_all = [], []
+    if strategy == "apb" and lp > 0 and H > 1:
+        for h in range(H):
+            s = h * host_len
+            ql_ = q[:, s + la:s + host_len]
+            kl_ = k[:, s + la:s + host_len]
+            vl_ = v[:, s + la:s + host_len]
+            if compressor_method == "oracle":
+                scores = comp.oracle_scores(q_query, kl_)
+            else:
+                scores = comp.compressor_scores(retain_params, ql_, kl_, vl_)
+            ks, vs, _ = comp.select_topk(
+                scores, kl_, vl_, lp, method=compressor_method,
+                rng=jax.random.fold_in(rng, h))
+            k_sel_all.append(ks)
+            v_sel_all.append(vs)
+        k_gathered = jnp.concatenate(k_sel_all, axis=1)   # (B, H*lp, KV, D)
+        v_gathered = jnp.concatenate(v_sel_all, axis=1)
+
+    outs, kcs, vcs = [], [], []
+    for h in range(H):
+        s = h * host_len
+        qa, ql_ = q[:, s:s + la], q[:, s + la:s + host_len]
+        ka, kl_ = k[:, s:s + la], k[:, s + la:s + host_len]
+        va, vl_ = v[:, s:s + la], v[:, s + la:s + host_len]
+        if strategy == "apb" and lp > 0 and H > 1:
+            kp, vp = k_gathered, v_gathered
+            pass_valid = h * lp
+        else:
+            pcap = layout.pcap if strategy == "apb" else 0
+            kp = jnp.zeros((k.shape[0], pcap) + k.shape[2:], k.dtype)
+            vp = jnp.zeros_like(kp)
+            pass_valid = 0
+        anchor_valid = 0 if h == 0 else la
+        oa, ol = ops.apb_attention(
+            qa, ql_, ka, kp, kl_, va, vp, vl_,
+            anchor_valid=jnp.asarray(anchor_valid, jnp.int32),
+            pass_valid=jnp.asarray(pass_valid, jnp.int32),
+            window=window, softcap=softcap, use_kernel=False)
+        outs.append(jnp.concatenate([oa, ol], axis=1))
+        kcs.append(kl_)
+        vcs.append(vl_)
+    return (jnp.concatenate(outs, axis=1),
+            jnp.concatenate(kcs, axis=1), jnp.concatenate(vcs, axis=1))

@@ -1,0 +1,107 @@
+"""Context splitting and the augmented-sequence layout (paper §3.3).
+
+APB/STARATTN give every host the layout ``[anchor | local block]`` where
+the anchor is ``[query, d_1..d_la]`` at positions ``0..lq+la-1`` and the
+local block keeps its true document positions.  In our GSPMD formulation
+the *global* activation tensor is the concatenation of all hosts' layouts
+— the "augmented sequence" of length ``H * (lq + la + lb)`` — sharded over
+the sequence-parallel mesh axis so each shard holds exactly one host's
+layout.  This module computes the static gather indices / position vectors
+for that layout (all pure numpy: shapes are compile-time constants).
+
+Host 0 carries the anchor slot too (SPMD uniformity, DESIGN.md §2) but its
+``anchor_valid`` is 0: the slot is masked out of attention and its outputs
+are discarded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class APBLayout:
+    """Static description of the augmented sequence for one (n, lq, H)."""
+
+    n_doc: int          # document length (global)
+    lq: int             # query length (embedded in the anchor)
+    n_hosts: int
+    lb: int             # per-host local block
+    la_doc: int         # anchor document tokens
+    lp: int             # passing length per host
+    anchor_cap: float = 8192   # paper Table 5 caps l_a at 8K for >=512K
+
+    @property
+    def la(self) -> int:
+        """Total anchor slot length (query + anchor doc tokens)."""
+        return self.lq + self.la_doc
+
+    @property
+    def host_len(self) -> int:
+        return self.la + self.lb
+
+    @property
+    def aug_len(self) -> int:
+        return self.n_hosts * self.host_len
+
+    @property
+    def pcap(self) -> int:
+        return (self.n_hosts - 1) * self.lp
+
+
+def make_layout(n_doc: int, lq: int, n_hosts: int,
+                anchor_frac: float = 0.25, passing_frac: float = 0.125,
+                cap: int = 8192) -> APBLayout:
+    if n_doc % n_hosts:
+        raise ValueError(f"document length {n_doc} not divisible by {n_hosts}")
+    lb = n_doc // n_hosts
+    # anchor_frac=0 disables the anchor entirely (Table 3 ablation rows)
+    la_doc = min(int(lb * anchor_frac), cap, lb)
+    lp = min(int(lb * passing_frac), cap, lb)
+    return APBLayout(n_doc, lq, n_hosts, lb, la_doc, lp)
+
+
+def augment_indices(layout: APBLayout) -> np.ndarray:
+    """Gather indices into the concatenated ``[query | document]`` array
+    (length lq + n_doc) producing the augmented sequence."""
+    lq, la, lb, h = layout.lq, layout.la_doc, layout.lb, layout.n_hosts
+    idx = []
+    for host in range(h):
+        idx.append(np.arange(lq))                       # query tokens
+        idx.append(lq + np.arange(la))                  # anchor doc tokens
+        idx.append(lq + host * lb + np.arange(lb))      # local block
+    return np.concatenate(idx)
+
+
+def augment_positions(layout: APBLayout) -> np.ndarray:
+    """RoPE positions for the augmented sequence.
+
+    Paper §3.3: anchor tokens sit at the starting positions
+    ``0..lq+la-1`` (query copy first, then the first ``la`` doc tokens);
+    local-block tokens keep their true positions ``lq + j`` (document
+    token ``d_j`` is preceded by the ``lq`` query tokens).
+    """
+    lq, la, lb, h = layout.lq, layout.la_doc, layout.lb, layout.n_hosts
+    pos = []
+    for host in range(h):
+        pos.append(np.arange(lq + la))                  # anchor slot
+        pos.append(lq + host * lb + np.arange(lb))      # true doc positions
+    return np.concatenate(pos)
+
+
+def local_block_indices(layout: APBLayout) -> np.ndarray:
+    """Indices of the local-block rows inside the augmented sequence —
+    used to extract per-host outputs / the document KV cache."""
+    out = []
+    for host in range(layout.n_hosts):
+        start = host * layout.host_len + layout.la
+        out.append(start + np.arange(layout.lb))
+    return np.concatenate(out)
+
+
+def split_document_query(tokens, lq: int) -> Tuple:
+    """t = {d, q} with the query *first* (paper App. B.2.1 places the query
+    right after the system prompt so it can be embedded in anchors)."""
+    return tokens[:, lq:], tokens[:, :lq]

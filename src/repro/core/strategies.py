@@ -1,0 +1,188 @@
+"""Attention strategy dispatch: FULL / RING / ULYSSES / STAR / APB.
+
+A strategy turns the per-layer (q, k, v) — computed on the *global*
+(GSPMD-sharded) activation tensor — into attention outputs plus the KV
+cache to keep.  Sequence-parallel strategies enter ``shard_map`` over the
+mesh's sequence axis here; everything outside (projections, FFN, MoE,
+norms) stays in GSPMD-land.
+
+Layouts:
+  * ``plain``      (full / ring / ulysses): global length = document length.
+  * ``augmented``  (star / apb): global length = H * (la + lb); each shard
+    holds one host's ``[anchor | local]`` slice (core.splitting).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import compressor as comp
+from repro.core.splitting import APBLayout
+from repro.kernels import ops, ref
+from repro.parallel import collectives, ring, ulysses
+
+STRATEGIES = ("full", "ring", "ulysses", "star", "apb")
+AUGMENTED = ("star", "apb")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    """Mesh context for the strategies (None mesh = single-process path)."""
+
+    mesh: Optional[Mesh] = None
+    seq_axis: str = "model"
+    batch_axes: Tuple[str, ...] = ("data",)
+
+    @property
+    def n_hosts(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.seq_axis]
+
+    def batch_spec(self):
+        return self.batch_axes if self.batch_axes else None
+
+
+def layout_for(strategy: str) -> str:
+    return "augmented" if strategy in AUGMENTED else "plain"
+
+
+# ---------------------------------------------------------------------------
+# APB / STAR inner (per-host) computation — paper Alg. 2
+# ---------------------------------------------------------------------------
+
+def _apb_inner(q, k, v, retain_params, rng, *, layout: APBLayout,
+               seq_axis: str, strategy: str, compressor_method: str,
+               window: int, softcap, use_kernel: bool, bidirectional: bool):
+    """Runs per shard inside shard_map.  q: (B, la+lb, H, D); k/v: KV heads."""
+    la, lb, lp = layout.la, layout.lb, layout.lp
+    h_idx = jax.lax.axis_index(seq_axis)
+    n_hosts = jax.lax.axis_size(seq_axis)
+
+    qa, ql = q[:, :la], q[:, la:]
+    ka, kl = k[:, :la], k[:, la:]
+    va, vl = v[:, :la], v[:, la:]
+
+    anchor_valid = jnp.where(h_idx == 0, 0, la).astype(jnp.int32)
+
+    if strategy == "apb" and lp > 0 and n_hosts > 1:
+        # ---- block compression (paper §3.4) -----------------------------
+        scores = comp.compressor_scores(retain_params, ql, kl, vl)
+        if compressor_method == "random":
+            rng = jax.random.fold_in(rng, h_idx)
+        k_sel, v_sel, _ = comp.select_topk(
+            scores, kl, vl, lp, method=compressor_method, rng=rng)
+        # ---- communication: AllGather compressed blocks (§3.5) ----------
+        kp = collectives.all_gather_concat(k_sel, seq_axis, axis=1)
+        vp = collectives.all_gather_concat(v_sel, seq_axis, axis=1)
+        if bidirectional:
+            # whisper-encoder variant: passing blocks from *all* other
+            # hosts; own block excluded by masking its slot via validity
+            # trick is not positional here, so keep all and let the local
+            # block dominate (self entries duplicate local keys — masked
+            # out by zeroing own slot).
+            own = jax.nn.one_hot(h_idx, n_hosts, dtype=kp.dtype)
+            own = jnp.repeat(own, lp)[None, :, None, None]
+            kp = kp * (1.0 - own)
+            vp = vp * (1.0 - own)
+            pass_valid = jnp.asarray(n_hosts * lp, jnp.int32)
+        else:
+            pass_valid = (h_idx * lp).astype(jnp.int32)
+    else:
+        # STARATTN: anchor only, no communication
+        pcap = layout.pcap if strategy == "apb" else 0
+        kp = jnp.zeros((k.shape[0], pcap) + k.shape[2:], k.dtype)
+        vp = jnp.zeros_like(kp)
+        pass_valid = jnp.asarray(0, jnp.int32)
+
+    # ---- computation with the modified mask (§3.6) ----------------------
+    oa, ol = ops.apb_attention(
+        qa, ql, ka, kp, kl, va, vp, vl,
+        anchor_valid=anchor_valid, pass_valid=pass_valid,
+        window=window, softcap=softcap, causal=not bidirectional,
+        use_kernel=use_kernel)
+    out = jnp.concatenate([oa, ol], axis=1)
+    return out, kl, vl
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+def prefill_attention(cfg, strategy: str, q, k, v, *,
+                      pctx: ParallelCtx,
+                      layout: Optional[APBLayout] = None,
+                      retain_params=None,
+                      rng: Optional[jax.Array] = None,
+                      compressor_method: str = "retain",
+                      window: int = 0,
+                      softcap: Optional[float] = None,
+                      use_kernel: bool = False,
+                      bidirectional: bool = False):
+    """Dispatch one attention layer's prefill computation.
+
+    q: (B, L, H, D), k/v: (B, L, KV, D) — *global* arrays (GSPMD-sharded on
+    the sequence axis).  Returns (attn_out, k_cache, v_cache) where the
+    caches are the *local-block* KV (global view: the de-augmented doc KV
+    for star/apb; the full KV for plain strategies).
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+
+    mesh = pctx.mesh
+
+    if (strategy in AUGMENTED and (mesh is None or pctx.n_hosts == 1)
+            and layout is not None and layout.n_hosts > 1):
+        # single-device emulation: host-loop reference (quality benches)
+        from repro.core import reference
+        out, kc, vc = reference.apb_attention_hostloop(
+            q, k, v, retain_params, layout, strategy=strategy,
+            compressor_method=compressor_method, rng=rng, window=window,
+            softcap=softcap)
+        return out, kc, vc
+
+    if strategy == "full" or mesh is None or pctx.n_hosts == 1:
+        if strategy in AUGMENTED and layout is not None and layout.n_hosts > 1:
+            raise ValueError("augmented layout requires the mesh seq axis")
+        out = ops.causal_flash_attention(
+            q, k, v, window=window, softcap=softcap,
+            causal=not bidirectional, use_kernel=use_kernel)
+        return out, k, v
+
+    bspec = pctx.batch_spec()
+    qspec = P(bspec, pctx.seq_axis, None, None)
+
+    if strategy in ("ring", "ulysses"):
+        if strategy == "ring":
+            inner = partial(ring.ring_attention_inner, window=window,
+                            causal=not bidirectional)
+        else:
+            inner = partial(ulysses.ulysses_attention_inner, window=window)
+        fn = jax.shard_map(
+            lambda qq, kk, vv: inner(qq, kk, vv, pctx.seq_axis,
+                                     softcap=softcap),
+            mesh=mesh, in_specs=(qspec, qspec, qspec), out_specs=qspec)
+        return fn(q, k, v), k, v
+
+    # ---- star / apb ------------------------------------------------------
+    assert layout is not None, "augmented strategies need an APBLayout"
+    rp = retain_params if retain_params is not None else {}
+    rp_specs = jax.tree.map(lambda _: P(), rp)
+    inner = partial(_apb_inner, layout=layout, seq_axis=pctx.seq_axis,
+                    strategy=strategy, compressor_method=compressor_method,
+                    window=window, softcap=softcap, use_kernel=use_kernel,
+                    bidirectional=bidirectional)
+    cache_spec = P(bspec, pctx.seq_axis, None, None)
+    fn = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(qspec, qspec, qspec, rp_specs, P()),
+        out_specs=(qspec, cache_spec, cache_spec))
+    out, k_cache, v_cache = fn(q, k, v, rp, rng)
+    return out, k_cache, v_cache

@@ -1,0 +1,107 @@
+"""Synthetic long-context data (tokenizer-free integer sequences).
+
+The paper evaluates on RULER / ∞Bench; offline we reproduce their
+*structure* with synthetic tasks whose answers are verifiable:
+
+  * passkey / needle retrieval (RULER SG*): a key-value pair hidden at a
+    random depth inside filler tokens; the query asks for the value.
+  * multi-key NIAH (RULER MK*): several distractor pairs, one queried.
+  * KV retrieval (∞Bench R.KV): many pairs, retrieve one.
+  * LM stream: zipf-distributed token soup for generic LM training.
+
+Token-space convention (vocab-agnostic): ids [10, vocab) are filler /
+payload; ids 0-9 are reserved separators.  Every sample returns
+(document, query, answer) int arrays so quality benchmarks can score
+exact-match retrieval accuracy — the relative orderings of paper Tables
+3/4 are the reproduction target (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import numpy as np
+
+SEP = 1
+KEY_MARK = 2
+QUERY_MARK = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalSample:
+    document: np.ndarray    # (n,)
+    query: np.ndarray       # (lq,)
+    answer: np.ndarray      # (m,)
+    depth: float            # needle position as a fraction
+
+
+def _filler(rng, n, vocab):
+    return rng.integers(10, vocab, size=n, dtype=np.int32)
+
+
+def passkey_sample(rng, n: int, lq: int, vocab: int,
+                   key_len: int = 4, val_len: int = 4,
+                   depth: float = None) -> RetrievalSample:
+    """One needle: [filler ... KEY_MARK key val KEY_MARK ... filler]."""
+    if depth is None:
+        depth = float(rng.uniform(0.05, 0.95))
+    key = _filler(rng, key_len, vocab)
+    val = _filler(rng, val_len, vocab)
+    needle = np.concatenate([[KEY_MARK], key, val, [KEY_MARK]]).astype(np.int32)
+    pos = int(depth * (n - len(needle)))
+    doc = _filler(rng, n, vocab)
+    doc[pos:pos + len(needle)] = needle
+    # the key sits at the END of the query so the first answer token
+    # directly follows it (the classic induction-head alignment)
+    query = np.full(lq, SEP, np.int32)
+    query[-(1 + key_len):] = np.concatenate([[QUERY_MARK], key])
+    return RetrievalSample(doc, query, val, depth)
+
+
+def multikey_sample(rng, n: int, lq: int, vocab: int, n_keys: int = 4,
+                    key_len: int = 4, val_len: int = 4) -> RetrievalSample:
+    """Several needles at random depths; the query names one of them."""
+    doc = _filler(rng, n, vocab)
+    needles = []
+    unit = n // n_keys
+    for i in range(n_keys):
+        key = _filler(rng, key_len, vocab)
+        val = _filler(rng, val_len, vocab)
+        needle = np.concatenate([[KEY_MARK], key, val,
+                                 [KEY_MARK]]).astype(np.int32)
+        pos = i * unit + int(rng.uniform(0.1, 0.9)
+                             * (unit - len(needle)))
+        doc[pos:pos + len(needle)] = needle
+        needles.append((key, val, pos / n))
+    key, val, depth = needles[int(rng.integers(n_keys))]
+    query = np.full(lq, SEP, np.int32)
+    query[-(1 + key_len):] = np.concatenate([[QUERY_MARK], key])
+    return RetrievalSample(doc, query, val, depth)
+
+
+def batch_samples(rng, kind: str, batch: int, n: int, lq: int, vocab: int,
+                  **kw) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    fn = {"passkey": passkey_sample, "multikey": multikey_sample}[kind]
+    docs, queries, answers = [], [], []
+    for _ in range(batch):
+        s = fn(rng, n, lq, vocab, **kw)
+        docs.append(s.document)
+        queries.append(s.query)
+        answers.append(s.answer)
+    return (np.stack(docs), np.stack(queries), np.stack(answers))
+
+
+def lm_stream(rng, batch: int, seq_len: int, vocab: int,
+              zipf_a: float = 1.2) -> Iterator[np.ndarray]:
+    """Endless zipf-ish LM batches (B, L) for train_4k and the compressor
+    training corpus."""
+    while True:
+        x = rng.zipf(zipf_a, size=(batch, seq_len)).astype(np.int64)
+        yield np.clip(x + 9, 10, vocab - 1).astype(np.int32)
+
+
+def pipeline(rng, kind: str, batch: int, n: int, lq: int, vocab: int,
+             steps: int, **kw):
+    """Finite iterator of retrieval batches."""
+    for _ in range(steps):
+        yield batch_samples(rng, kind, batch, n, lq, vocab, **kw)

@@ -1,0 +1,217 @@
+"""Pallas TPU kernel: flash attention with the APB modified mask.
+
+This is the TPU adaptation of the paper's customised FLASHATTN kernel
+(§3.6): one fused flash-attention pass over the per-host layout
+
+    Q  = [ anchor | local ]             KV = [ anchor | passing | local ]
+
+with the visibility rules documented in ``ref.apb_mask``.  Design notes:
+
+* Grid = (batch, q_heads, num_q_blocks, num_kv_blocks); the innermost
+  (kv) dimension iterates sequentially on TPU, carrying the online-softmax
+  state (acc / m / l) in VMEM scratch — the standard flash-attention
+  recipe, tiled for the MXU with 128-aligned blocks.
+* GQA is expressed in the K/V BlockSpec index maps (q head -> kv head via
+  integer division), so KV tiles are fetched once per q-head group member
+  without materialising repeated heads in HBM.
+* The two *dynamic* mask parameters — ``anchor_valid`` (0 on host 0,
+  ``la`` elsewhere) and ``pass_valid`` (= host_id * l_p) — arrive via
+  scalar prefetch, so each sequence-parallel shard runs the same compiled
+  kernel with its own mask; ``la``/``pcap``/``window``/``softcap`` are
+  compile-time constants.
+* Block skipping: whole (q_block, kv_block) tiles whose visibility is
+  provably empty (anchor-q vs passing/local-kv, causal upper triangle,
+  beyond-window, beyond-valid prefixes) skip the MXU work via ``pl.when``.
+  This is what turns the modified mask into an actual compute reduction —
+  the TPU analogue of the paper's skipped CUDA tiles.
+
+All regions (anchor / passing / local) are padded by ``ops.py`` to block
+multiples so tiles never straddle a region boundary.
+
+With ``la == pcap == 0`` the kernel degenerates to plain causal
+(optionally sliding-window, optionally soft-capped) flash attention and is
+reused for all non-APB attention paths in the framework.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(scalar_ref,                    # (2,) int32: [anchor_valid, pass_valid]
+            q_ref, k_ref, v_ref,           # VMEM tiles
+            o_ref,
+            acc_ref, m_ref, l_ref,         # scratch
+            *, la: int, pcap: int, bq: int, bkv: int, nkv: int,
+            window: int, softcap: Optional[float], scale: float,
+            causal: bool = True):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qi = pl.program_id(2)
+    anchor_valid = scalar_ref[0]
+    pass_valid = scalar_ref[1]
+
+    q0 = qi * bq                      # first global q index of this tile
+    k0 = ki * bkv                     # first global kv index of this tile
+
+    # --- block-level skip logic (regions are block-aligned) -------------
+    q_anchor = q0 < la                # whole tile in the anchor-q region
+    k_region_local = k0 >= la + pcap
+    k_region_pass = (k0 >= la) & (~k_region_local)
+    k_region_anchor = k0 < la
+
+    li0 = q0 - la                     # local-q index of tile start
+    lk0 = k0 - la - pcap              # local-kv index of tile start
+
+    if causal:
+        anchor_live = (k_region_anchor & (k0 <= q0 + bq - 1)
+                       & (k0 < anchor_valid))
+        local_live = (k_region_local & (lk0 <= li0 + bq - 1)
+                      & ((window <= 0) | (li0 - (lk0 + bkv - 1) < window)))
+    else:
+        anchor_live = k_region_anchor & (k0 < anchor_valid)
+        local_live = k_region_local & (
+            (window <= 0)
+            | ((li0 - (lk0 + bkv - 1) < window)
+               & (lk0 - (li0 + bq - 1) < window)))
+    live = jnp.where(
+        q_anchor,
+        anchor_live,
+        (k_region_anchor & (k0 < anchor_valid))
+        | (k_region_pass & ((k0 - la) < pass_valid))
+        | local_live,
+    )
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)     # (bq, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)     # (bkv, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        # --- elementwise mask for partially-visible tiles ----------------
+        i = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        j = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        li = i - la
+        lk = j - la - pcap
+        is_anchor_q = i < la
+        is_anchor_k = j < la
+        is_pass_k = (j >= la) & (j < la + pcap)
+        in_anchor = (j <= i) if causal else (j <= j)
+        vis_anchor_q = (is_anchor_q & is_anchor_k & in_anchor
+                        & (j < anchor_valid))
+        vis_a = is_anchor_k & (j < anchor_valid)
+        vis_p = is_pass_k & ((j - la) < pass_valid)
+        in_local = (lk <= li) if causal else (lk <= lk)
+        if window > 0:
+            dist = (li - lk) if causal else jnp.abs(li - lk)
+            in_local = in_local & (dist < window)
+        vis_b = (j >= la + pcap) & in_local
+        mask = vis_anchor_q | ((~is_anchor_q) & (vis_a | vis_p | vis_b))
+
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                                   # (bq,)
+        m_cur = jnp.max(s, axis=-1)                            # (bq,)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)  # (bq, bkv)
+        corr = jnp.exp(m_prev - m_new)                         # (bq,)
+        l_new = corr * l_ref[:, 0] + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ki == nkv - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        safe = jnp.maximum(l, 1e-30)
+        out = acc_ref[...] / safe[:, None]
+        out = jnp.where((l > 0.0)[:, None], out, 0.0)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def apb_flash_attention(q, k, v, *, la: int, pcap: int, anchor_valid,
+                        pass_valid, window: int = 0,
+                        softcap: Optional[float] = None,
+                        causal: bool = True,
+                        block_q: int = 128, block_kv: int = 128,
+                        interpret: bool = False):
+    """Fused APB flash attention (pre-padded inputs; see ops.apb_attention).
+
+    q: (B, Lq, H, D), k/v: (B, Lkv, KV, D).  ``la``/``pcap`` are the padded
+    anchor / passing capacities; Lq - la and Lkv - la - pcap must be equal
+    (the local block).  All three regions must be multiples of the block
+    sizes.  ``anchor_valid``/``pass_valid`` are dynamic int32 scalars.
+    """
+    b, lq, h, d = q.shape
+    _, lkv, kvh, _ = k.shape
+    assert lq - la == lkv - la - pcap, "local-block length mismatch"
+    assert la % block_q == 0 and la % block_kv == 0, (la, block_q, block_kv)
+    assert pcap % block_kv == 0
+    assert (lq - la) % block_q == 0 and (lkv - la - pcap) % block_kv == 0
+    q_per_kv = h // kvh
+    nq = lq // block_q
+    nkv = lkv // block_kv
+    scale = 1.0 / (d ** 0.5)
+
+    scalars = jnp.stack([jnp.asarray(anchor_valid, jnp.int32),
+                         jnp.asarray(pass_valid, jnp.int32)])
+
+    grid = (b, h, nq, nkv)
+
+    def q_index(bi, hi, qi, ki, sref):
+        del ki, sref
+        return (bi, qi, hi, 0)
+
+    def kv_index(bi, hi, qi, ki, sref):
+        del qi, sref
+        return (bi, ki, hi // q_per_kv, 0)
+
+    def o_index(bi, hi, qi, ki, sref):
+        del ki, sref
+        return (bi, qi, hi, 0)
+
+    kernel = functools.partial(
+        _kernel, la=la, pcap=pcap, bq=block_q, bkv=block_kv, nkv=nkv,
+        window=window, softcap=softcap, scale=scale, causal=causal)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d), q_index),
+            pl.BlockSpec((1, block_kv, 1, d), kv_index),
+            pl.BlockSpec((1, block_kv, 1, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d), o_index),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(scalars, q, k, v)

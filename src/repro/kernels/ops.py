@@ -1,0 +1,269 @@
+"""Public jit-able wrappers for the APB Pallas kernel.
+
+Handles region padding (anchor / passing / local each padded to block
+multiples so kernel tiles never straddle a region boundary), backend
+selection (``interpret=True`` on CPU so the kernel body is validated here;
+compiled Mosaic on TPU), and output slicing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.apb_attention import apb_flash_attention
+
+
+def _lse_attn(q, k, v, mask, softcap):
+    """Masked attention returning (out_f32, lse) for merging."""
+    d = q.shape[-1]
+    kvh, h = k.shape[2], q.shape[2]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask, s, ref.NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
+    z = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    lse = jnp.where(z > 0, m + jnp.log(jnp.maximum(z, 1e-30)), ref.NEG_INF)
+    return o / jnp.maximum(z, 1e-30)[..., None].transpose(0, 2, 1, 3), lse
+
+
+def apb_attention_decomposed(q_anchor, q_local, k_anchor, k_pass, k_local,
+                             v_anchor, v_pass, v_local, *, anchor_valid,
+                             pass_valid, window: int = 0,
+                             softcap=None, causal: bool = True):
+    """Decomposed APB attention (the dry-run/TPU-faithful lowering):
+
+      1. local-q  x local-kv   : causal self attention (lb x lb),
+      2. local-q  x [anchor|passing] : short-KV cross attention with
+         validity masks (lb x (la+pcap)),
+      3. LSE-merge of 1 and 2,
+      4. anchor-q x anchor-kv  : causal (la x la).
+
+    vs. the monolithic reference this never materialises the dead
+    regions of the (la+lb) x (la+pcap+lb) score matrix — the jnp
+    analogue of the Pallas kernel's block skipping (§Perf iteration 1).
+    """
+    from repro.parallel.collectives import lse_merge_pair
+    b, la = q_anchor.shape[0], q_anchor.shape[1]
+    lb = q_local.shape[1]
+    pcap = k_pass.shape[1]
+
+    # (1) local causal
+    i = jnp.arange(lb)[:, None]
+    j = jnp.arange(lb)[None, :]
+    mloc = (j <= i) if causal else jnp.ones((lb, lb), bool)
+    if window and window > 0:
+        d_ = (i - j) if causal else jnp.abs(i - j)
+        mloc = mloc & (d_ < window)
+    o_loc, lse_loc = _lse_attn(q_local, k_local, v_local,
+                               mloc[None, None], softcap)
+
+    # (2) cross: anchor + passing keys (validity-masked)
+    if la or pcap:
+        k_cross = jnp.concatenate([k_anchor, k_pass], axis=1)
+        v_cross = jnp.concatenate([v_anchor, v_pass], axis=1)
+        jj = jnp.arange(la + pcap)[None, :]
+        mcross = jnp.where(jj < la, jj < anchor_valid,
+                           (jj - la) < pass_valid)
+        mcross = jnp.broadcast_to(mcross[:, None, :], (1, lb, la + pcap))
+        o_cross, lse_cross = _lse_attn(q_local, k_cross, v_cross,
+                                       mcross[:, None], softcap)
+        o_l, _ = lse_merge_pair(o_loc.astype(q_local.dtype), lse_loc,
+                                o_cross.astype(q_local.dtype), lse_cross)
+    else:
+        o_l = o_loc.astype(q_local.dtype)
+
+    # (4) anchor causal
+    if la:
+        ia = jnp.arange(la)[:, None]
+        ja = jnp.arange(la)[None, :]
+        manc = (ja <= ia) if causal else jnp.ones((la, la), bool)
+        manc = manc & (ja < anchor_valid)
+        o_a, _ = _lse_attn(q_anchor, k_anchor, v_anchor,
+                           manc[None, None], softcap)
+        any_vis = jnp.any(manc, axis=-1)
+        o_a = jnp.where(any_vis[None, :, None, None], o_a, 0.0)
+        o_a = o_a.astype(q_anchor.dtype)
+    else:
+        o_a = q_anchor
+    return o_a, o_l
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x, length: int, axis: int):
+    pad = length - x.shape[axis]
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def apb_attention(q_anchor, q_local, k_anchor, k_pass, k_local,
+                  v_anchor, v_pass, v_local, *,
+                  anchor_valid, pass_valid, window: int = 0,
+                  softcap: Optional[float] = None, causal: bool = True,
+                  block_q: int = 128, block_kv: int = 128,
+                  use_kernel: Optional[bool] = None,
+                  interpret: Optional[bool] = None,
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """APB attention over the per-host [anchor | passing | local] layout.
+
+    Region tensors (``B`` batch, ``H``/``KV`` heads, ``D`` head dim):
+      q_anchor (B, la, H, D)      q_local (B, lb, H, D)
+      k/v_anchor (B, la, KV, D)   k/v_pass (B, pcap, KV, D)   k/v_local (B, lb, KV, D)
+
+    ``anchor_valid`` (0 on host 0 else la) and ``pass_valid``
+    (= host_id * l_p) are dynamic int32 scalars.
+
+    Returns ``(attn_anchor, attn_local)`` with the passing block consumed
+    but producing no output rows (paper: passing blocks are discarded
+    after attention and never reach the FFN).
+    """
+    if use_kernel is None:
+        use_kernel = True
+    if interpret is None:
+        interpret = _on_cpu()
+
+    la = q_anchor.shape[1]
+    lb = q_local.shape[1]
+    pcap = k_pass.shape[1]
+
+    if use_kernel == "decomposed":
+        return apb_attention_decomposed(
+            q_anchor, q_local, k_anchor, k_pass, k_local, v_anchor,
+            v_pass, v_local, anchor_valid=anchor_valid,
+            pass_valid=pass_valid, window=window, softcap=softcap,
+            causal=causal)
+
+    if not use_kernel:
+        q = jnp.concatenate([q_anchor, q_local], axis=1)
+        k = jnp.concatenate([k_anchor, k_pass, k_local], axis=1)
+        v = jnp.concatenate([v_anchor, v_pass, v_local], axis=1)
+        out = ref.apb_attention_ref(q, k, v, la=la, pcap=pcap,
+                                    anchor_valid=anchor_valid,
+                                    pass_valid=pass_valid, window=window,
+                                    softcap=softcap, causal=causal)
+        return out[:, :la], out[:, la:]
+
+    bq = min(block_q, max(8, _round_up(max(la, lb), 8)))
+    bkv = min(block_kv, max(8, _round_up(max(la, pcap if pcap else 8, lb), 8)))
+    # regions padded independently to tile multiples
+    la_p = _round_up(la, max(bq, bkv)) if la else 0
+    lb_p = _round_up(lb, max(bq, bkv))
+    pcap_p = _round_up(pcap, bkv) if pcap else 0
+
+    qa = _pad_to(q_anchor, la_p, 1)
+    ql = _pad_to(q_local, lb_p, 1)
+    ka = _pad_to(k_anchor, la_p, 1)
+    kl = _pad_to(k_local, lb_p, 1)
+    kp = _pad_to(k_pass, pcap_p, 1)
+    va = _pad_to(v_anchor, la_p, 1)
+    vl = _pad_to(v_local, lb_p, 1)
+    vp = _pad_to(v_pass, pcap_p, 1)
+
+    q = jnp.concatenate([qa, ql], axis=1)
+    k = jnp.concatenate([ka, kp, kl], axis=1)
+    v = jnp.concatenate([va, vp, vl], axis=1)
+
+    out = apb_flash_attention(
+        q, k, v, la=la_p, pcap=pcap_p,
+        anchor_valid=jnp.minimum(jnp.asarray(anchor_valid, jnp.int32), la),
+        pass_valid=jnp.minimum(jnp.asarray(pass_valid, jnp.int32), pcap),
+        window=window, softcap=softcap, causal=causal, block_q=bq,
+        block_kv=bkv, interpret=interpret)
+
+    return out[:, :la], out[:, la_p:la_p + lb]
+
+
+def causal_flash_attention(q, k, v, *, window: int = 0,
+                           softcap: Optional[float] = None,
+                           causal: bool = True,
+                           block_q: int = 128, block_kv: int = 128,
+                           use_kernel: Optional[bool] = None,
+                           interpret: Optional[bool] = None):
+    """Plain causal flash attention via the degenerate APB kernel.
+
+    q: (B, L, H, D); k, v: (B, L, KV, D).
+    """
+    if use_kernel is None:
+        use_kernel = True
+    if interpret is None:
+        interpret = _on_cpu()
+    if use_kernel == "decomposed" or not use_kernel:
+        return ref.causal_attention_ref(q, k, v, window=window,
+                                        softcap=softcap, causal=causal)
+
+    l = q.shape[1]
+    bq = min(block_q, max(8, _round_up(l, 8)))
+    bkv = min(block_kv, bq)
+    l_p = _round_up(l, max(bq, bkv))
+    qp = _pad_to(q, l_p, 1)
+    kp = _pad_to(k, l_p, 1)
+    vp = _pad_to(v, l_p, 1)
+    empty_q = jnp.zeros((q.shape[0], 0) + q.shape[2:], q.dtype)
+    out = apb_flash_attention(
+        qp, kp, vp, la=0, pcap=0,
+        anchor_valid=jnp.int32(0), pass_valid=jnp.int32(0),
+        window=window, softcap=softcap, causal=causal, block_q=bq,
+        block_kv=bkv, interpret=interpret)
+    del empty_q
+    return out[:, :l]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap"))
+def decode_attention(q, k_cache, v_cache, *, valid_len=None,
+                     window: int = 0, softcap: Optional[float] = None):
+    """Single-token decode attention returning (out, lse) for LSE merging.
+
+    q: (B, 1, H, D); k_cache/v_cache: (B, S, KV, D).  ``valid_len`` masks
+    the cache tail (B,) or scalar.  The (out, lse) pair is what the
+    distributed decode (paper Alg. 3) merges across KV shards.
+    """
+    b, _, h, d = q.shape
+    s = k_cache.shape[1]
+    kvh = k_cache.shape[2]
+    if kvh != h:
+        rep = h // kvh
+        k_cache = jnp.repeat(k_cache, rep, axis=2)
+        v_cache = jnp.repeat(v_cache, rep, axis=2)
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = jnp.arange(s)
+    mask = jnp.ones((s,), bool) if valid_len is None else (
+        pos[None, :] < jnp.reshape(jnp.asarray(valid_len), (-1, 1)))
+    if valid_len is None:
+        mask = jnp.broadcast_to(mask[None, :], (b, s))
+    if window and window > 0:
+        vl = jnp.reshape(jnp.asarray(valid_len if valid_len is not None else s),
+                         (-1, 1))
+        mask = mask & (pos[None, :] >= vl - window)
+    logits = jnp.where(mask[:, None, None, :], logits, ref.NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    e = jnp.where(mask[:, None, None, :], e, 0.0)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", e / jnp.maximum(z, 1e-30),
+                     v_cache.astype(jnp.float32))
+    lse = (m + jnp.log(jnp.maximum(z, 1e-30)))[..., 0]     # (B, H, 1)
+    return out.astype(q.dtype), lse

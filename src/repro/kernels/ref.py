@@ -1,0 +1,167 @@
+"""Pure-jnp oracle for the APB attention kernel.
+
+The APB kernel computes flash attention over the per-host layout
+
+    Q  = [ anchor | local ]                         (length  la + lb)
+    KV = [ anchor | passing | local ]               (length  la + pcap + lb)
+
+with the paper's modified mask (Eq. 2 / Fig. 2):
+
+  * anchor queries attend causally within the anchor only
+    (the anchor is a positional prefix: query tokens + first ``la`` doc
+    tokens at positions ``0..la-1``),
+  * local queries attend to: every *valid* anchor key, the *valid* prefix
+    of the passing block (``pass_valid = host_id * lp`` entries, i.e. the
+    compressed KV of all *previous* hosts), and causally within the local
+    block (optionally restricted to a sliding window),
+  * host 0 carries no anchor (``anchor_valid = 0``): its anchor rows/keys
+    are fully masked and its outputs are discarded by the caller.
+
+With ``la = pcap = 0`` the mask degenerates to plain causal (optionally
+sliding-window) flash attention, which is how the same kernel serves the
+non-APB layers (e.g. gemma-2 local layers and the train path).
+
+This file is the correctness oracle: an O(n^2) masked-softmax reference
+used by the kernel tests and by the CPU smoke paths.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def apb_mask(q_len: int, kv_len: int, *, la: int, pcap: int,
+             anchor_valid, pass_valid, window: int = 0,
+             causal: bool = True):
+    """Boolean (q_len, kv_len) visibility mask for the APB layout.
+
+    ``anchor_valid`` / ``pass_valid`` may be traced scalars (per-host values
+    derived from ``jax.lax.axis_index``).  ``causal=False`` gives the
+    bidirectional-encoder variant (whisper): full visibility within the
+    anchor and the local block.
+    """
+    i = jnp.arange(q_len)[:, None]          # q index
+    j = jnp.arange(kv_len)[None, :]         # kv index
+
+    q_is_anchor = i < la
+    li = i - la                             # local q index
+    k_is_anchor = j < la
+    k_is_pass = (j >= la) & (j < la + pcap)
+    lk = j - la - pcap                      # local k index
+
+    anchor_valid = jnp.asarray(anchor_valid)
+    pass_valid = jnp.asarray(pass_valid)
+
+    # anchor q: within valid anchor (causal unless bidirectional)
+    in_anchor = (j <= i) if causal else jnp.ones_like(j <= i)
+    vis_anchor_q = q_is_anchor & k_is_anchor & in_anchor & (j < anchor_valid)
+
+    # local q:
+    vis_a = k_is_anchor & (j < anchor_valid)
+    vis_p = k_is_pass & ((j - la) < pass_valid)
+    in_local = (lk <= li) if causal else jnp.ones_like(lk <= li)
+    if window and window > 0:
+        d = (li - lk) if causal else jnp.abs(li - lk)
+        in_local = in_local & (d < window)
+    vis_b = (j >= la + pcap) & in_local
+    vis_local_q = (~q_is_anchor) & (vis_a | vis_p | vis_b)
+
+    return vis_anchor_q | vis_local_q
+
+
+def masked_attention(q, k, v, mask, *, softcap: Optional[float] = None,
+                     scale: Optional[float] = None):
+    """Reference masked attention.
+
+    q: (B, Lq, H, D); k, v: (B, Lkv, KV, D); mask: (Lq, Lkv) or broadcastable.
+    GQA handled by repeating KV heads.  Rows with no visible key return 0.
+    """
+    b, lq, h, d = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        rep = h // kvh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask[None, None, :, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - jnp.maximum(m, NEG_INF / 2))
+    e = jnp.where(mask[None, None, :, :], e, 0.0)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.maximum(z, 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    # rows with no visible keys -> 0
+    any_vis = jnp.any(mask, axis=-1)        # (Lq,)
+    out = jnp.where(any_vis[None, :, None, None], out, 0.0)
+    return out.astype(q.dtype)
+
+
+def apb_attention_ref(q, k, v, *, la: int, pcap: int, anchor_valid,
+                      pass_valid, window: int = 0,
+                      softcap: Optional[float] = None,
+                      causal: bool = True):
+    """Oracle for the fused APB kernel.
+
+    q:      (B, la + lb, H, D)
+    k, v:   (B, la + pcap + lb, KV, D)
+    """
+    mask = apb_mask(q.shape[1], k.shape[1], la=la, pcap=pcap,
+                    anchor_valid=anchor_valid, pass_valid=pass_valid,
+                    window=window, causal=causal)
+    return masked_attention(q, k, v, mask, softcap=softcap)
+
+
+def causal_attention_ref(q, k, v, *, window: int = 0,
+                         softcap: Optional[float] = None,
+                         causal: bool = True):
+    """Plain causal (optionally sliding-window) attention via the same path."""
+    return apb_attention_ref(q, k, v, la=0, pcap=0, anchor_valid=0,
+                             pass_valid=0, window=window, softcap=softcap,
+                             causal=causal)
+
+
+def chunked_causal_attention(q, k, v, *, chunk: int = 1024,
+                             softcap: Optional[float] = None):
+    """Memory-bounded causal attention: lax.map over q chunks (scores
+    never exceed (B, H, chunk, L)).  Used by the wall-time benchmarks
+    where the O(L^2) score materialisation of ``masked_attention`` would
+    not fit in memory."""
+    b, l, h, d = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    n_chunks = (l + chunk - 1) // chunk
+    pad = n_chunks * chunk - l
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = 1.0 / (d ** 0.5)
+
+    def one(ci):
+        q0 = ci * chunk
+        qc = jax.lax.dynamic_slice_in_dim(qp, q0, chunk, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q0 + jnp.arange(chunk)[:, None]
+        kpos = jnp.arange(l)[None, :]
+        s = jnp.where((kpos <= qpos)[None, None], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        p = jnp.where((kpos <= qpos)[None, None], p, 0.0)
+        z = jnp.sum(p, axis=-1, keepdims=True)
+        return jnp.einsum("bhqk,bkhd->bqhd", p / jnp.maximum(z, 1e-30),
+                          v.astype(jnp.float32)).astype(q.dtype)
+
+    out = jax.lax.map(one, jnp.arange(n_chunks))     # (nc, B, chunk, H, D)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, n_chunks * chunk, h, d)
+    return out[:, :l]

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+initialisation and only then builds meshes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod: (16, 16) = 256 chips; two pods: (2, 16, 16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_model: Optional[int] = None, n_data: int = 1,
+                   n_pod: int = 1):
+    """Mesh over whatever devices exist (CPU tests / examples).
+
+    Defaults to putting all devices on the "model" axis.
+    """
+    n_dev = len(jax.devices())
+    if n_model is None:
+        n_model = n_dev // (n_data * n_pod)
+    assert n_pod * n_data * n_model <= n_dev, (n_pod, n_data, n_model, n_dev)
+    if n_pod > 1:
+        return jax.make_mesh((n_pod, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,53 @@
+"""GQA attention layer: projections + RoPE; the attention *core* itself is
+injected by a strategy (repro.core.strategies) so the same layer serves the
+FULL / RING / ULYSSES / STAR / APB paths and the decode step."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, apply_rope
+
+
+def attn_init(key, cfg, dtype=jnp.float32, cross: bool = False):
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kq, kk, kv_, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d, h * dh, dtype),
+        "wk": dense_init(kk, d, kv * dh, dtype),
+        "wv": dense_init(kv_, d, kv * dh, dtype),
+        "wo": dense_init(ko, h * dh, d, dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kv * dh,), dtype)
+        p["bv"] = jnp.zeros((kv * dh,), dtype)
+    return p
+
+
+def attn_qkv(params, cfg, x, positions=None, rope: bool = True):
+    """x: (B, L, d) -> q (B,L,H,dh), k/v (B,L,KV,dh), RoPE applied."""
+    b, l, _ = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, l, h, dh)
+    k = k.reshape(b, l, kv, dh)
+    v = v.reshape(b, l, kv, dh)
+    if rope and cfg.use_rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(params, cfg, attn):
+    """attn: (B, L, H, dh) -> (B, L, d)."""
+    b, l = attn.shape[:2]
+    return attn.reshape(b, l, -1) @ params["wo"]

@@ -1,0 +1,106 @@
+"""Common model building blocks (pure-JAX, functional params-as-pytrees).
+
+The framework uses no flax/haiku: every module is a pair of functions
+``init(key, ...) -> params`` and ``apply(params, x, ...) -> y`` over nested
+dicts of jnp arrays.  This keeps the dry-run path trivially compatible with
+``jax.eval_shape`` / ShapeDtypeStruct param trees.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initialisation
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.uniform(key, (in_dim, out_dim), jnp.float32,
+                               -scale, scale)).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+def norm_init(dim: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def norm_apply(params, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + eps) * (1.0 + 0.0 + params["scale"].astype(jnp.float32))
+    elif kind == "layernorm":
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10_000.0):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (half,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., :, None, :]                       # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def softcap(x, cap: Optional[float]):
+    """Gemma-2 style logit soft-capping."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    raise ValueError(name)
+
+
+def make_causal_mask(q_len: int, kv_len: int, q_offset=0):
+    """Boolean (q_len, kv_len) causal mask; True = attend."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    return q_pos >= k_pos
+
+
+def count_params(params) -> int:
+    return int(sum(p.size for p in jax.tree_util.tree_leaves(params)))

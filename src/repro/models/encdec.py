@@ -1,0 +1,212 @@
+"""Encoder–decoder stack (whisper-style) — arXiv:2212.04356.
+
+Encoder: bidirectional attention over (stub-frontend) frame embeddings
+with sinusoidal positions; under sequence parallelism the encoder runs
+either exact bidirectional Ring attention or the *bidirectional APB*
+variant (passing blocks from all other hosts — a beyond-paper extension,
+DESIGN.md §5).
+
+Decoder: causal self-attention + cross-attention into the (sharded)
+encoder output.  Decode shapes interpret ``seq_len`` as the encoder
+context length: the cross-attention KV cache is what is sharded across
+the mesh, and one decode step LSE-merges partial cross-attention across
+the shards (same machinery as paper Alg. 3).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decode as dec
+from repro.core import strategies
+from repro.core.compressor import compressor_init
+from repro.models import attention_layer as attn
+from repro.models import ffn as ffn_mod
+from repro.models.common import (dense_init, embed_init, norm_apply,
+                                 norm_init)
+from repro.models.transformer import RunCtx
+from repro.parallel.collectives import lse_merge_pair
+
+
+def sinusoidal_positions(length: int, dim: int):
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    ang = pos / (10_000 ** (2 * i / dim))
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+def sinusoidal_at(positions, dim: int):
+    """Sinusoidal embeddings at (possibly traced) positions (..., T)."""
+    i = jnp.arange(dim // 2, dtype=jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) \
+        / (10_000 ** (2 * i / dim))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": attn.attn_init(ks[0], cfg, dtype),
+        "norm2": norm_init(cfg.d_model, cfg.norm, dtype),
+        "ffn": ffn_mod.ffn_init(ks[1], cfg.d_model, cfg.d_ff,
+                                cfg.activation, dtype),
+    }
+    if cfg.apb_applicable:
+        p["retain"] = compressor_init(ks[2], cfg, dtype)
+    return p
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": attn.attn_init(ks[0], cfg, dtype),
+        "norm_x": norm_init(cfg.d_model, cfg.norm, dtype),
+        "xattn": attn.attn_init(ks[1], cfg, dtype, cross=True),
+        "norm2": norm_init(cfg.d_model, cfg.norm, dtype),
+        "ffn": ffn_mod.ffn_init(ks[2], cfg.d_model, cfg.d_ff,
+                                cfg.activation, dtype),
+    }
+
+
+def init_params(key, cfg, dtype=jnp.float32):
+    ke, kd, kemb = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, cfg.num_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "embed": embed_init(kemb, cfg.vocab_size, cfg.d_model, dtype),
+        "enc_blocks": jax.vmap(
+            lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+        "enc_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "dec_blocks": jax.vmap(
+            lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg, frames, rctx: RunCtx):
+    """frames: (B, S, d) stub-frontend embeddings (global, seq-sharded).
+
+    Returns encoder hidden states (B, S, d).  Bidirectional attention:
+    strategy 'apb'/'star' run the bidirectional-augmented variant, 'ring'
+    the exact bidirectional ring, 'full' plain attention.
+    """
+    x = frames + sinusoidal_positions(frames.shape[1],
+                                      cfg.d_model)[None].astype(frames.dtype)
+
+    def body(carry, p):
+        x, salt = carry
+        h = norm_apply(p["norm1"], x, cfg.norm, cfg.norm_eps)
+        q, k, v = attn.attn_qkv(p["attn"], cfg, h, positions=None,
+                                rope=False)
+        out, _, _ = strategies.prefill_attention(
+            cfg, rctx.strategy, q, k, v, pctx=rctx.pctx, layout=rctx.layout,
+            retain_params=p.get("retain"), rng=rctx.rng_for(salt),
+            compressor_method=rctx.compressor_method,
+            use_kernel=rctx.use_kernel, bidirectional=True)
+        x = x + attn.attn_out(p["attn"], cfg, out)
+        h = norm_apply(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        x = x + ffn_mod.ffn_apply(p["ffn"], h, cfg.activation)
+        return (x, salt + 1), None
+
+    (x, _), _ = jax.lax.scan(body, (x, 0), params["enc_blocks"],
+                             unroll=rctx.unroll)
+    return norm_apply(params["enc_norm"], x, cfg.norm, cfg.norm_eps)
+
+
+def cross_kv(params, cfg, enc_out):
+    """Per-decoder-layer cross-attention KV from the encoder output.
+
+    Returns stacked {"k": (L_dec, B, S, KV, D), "v": ...} — this is the
+    sharded cross-attention cache for serve_step.
+    """
+    def per_layer(p):
+        b, s, _ = enc_out.shape
+        kv, dh = cfg.num_kv_heads, cfg.head_dim
+        k = (enc_out @ p["xattn"]["wk"]).reshape(b, s, kv, dh)
+        v = (enc_out @ p["xattn"]["wv"]).reshape(b, s, kv, dh)
+        return {"k": k, "v": v}
+
+    return jax.vmap(per_layer, in_axes=0)(params["dec_blocks"])
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+def _dec_layer(p, cfg, x, xcache, self_kv, pos_emb, rctx: RunCtx,
+               causal_self: bool = True):
+    """One decoder layer over (B, T, d) tokens.
+
+    self_kv: optional {"k","v"} replicated self cache (decode tail).
+    Returns (x, new self {"k","v"}).
+    """
+    h = norm_apply(p["norm1"], x, cfg.norm, cfg.norm_eps)
+    q, k_new, v_new = attn.attn_qkv(p["attn"], cfg, h, positions=None,
+                                    rope=False)
+    if self_kv is not None:
+        ks = jnp.concatenate([self_kv["k"], k_new], 1)
+        vs = jnp.concatenate([self_kv["v"], v_new], 1)
+    else:
+        ks, vs = k_new, v_new
+    t, s = q.shape[1], ks.shape[1]
+    offs = s - t
+    mask = (jnp.arange(s)[None, :] <= offs + jnp.arange(t)[:, None])
+    s_out, _ = dec.partial_attention_lse(q, ks, vs, mask)
+    x = x + attn.attn_out(p["attn"], cfg, s_out)
+
+    # cross-attention into the (sharded) encoder KV
+    h = norm_apply(p["norm_x"], x, cfg.norm, cfg.norm_eps)
+    b, t2 = h.shape[0], h.shape[1]
+    qx = (h @ p["xattn"]["wq"]).reshape(b, t2, cfg.num_heads, cfg.head_dim)
+    x_out, _ = dec.decode_attention_distributed(
+        qx, xcache["k"], xcache["v"], pctx=rctx.pctx,
+        cache_axes=rctx.cache_axes)
+    x = x + attn.attn_out(p["xattn"], cfg, x_out)
+
+    h = norm_apply(p["norm2"], x, cfg.norm, cfg.norm_eps)
+    x = x + ffn_mod.ffn_apply(p["ffn"], h, cfg.activation)
+    return x, {"k": k_new, "v": v_new}
+
+
+def decode_tokens(params, cfg, tokens, xcaches, tails, rctx: RunCtx,
+                  start_pos=0):
+    """tokens: (B, T).  xcaches: stacked cross KV.  tails: stacked self
+    caches or None.  ``start_pos`` may be a traced scalar (decode step).
+    Returns (hidden, new_tails)."""
+    x = params["embed"][tokens]
+    pos = jnp.asarray(start_pos) + jnp.arange(tokens.shape[1])
+    x = x + sinusoidal_at(pos, cfg.d_model)[None].astype(x.dtype)
+
+    def body(carry, scanned):
+        x = carry
+        if tails is None:
+            p, xc = scanned
+            tail = None
+        else:
+            p, xc, tail = scanned
+        x, new_tail = _dec_layer(p, cfg, x, xc, tail, None, rctx)
+        return x, new_tail
+
+    xs = ((params["dec_blocks"], xcaches) if tails is None
+          else (params["dec_blocks"], xcaches, tails))
+    x, new_tails = jax.lax.scan(body, x, xs, unroll=rctx.unroll)
+    return x, new_tails
+
+
+def logits(params, cfg, hidden):
+    h = norm_apply(params["final_norm"], hidden, cfg.norm, cfg.norm_eps)
+    return (h @ params["embed"].T).astype(jnp.float32)

@@ -1,0 +1,33 @@
+"""Feed-forward blocks: SwiGLU (llama-style) and GELU (whisper-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, activation_fn
+
+
+def ffn_init(key, d_model: int, d_ff: int, activation: str = "silu",
+             dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation == "silu":           # SwiGLU: gate + up + down
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype),
+        }
+    return {                            # plain 2-matrix MLP
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def ffn_apply(params, x, activation: str = "silu"):
+    act = activation_fn(activation)
+    if "w_gate" in params:
+        h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+        return h @ params["w_down"]
+    h = act(x @ params["w_up"] + params["b_up"])
+    return h @ params["w_down"] + params["b_down"]

@@ -1,0 +1,282 @@
+"""Mamba-2 (SSD, state-space duality) mixer — arXiv:2405.21060.
+
+Implements the chunked SSD algorithm in pure JAX einsums:
+
+  * intra-chunk "quadratic branch"  (flash-attention-like tiles),
+  * chunk-state summaries + inter-chunk linear recurrence
+    (``lax.associative_scan`` over chunks),
+  * exact single-token decode step (constant state),
+  * **sequence-parallel support**: because the recurrence is linear in the
+    incoming state, a shard can run with ``init_state = 0`` and later add
+    the correction  ``y_t += C_t · (Π_{s<=t} decay_s) · h_in``  once the
+    true incoming state ``h_in`` has been produced from the other shards'
+    summaries.  ``ssd_chunked`` therefore returns everything the
+    cross-shard combiner (repro.parallel.ssm) needs:
+    (y0, shard_state_contrib, shard_log_decay, per-token cum-log-decay).
+
+This is the recurrent-scan sharding of DESIGN.md §2: the paper's APB
+technique does not apply to attention-free layers, so Mamba2 layers get
+exact linear-time sequence parallelism instead.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, norm_apply
+
+
+class SSDLocal(NamedTuple):
+    y: jax.Array            # (B, L, nh, P)  output with init_state = 0
+    state: jax.Array        # (B, nh, P, N)  shard's state contribution
+    log_decay: jax.Array    # (B, nh)        total log-decay over the shard
+    cum_log_decay: jax.Array  # (B, L, nh)   inclusive cumulative log-decay
+
+
+def mamba_init(key, d_model: int, d_inner: int, ssm_state: int,
+               n_heads: int, conv_width: int = 4, dtype=jnp.float32):
+    n = ssm_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    conv_ch = d_inner + 2 * n
+    return {
+        # in_proj -> [z (d_inner) | xBC (d_inner + 2N) | dt (nh)]
+        "w_in": dense_init(k1, d_model, 2 * d_inner + 2 * n + n_heads, dtype),
+        "conv_w": (jax.random.normal(k2, (conv_width, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(dtype),
+        "D": jnp.ones((n_heads,), dtype),
+        "norm_scale": jnp.zeros((d_inner,), dtype),
+        "w_out": dense_init(k3, d_inner, d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, a, b, c, d_skip, *, chunk: int,
+                init_state: Optional[jax.Array] = None) -> SSDLocal:
+    """Chunked SSD.
+
+    x:  (B, L, nh, P)   per-head inputs
+    dt: (B, L, nh)      post-softplus step sizes
+    a:  (nh,)           negative decay rates (-exp(A_log))
+    b:  (B, L, N)       input projection (single group, shared over heads)
+    c:  (B, L, N)       output projection
+    d_skip: (nh,)       skip connection
+    """
+    bsz, l, nh, p = x.shape
+    n = b.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(bsz, nc, chunk, nh, p).astype(f32)
+    dtc = dt.reshape(bsz, nc, chunk, nh).astype(f32)
+    bc = b.reshape(bsz, nc, chunk, n).astype(f32)
+    cc = c.reshape(bsz, nc, chunk, n).astype(f32)
+
+    la = dtc * a.astype(f32)                      # log decay per step (<= 0)
+    la_cum = jnp.cumsum(la, axis=2)               # inclusive, within chunk
+
+    # ---- intra-chunk (quadratic branch) --------------------------------
+    cb = jnp.einsum("bgtn,bgsn->bgts", cc, bc)    # (B,nc,c,c)
+    seg = la_cum[:, :, :, None, :] - la_cum[:, :, None, :, :]  # (B,nc,t,s,nh)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: exp of masked (positive, unbounded) entries would be
+    # inf and poison the backward pass (inf * 0 = nan in d/d seg)
+    seg = jnp.where(causal[None, None, :, :, None], seg, -1e30)
+    m = jnp.exp(seg)
+    # explicit pairwise contraction: a single 4-operand einsum lets XLA
+    # materialise the 6-D (b,g,t,s,h,p) intermediate (~100 GiB/chip at
+    # jamba scale).  Peak here is the 5-D (b,g,t,s,h) weight tensor.
+    w_diag = cb[..., None] * m * dtc[:, :, None, :, :]          # (B,nc,t,s,nh)
+    y_diag = jnp.einsum("bgtsh,bgshp->bgthp", w_diag, xc)
+
+    # ---- chunk state summaries ------------------------------------------
+    decay_to_end = jnp.exp(la_cum[:, :, -1:, :] - la_cum)       # (B,nc,c,nh)
+    xw = xc * (decay_to_end * dtc)[..., None]                   # (B,nc,c,nh,P)
+    s_chunk = jnp.einsum("bgsn,bgshp->bghpn", bc, xw)           # (B,nc,nh,P,N)
+    chunk_log_decay = la_cum[:, :, -1, :]                       # (B,nc,nh)
+
+    # ---- inter-chunk recurrence (associative scan over chunks) ----------
+    def combine(lhs, rhs):
+        ld_l, s_l = lhs
+        ld_r, s_r = rhs
+        return ld_l + ld_r, s_r + s_l * jnp.exp(ld_r)[..., None, None]
+
+    ld_scan, s_scan = jax.lax.associative_scan(
+        combine,
+        (jnp.moveaxis(chunk_log_decay, 1, 0),        # (nc,B,nh)
+         jnp.moveaxis(s_chunk, 1, 0)),               # (nc,B,nh,P,N)
+        axis=0)
+    # h_in[c] = state entering chunk c (exclusive)
+    h_after = jnp.moveaxis(s_scan, 0, 1)             # (B,nc,nh,P,N), inclusive
+    h_in = jnp.concatenate(
+        [jnp.zeros_like(h_after[:, :1]), h_after[:, :-1]], axis=1)
+    ld_incl = jnp.moveaxis(ld_scan, 0, 1)            # (B,nc,nh) inclusive
+
+    if init_state is not None:
+        carry_decay_excl = jnp.exp(
+            jnp.concatenate([jnp.zeros_like(ld_incl[:, :1]),
+                             ld_incl[:, :-1]], axis=1))         # (B,nc,nh)
+        h_in = h_in + (init_state.astype(f32)[:, None]
+                       * carry_decay_excl[..., None, None])
+
+    # ---- inter-chunk output contribution (pairwise: contract n first) ----
+    y_off = jnp.einsum("bgtn,bghpn->bgthp", cc, h_in) \
+        * jnp.exp(la_cum)[..., None]
+
+    y = (y_diag + y_off).reshape(bsz, l, nh, p)
+    y = y + x.astype(f32) * d_skip.astype(f32)[None, None, :, None]
+
+    final_state = h_after[:, -1]                     # (B,nh,P,N)
+    total_ld = ld_incl[:, -1]                        # (B,nh)
+    if init_state is not None:
+        final_state = final_state + (init_state.astype(f32)
+                                     * jnp.exp(total_ld)[..., None, None])
+
+    cum_ld = (la_cum + jnp.concatenate(
+        [jnp.zeros_like(ld_incl[:, :1]), ld_incl[:, :-1]],
+        axis=1)[:, :, None, :]).reshape(bsz, l, nh)  # global inclusive
+
+    return SSDLocal(y.astype(x.dtype), final_state, total_ld, cum_ld)
+
+
+def ssd_state_correction(y0, c, cum_log_decay, h_in):
+    """Add the incoming-state contribution to a zero-init SSD output.
+
+    y0: (B,L,nh,P); c: (B,L,N); cum_log_decay: (B,L,nh); h_in: (B,nh,P,N).
+    """
+    corr = jnp.einsum("bln,bhpn->blhp", c.astype(jnp.float32),
+                      h_in.astype(jnp.float32)) \
+        * jnp.exp(cum_log_decay.astype(jnp.float32))[..., None]
+    return (y0.astype(jnp.float32) + corr).astype(y0.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 mixer (projections + conv + SSD + gated norm)
+# ---------------------------------------------------------------------------
+
+def _causal_conv(xbc, conv_w, conv_b, left_ctx=None):
+    """Depthwise causal conv.  xbc: (B, L, C); left_ctx: (B, w-1, C)."""
+    w = conv_w.shape[0]
+    if left_ctx is None:
+        left_ctx = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([left_ctx, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i][None, None, :]
+              for i in range(w))
+    return out + conv_b[None, None, :]
+
+
+def mamba_split(params, cfg, x):
+    """Input projection + conv + activations -> SSD operands."""
+    d_inner = cfg.d_inner
+    n = cfg.ssm_state
+    nh = cfg.n_ssm_heads
+    proj = x @ params["w_in"]
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:2 * d_inner + 2 * n]
+    dt_raw = proj[..., 2 * d_inner + 2 * n:]
+    return z, xbc, dt_raw, d_inner, n, nh
+
+
+def mamba_apply(params, cfg, x, *, init_state=None, conv_left=None,
+                return_local=False):
+    """Mamba2 block forward over a (possibly shard-local) sequence.
+
+    x: (B, L, d_model).  Returns (y, SSDLocal-or-final-state, conv_tail).
+    With ``return_local=True`` the raw SSDLocal + operands needed for the
+    cross-shard correction are returned (used by repro.parallel.ssm).
+    """
+    z, xbc, dt_raw, d_inner, n, nh = mamba_split(params, cfg, x)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_left)
+    conv_tail = xbc_tail = None
+    w = params["conv_w"].shape[0]
+    # tail of the *pre-activation* conv input is what the next shard needs;
+    # recompute from the projection (cheap) — keep last w-1 raw inputs.
+    xbc_raw = (x @ params["w_in"])[..., d_inner:2 * d_inner + 2 * n]
+    conv_tail = xbc_raw[:, -(w - 1):, :]
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_inner]
+    b = xbc[..., d_inner:d_inner + n]
+    c = xbc[..., d_inner + n:]
+    p = d_inner // nh
+    xh = xs.reshape(*xs.shape[:-1], nh, p)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    # largest divisor of L not exceeding the configured chunk size
+    l = xh.shape[1]
+    chunk = min(cfg.ssm_chunk, l)
+    while l % chunk:
+        chunk -= 1
+    local = ssd_chunked(xh, dt, a, b, c, params["D"], chunk=chunk,
+                        init_state=init_state)
+    if return_local:
+        return local, (z, c, conv_tail)
+
+    y = local.y.reshape(*xs.shape)
+    y = _gated_out(params, cfg, y, z)
+    return y, local.state, conv_tail
+
+
+def _gated_out(params, cfg, y, z):
+    y = y * jax.nn.silu(z)
+    y = norm_apply({"scale": params["norm_scale"]}, y, "rmsnorm", cfg.norm_eps)
+    return y @ params["w_out"]
+
+
+def mamba_finish(params, cfg, local: SSDLocal, z, c, h_in):
+    """Apply the cross-shard state correction and the output projection."""
+    y = ssd_state_correction(local.y, c, local.cum_log_decay, h_in)
+    y = y.reshape(*y.shape[:-2], -1)
+    return _gated_out(params, cfg, y, z)
+
+
+# ---------------------------------------------------------------------------
+# Decode step (constant state)
+# ---------------------------------------------------------------------------
+
+def mamba_decode_step(params, cfg, x_t, ssm_state, conv_state):
+    """x_t: (B, 1, d_model); ssm_state: (B, nh, P, N); conv_state: (B, w-1, C).
+
+    Returns (y_t, new_ssm_state, new_conv_state).
+    """
+    z, xbc_raw, dt_raw, d_inner, n, nh = mamba_split(params, cfg, x_t)
+    w = params["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state, xbc_raw], axis=1)      # (B, w, C)
+    xbc = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+    xbc = jax.nn.silu(xbc)[:, None, :]                           # (B,1,C)
+    new_conv_state = window[:, 1:, :]
+
+    xs = xbc[..., :d_inner]
+    b = xbc[..., d_inner:d_inner + n]                            # (B,1,N)
+    c = xbc[..., d_inner + n:]
+    p = d_inner // nh
+    xh = xs.reshape(xs.shape[0], nh, p)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,nh)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                      # (B,nh)
+
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xh.astype(jnp.float32),
+                     b[:, 0].astype(jnp.float32), dt)
+    new_state = ssm_state.astype(jnp.float32) * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c[:, 0].astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(y.shape[0], 1, d_inner).astype(x_t.dtype)
+    y = _gated_out(params, cfg, y, z)
+    return y, new_state.astype(ssm_state.dtype), new_conv_state
+
+
+def mamba_state_shapes(cfg, batch: int, dtype=jnp.float32):
+    nh, p, n = cfg.n_ssm_heads, cfg.d_inner // cfg.n_ssm_heads, cfg.ssm_state
+    w = cfg.ssm_conv_width
+    conv_ch = cfg.d_inner + 2 * n
+    return (jax.ShapeDtypeStruct((batch, nh, p, n), dtype),
+            jax.ShapeDtypeStruct((batch, w - 1, conv_ch), dtype))

@@ -1,0 +1,196 @@
+"""Public model API: build step functions for any assigned architecture.
+
+``build(cfg)`` returns a ``Model`` with:
+
+  * ``init(key, dtype)``                       — parameter pytree
+  * ``loss_fn(params, tokens, rctx)``          — causal-LM loss (train_4k)
+  * ``prefill_step(params, doc, query, rctx)`` — APB/baseline document
+        prefill + exact query pass; returns (first-token logits, doc
+        caches, tail caches)
+  * ``serve_step(params, token, pos, caches, tails, rctx, ...)`` — one
+        decode step over the sharded doc cache (decode_32k / long_500k)
+
+Decoder-only architectures use repro.models.transformer; whisper uses
+repro.models.encdec (prefill = encode + decoder start, serve = one
+decoder token cross-attending into the sharded encoder KV).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import splitting, strategies
+from repro.models import encdec
+from repro.models import transformer as tf
+from repro.models.transformer import RunCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable
+    loss_fn: Callable
+    prefill_step: Callable
+    serve_step: Callable
+    query_step: Callable = None
+
+
+def make_layout(cfg, n_doc: int, lq: int, n_hosts: int):
+    return splitting.make_layout(
+        n_doc, lq, n_hosts, anchor_frac=cfg.anchor_frac,
+        passing_frac=cfg.passing_frac)
+
+
+def _augment(inputs, layout):
+    """Gather the augmented sequence from [query | document] inputs."""
+    idx = jnp.asarray(splitting.augment_indices(layout))
+    return jnp.take(inputs, idx, axis=1)
+
+
+def _deaugment_cache(cache_len_note):   # documentation anchor only
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only
+# ---------------------------------------------------------------------------
+
+def _build_decoder_only(cfg):
+
+    def init(key, dtype=jnp.float32):
+        return tf.init_params(key, cfg, dtype)
+
+    # -------------------------------------------------- train (causal LM)
+    def loss_fn(params, tokens, rctx: RunCtx, targets=None):
+        """tokens: (B, L) ints (or (B, L, d) embeddings with targets).
+
+        The full length L is kept (not L-1) so the sequence axis stays
+        divisible by the mesh; the final position is weight-masked.
+        """
+        if targets is None:
+            inputs = tokens
+            targets = jnp.concatenate(
+                [tokens[:, 1:], tokens[:, :1]], axis=1)
+            weights = jnp.ones(tokens.shape, jnp.float32).at[:, -1].set(0.0)
+        else:
+            inputs = tokens
+            weights = jnp.ones(targets.shape, jnp.float32)
+        positions = jnp.arange(inputs.shape[1])[None]
+        hidden, _, aux = tf.forward_prefill(params, cfg, inputs, positions,
+                                            rctx)
+        lg = tf.logits(params, cfg, hidden)
+        ll = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(ll, targets[..., None], axis=-1)[..., 0]
+        loss = jnp.sum(nll * weights) / jnp.sum(weights)
+        return loss + 0.01 * aux
+
+    # -------------------------------------------------- prefill (doc + query)
+    def prefill_step(params, doc, query, rctx: RunCtx):
+        """doc: (B, n) ints or (B, n, d) embeds; query: (B, lq) ints.
+
+        Returns (next-token logits (B, V), doc caches, tail caches).
+        """
+        lq = query.shape[1]
+        n_doc = doc.shape[1]
+
+        if rctx.strategy in strategies.AUGMENTED and rctx.layout is not None:
+            lay = rctx.layout
+            if doc.ndim == 2:
+                full = jnp.concatenate([query, doc], axis=1)
+            else:
+                q_emb = params["embed"][query].astype(doc.dtype)
+                full = jnp.concatenate([q_emb, doc], axis=1)
+            aug = _augment(full, lay)
+            positions = jnp.asarray(splitting.augment_positions(lay))[None]
+            _, caches, _ = tf.forward_prefill(params, cfg, aug, positions,
+                                              rctx)
+        else:
+            positions = (lq + jnp.arange(n_doc))[None]
+            _, caches, _ = tf.forward_prefill(params, cfg, doc, positions,
+                                              rctx)
+
+        # ---- exact query pass over the sharded doc cache ----------------
+        q_positions = (lq + n_doc + jnp.arange(lq))[None]
+        hidden, tails, _ = tf.forward_query(params, cfg, query, q_positions,
+                                            caches, rctx)
+        lg = tf.logits(params, cfg, hidden[:, -1:])
+        return lg[:, 0], caches, tails
+
+    # -------------------------------------------------- decode
+    def serve_step(params, token, position, caches, tails, rctx: RunCtx,
+                   valid_len=None, total_len=None):
+        """token: (B, 1); position: (B, 1) global positions.
+
+        Returns (logits (B, V), per-layer cache updates).
+        """
+        hidden, updates, _ = tf.forward_decode(
+            params, cfg, token, position, caches, tails, rctx,
+            valid_len=valid_len, total_len=total_len)
+        lg = tf.logits(params, cfg, hidden)
+        return lg[:, 0], updates
+
+    def query_step(params, query, positions, caches, rctx: RunCtx,
+                   valid_len=None):
+        hidden, tails, _ = tf.forward_query(params, cfg, query, positions,
+                                            caches, rctx,
+                                            valid_len=valid_len)
+        return tf.logits(params, cfg, hidden), tails
+
+    return Model(cfg, init, loss_fn, prefill_step, serve_step, query_step)
+
+
+# ---------------------------------------------------------------------------
+# Encoder–decoder (whisper)
+# ---------------------------------------------------------------------------
+
+def _build_encdec(cfg):
+
+    def init(key, dtype=jnp.float32):
+        return encdec.init_params(key, cfg, dtype)
+
+    def loss_fn(params, batch, rctx: RunCtx, targets=None):
+        """batch: (frames (B,S,d), tokens (B,T)) — seq2seq LM loss."""
+        frames, tokens = batch
+        enc_out = encdec.encode(params, cfg, frames, rctx)
+        xc = encdec.cross_kv(params, cfg, enc_out)
+        hidden, _ = encdec.decode_tokens(params, cfg, tokens[:, :-1], xc,
+                                         None, rctx)
+        lg = encdec.logits(params, cfg, hidden)
+        ll = jax.nn.log_softmax(lg, axis=-1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(ll, tgt[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll)
+
+    def prefill_step(params, frames, query, rctx: RunCtx):
+        """frames: (B, S, d) stub embeddings; query: (B, lq) decoder
+        prompt tokens.  Returns (next-token logits, cross caches, tails).
+        """
+        enc_out = encdec.encode(params, cfg, frames, rctx)
+        xc = encdec.cross_kv(params, cfg, enc_out)
+        hidden, tails = encdec.decode_tokens(params, cfg, query, xc, None,
+                                             rctx)
+        lg = encdec.logits(params, cfg, hidden[:, -1:])
+        return lg[:, 0], xc, tails
+
+    def serve_step(params, token, position, xcaches, tails, rctx: RunCtx,
+                   valid_len=None, total_len=None):
+        del valid_len, total_len
+        # decoder position of the new token (scalar or (B,1) -> scalar)
+        start = (jnp.reshape(jnp.asarray(position), (-1,))[0]
+                 if not isinstance(position, int) else position)
+        hidden, new_tails = encdec.decode_tokens(
+            params, cfg, token, xcaches, tails, rctx, start_pos=start)
+        lg = encdec.logits(params, cfg, hidden)
+        return lg[:, 0], new_tails
+
+    return Model(cfg, init, loss_fn, prefill_step, serve_step)
+
+
+def build(cfg) -> Model:
+    if cfg.is_encoder_decoder:
+        return _build_encdec(cfg)
+    return _build_decoder_only(cfg)

@@ -1,0 +1,412 @@
+"""Decoder-only transformer stack, generic over the assigned architecture
+pool (dense GQA / MoE / Mamba2 / hybrid / VLM-LM) and over the attention
+strategy (FULL / RING / ULYSSES / STAR / APB).
+
+Layers are grouped into the config's repeating ``block_pattern``;
+``lax.scan`` iterates over pattern repetitions so the compiled HLO holds a
+single block body regardless of depth (95-layer deepseek compiles as fast
+as a 2-layer smoke model).  Per-layer state (KV caches / SSM states) rides
+along as stacked scan inputs/outputs, one pytree slot per pattern
+position.
+
+Cache conventions (all dict-pytrees so they scan cleanly):
+  * attention layer prefill cache:  {"k": (B, L, KV, D), "v": ...}
+      — the *local-block* KV, sharded on the sequence axis (the anchors
+      and passing blocks are discarded per the paper).
+  * mamba layer prefill cache:      {"state": (S, B, nh, P, N),
+                                     "conv":  (S, B, w-1, C)}
+      — leading axis = sequence shards (S = n_hosts; 1 when unsharded);
+      the true end-of-document state is slot [-1].
+  * decode caches: attention {"k","v"} sharded on dim 1; mamba
+      {"state": (B, nh, P, N), "conv": (B, w-1, C)} replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import decode as dec
+from repro.core import strategies
+from repro.core.compressor import compressor_init
+from repro.core.splitting import APBLayout
+from repro.models import attention_layer as attn
+from repro.models import ffn as ffn_mod
+from repro.models import mamba2
+from repro.models import moe as moe_mod
+from repro.models.common import (dense_init, embed_init, norm_apply,
+                                 norm_init, softcap)
+from repro.parallel import ssm as ssm_par
+from repro.parallel.collectives import lse_merge_pair
+
+
+# ---------------------------------------------------------------------------
+# Run context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    """Everything a forward pass needs besides params and inputs."""
+
+    strategy: str = "full"                   # prefill attention strategy
+    pctx: strategies.ParallelCtx = dataclasses.field(
+        default_factory=strategies.ParallelCtx)
+    layout: Optional[APBLayout] = None       # augmented layout (star/apb)
+    cache_axes: Tuple[str, ...] = ()         # axes sharding the KV cache
+    compressor_method: str = "retain"
+    use_kernel: bool = False
+    moe_impl: str = "gspmd"                  # gspmd | local (§Perf iter 2)
+    bidirectional: bool = False              # whisper-encoder APB variant
+    remat: bool = False                      # checkpoint the scan body
+    unroll: bool = False                     # unroll layer scans (used by
+                                             # the dry-run cost model)
+    rng: Optional[jax.Array] = None
+
+    def rng_for(self, salt):
+        key = self.rng if self.rng is not None else jax.random.PRNGKey(0)
+        return jax.random.fold_in(key, salt)
+
+    @property
+    def seq_sharded(self) -> bool:
+        return self.pctx.mesh is not None and self.pctx.n_hosts > 1
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg, kind, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    p = {"norm1": norm_init(cfg.d_model, cfg.norm, dtype)}
+    if kind.mixer == "attn":
+        p["attn"] = attn.attn_init(ks[0], cfg, dtype)
+        if cfg.apb_applicable:
+            p["retain"] = compressor_init(ks[1], cfg, dtype)
+    else:
+        p["mamba"] = mamba2.mamba_init(
+            ks[0], cfg.d_model, cfg.d_inner, cfg.ssm_state,
+            cfg.n_ssm_heads, cfg.ssm_conv_width, dtype)
+    if kind.moe:
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["moe"] = moe_mod.moe_init(ks[2], cfg.d_model, cfg.expert_d_ff,
+                                    cfg.moe_num_experts, dtype)
+    elif cfg.d_ff:
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["ffn"] = ffn_mod.ffn_init(ks[2], cfg.d_model, cfg.d_ff,
+                                    cfg.activation, dtype)
+    return p
+
+
+def init_params(key, cfg, dtype=jnp.float32):
+    kemb, khead, kblocks = jax.random.split(key, 3)
+    pattern = cfg.block_pattern
+    blocks = []
+    for i, kind in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(kblocks, i),
+                                cfg.num_blocks)
+        blocks.append(jax.vmap(
+            lambda k, kind=kind: init_layer(k, cfg, kind, dtype))(keys))
+    params = {
+        "embed": embed_init(kemb, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": tuple(blocks),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(khead, cfg.d_model, cfg.vocab_size,
+                                       dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def embed(params, cfg, tokens_or_embeds):
+    if jnp.issubdtype(tokens_or_embeds.dtype, jnp.integer):
+        x = params["embed"][tokens_or_embeds]
+    else:
+        x = tokens_or_embeds.astype(params["embed"].dtype)   # VLM / audio
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def logits(params, cfg, hidden):
+    h = norm_apply(params["final_norm"], hidden, cfg.norm, cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    out = h @ w
+    return softcap(out.astype(jnp.float32), cfg.final_logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+def _ffn_part(p, cfg, kind, x, rctx):
+    aux = jnp.zeros((), jnp.float32)
+    if kind.moe:
+        h = norm_apply(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        mesh = rctx.pctx.mesh
+        seq_ok = (mesh is not None
+                  and x.shape[1] % mesh.shape[rctx.pctx.seq_axis] == 0)
+        use_local = (rctx.moe_impl == "local" and seq_ok
+                     and cfg.moe_num_experts
+                     % mesh.shape[rctx.pctx.seq_axis] == 0)
+        if use_local:
+            y, aux = moe_mod.moe_apply_local(
+                p["moe"], h, top_k=cfg.moe_top_k, mesh=mesh,
+                token_spec=P(rctx.pctx.batch_spec(), rctx.pctx.seq_axis,
+                             None),
+                expert_axis=rctx.pctx.seq_axis,
+                capacity_factor=cfg.moe_capacity_factor,
+                activation=cfg.activation)
+        else:
+            y, aux = moe_mod.moe_apply(
+                p["moe"], h, top_k=cfg.moe_top_k,
+                capacity_factor=cfg.moe_capacity_factor,
+                activation=cfg.activation, mesh=mesh,
+                expert_axis=(rctx.pctx.seq_axis if mesh is not None
+                             else None))
+        x = x + y.astype(x.dtype)
+    elif cfg.d_ff:
+        h = norm_apply(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        x = x + ffn_mod.ffn_apply(p["ffn"], h, cfg.activation)
+    return x, aux
+
+
+def _mamba_prefill(p, cfg, h, rctx: RunCtx):
+    """Returns (y, cache{"state","conv"}) with shard-stacked states."""
+    pctx = rctx.pctx
+    w = cfg.ssm_conv_width
+    if not rctx.seq_sharded:
+        if rctx.layout is not None and rctx.layout.n_hosts > 1:
+            raise ValueError("augmented mamba needs the mesh seq axis")
+        local, (z, c, conv_tail) = mamba2.mamba_apply(
+            p["mamba"], cfg, h, return_local=True)
+        y = mamba2.mamba_finish(p["mamba"], cfg, local, z, c,
+                                jnp.zeros_like(local.state))
+        return y, {"state": local.state[None], "conv": conv_tail[None]}
+
+    bspec = pctx.batch_spec()
+    xspec = P(bspec, pctx.seq_axis, None)
+    stspec = P(pctx.seq_axis, bspec, None, None, None)
+    cvspec = P(pctx.seq_axis, bspec, None, None)
+
+    if rctx.layout is not None:
+        lay = rctx.layout
+
+        def inner(xx):
+            y, final = ssm_par.mamba_augmented_inner(
+                p["mamba"], cfg, xx, pctx.seq_axis, la=lay.la, lq=lay.lq)
+            d_inner, n = cfg.d_inner, cfg.ssm_state
+            xbc = (xx[:, lay.la:] @ p["mamba"]["w_in"])[
+                ..., d_inner:2 * d_inner + 2 * n]
+            return y, final[None], xbc[:, -(w - 1):][None]
+    else:
+        def inner(xx):
+            y, final = ssm_par.mamba_parallel_plain(
+                p["mamba"], cfg, xx, pctx.seq_axis)
+            d_inner, n = cfg.d_inner, cfg.ssm_state
+            xbc = (xx @ p["mamba"]["w_in"])[
+                ..., d_inner:2 * d_inner + 2 * n]
+            return y, final[None], xbc[:, -(w - 1):][None]
+
+    fn = jax.shard_map(inner, mesh=pctx.mesh, in_specs=(xspec,),
+                       out_specs=(xspec, stspec, cvspec))
+    y, state, conv = fn(h)
+    return y, {"state": state, "conv": conv}
+
+
+# ---------------------------------------------------------------------------
+# Layer application — prefill / train
+# ---------------------------------------------------------------------------
+
+def _pin(x, rctx, dims=3):
+    """Pin the canonical activation sharding (batch, seq, -) between
+    layers: without this GSPMD drifts into head-/feature-sharded layouts
+    that force involuntary full rematerialisation at every shard_map
+    boundary (§Perf iteration 3)."""
+    mesh = rctx.pctx.mesh
+    if mesh is None:
+        return x
+    spec = [rctx.pctx.batch_spec(), rctx.pctx.seq_axis] +         [None] * (x.ndim - 2)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*spec)))
+
+
+def apply_layer_prefill(p, cfg, kind, x, positions, rctx: RunCtx,
+                        layer_salt=0):
+    """x: (B, L, d) global.  Returns (x, cache, aux_loss)."""
+    x = _pin(x, rctx)
+    h = norm_apply(p["norm1"], x, cfg.norm, cfg.norm_eps)
+
+    if kind.mixer == "attn":
+        q, k, v = attn.attn_qkv(p["attn"], cfg, h, positions)
+        window = kind.window or 0
+        strat = rctx.strategy
+        # sliding-window (local) layers are already sub-quadratic: under
+        # APB they keep anchor visibility (attention-sink style) but skip
+        # the compressed-passing mechanism -> "star"-with-window
+        if window and strat == "apb":
+            strat = "star"
+        out, kc, vc = strategies.prefill_attention(
+            cfg, strat, q, k, v, pctx=rctx.pctx, layout=rctx.layout,
+            retain_params=p.get("retain"), rng=rctx.rng_for(layer_salt),
+            compressor_method=rctx.compressor_method, window=window,
+            softcap=cfg.attn_logit_softcap, use_kernel=rctx.use_kernel,
+            bidirectional=rctx.bidirectional)
+        x = x + attn.attn_out(p["attn"], cfg, out)
+        x, aux = _ffn_part(p, cfg, kind, x, rctx)
+        return x, {"k": kc, "v": vc}, aux
+
+    y, cache = _mamba_prefill(p, cfg, h, rctx)
+    x = x + y.astype(x.dtype)
+    x, aux = _ffn_part(p, cfg, kind, x, rctx)
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Layer application — decode (single token, sharded doc cache + opt. tail)
+# ---------------------------------------------------------------------------
+
+def apply_layer_decode(p, cfg, kind, x, positions, cache, tail,
+                       rctx: RunCtx, valid_len=None, total_len=None):
+    """x: (B, 1, d).  Returns (x, cache_update, aux)."""
+    h = norm_apply(p["norm1"], x, cfg.norm, cfg.norm_eps)
+
+    if kind.mixer == "attn":
+        q, k_new, v_new = attn.attn_qkv(p["attn"], cfg, h, positions)
+        window = kind.window or 0
+        ctx_out, ctx_lse = dec.decode_attention_distributed(
+            q, cache["k"], cache["v"], pctx=rctx.pctx,
+            cache_axes=rctx.cache_axes, valid_len=valid_len,
+            total_len=total_len, window=window,
+            softcap=cfg.attn_logit_softcap)
+        if tail is not None and "k" in tail:
+            kt = jnp.concatenate([tail["k"], k_new], 1)
+            vt = jnp.concatenate([tail["v"], v_new], 1)
+        else:
+            kt, vt = k_new, v_new
+        t_out, t_lse = dec.partial_attention_lse(
+            q, kt, vt, softcap=cfg.attn_logit_softcap)
+        out, _ = lse_merge_pair(ctx_out, ctx_lse, t_out, t_lse)
+        x = x + attn.attn_out(p["attn"], cfg, out)
+        x, aux = _ffn_part(p, cfg, kind, x, rctx)
+        return x, {"k": k_new, "v": v_new}, aux
+
+    y, new_state, new_conv = mamba2.mamba_decode_step(
+        p["mamba"], cfg, h, cache["state"], cache["conv"])
+    x = x + y.astype(x.dtype)
+    x, aux = _ffn_part(p, cfg, kind, x, rctx)
+    return x, {"state": new_state, "conv": new_conv}, aux
+
+
+# ---------------------------------------------------------------------------
+# Full stacks (scan over pattern repetitions)
+# ---------------------------------------------------------------------------
+
+def forward_prefill(params, cfg, inputs, positions, rctx: RunCtx):
+    """inputs: (B, L) int tokens or (B, L, d) embeddings (global layout).
+
+    Returns (hidden, caches, aux_loss); caches = tuple (pattern slot) of
+    stacked per-block cache dicts.
+    """
+    x = embed(params, cfg, inputs)
+    pattern = cfg.block_pattern
+
+    def body(carry, scanned):
+        x, aux, salt = carry
+        block_params = scanned
+        caches = []
+        for i, kind in enumerate(pattern):
+            x, cache, a = apply_layer_prefill(
+                block_params[i], cfg, kind, x, positions, rctx,
+                layer_salt=salt + i)
+            caches.append(cache)
+            aux = aux + a
+        return (x, aux, salt + len(pattern)), tuple(caches)
+
+    body_fn = jax.checkpoint(body) if rctx.remat else body
+    (x, aux, _), caches = jax.lax.scan(
+        body_fn, (x, jnp.zeros((), jnp.float32), 0), params["blocks"],
+        unroll=rctx.unroll)
+    return x, caches, aux
+
+
+def forward_decode(params, cfg, token, positions, caches, tails,
+                   rctx: RunCtx, valid_len=None, total_len=None):
+    """token: (B, 1) or (B, 1, d).  caches/tails stacked per block (tails
+    may be None).  Returns (hidden, cache_updates, aux)."""
+    x = embed(params, cfg, token)
+    pattern = cfg.block_pattern
+
+    def body(carry, scanned):
+        x, aux = carry
+        if tails is None:
+            block_params, block_caches = scanned
+            block_tails = [None] * len(pattern)
+        else:
+            block_params, block_caches, block_tails = scanned
+        updates = []
+        for i, kind in enumerate(pattern):
+            x, upd, a = apply_layer_decode(
+                block_params[i], cfg, kind, x, positions, block_caches[i],
+                block_tails[i], rctx, valid_len=valid_len,
+                total_len=total_len)
+            updates.append(upd)
+            aux = aux + a
+        return (x, aux), tuple(updates)
+
+    xs = ((params["blocks"], caches) if tails is None
+          else (params["blocks"], caches, tails))
+    (x, aux), updates = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs, unroll=rctx.unroll)
+    return x, updates, aux
+
+
+def forward_query(params, cfg, q_tokens, positions, caches, rctx: RunCtx,
+                  valid_len=None):
+    """Query pass (paper Alg. 1, lines 13-25 with x = q): lq tokens attend
+    to the sharded doc cache + causally to themselves; mamba layers
+    continue from the end-of-document state.  Returns
+    (hidden, tail_caches, aux)."""
+    x = embed(params, cfg, q_tokens)
+    pattern = cfg.block_pattern
+
+    def body(carry, scanned):
+        x, aux = carry
+        block_params, block_caches = scanned
+        tails = []
+        for i, kind in enumerate(pattern):
+            p = block_params[i]
+            h = norm_apply(p["norm1"], x, cfg.norm, cfg.norm_eps)
+            if kind.mixer == "attn":
+                q, k_new, v_new = attn.attn_qkv(p["attn"], cfg, h, positions)
+                out = dec.query_context_attention(
+                    q, block_caches[i]["k"], block_caches[i]["v"],
+                    k_new, v_new, pctx=rctx.pctx,
+                    cache_axes=rctx.cache_axes, valid_len=valid_len,
+                    softcap=cfg.attn_logit_softcap)
+                x = x + attn.attn_out(p["attn"], cfg, out)
+                tails.append({"k": k_new, "v": v_new})
+            else:
+                state = block_caches[i]["state"][-1]      # last shard
+                conv = block_caches[i]["conv"][-1]
+                local, (z, c, conv_tail) = mamba2.mamba_apply(
+                    p["mamba"], cfg, h, init_state=state,
+                    conv_left=conv, return_local=True)
+                y = mamba2.mamba_finish(p["mamba"], cfg, local, z, c,
+                                        jnp.zeros_like(local.state))
+                x = x + y.astype(x.dtype)
+                tails.append({"state": local.state, "conv": conv_tail})
+            x, a = _ffn_part(p, cfg, kind, x, rctx)
+            aux = aux + a
+        return (x, aux), tuple(tails)
+
+    (x, aux), tails = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["blocks"], caches), unroll=rctx.unroll)
+    return x, tails, aux

@@ -1,0 +1,58 @@
+"""Collective helpers used inside shard_map blocks.
+
+All distributed attention in this framework reduces to two primitives:
+
+* ``all_gather_concat`` — gather per-host tensors in host order (APB's
+  compressed-KV AllGather, paper §3.5),
+* LSE merging — combine partial attention outputs computed against
+  disjoint KV shards (paper Alg. 3 / STARATTN stage 2), either via
+  ``psum`` across a mesh axis or pairwise.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+AxisName = Union[str, Sequence[str]]
+
+
+def all_gather_concat(x, axis_name: AxisName, axis: int = 1):
+    """AllGather shards and concatenate them in host order along ``axis``."""
+    g = jax.lax.all_gather(x, axis_name)          # (H, ...)
+    g = jnp.moveaxis(g, 0, axis)                  # (..., H, shard, ...)
+    shape = list(x.shape)
+    shape[axis] = -1
+    return g.reshape(shape)
+
+
+def lse_merge_psum(out, lse, axis_name: AxisName):
+    """Merge partial attention results across ``axis_name``.
+
+    out: (B, Lq, H, D) partial attention vs the local KV shard
+    lse: (B, H, Lq)    its log-sum-exp
+    Hosts whose shard contributes nothing must pass ``lse = -inf``-like.
+    """
+    m = jax.lax.pmax(lse, axis_name)                         # (B,H,Lq)
+    w = jnp.exp(lse - m)                                     # (B,H,Lq)
+    wt = jnp.moveaxis(w, -1, 1)[..., None]                   # (B,Lq,H,1)
+    num = jax.lax.psum(out.astype(jnp.float32) * wt, axis_name)
+    den = jax.lax.psum(w, axis_name)                         # (B,H,Lq)
+    den_t = jnp.moveaxis(den, -1, 1)[..., None]
+    merged = num / jnp.maximum(den_t, 1e-30)
+    return merged.astype(out.dtype), m + jnp.log(jnp.maximum(den, 1e-30))
+
+
+def lse_merge_pair(out_a, lse_a, out_b, lse_b):
+    """Pairwise LSE merge (e.g. context-part + self-part of a query pass)."""
+    m = jnp.maximum(lse_a, lse_b)
+    wa = jnp.exp(lse_a - m)
+    wb = jnp.exp(lse_b - m)
+    wa_t = jnp.moveaxis(wa, -1, 1)[..., None]
+    wb_t = jnp.moveaxis(wb, -1, 1)[..., None]
+    den = wa + wb
+    den_t = wa_t + wb_t
+    out = (out_a.astype(jnp.float32) * wa_t
+           + out_b.astype(jnp.float32) * wb_t) / jnp.maximum(den_t, 1e-30)
+    return out.astype(out_a.dtype), m + jnp.log(jnp.maximum(den, 1e-30))

@@ -1,0 +1,263 @@
+"""Sharding policies: parameters, optimizer state, inputs and caches for
+every (architecture × input shape × mesh) combination.
+
+Axes (DESIGN.md §2/§4):
+  * "model" — the sequence-parallel ("host") axis for prefill, the KV
+    cache shard axis for decode, the expert axis for MoE, and one of the
+    two weight-sharding axes.
+  * "data"  — batch; second weight-sharding axis (2-D weight sharding
+    keeps jamba-398B at ~3 GB/chip); second cache axis for long_500k.
+  * "pod"   — data parallelism across pods (multi-pod dry-run) and the
+    ZeRO axis for optimizer state.
+
+Parameter rules (path-based):
+  * MoE expert stacks: experts -> "model" when divisible, else the
+    per-expert hidden dim -> "model"; the other large dim -> "data".
+  * embed (V, d): vocab -> "model";  lm_head (d, V): vocab -> "model".
+  * any other >=2-D leaf: last two dims -> ("data", "model") when both
+    divisible and large; else largest dim -> "model" when divisible.
+  * small leaves (norm scales, biases): replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import splitting, strategies
+from repro.models.transformer import RunCtx
+
+LARGE = 1024            # minimum dim size to be worth sharding
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding
+# ---------------------------------------------------------------------------
+
+def _divisible(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def param_spec(path, leaf, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf."""
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    shape = leaf.shape
+    dm = mesh.shape.get("model", 1)
+    dd = mesh.shape.get("data", 1)
+
+    def spec(*entries):
+        out = list(entries) + [None] * (len(shape) - len(entries))
+        return P(*out)
+
+    if "moe" in names and len(shape) >= 3:
+        # stacked expert weights: (nb, E, a, b) or (E, a, b)
+        e_ax = len(shape) - 3
+        parts = [None] * len(shape)
+        if _divisible(shape[e_ax], dm):
+            parts[e_ax] = "model"
+            # shard the bigger of the two matmul dims over "data"
+            big = e_ax + 1 if shape[e_ax + 1] >= shape[e_ax + 2] else e_ax + 2
+            if _divisible(shape[big], dd) and shape[big] >= LARGE:
+                parts[big] = "data"
+        else:
+            big = e_ax + 1 if shape[e_ax + 1] >= shape[e_ax + 2] else e_ax + 2
+            if _divisible(shape[big], dm):
+                parts[big] = "model"
+        return P(*parts)
+
+    if names and names[-1] == "embed":
+        return spec("model") if _divisible(shape[0], dm) else P()
+    if names and names[-1] == "lm_head":
+        return spec(None, "model") if _divisible(shape[1], dm) else P()
+
+    if len(shape) >= 2:
+        a, b = shape[-2], shape[-1]
+        parts = [None] * len(shape)
+        if (a >= LARGE and b >= LARGE and _divisible(a, dd)
+                and _divisible(b, dm)):
+            parts[-2], parts[-1] = "data", "model"
+        elif b >= LARGE and _divisible(b, dm):
+            parts[-1] = "model"
+        elif a >= LARGE and _divisible(a, dm):
+            parts[-2] = "model"
+        return P(*parts)
+    return P()
+
+
+def param_shardings(params_shape, mesh: Mesh):
+    """NamedSharding tree matching a params shape-pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = [NamedSharding(mesh, param_spec(path, leaf, mesh))
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_shardings(params_shape, mesh: Mesh, zero_axis: str = "pod"):
+    """Optimizer-state (m/v) shardings: like params, plus ZeRO over the pod
+    axis on the largest yet-unsharded dim when available."""
+    has_pod = zero_axis in mesh.shape and mesh.shape[zero_axis] > 1
+
+    def one(path, leaf):
+        spec = param_spec(path, leaf, mesh)
+        if not has_pod:
+            return NamedSharding(mesh, spec)
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        dz = mesh.shape[zero_axis]
+        order = sorted(range(len(leaf.shape)),
+                       key=lambda i: -leaf.shape[i])
+        for i in order:
+            if parts[i] is None and _divisible(leaf.shape[i], dz) \
+                    and leaf.shape[i] >= dz:
+                parts[i] = zero_axis
+                break
+        return NamedSharding(mesh, P(*parts))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+# ---------------------------------------------------------------------------
+# Per-shape policies
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapePolicy:
+    """How one input shape maps onto the mesh."""
+
+    batch_axes: Tuple[str, ...]       # axes sharding the batch dim
+    seq_axis: str                     # sequence-parallel axis (prefill)
+    cache_axes: Tuple[str, ...]       # axes sharding decode KV caches
+    strategy: str                     # attention strategy
+
+
+def make_policy(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                strategy: Optional[str] = None) -> ShapePolicy:
+    multi_pod = "pod" in mesh.shape and mesh.shape["pod"] > 1
+    batch_axes = (("pod", "data") if multi_pod else ("data",))
+    if shape.kind == "train":
+        return ShapePolicy(batch_axes, "model", (),
+                           strategy or ("ring" if cfg.has_attention
+                                        else "full"))
+    if shape.kind == "prefill":
+        default = "apb" if cfg.apb_applicable and cfg.has_attention else "full"
+        return ShapePolicy(batch_axes, "model", ("model",),
+                           strategy or default)
+    # decode
+    if shape.global_batch == 1:
+        cache_axes = (("pod", "data", "model") if multi_pod
+                      else ("data", "model"))
+        return ShapePolicy((), "model", cache_axes, strategy or "full")
+    return ShapePolicy(batch_axes, "model", ("model",), strategy or "full")
+
+
+def make_rctx(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              lq: int = 256, strategy: Optional[str] = None,
+              use_kernel: bool = False, moe_impl: str = "gspmd") -> RunCtx:
+    pol = make_policy(cfg, shape, mesh, strategy)
+    pctx = strategies.ParallelCtx(mesh=mesh, seq_axis=pol.seq_axis,
+                                  batch_axes=pol.batch_axes)
+    layout = None
+    if pol.strategy in strategies.AUGMENTED and shape.kind == "prefill":
+        layout = splitting.make_layout(
+            shape.seq_len, lq, mesh.shape[pol.seq_axis],
+            anchor_frac=cfg.anchor_frac, passing_frac=cfg.passing_frac)
+    return RunCtx(strategy=pol.strategy, pctx=pctx, layout=layout,
+                  cache_axes=pol.cache_axes, use_kernel=use_kernel,
+                  moe_impl=moe_impl, remat=(shape.kind == "train"))
+
+
+# ---------------------------------------------------------------------------
+# Input specs — ShapeDtypeStruct stand-ins (no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                lq: int = 256, act_dtype=jnp.bfloat16):
+    """Returns (args: dict of ShapeDtypeStruct, shardings: same-structure
+    dict of NamedSharding) for the step function of this shape."""
+    pol = make_policy(cfg, shape, mesh)
+    b = shape.global_batch
+    n = shape.seq_len
+    bspec = pol.batch_axes if pol.batch_axes else None
+
+    def sds(shape_, dtype):
+        return jax.ShapeDtypeStruct(shape_, dtype)
+
+    def ns(*parts):
+        return NamedSharding(mesh, P(*parts))
+
+    if shape.kind == "train":
+        if cfg.is_encoder_decoder:
+            # seq2seq: long encoder input, short (<=448) decoder targets
+            td = min(448, n)
+            args = {"embeds": sds((b, n, cfg.d_model), act_dtype),
+                    "targets": sds((b, td), jnp.int32)}
+            sh = {"embeds": ns(bspec, "model", None),
+                  "targets": ns(bspec, None)}
+            return args, sh
+        if cfg.frontend is not None:
+            # VLM: precomputed multimodal embeddings + next-token targets
+            args = {"embeds": sds((b, n, cfg.d_model), act_dtype),
+                    "targets": sds((b, n), jnp.int32)}
+            sh = {"embeds": ns(bspec, "model", None),
+                  "targets": ns(bspec, "model")}
+            return args, sh
+        return ({"tokens": sds((b, n), jnp.int32)},
+                {"tokens": ns(bspec, "model")})
+
+    if shape.kind == "prefill":
+        if cfg.frontend is not None or cfg.is_encoder_decoder:
+            doc = sds((b, n, cfg.d_model), act_dtype)
+            doc_sh = ns(bspec, "model", None)
+        else:
+            doc = sds((b, n), jnp.int32)
+            doc_sh = ns(bspec, "model")
+        args = {"doc": doc, "query": sds((b, lq), jnp.int32)}
+        sh = {"doc": doc_sh, "query": ns(bspec)}
+        return args, sh
+
+    # ---- decode ----------------------------------------------------------
+    kvh, dh = max(cfg.num_kv_heads, 1), max(cfg.head_dim, 1)
+    cache_spec = (None, bspec) + (pol.cache_axes,) + (None, None)
+    caches, cache_sh = [], []
+    nb = cfg.num_blocks
+    for kind in cfg.block_pattern:
+        if kind.mixer == "attn":
+            caches.append({
+                "k": sds((nb, b, n, kvh, dh), act_dtype),
+                "v": sds((nb, b, n, kvh, dh), act_dtype)})
+            cache_sh.append({"k": ns(*cache_spec), "v": ns(*cache_spec)})
+        else:
+            nh = cfg.n_ssm_heads
+            pdim = cfg.d_inner // nh
+            cw = cfg.ssm_conv_width - 1
+            conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+            caches.append({
+                "state": sds((nb, b, nh, pdim, cfg.ssm_state), jnp.float32),
+                "conv": sds((nb, b, cw, conv_ch), act_dtype)})
+            cache_sh.append({
+                "state": ns(None, bspec, None, None, None),
+                "conv": ns(None, bspec, None, None)})
+    args = {
+        "token": sds((b, 1), jnp.int32),
+        "position": sds((b, 1), jnp.int32),
+        "caches": tuple(caches),
+    }
+    sh = {
+        "token": ns(bspec, None),
+        "position": ns(bspec, None),
+        "caches": tuple(cache_sh),
+    }
+    if cfg.is_encoder_decoder:
+        # cross-attention cache over the encoder output (seq_len frames)
+        ld = cfg.num_layers
+        args["caches"] = {
+            "k": sds((ld, b, n, kvh, dh), act_dtype),
+            "v": sds((ld, b, n, kvh, dh), act_dtype)}
+        sh["caches"] = {"k": ns(*cache_spec), "v": ns(*cache_spec)}
+    return args, sh

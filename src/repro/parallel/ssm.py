@@ -1,0 +1,149 @@
+"""Sequence-parallel Mamba2/SSD execution (recurrent-scan sharding).
+
+The SSD recurrence is linear in its incoming state, so a shard can run
+with ``init_state = 0`` and later *add* the incoming-state contribution
+(mamba2.ssd_state_correction).  The cross-shard combine is:
+
+  1. every shard computes its local SSD (zero init) + summary
+     (state contribution S_h, total log-decay D_h),
+  2. one AllGather of the (small) summaries over the sequence axis,
+  3. shard h forms its true incoming state
+        h_in(h) = decay(0..h-1) * global_init + Σ_{g<h} decay(g+1..h-1) S_g
+     and applies the correction locally.
+
+The depthwise causal conv needs a (w-1)-token halo from the previous
+shard — one ``ppermute``.
+
+Two layouts are supported:
+  * plain      — shards hold consecutive sequence pieces (mamba2 prefill,
+                 hybrid training),
+  * augmented  — shards hold ``[anchor | local]`` (hybrid models under
+                 APB/STAR).  The anchor slot *is* the true sequence prefix
+                 ``[query, d_0..d_la]``, so it is computed exactly with
+                 zero init; local blocks chain across shards starting from
+                 the state after the query (an intermediate state of the
+                 anchor slot, recovered by splitting the anchor SSD at lq).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2
+from repro.models.common import norm_apply
+
+
+def _halo_exchange(tail, axis_name: str):
+    """Send each shard's conv tail to the next shard; shard 0 gets zeros."""
+    n = jax.lax.axis_size(axis_name)
+    perm = [(i, i + 1) for i in range(n - 1)]
+    received = jax.lax.ppermute(tail, axis_name, perm)
+    h_idx = jax.lax.axis_index(axis_name)
+    return jnp.where(h_idx == 0, jnp.zeros_like(received), received)
+
+
+def _prefix_state(local_state, local_logdecay, axis_name: str,
+                  global_init=None, init_logdecay_full=None):
+    """Exclusive prefix-combine of shard state summaries over ``axis_name``.
+
+    local_state: (B, nh, P, N); local_logdecay: (B, nh).
+    Returns the state entering this shard.
+    """
+    h_idx = jax.lax.axis_index(axis_name)
+    n = jax.lax.axis_size(axis_name)
+    states = jax.lax.all_gather(local_state, axis_name)        # (H,B,nh,P,N)
+    lds = jax.lax.all_gather(local_logdecay, axis_name)        # (H,B,nh)
+
+    # suffix log-decay: decay applied to shard g's contribution on its way
+    # to shard h is Σ_{g < j < h} ld_j ; compute via cumulative sums.
+    cum = jnp.cumsum(lds, axis=0)                              # inclusive
+    # decay from end of shard g to start of shard h: cum[h-1] - cum[g]
+    cum_h = jnp.where(h_idx > 0, cum[jnp.maximum(h_idx - 1, 0)], 0.0)
+    idx = jnp.arange(n)
+    w = jnp.exp(cum_h[None] - cum)                             # (H,B,nh)
+    valid = (idx < h_idx)[:, None, None]
+    contrib = jnp.sum(
+        jnp.where(valid[..., None, None], states * w[..., None, None], 0.0),
+        axis=0)                                                # (B,nh,P,N)
+    if global_init is not None:
+        # decay over *all* local tokens of shards 0..h-1 (+ optional extra)
+        full = jnp.exp(cum_h)                                  # (B,nh)
+        contrib = contrib + global_init * full[..., None, None]
+    return contrib
+
+
+def mamba_parallel_plain(params, cfg, x, axis_name: Optional[str],
+                         global_init=None):
+    """Plain layout: x is the per-shard slice (inside shard_map), or the
+    whole sequence when axis_name is None.  Returns (y, final_state)."""
+    if axis_name is None:
+        local, (z, c, _) = mamba2.mamba_apply(
+            params, cfg, x, init_state=global_init, return_local=True)
+        y = local.y.reshape(*x.shape[:2], -1)
+        y = _gated(params, cfg, y, z)
+        return y, local.state
+
+    # conv halo from previous shard
+    w = params["conv_w"].shape[0]
+    d_inner, n = cfg.d_inner, cfg.ssm_state
+    xbc_raw = (x @ params["w_in"])[..., d_inner:2 * d_inner + 2 * n]
+    halo = _halo_exchange(xbc_raw[:, -(w - 1):, :], axis_name)
+    local, (z, c, _) = mamba2.mamba_apply(
+        params, cfg, x, conv_left=halo, return_local=True)
+    h_in = _prefix_state(local.state, local.log_decay, axis_name,
+                         global_init=global_init)
+    y = mamba2.mamba_finish(params, cfg, local, z, c, h_in)
+    # true final state of this shard (global final state = last shard's)
+    final = local.state + h_in * jnp.exp(local.log_decay)[..., None, None]
+    return y, final
+
+
+def mamba_augmented_inner(params, cfg, x, axis_name: str, *,
+                          la: int, lq: int):
+    """Augmented layout inner (inside shard_map): x = (B, la+lb, d).
+
+    The anchor slot [query | d_0..d_la] is the exact sequence prefix;
+    local blocks chain across shards from the post-query state.
+    Returns (y, final_state_of_document).
+    """
+    x_anchor, x_local = x[:, :la], x[:, la:]
+
+    # ---- anchor slot: exact prefix, split at lq to expose state_q -------
+    q_local, (zq, cq, _) = mamba2.mamba_apply(
+        params, cfg, x_anchor[:, :lq], return_local=True)
+    y_q = q_local.y.reshape(*x_anchor[:, :lq].shape[:2], -1)
+    state_q = q_local.state
+    # conv halo for the doc part of the anchor comes from the query tail
+    w = params["conv_w"].shape[0]
+    d_inner, n = cfg.d_inner, cfg.ssm_state
+    xbc_q = (x_anchor[:, :lq] @ params["w_in"])[
+        ..., d_inner:2 * d_inner + 2 * n]
+    a_local, (za, ca, _) = mamba2.mamba_apply(
+        params, cfg, x_anchor[:, lq:], init_state=state_q,
+        conv_left=xbc_q[:, -(w - 1):, :], return_local=True)
+    y_a = a_local.y.reshape(*x_anchor[:, lq:].shape[:2], -1)
+    y_anchor = _gated(params, cfg, jnp.concatenate([y_q, y_a], 1),
+                      jnp.concatenate([zq, za], 1))
+
+    # ---- local blocks: cross-shard chain from state_q -------------------
+    # halo: previous shard's local tail; shard 0 uses the query tail
+    xbc_loc = (x_local @ params["w_in"])[..., d_inner:2 * d_inner + 2 * n]
+    halo = _halo_exchange(xbc_loc[:, -(w - 1):, :], axis_name)
+    h_idx = jax.lax.axis_index(axis_name)
+    halo = jnp.where(h_idx == 0, xbc_q[:, -(w - 1):, :], halo)
+    loc, (zl, cl, _) = mamba2.mamba_apply(
+        params, cfg, x_local, conv_left=halo, return_local=True)
+    h_in = _prefix_state(loc.state, loc.log_decay, axis_name,
+                         global_init=state_q)
+    y_local = mamba2.mamba_finish(params, cfg, loc, zl, cl, h_in)
+    final = loc.state + h_in * jnp.exp(loc.log_decay)[..., None, None]
+    return jnp.concatenate([y_anchor, y_local], axis=1), final
+
+
+def _gated(params, cfg, y, z):
+    y = y * jax.nn.silu(z)
+    y = norm_apply({"scale": params["norm_scale"]}, y, "rmsnorm",
+                   cfg.norm_eps)
+    return y @ params["w_out"]

@@ -1,0 +1,41 @@
+"""DeepSpeed-Ulysses baseline (Jacobs et al., 2023) — sequence parallelism
+via head scattering: all_to_all moves the layout from (seq-sharded, all
+heads) to (full seq, head-sharded), runs exact local attention, and moves
+back.  Scalability is bounded by the head count (paper Challenge 2) —
+enforced here with an explicit check."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _a2a(x, axis_name: str, split_axis: int, concat_axis: int):
+    return jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+
+
+def ulysses_attention_inner(q, k, v, axis_name: str,
+                            softcap: Optional[float] = None,
+                            window: int = 0):
+    """q: (B, lb, H, D) per shard; k/v: (B, lb, KV, D) per shard.
+
+    Requires H % axis_size == 0 and KV % axis_size == 0 (the architectural
+    scalability bound the paper contrasts APB against).
+    """
+    n = jax.lax.axis_size(axis_name)
+    h, kvh = q.shape[2], k.shape[2]
+    if h % n or kvh % n:
+        raise ValueError(
+            f"Ulysses needs heads divisible by axis size: H={h}, KV={kvh}, "
+            f"hosts={n} — this is the head-count scalability bound.")
+    # scatter heads, gather sequence
+    q = _a2a(q, axis_name, split_axis=2, concat_axis=1)   # (B, L, H/n, D)
+    k = _a2a(k, axis_name, split_axis=2, concat_axis=1)
+    v = _a2a(v, axis_name, split_axis=2, concat_axis=1)
+    out = ref.causal_attention_ref(q, k, v, window=window, softcap=softcap)
+    # scatter sequence back, gather heads
+    return _a2a(out, axis_name, split_axis=1, concat_axis=2)

@@ -1,0 +1,71 @@
+"""KV/state cache management for the serving engine.
+
+Cache layout after prefill (decoder-only):
+  * attention layers: ``doc`` cache {"k","v"} (B, n_doc, KV, D) — sharded
+    over the sequence axis on a mesh — plus a small replicated ``tail``
+    {"k","v"} holding the query + generated tokens (paper Alg. 3 appends
+    new KV on the last host; a replicated tail is the SPMD-uniform
+    equivalent — same math, placement noted in DESIGN.md).
+  * mamba layers: the running {"state", "conv"} (post-query), updated in
+    place each step; the per-shard doc states from prefill are collapsed
+    to the last shard's (the true end-of-document state).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def to_decode_caches(prefill_caches) -> Tuple:
+    """Collapse prefill mamba caches (shard-stacked) to decode format."""
+    out = []
+    for c in prefill_caches:
+        if "state" in c:
+            out.append({"state": c["state"][:, -1], "conv": c["conv"][:, -1]})
+        else:
+            out.append(c)
+    return tuple(out)
+
+
+def init_tails(query_tails) -> Tuple:
+    """Tails straight from the query pass: attention tails keep {"k","v"};
+    mamba tails are *states* and move into the decode cache instead."""
+    out = []
+    for t in query_tails:
+        if "k" in t:
+            out.append({"k": t["k"], "v": t["v"]})
+        else:
+            out.append({})                      # mamba: no attention tail
+    return tuple(out)
+
+
+def absorb_query_states(decode_caches, query_tails) -> Tuple:
+    """After the query pass, mamba states advanced past the query: the
+    query-tail states supersede the doc-final states."""
+    out = []
+    for c, t in zip(decode_caches, query_tails):
+        if "state" in c and "state" in t:
+            out.append({"state": t["state"], "conv": t["conv"]})
+        else:
+            out.append(c)
+    return tuple(out)
+
+
+def append_updates(caches, tails, updates) -> Tuple[Tuple, Tuple]:
+    """Fold one decode step's cache updates in:
+    attention -> append new KV to the tail; mamba -> replace state."""
+    new_caches, new_tails = [], []
+    for c, t, u in zip(caches, tails, updates):
+        if "k" in u and "k" in t:
+            new_tails.append({"k": jnp.concatenate([t["k"], u["k"]], axis=2),
+                              "v": jnp.concatenate([t["v"], u["v"]], axis=2)})
+            new_caches.append(c)
+        elif "state" in u:
+            new_caches.append({"state": u["state"], "conv": u["conv"]})
+            new_tails.append(t)
+        else:
+            new_caches.append(c)
+            new_tails.append(t)
+    return tuple(new_caches), tuple(new_tails)

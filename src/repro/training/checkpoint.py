@@ -1,0 +1,61 @@
+"""Checkpointing: numpy-archive pytree save/restore (no orbax offline).
+
+Pytrees are flattened to ``path/arrays.npz`` plus a treedef manifest; on
+a mesh, arrays are fetched with ``jax.device_get`` (fully-addressable
+process assumption — single-controller CPU/TPU-pod-slice style).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        items.append((key, leaf))
+    return items, treedef
+
+
+def save(path: str, tree: Any, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    items, _ = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in items}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    manifest = {
+        "step": step,
+        "keys": [k for k, _ in items],
+        "num_leaves": len(leaves),
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def restore(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        items, treedef = _flatten_with_paths(like)
+        leaves = []
+        for key, template in items:
+            arr = data[key]
+            if hasattr(template, "shape") and tuple(arr.shape) != tuple(
+                    template.shape):
+                raise ValueError(
+                    f"checkpoint mismatch at {key}: {arr.shape} vs "
+                    f"{template.shape}")
+            dtype = getattr(template, "dtype", arr.dtype)
+            leaves.append(jnp.asarray(arr, dtype))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+    return tree, manifest["step"]

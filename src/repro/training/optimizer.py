@@ -1,0 +1,91 @@
+"""AdamW + linear-warmup schedule + global-norm clipping (pure JAX).
+
+Matches the paper's retaining-head training recipe (App. B.1): AdamW with
+beta1=0.9, beta2=0.95, lr 5e-4, linear scheduler with warmup, gradient
+clipping at 0.5.  The same optimizer drives the generic LM train loop
+(train_4k shapes).  Optimizer state shards exactly like the params
+(ZeRO-1 falls out of the 2-D parameter sharding under GSPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 5e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    warmup_steps: int = 300
+    total_steps: int = 3000
+    clip_norm: Optional[float] = 0.5
+    schedule: str = "linear"          # linear | constant
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    decay = jnp.maximum(
+        0.0, 1.0 - jnp.maximum(step - cfg.warmup_steps, 0.0)
+        / max(cfg.total_steps - cfg.warmup_steps, 1))
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params
+                 ) -> Tuple[Any, AdamWState, jax.Array]:
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1)
+                     * g.astype(jnp.float32), state.m, grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2)
+                     * jnp.square(g.astype(jnp.float32)), state.v, grads)
+    t = step.astype(jnp.float32)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+
+    def upd(p, mm, vv):
+        delta = (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(step, m, v), gnorm

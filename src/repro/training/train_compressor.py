@@ -1,0 +1,165 @@
+"""Retaining-head (compressor) training — paper App. B.1 / Locret recipe.
+
+The backbone is FROZEN; only the per-layer retaining-head MLPs train.
+Labels: the "ground-truth importance" of each KV unit = the attention
+mass it receives from the query segment under *full* attention (the
+global view the heads learn to approximate locally).  Loss = regression
+(MSE against normalised labels) + temporal smoothing, balanced by
+alpha = 0.0025; AdamW lr 5e-4, betas (0.9, 0.95), linear warmup 300,
+clip 0.5 — all per the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressor as comp
+from repro.kernels import ops
+from repro.models import attention_layer as attn
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models.common import norm_apply
+from repro.models.transformer import RunCtx
+from repro.training import optimizer as opt
+
+
+def capture_qkv(params, cfg, tokens, positions):
+    """Frozen full-attention forward capturing per-layer (q, k, v).
+
+    Returns stacked per-pattern-position pytrees with leading block dim.
+    Only valid for attention-bearing configs.
+    """
+    x = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    pattern = cfg.block_pattern
+
+    def body(x, block_params):
+        captured = []
+        for i, kind in enumerate(pattern):
+            p = block_params[i]
+            h = norm_apply(p["norm1"], x, cfg.norm, cfg.norm_eps)
+            if kind.mixer == "attn":
+                q, k, v = attn.attn_qkv(p["attn"], cfg, h, positions)
+                out = ops.causal_flash_attention(
+                    q, k, v, window=kind.window or 0,
+                    softcap=cfg.attn_logit_softcap, use_kernel=False)
+                x = x + attn.attn_out(p["attn"], cfg, out)
+                captured.append({"q": q, "k": k, "v": v})
+            else:
+                from repro.parallel import ssm as ssm_par
+                y, _ = ssm_par.mamba_parallel_plain(p["mamba"], cfg, h, None)
+                x = x + y.astype(x.dtype)
+                captured.append({})
+            if kind.moe:
+                h = norm_apply(p["norm2"], x, cfg.norm, cfg.norm_eps)
+                y, _ = moe_mod.moe_apply(
+                    p["moe"], h, top_k=cfg.moe_top_k,
+                    capacity_factor=cfg.moe_capacity_factor,
+                    activation=cfg.activation)
+                x = x + y.astype(x.dtype)
+            elif cfg.d_ff:
+                h = norm_apply(p["norm2"], x, cfg.norm, cfg.norm_eps)
+                x = x + ffn_mod.ffn_apply(p["ffn"], h, cfg.activation)
+        return x, tuple(captured)
+
+    _, captured = jax.lax.scan(body, x, params["blocks"])
+    return captured
+
+
+def importance_labels(captured, lq: int):
+    """Oracle importance of each *document* KV unit: attention mass from
+    the final ``lq`` (query) tokens.  Returns per-slot (B, L-lq, KV) or
+    None for mamba slots."""
+    labels = []
+    for slot in captured:
+        if "q" not in slot:
+            labels.append(None)
+            continue
+        # slot leaves have leading block dim: (nb, B, L, H, D)
+        q = slot["q"][:, :, -lq:]
+        k = slot["k"][:, :, :-lq]
+        lab = jax.vmap(comp.oracle_scores)(q, k)          # (nb, B, L-lq, KV)
+        lab = lab / jnp.maximum(
+            jnp.max(lab, axis=2, keepdims=True), 1e-9)     # per-seq normalise
+        labels.append(lab)
+    return labels
+
+
+def compressor_loss(retain_stacks, captured, labels, lq: int,
+                    alpha: float = 0.0025):
+    """retain_stacks: list (pattern slot) of stacked retain params or None."""
+    total, count = 0.0, 0
+    for rp, slot, lab in zip(retain_stacks, captured, labels):
+        if rp is None or lab is None:
+            continue
+        q = slot["q"][:, :, :-lq]
+        k = slot["k"][:, :, :-lq]
+        v = slot["v"][:, :, :-lq]
+        scores = jax.vmap(comp.compressor_scores)(rp, q, k, v)
+        reg = jnp.mean(jnp.square(scores - lab))
+        smooth = jnp.mean(jnp.square(scores[:, :, 1:] - scores[:, :, :-1]))
+        total = total + reg + alpha * smooth
+        count += 1
+    return total / max(count, 1)
+
+
+def extract_retain(params, cfg) -> List:
+    out = []
+    for i, kind in enumerate(cfg.block_pattern):
+        block = params["blocks"][i]
+        out.append(block.get("retain") if kind.mixer == "attn" else None)
+    return out
+
+
+def insert_retain(params, cfg, retain_stacks):
+    blocks = list(params["blocks"])
+    for i, rp in enumerate(retain_stacks):
+        if rp is not None:
+            blocks[i] = dict(blocks[i], retain=rp)
+    return dict(params, blocks=tuple(blocks))
+
+
+def train_compressor(params, cfg, data_iter, steps: int, lq: int,
+                     opt_cfg: opt.AdamWConfig = None,
+                     log_every: int = 20, log_fn=print):
+    """Train the retaining heads on (tokens with the query as the final
+    ``lq`` tokens).  Returns params with trained heads."""
+    opt_cfg = opt_cfg or opt.AdamWConfig(
+        lr=5e-4, warmup_steps=min(300, max(1, steps // 10)),
+        total_steps=steps, clip_norm=0.5)
+    retain = extract_retain(params, cfg)
+    trainable = [r for r in retain if r is not None]
+    state = opt.adamw_init(trainable)
+
+    def loss_fn(trainable_flat, tokens):
+        rs, it = [], iter(trainable_flat)
+        for r in retain:
+            rs.append(next(it) if r is not None else None)
+        positions = jnp.arange(tokens.shape[1])[None]
+        captured = capture_qkv(params, cfg, tokens, positions)
+        labels = importance_labels(captured, lq)
+        return compressor_loss(rs, captured, labels, lq)
+
+    @jax.jit
+    def step_fn(trainable, state, tokens):
+        loss, grads = jax.value_and_grad(loss_fn)(trainable, tokens)
+        trainable, state, gnorm = opt.adamw_update(
+            opt_cfg, grads, state, trainable)
+        return trainable, state, loss, gnorm
+
+    loss = jnp.nan
+    for i in range(steps):
+        tokens = next(data_iter)
+        trainable, state, loss, gnorm = step_fn(trainable, state,
+                                                jnp.asarray(tokens))
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            log_fn(f"[compressor] step {i:4d} loss {float(loss):.5f} "
+                   f"gnorm {float(gnorm):.3f}")
+
+    rs, it = [], iter(trainable)
+    for r in retain:
+        rs.append(next(it) if r is not None else None)
+    return insert_retain(params, cfg, rs), float(loss)

@@ -1,0 +1,55 @@
+"""Generic LM training loop (train_4k shapes).
+
+APB is a prefill-time inference technique (paper §Limitations: it is not
+a training method), so train_step uses *exact* sequence-parallel
+attention (RingAttention on a mesh, full attention on one device) plus
+the SSD scan for mamba layers, with AdamW + clipping + schedule.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.models.transformer import RunCtx
+from repro.training import optimizer as opt
+
+
+def make_train_step(model: Model, opt_cfg: opt.AdamWConfig, rctx: RunCtx
+                    ) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, batch, rctx))(params)
+        params, opt_state, gnorm = opt.adamw_update(
+            opt_cfg, grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": opt.lr_at(opt_cfg, opt_state.step)}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(model: Model, params, data_iter, steps: int,
+          opt_cfg: opt.AdamWConfig = None, rctx: RunCtx = None,
+          jit: bool = True, log_every: int = 10,
+          log_fn: Callable = print) -> Tuple[Any, Dict]:
+    """Run ``steps`` optimizer steps; returns (params, last_metrics)."""
+    opt_cfg = opt_cfg or opt.AdamWConfig(total_steps=steps)
+    rctx = rctx or RunCtx(strategy="full")
+    step_fn = make_train_step(model, opt_cfg, rctx)
+    if jit:
+        step_fn = jax.jit(step_fn)
+    opt_state = opt.adamw_init(params)
+    metrics = {}
+    for i in range(steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            log_fn(f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
+                   f"gnorm {float(metrics['grad_norm']):.3f}  "
+                   f"lr {float(metrics['lr']):.2e}")
+    return params, {k: float(v) for k, v in metrics.items()}

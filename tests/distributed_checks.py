@@ -1,0 +1,256 @@
+"""Multi-device correctness checks (run in a subprocess with 8 fake CPU
+devices — see test_distributed.py; never import this under the normal
+1-device test session).
+
+Checks:
+  1. ring == full attention (exact), incl. sliding window + softcap
+  2. ulysses == full attention (exact)
+  3. shard_map APB inner == host-loop reference (allgather order, host
+     masks, compressor selection)
+  4. distributed LSE-merge decode == single-device decode (model level)
+  5. sequence-parallel mamba (plain + augmented) == single-device chain
+  6. end-to-end: sharded train loss (ring) == single-device loss (full)
+  7. APB prefill_step lowers and runs end-to-end on the mesh
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.core import reference, splitting, strategies
+from repro.core.compressor import compressor_init
+from repro.launch.mesh import make_test_mesh
+from repro.models import model as model_lib
+from repro.models import transformer as tf
+from repro.models.mamba2 import mamba_init, mamba_apply, mamba_finish
+from repro.models.transformer import RunCtx
+from repro.parallel import ssm as ssm_par
+
+OK = []
+
+
+def check(name, cond, detail=""):
+    status = "PASS" if cond else "FAIL"
+    print(f"[{status}] {name} {detail}")
+    OK.append(bool(cond))
+
+
+def close(a, b, tol=2e-4):
+    return float(jnp.abs(jnp.asarray(a, jnp.float32)
+                         - jnp.asarray(b, jnp.float32)).max()) < tol
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    key = jax.random.PRNGKey(0)
+
+    # ------------------------------------------------------- 1 + 2: exact SP
+    cfg = dataclasses.replace(
+        get_config("granite-3-2b").reduced(), num_heads=8, num_kv_heads=8,
+        head_dim=32)
+    mesh = make_test_mesh(n_model=8)
+    pctx = strategies.ParallelCtx(mesh=mesh, seq_axis="model",
+                                  batch_axes=("data",))
+    B, L, H, KV, D = 2, 64, 8, 8, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, L, H, D))
+    k = jax.random.normal(ks[1], (B, L, KV, D))
+    v = jax.random.normal(ks[2], (B, L, KV, D))
+    full, _, _ = strategies.prefill_attention(
+        cfg, "full", q, k, v, pctx=strategies.ParallelCtx())
+    for strat in ["ring", "ulysses"]:
+        out, _, _ = strategies.prefill_attention(cfg, strat, q, k, v,
+                                                 pctx=pctx)
+        check(f"{strat} == full", close(out, full))
+    # window + softcap variants (ring only; ulysses lacks softcap=None path)
+    full_w = strategies.prefill_attention(
+        cfg, "full", q, k, v, pctx=strategies.ParallelCtx(), window=24,
+        softcap=30.0)[0]
+    out_w = strategies.prefill_attention(cfg, "ring", q, k, v, pctx=pctx,
+                                         window=24, softcap=30.0)[0]
+    check("ring window+softcap == full", close(out_w, full_w))
+
+    # ------------------------------------------------- 3: APB vs host loop
+    cfg3 = get_config("granite-3-2b").reduced()
+    lay = splitting.make_layout(64 * 8, 8, 8)     # lb=64, la=8+16, lp=8
+    retain = compressor_init(jax.random.fold_in(key, 3), cfg3)
+    hh, kv3, d3 = cfg3.num_heads, cfg3.num_kv_heads, cfg3.head_dim
+    aug = lay.aug_len
+    ks = jax.random.split(jax.random.fold_in(key, 4), 3)
+    q3 = jax.random.normal(ks[0], (B, aug, hh, d3))
+    k3 = jax.random.normal(ks[1], (B, aug, kv3, d3))
+    v3 = jax.random.normal(ks[2], (B, aug, kv3, d3))
+    for strat in ["apb", "star"]:
+        for method in ["retain", "recent"]:
+            out_sm, kc, vc = strategies.prefill_attention(
+                cfg3, strat, q3, k3, v3, pctx=pctx, layout=lay,
+                retain_params=retain, compressor_method=method,
+                rng=jax.random.PRNGKey(7))
+            out_ref, kc_r, vc_r = reference.apb_attention_hostloop(
+                q3, k3, v3, retain, lay, strategy=strat,
+                compressor_method=method, rng=jax.random.PRNGKey(7))
+            check(f"shard_map {strat}/{method} == host-loop",
+                  close(out_sm, out_ref) and close(kc, kc_r))
+
+    # --------------------------------------------- 4: distributed decode
+    cfg4 = get_config("granite-3-2b").reduced()
+    model = model_lib.build(cfg4)
+    params = model.init(key)
+    N, LQ = 64, 8
+    doc = jax.random.randint(key, (B, N), 0, cfg4.vocab_size)
+    qry = jax.random.randint(jax.random.fold_in(key, 1), (B, LQ), 0,
+                             cfg4.vocab_size)
+    r0 = RunCtx(strategy="full")
+    lg_s, caches_s, tails_s = model.prefill_step(params, doc, qry, r0)
+    tok = jnp.argmax(lg_s, -1)[:, None].astype(jnp.int32)
+    pos = jnp.full((B, 1), LQ + N + LQ, jnp.int32)
+    from repro.serving import cache as cl
+    cd = cl.absorb_query_states(cl.to_decode_caches(caches_s), tails_s)
+    tl = cl.init_tails(tails_s)
+    lg1, _ = model.serve_step(params, tok, pos, cd, tl, r0)
+
+    mesh2 = make_test_mesh(n_model=8)
+    pctx2 = strategies.ParallelCtx(mesh=mesh2, seq_axis="model",
+                                   batch_axes=("data",))
+    rd = RunCtx(strategy="full", pctx=pctx2, cache_axes=("model",))
+    # shard the attention doc caches over "model"
+    def shard_cache(c):
+        out = []
+        for e in c:
+            if "k" in e:
+                sh = NamedSharding(mesh2, P(None, "data", "model", None, None))
+                out.append({"k": jax.device_put(e["k"], sh),
+                            "v": jax.device_put(e["v"], sh)})
+            else:
+                out.append(e)
+        return tuple(out)
+    lg1_d, _ = model.serve_step(params, tok, pos, shard_cache(cd), tl, rd,
+                                valid_len=jnp.full((B,), N, jnp.int32),
+                                total_len=N)
+    check("distributed decode == single-device", close(lg1, lg1_d, 5e-4))
+
+    # --------------------------------------- 5: sequence-parallel mamba
+    cfgm = get_config("mamba2-780m").reduced()
+    pm = mamba_init(jax.random.fold_in(key, 9), cfgm.d_model, cfgm.d_inner,
+                    cfgm.ssm_state, cfgm.n_ssm_heads, cfgm.ssm_conv_width)
+    xm = jax.random.normal(jax.random.fold_in(key, 10),
+                           (B, 64 * 8, cfgm.d_model)) * 0.3
+    # single device
+    loc, (z, c, _) = mamba_apply(pm, cfgm, xm, return_local=True)
+    y_ref = mamba_finish(pm, cfgm, loc, z, c, jnp.zeros_like(loc.state))
+    def plain_inner(xx):
+        y, final = ssm_par.mamba_parallel_plain(pm, cfgm, xx, "model")
+        return y, final[None]
+    fn = jax.shard_map(
+        plain_inner, mesh=mesh, in_specs=(P("data", "model", None),),
+        out_specs=(P("data", "model", None),
+                   P("model", "data", None, None, None)))
+    y_sp, state_sp = fn(xm)
+    check("mamba plain seq-parallel == single", close(y_sp, y_ref, 5e-4))
+    check("mamba final state matches", close(state_sp[-1], loc.state, 5e-4))
+
+    # augmented layout
+    laym = splitting.make_layout(64 * 8, 8, 8)
+    la = laym.la
+    xa = jax.random.normal(jax.random.fold_in(key, 11),
+                           (B, laym.aug_len, cfgm.d_model)) * 0.3
+    def aug_inner(xx):
+        y, final = ssm_par.mamba_augmented_inner(pm, cfgm, xx, "model",
+                                                 la=la, lq=laym.lq)
+        return y, final[None]
+    fn_aug = jax.shard_map(
+        aug_inner, mesh=mesh, in_specs=(P("data", "model", None),),
+        out_specs=(P("data", "model", None),
+                   P("model", "data", None, None, None)))
+    y_aug, _ = fn_aug(xa)
+    # reference: per host, anchor slot is the true prefix [q | d_0..la];
+    # local blocks chain globally from the post-query state
+    host_len = laym.host_len
+    # anchor output of host h == running the anchor slot alone
+    errs = []
+    # build the true local chain
+    x_locals = jnp.concatenate(
+        [xa[:, h * host_len + la:(h + 1) * host_len] for h in range(8)], 1)
+    x_query = xa[:, :laym.lq]
+    locq, (zq, cq, _) = mamba_apply(pm, cfgm, x_query, return_local=True)
+    d_inner, nssm = cfgm.d_inner, cfgm.ssm_state
+    xbc_q = (x_query @ pm["w_in"])[..., d_inner:2 * d_inner + 2 * nssm]
+    w = cfgm.ssm_conv_width
+    locl, (zl, cl_, _) = mamba_apply(pm, cfgm, x_locals,
+                                     init_state=locq.state,
+                                     conv_left=xbc_q[:, -(w - 1):],
+                                     return_local=True)
+    y_locals_ref = mamba_finish(pm, cfgm, locl, zl, cl_,
+                                jnp.zeros_like(locl.state))
+    y_locals_sp = jnp.concatenate(
+        [y_aug[:, h * host_len + la:(h + 1) * host_len] for h in range(8)], 1)
+    check("mamba augmented local chain == single",
+          close(y_locals_sp, y_locals_ref, 5e-4))
+
+    # ------------------------------------- 6: sharded train loss == single
+    cfg6 = get_config("granite-3-2b").reduced()
+    m6 = model_lib.build(cfg6)
+    p6 = m6.init(key)
+    toks = jax.random.randint(key, (4, 128), 0, cfg6.vocab_size)
+    mesh6 = make_test_mesh(n_model=4, n_data=2)
+    pctx6 = strategies.ParallelCtx(mesh=mesh6, seq_axis="model",
+                                   batch_axes=("data",))
+    loss_single = m6.loss_fn(p6, toks, RunCtx(strategy="full"))
+    loss_ring = m6.loss_fn(
+        p6, jax.device_put(toks, NamedSharding(mesh6, P("data", "model"))),
+        RunCtx(strategy="ring", pctx=pctx6))
+    check("train loss ring-sharded == full-single",
+          close(loss_single, loss_ring, 1e-4),
+          f"{float(loss_single):.5f} vs {float(loss_ring):.5f}")
+
+    # --------------------------------- 7: APB end-to-end prefill on mesh
+    cfg7 = get_config("granite-3-2b").reduced()
+    m7 = model_lib.build(cfg7)
+    p7 = m7.init(key)
+    lay7 = splitting.make_layout(64 * 8, LQ, 8,
+                                 anchor_frac=cfg7.anchor_frac,
+                                 passing_frac=cfg7.passing_frac)
+    r7 = RunCtx(strategy="apb", pctx=pctx, layout=lay7,
+                cache_axes=("model",))
+    doc7 = jax.random.randint(key, (B, 64 * 8), 0, cfg7.vocab_size)
+    lg7, caches7, tails7 = m7.prefill_step(p7, doc7, qry, r7)
+    check("APB prefill_step runs on mesh",
+          bool(jnp.all(jnp.isfinite(lg7))), f"shape={lg7.shape}")
+    # sanity: compare against host-loop-equivalent full-model on one device
+    # (not exact — APB is approximate — just finite + right shapes)
+    k_cache = caches7[0]["k"]
+    check("APB doc cache has doc length", k_cache.shape[2] == 64 * 8,
+          f"{k_cache.shape}")
+
+    # ------------------------------ 8: local-routed MoE == reference MoE
+    from repro.models import moe as moe_mod
+    E, dmoe, fmoe, topk = 16, 64, 128, 2
+    pmoe = moe_mod.moe_init(jax.random.fold_in(key, 20), dmoe, fmoe, E)
+    xmoe = jax.random.normal(jax.random.fold_in(key, 21), (2, 64, dmoe)) * 0.5
+    y_ref_m, aux_ref_m = moe_mod.moe_apply(pmoe, xmoe, top_k=topk,
+                                           capacity_factor=8.0)
+    y_loc_m, aux_loc_m = moe_mod.moe_apply_local(
+        pmoe, jax.device_put(xmoe,
+                             NamedSharding(mesh, P("data", "model", None))),
+        top_k=topk, mesh=mesh, token_spec=P("data", "model", None),
+        capacity_factor=8.0)
+    check("local-routed MoE == reference", close(y_loc_m, y_ref_m)
+          and close(aux_loc_m, aux_ref_m))
+
+    n_fail = OK.count(False)
+    print(f"\n{len(OK) - n_fail}/{len(OK)} distributed checks passed")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

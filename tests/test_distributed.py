@@ -1,0 +1,21 @@
+"""Multi-device distributed correctness, run in a subprocess with 8 fake
+CPU devices (XLA_FLAGS must be set before jax init, which pytest's main
+process has already done with 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(900)
+def test_distributed_checks():
+    script = os.path.join(os.path.dirname(__file__),
+                          "distributed_checks.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, env=env, timeout=880)
+    print(res.stdout)
+    print(res.stderr[-3000:] if res.stderr else "")
+    assert res.returncode == 0, "distributed checks failed (see output)"

@@ -1,0 +1,46 @@
+"""Launch-path smoke: the dry-run machinery must lower+compile a reduced
+arch on a small fake mesh (subprocess: needs its own device count)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import dataclasses as dc
+    import jax
+    from repro.launch import dryrun as dr
+    from repro.configs import get_config, get_shape
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = get_config("granite-3-2b").reduced()
+    # make dims mesh-compatible
+    cfg = dc.replace(cfg, name="smoke")
+    import repro.configs.base as base
+    shape = base.ShapeConfig("mini_prefill", 512, 4, "prefill")
+    comp = dr._compile(cfg, shape, mesh, "apb")
+    print("prefill ok", comp.cost_analysis() is not None)
+    shape_d = base.ShapeConfig("mini_decode", 512, 8, "decode")
+    comp = dr._compile(cfg, shape_d, mesh, None)
+    print("decode ok")
+    shape_t = base.ShapeConfig("mini_train", 256, 8, "train")
+    comp = dr._compile(cfg, shape_t, mesh, None)
+    print("train ok")
+""")
+
+
+@pytest.mark.timeout(600)
+def test_dryrun_small_mesh(tmp_path):
+    f = tmp_path / "dryrun_smoke.py"
+    f.write_text(SCRIPT)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, str(f)], capture_output=True,
+                         text=True, env=env, cwd=os.getcwd(), timeout=580)
+    print(res.stdout, res.stderr[-2000:] if res.stderr else "")
+    assert res.returncode == 0
+    assert "train ok" in res.stdout

@@ -1,0 +1,65 @@
+"""Whisper-style enc-dec: prefill + decode-step consistency and the
+bidirectional-encoder APB variant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import encdec
+from repro.models import model as model_lib
+from repro.models.transformer import RunCtx
+
+B, S, LQ = 2, 32, 6
+
+
+@pytest.fixture()
+def setup(key):
+    cfg = get_config("whisper-tiny").reduced()
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    frames = jax.random.normal(key, (B, S, cfg.d_model)) * 0.05
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (B, LQ), 0,
+                              cfg.vocab_size)
+    return cfg, model, params, frames, toks
+
+
+def test_prefill_then_decode_matches_teacher_forcing(setup, key):
+    cfg, model, params, frames, toks = setup
+    rctx = RunCtx(strategy="full")
+    lg, xc, tails = model.prefill_step(params, frames, toks, rctx)
+    nxt = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+
+    # teacher-forcing reference over [toks, nxt]
+    enc_out = encdec.encode(params, cfg, frames, rctx)
+    xc_ref = encdec.cross_kv(params, cfg, enc_out)
+    hidden, _ = encdec.decode_tokens(params, cfg,
+                                     jnp.concatenate([toks, nxt], 1),
+                                     xc_ref, None, rctx)
+    lg_ref = encdec.logits(params, cfg, hidden[:, -1:])[:, 0]
+
+    lg2, _ = model.serve_step(params, nxt, LQ, xc, tails, rctx)
+    np.testing.assert_allclose(np.asarray(lg2), np.asarray(lg_ref),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_encoder_bidirectional(setup, key):
+    """Every encoder position must influence every output (no causal
+    mask leaking into the encoder).  NB: perturb with a random vector —
+    a constant bump is annihilated by LayerNorm's mean subtraction."""
+    cfg, model, params, frames, toks = setup
+    rctx = RunCtx(strategy="full")
+    out1 = encdec.encode(params, cfg, frames, rctx)
+    noise = jax.random.normal(jax.random.fold_in(key, 99),
+                              (frames.shape[0], frames.shape[2]))
+    bumped = frames.at[:, -1].add(noise)    # change only the LAST frame
+    out2 = encdec.encode(params, cfg, bumped, rctx)
+    delta = jnp.abs(out2 - out1).max(axis=(0, 2))
+    assert float(delta[0]) > 1e-5, \
+        f"first output blind to last frame: {float(delta[0])}"
+
+
+def test_seq2seq_loss_finite(setup):
+    cfg, model, params, frames, toks = setup
+    loss = model.loss_fn(params, (frames, toks), RunCtx(strategy="full"))
+    assert bool(jnp.isfinite(loss))

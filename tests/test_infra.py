@@ -1,0 +1,119 @@
+"""Checkpointing, data pipeline, FLOPs formulas, config registry."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import flops as fl
+from repro.configs import ALL_ARCHS, ARCHS, SHAPES, get_config, get_shape
+from repro.data import synthetic
+from repro.training import checkpoint as ckpt
+
+
+def test_registry_complete():
+    assert len(ARCHS) == 10
+    families = {get_config(a).family for a in ARCHS}
+    assert families == {"audio", "ssm", "hybrid", "dense", "moe", "vlm"}
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_config_exact_spec(arch):
+    cfg = get_config(arch)
+    spec = {
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "mamba2-780m": (48, 1536, 0, 0, 0, 50280),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == spec, (arch, got, spec)
+    assert cfg.source
+
+
+def test_param_counts_plausible():
+    approx = {
+        "jamba-1.5-large-398b": (250e9, 500e9),
+        "dbrx-132b": (100e9, 160e9),
+        "deepseek-67b": (55e9, 80e9),
+        "qwen2.5-32b": (25e9, 40e9),
+        "granite-3-2b": (2e9, 3.5e9),
+        "gemma2-2b": (2e9, 3.6e9),
+        "mamba2-780m": (0.6e9, 1.0e9),
+        "llama3-8b": (7e9, 9e9),
+    }
+    for arch, (lo, hi) in approx.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params_smaller():
+    for arch in ["dbrx-132b", "jamba-1.5-large-398b",
+                 "granite-moe-3b-a800m"]:
+        cfg = get_config(arch)
+        assert cfg.active_param_count() < 0.6 * cfg.param_count()
+
+
+def test_table6_formula_relations():
+    """Fig 4(c) orderings: APB below both curves at every length;
+    STARATTN's block-sized anchor makes it *more* compute than FULLATTN
+    at short n, crossing below only at long n (visible in the figure)."""
+    L, d, I, g, H = 32, 4096, 14336, 4, 8
+    for n in [32768, 131072, 524288]:
+        la, lp = n // H // 4, n // H // 8
+        full = fl.fullattn_flops(L, n, d, I, g)
+        star = fl.starattn_flops(L, n, d, I, g, H)
+        apb = fl.apb_flops(L, n, d, I, g, H, la, lp)
+        assert apb < star and apb < full, (n, apb, star, full)
+        if n >= 262_144:
+            assert star < full, (n, star, full)
+    # at huge n the quadratic term dominates: APB ~ O(n^2/H) << full O(n^2)
+    n = 2**21
+    assert fl.apb_flops(L, n, d, I, g, H, 8192, 8192) \
+        < 0.3 * fl.fullattn_flops(L, n, d, I, g)
+
+
+def test_checkpoint_roundtrip(tmp_path, key):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jax.random.normal(key, (4,))},
+            "d": (jnp.ones((2,)), jnp.zeros((3,), jnp.int32))}
+    ckpt.save(str(tmp_path / "ck"), tree, step=7)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        tree)
+    restored, step = ckpt.restore(str(tmp_path / "ck"), like)
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_synthetic_passkey_recoverable(rng):
+    d, q, a = synthetic.batch_samples(rng, "passkey", 4, 256, 12, 1000)
+    assert d.shape == (4, 256) and q.shape == (4, 12) and a.shape[0] == 4
+    for i in range(4):
+        key = q[i, -4:]
+        doc = d[i]
+        # find the needle: KEY_MARK key val KEY_MARK
+        pos = [j for j in range(len(doc) - 9)
+               if doc[j] == synthetic.KEY_MARK
+               and (doc[j + 1:j + 5] == key).all()]
+        assert len(pos) == 1
+        np.testing.assert_array_equal(doc[pos[0] + 5:pos[0] + 9], a[i])
+
+
+def test_multikey_distinct(rng):
+    d, q, a = synthetic.batch_samples(rng, "multikey", 2, 512, 12, 1000,
+                                      n_keys=4)
+    assert d.shape == (2, 512)

@@ -1,0 +1,102 @@
+"""Pallas APB kernel vs the pure-jnp oracle: shape/dtype sweeps.
+
+The kernel runs in interpret mode on CPU (the body is executed exactly as
+it would be staged for the TPU Mosaic compiler).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _make(key, b, la, pcap, lb, h, kv, d, dtype):
+    ks = jax.random.split(key, 8)
+    return dict(
+        q_anchor=_rand(ks[0], (b, la, h, d), dtype),
+        q_local=_rand(ks[1], (b, lb, h, d), dtype),
+        k_anchor=_rand(ks[2], (b, la, kv, d), dtype),
+        k_pass=_rand(ks[3], (b, pcap, kv, d), dtype),
+        k_local=_rand(ks[4], (b, lb, kv, d), dtype),
+        v_anchor=_rand(ks[5], (b, la, kv, d), dtype),
+        v_pass=_rand(ks[6], (b, pcap, kv, d), dtype),
+        v_local=_rand(ks[7], (b, lb, kv, d), dtype),
+    )
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("b,la,pcap,lb,h,kv,d", [
+    (1, 16, 8, 32, 2, 1, 32),        # GQA 2:1
+    (2, 24, 16, 40, 4, 2, 64),       # unaligned region lengths
+    (1, 0, 0, 64, 2, 2, 64),         # degenerate: pure causal
+    (1, 32, 0, 32, 2, 2, 128),       # star (no passing)
+    (2, 8, 24, 24, 8, 2, 16),        # more passing than local
+])
+def test_kernel_matches_oracle(key, b, la, pcap, lb, h, kv, d, dtype, tol):
+    args = _make(key, b, la, pcap, lb, h, kv, d, dtype)
+    for av in ({0, la} if la else {0}):
+        for pv in ({0, pcap // 2, pcap} if pcap else {0}):
+            out_k = ops.apb_attention(
+                *args.values(), anchor_valid=av, pass_valid=pv,
+                block_q=16, block_kv=16, use_kernel=True)
+            out_r = ops.apb_attention(
+                *args.values(), anchor_valid=av, pass_valid=pv,
+                use_kernel=False)
+            for a, b_ in zip(out_k, out_r):
+                np.testing.assert_allclose(
+                    np.asarray(a, np.float32), np.asarray(b_, np.float32),
+                    atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [0, 8, 64])
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_kernel_window_softcap(key, window, softcap):
+    q = _rand(key, (2, 48, 4, 32), jnp.float32)
+    k = _rand(jax.random.fold_in(key, 1), (2, 48, 2, 32), jnp.float32)
+    v = _rand(jax.random.fold_in(key, 2), (2, 48, 2, 32), jnp.float32)
+    out = ops.causal_flash_attention(q, k, v, window=window,
+                                     softcap=softcap, block_q=16,
+                                     block_kv=16, use_kernel=True)
+    ref_out = ref.causal_attention_ref(q, k, v, window=window,
+                                       softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_bidirectional(key):
+    q = _rand(key, (1, 32, 2, 32), jnp.float32)
+    k = _rand(jax.random.fold_in(key, 1), (1, 32, 2, 32), jnp.float32)
+    v = _rand(jax.random.fold_in(key, 2), (1, 32, 2, 32), jnp.float32)
+    out = ops.causal_flash_attention(q, k, v, causal=False, block_q=16,
+                                     block_kv=16, use_kernel=True)
+    ref_out = ref.causal_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_block_size_invariance(key):
+    """Output must not depend on the tile decomposition."""
+    args = _make(key, 1, 32, 16, 64, 2, 2, 64, jnp.float32)
+    outs = []
+    for bq, bkv in [(16, 16), (32, 16), (16, 32), (64, 64)]:
+        oa, ol = ops.apb_attention(
+            *args.values(), anchor_valid=32, pass_valid=8,
+            block_q=bq, block_kv=bkv, use_kernel=True)
+        outs.append(np.asarray(jnp.concatenate([oa, ol], 1)))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5, rtol=1e-5)
+
+
+def test_host0_anchor_rows_zero(key):
+    """anchor_valid=0 (host 0): anchor rows must come back exactly 0."""
+    args = _make(key, 1, 16, 8, 32, 2, 2, 32, jnp.float32)
+    oa, _ = ops.apb_attention(*args.values(), anchor_valid=0, pass_valid=0,
+                              block_q=16, block_kv=16, use_kernel=True)
+    assert float(jnp.abs(oa).max()) == 0.0

@@ -1,0 +1,68 @@
+"""Per-architecture smoke tests (deliverable f): reduced variant of each
+assigned family — one forward + one train step on CPU, asserting output
+shapes and the absence of NaNs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models import model as model_lib
+from repro.models.transformer import RunCtx
+from repro.training import optimizer as opt
+
+B, L, LQ = 2, 64, 8
+
+
+def _batch(cfg, key):
+    if cfg.is_encoder_decoder:
+        frames = jax.random.normal(key, (B, L, cfg.d_model)) * 0.02
+        toks = jax.random.randint(key, (B, 16), 0, cfg.vocab_size)
+        return (frames, toks)
+    return jax.random.randint(key, (B, L), 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch, key):
+    cfg = get_config(arch).reduced()
+    assert cfg.d_model <= 512 and cfg.num_blocks <= 2
+    assert cfg.moe_num_experts <= 4
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    rctx = RunCtx(strategy="full")
+    batch = _batch(cfg, key)
+
+    loss = model.loss_fn(params, batch, rctx)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss not finite"
+
+    # one optimizer step
+    grads = jax.grad(lambda p: model.loss_fn(p, batch, rctx))(params)
+    state = opt.adamw_init(params)
+    new_params, state, gnorm = opt.adamw_update(
+        opt.AdamWConfig(), grads, state, params)
+    assert bool(jnp.isfinite(gnorm))
+    for a, b in zip(jax.tree_util.tree_leaves(new_params),
+                    jax.tree_util.tree_leaves(params)):
+        assert a.shape == b.shape
+    loss2 = model.loss_fn(new_params, batch, rctx)
+    assert bool(jnp.isfinite(loss2)), f"{arch}: post-step loss not finite"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_prefill_decode(arch, key):
+    cfg = get_config(arch).reduced()
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    rctx = RunCtx(strategy="full")
+    if cfg.is_encoder_decoder or cfg.frontend is not None:
+        doc = jax.random.normal(key, (B, L, cfg.d_model)) * 0.02
+    else:
+        doc = jax.random.randint(key, (B, L), 0, cfg.vocab_size)
+    query = jax.random.randint(jax.random.fold_in(key, 1), (B, LQ), 0,
+                               cfg.vocab_size)
+    logits0, caches, tails = model.prefill_step(params, doc, query, rctx)
+    assert logits0.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits0))), f"{arch}: prefill NaN"
