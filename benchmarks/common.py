@@ -1,16 +1,37 @@
-"""Shared benchmark utilities: timing harness + CSV emission.
+"""Shared benchmark utilities: timing harness + CSV / JSON emission.
 
 Every benchmark prints ``name,us_per_call,derived`` CSV rows (one per
 paper table/figure entry) so ``python -m benchmarks.run`` output is
 machine-readable; "derived" carries the headline quantity the paper's
-table reports (a speedup, accuracy, or FLOPs ratio).
+table reports (a speedup, accuracy, or FLOPs ratio).  ``emit_json``
+additionally writes the same records as a JSON document under
+``results/`` (untracked — a perf harness runs the benchmarks and
+collects the files to follow the trajectory across PRs).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
 import jax
+
+
+def emit_json(name: str, records, meta=None,
+              out_dir: str = "results") -> str:
+    """Write ``results/<name>.json``: {"benchmark", "meta", "records"}.
+
+    ``records`` is a list of dicts mirroring the CSV rows (keys at least
+    ``name``, ``us_per_call``, ``derived``) plus any benchmark-specific
+    fields.  Returns the path written.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump({"benchmark": name, "meta": meta or {},
+                   "records": records}, f, indent=2, sort_keys=True)
+    return path
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,

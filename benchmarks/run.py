@@ -18,6 +18,7 @@ MODULES = [
     ("ablation", "benchmarks.bench_ablation"),           # Table 3
     ("hosts", "benchmarks.bench_hosts"),                 # Table 4
     ("roofline", "benchmarks.bench_roofline"),           # EXPERIMENTS §Roofline
+    ("serving", "benchmarks.bench_serving"),             # decode/serving perf
 ]
 
 

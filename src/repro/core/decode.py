@@ -11,7 +11,8 @@ ends the prefill (paper Alg. 1 lines 13-25 with x = q).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple, Union
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple, \
+    Union
 
 import jax
 import jax.numpy as jnp
@@ -64,7 +65,7 @@ def _local_decode(q, k_loc, v_loc, valid_len, shard_len, total_len,
     stride = shard_len
     for ax in reversed(cache_axes):
         offset = offset + jax.lax.axis_index(ax) * stride
-        stride = stride * jax.lax.axis_size(ax)
+        stride = stride * collectives.axis_size(ax)
     gpos = offset + jnp.arange(k_loc.shape[1])                  # (S_loc,)
     vl = jnp.reshape(jnp.asarray(
         valid_len if valid_len is not None else total_len), (-1, 1))
@@ -120,7 +121,7 @@ def decode_attention_distributed(q, k_cache, v_cache, *,
 
     vl_arg = (jnp.asarray(valid_len) if valid_len is not None
               else jnp.full((q.shape[0],), total_len, jnp.int32))
-    fn = jax.shard_map(body, mesh=mesh,
+    fn = collectives.shard_map(body, mesh=mesh,
                        in_specs=(qspec, cspec, cspec, P(bspec)),
                        out_specs=(qspec, lspec))
     return fn(q, k_cache, v_cache, vl_arg)
@@ -145,3 +146,110 @@ def query_context_attention(q, k_cache, v_cache, k_self, v_self, *,
         q, k_self, v_self, causal, softcap=softcap)
     out, _ = collectives.lse_merge_pair(ctx_out, ctx_lse, self_out, self_lse)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Slotted tail cache + fused decode loop
+# ---------------------------------------------------------------------------
+#
+# The serving engine preallocates the per-layer "tail" KV (query + generated
+# tokens) as a fixed-capacity buffer (B_slots, T_max, KV, D) and tracks a
+# per-slot fill level, so each decode step is a static-shape
+# ``dynamic_update_slice`` write plus masked attention instead of a
+# ``jnp.concatenate`` that re-allocates (and re-compiles) as shapes grow.
+# That makes the whole token loop scannable: ``decode_loop`` runs it as one
+# jitted ``lax.scan`` with on-device sampling and per-slot stop tracking —
+# the host syncs once per loop, not once per token.
+
+
+def write_tail_at(buf, new, index):
+    """Per-slot dynamic write: buf (B, T, KV, D) <- new (B, t, KV, D) at
+    per-batch offsets ``index`` (B,) along the sequence axis."""
+    idx = jnp.clip(index, 0, buf.shape[1] - new.shape[1]).astype(jnp.int32)
+    return jax.vmap(
+        lambda b, n, i: jax.lax.dynamic_update_slice_in_dim(b, n, i, axis=0)
+    )(buf, new, idx)
+
+
+def tail_attention_slotted(q, tail_k, tail_v, k_new, v_new, tail_valid, *,
+                           softcap: Optional[float] = None):
+    """Write the new token's KV into the preallocated tail buffers at each
+    slot's fill level and attend over the valid prefix (static shapes).
+
+    q/k_new/v_new: (B, 1, ·, D); tail_k/tail_v: (B, T_max, KV, D);
+    tail_valid: (B,) number of already-valid tail entries.
+    Returns (out, lse, new_tail_k, new_tail_v).
+    """
+    kt = write_tail_at(tail_k, k_new, tail_valid)
+    vt = write_tail_at(tail_v, v_new, tail_valid)
+    t_max = kt.shape[1]
+    mask = jnp.arange(t_max)[None, :] < (tail_valid + 1)[:, None]   # (B, T)
+    mask = jnp.broadcast_to(mask[:, None, :],
+                            (q.shape[0], q.shape[1], t_max))
+    out, lse = partial_attention_lse(q, kt, vt, mask, softcap=softcap)
+    return out, lse, kt, vt
+
+
+class DecodeState(NamedTuple):
+    """Carry of the fused decode scan — one entry per batch slot.
+
+    A NamedTuple so it is a pytree: the scheduler threads it through
+    successive jitted decode chunks and edits slots between chunks.
+    """
+
+    tokens: jax.Array       # (B, 1) int32 — next input token
+    positions: jax.Array    # (B, 1) int32 — its global position
+    tail_len: jax.Array     # (B,)  int32 — valid entries in the tail buffers
+    doc_len: jax.Array      # (B,)  int32 — valid entries in the doc cache
+    steps_left: jax.Array   # (B,)  int32 — remaining token budget
+    stop_tokens: jax.Array  # (B,)  int32 — per-slot stop id (-1 = none)
+    done: jax.Array         # (B,)  bool  — slot finished (or empty)
+    rng: jax.Array          # PRNG key for sampled decoding
+    caches: Any             # per-layer doc KV / SSM state pytree
+    tails: Any              # per-layer preallocated tail buffers
+
+
+def decode_loop(serve_fn: Callable, fold_fn: Callable, sample_fn: Callable,
+                state: DecodeState, num_steps: int, pad_token: int = 0):
+    """Jitted multi-token decode: ``lax.scan`` of the serve step.
+
+    serve_fn(tokens, positions, caches, tails, tail_len, doc_len)
+        -> (logits (B, V), per-layer updates)
+    fold_fn(caches, tails, updates) -> (caches, tails)   — static shapes
+    sample_fn(logits, key) -> (B,) int32 next tokens
+
+    Per-slot stop handling: a slot whose sampled token equals its stop id
+    (or whose budget runs out) is marked done; done slots emit
+    ``pad_token`` and stop advancing their position / tail fill level, so
+    mixed-length requests share one decode batch.  Returns
+    (tokens (B, num_steps) int32, final DecodeState).
+    """
+
+    def body(carry: DecodeState, _):
+        logits, updates = serve_fn(carry.tokens, carry.positions,
+                                   carry.caches, carry.tails,
+                                   carry.tail_len, carry.doc_len)
+        caches, tails = fold_fn(carry.caches, carry.tails, updates)
+        rng, sub = jax.random.split(carry.rng)
+        nxt = sample_fn(logits, sub)
+        nxt = jnp.where(carry.done, pad_token, nxt).astype(jnp.int32)
+        steps_left = jnp.where(carry.done, carry.steps_left,
+                               carry.steps_left - 1)
+        done = carry.done | (nxt == carry.stop_tokens) | (steps_left <= 0)
+        live = ~carry.done
+        new = DecodeState(
+            tokens=nxt[:, None],
+            positions=jnp.where(live[:, None], carry.positions + 1,
+                                carry.positions),
+            tail_len=jnp.where(live, carry.tail_len + 1, carry.tail_len),
+            doc_len=carry.doc_len,
+            steps_left=steps_left,
+            stop_tokens=carry.stop_tokens,
+            done=done,
+            rng=rng,
+            caches=caches,
+            tails=tails)
+        return new, nxt
+
+    final, toks = jax.lax.scan(body, state, None, length=num_steps)
+    return jnp.swapaxes(toks, 0, 1), final

@@ -20,6 +20,11 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples on-device in the loop")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0, help="sampling PRNG seed")
     args = ap.parse_args()
 
     if args.devices > 1:
@@ -37,6 +42,11 @@ def main() -> None:
     from repro.models import model as model_lib
     from repro.models.transformer import RunCtx
     from repro.serving.engine import Engine
+    from repro.serving.sampling import SamplingParams
+
+    # validate flag combinations before the (slow) model build
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -68,7 +78,9 @@ def main() -> None:
                                    (args.batch, args.n_doc)), jnp.int32)
     query = jnp.asarray(rng.integers(10, cfg.vocab_size,
                                      (args.batch, args.lq)), jnp.int32)
-    res = engine.generate(doc, query, max_new_tokens=args.new_tokens)
+    res = engine.generate(doc, query, max_new_tokens=args.new_tokens,
+                          sampling=sampling,
+                          rng=jax.random.PRNGKey(args.seed))
     n_in = args.n_doc + args.lq
     print(f"strategy={args.strategy} hosts={hosts} "
           f"prefill={res.prefill_time_s*1e3:.1f}ms "

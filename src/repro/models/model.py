@@ -122,14 +122,17 @@ def _build_decoder_only(cfg):
 
     # -------------------------------------------------- decode
     def serve_step(params, token, position, caches, tails, rctx: RunCtx,
-                   valid_len=None, total_len=None):
-        """token: (B, 1); position: (B, 1) global positions.
+                   valid_len=None, total_len=None, tail_valid=None):
+        """token: (B, 1); position: (B, 1) per-slot global positions.
 
-        Returns (logits (B, V), per-layer cache updates).
+        Returns (logits (B, V), per-layer cache updates).  With
+        ``tail_valid`` (B,) the tails are static-shape slot buffers and the
+        updates are the updated buffers (fused decode-loop layout).
         """
         hidden, updates, _ = tf.forward_decode(
             params, cfg, token, position, caches, tails, rctx,
-            valid_len=valid_len, total_len=total_len)
+            valid_len=valid_len, total_len=total_len,
+            tail_valid=tail_valid)
         lg = tf.logits(params, cfg, hidden)
         return lg[:, 0], updates
 
@@ -177,8 +180,8 @@ def _build_encdec(cfg):
         return lg[:, 0], xc, tails
 
     def serve_step(params, token, position, xcaches, tails, rctx: RunCtx,
-                   valid_len=None, total_len=None):
-        del valid_len, total_len
+                   valid_len=None, total_len=None, tail_valid=None):
+        del valid_len, total_len, tail_valid   # self-cache grows by concat
         # decoder position of the new token (scalar or (B,1) -> scalar)
         start = (jnp.reshape(jnp.asarray(position), (-1,))[0]
                  if not isinstance(position, int) else position)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.common import dense_init, activation_fn
+from repro.parallel import collectives
 
 
 def moe_init(key, d_model: int, d_ff: int, num_experts: int,
@@ -179,7 +180,7 @@ def moe_apply_local(params, x, *, top_k: int, mesh,
         y = jnp.sum(weighted.reshape(t, top_k, d), axis=1)
         return y.reshape(xx.shape), aux
 
-    fn = jax.shard_map(
+    fn = collectives.shard_map(
         inner, mesh=mesh,
         in_specs=(p_specs, token_spec),
         out_specs=(token_spec, P()))

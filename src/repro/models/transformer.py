@@ -39,6 +39,7 @@ from repro.models import mamba2
 from repro.models import moe as moe_mod
 from repro.models.common import (dense_init, embed_init, norm_apply,
                                  norm_init, softcap)
+from repro.parallel import collectives
 from repro.parallel import ssm as ssm_par
 from repro.parallel.collectives import lse_merge_pair
 
@@ -214,7 +215,7 @@ def _mamba_prefill(p, cfg, h, rctx: RunCtx):
                 ..., d_inner:2 * d_inner + 2 * n]
             return y, final[None], xbc[:, -(w - 1):][None]
 
-    fn = jax.shard_map(inner, mesh=pctx.mesh, in_specs=(xspec,),
+    fn = collectives.shard_map(inner, mesh=pctx.mesh, in_specs=(xspec,),
                        out_specs=(xspec, stspec, cvspec))
     y, state, conv = fn(h)
     return y, {"state": state, "conv": conv}
@@ -273,8 +274,17 @@ def apply_layer_prefill(p, cfg, kind, x, positions, rctx: RunCtx,
 # ---------------------------------------------------------------------------
 
 def apply_layer_decode(p, cfg, kind, x, positions, cache, tail,
-                       rctx: RunCtx, valid_len=None, total_len=None):
-    """x: (B, 1, d).  Returns (x, cache_update, aux)."""
+                       rctx: RunCtx, valid_len=None, total_len=None,
+                       tail_valid=None):
+    """x: (B, 1, d).  Returns (x, cache_update, aux).
+
+    With ``tail_valid`` (B,) the tail is a preallocated slot buffer
+    (B, T_max, KV, D): the new KV is written in place at each slot's fill
+    level and the update returned is the whole updated buffer (static
+    shapes — the fused decode scan carries it).  Without it, the seed
+    behaviour: tail grows by concatenation and the update is just the new
+    token's KV.
+    """
     h = norm_apply(p["norm1"], x, cfg.norm, cfg.norm_eps)
 
     if kind.mixer == "attn":
@@ -285,17 +295,24 @@ def apply_layer_decode(p, cfg, kind, x, positions, cache, tail,
             cache_axes=rctx.cache_axes, valid_len=valid_len,
             total_len=total_len, window=window,
             softcap=cfg.attn_logit_softcap)
-        if tail is not None and "k" in tail:
-            kt = jnp.concatenate([tail["k"], k_new], 1)
-            vt = jnp.concatenate([tail["v"], v_new], 1)
+        if tail_valid is not None and tail is not None and "k" in tail:
+            t_out, t_lse, kt, vt = dec.tail_attention_slotted(
+                q, tail["k"], tail["v"], k_new, v_new, tail_valid,
+                softcap=cfg.attn_logit_softcap)
+            update = {"k": kt, "v": vt}
         else:
-            kt, vt = k_new, v_new
-        t_out, t_lse = dec.partial_attention_lse(
-            q, kt, vt, softcap=cfg.attn_logit_softcap)
+            if tail is not None and "k" in tail:
+                kt = jnp.concatenate([tail["k"], k_new], 1)
+                vt = jnp.concatenate([tail["v"], v_new], 1)
+            else:
+                kt, vt = k_new, v_new
+            t_out, t_lse = dec.partial_attention_lse(
+                q, kt, vt, softcap=cfg.attn_logit_softcap)
+            update = {"k": k_new, "v": v_new}
         out, _ = lse_merge_pair(ctx_out, ctx_lse, t_out, t_lse)
         x = x + attn.attn_out(p["attn"], cfg, out)
         x, aux = _ffn_part(p, cfg, kind, x, rctx)
-        return x, {"k": k_new, "v": v_new}, aux
+        return x, update, aux
 
     y, new_state, new_conv = mamba2.mamba_decode_step(
         p["mamba"], cfg, h, cache["state"], cache["conv"])
@@ -337,9 +354,14 @@ def forward_prefill(params, cfg, inputs, positions, rctx: RunCtx):
 
 
 def forward_decode(params, cfg, token, positions, caches, tails,
-                   rctx: RunCtx, valid_len=None, total_len=None):
+                   rctx: RunCtx, valid_len=None, total_len=None,
+                   tail_valid=None):
     """token: (B, 1) or (B, 1, d).  caches/tails stacked per block (tails
-    may be None).  Returns (hidden, cache_updates, aux)."""
+    may be None).  Returns (hidden, cache_updates, aux).
+
+    ``tail_valid`` (B,) switches the tails to the preallocated slot-buffer
+    layout (see apply_layer_decode); the returned updates are then the
+    updated buffers themselves."""
     x = embed(params, cfg, token)
     pattern = cfg.block_pattern
 
@@ -355,7 +377,7 @@ def forward_decode(params, cfg, token, positions, caches, tails,
             x, upd, a = apply_layer_decode(
                 block_params[i], cfg, kind, x, positions, block_caches[i],
                 block_tails[i], rctx, valid_len=valid_len,
-                total_len=total_len)
+                total_len=total_len, tail_valid=tail_valid)
             updates.append(upd)
             aux = aux + a
         return (x, aux), tuple(updates)

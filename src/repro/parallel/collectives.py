@@ -17,6 +17,30 @@ import jax.numpy as jnp
 
 AxisName = Union[str, Sequence[str]]
 
+# jax.shard_map graduated from jax.experimental in newer releases; resolve
+# whichever this jax provides so every call site works across versions.
+# ``check_rep`` is honoured on old jax and dropped on new (whose native
+# replication inference handles the ops the experimental checker lacked
+# rules for, e.g. top_k of a replicated constant).
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *args, check_rep=True, **kwargs):
+        del check_rep
+        return jax.shard_map(f, *args, **kwargs)
+else:                                            # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(f, *args, check_rep=True, **kwargs):
+        return _exp_shard_map(f, *args, check_rep=check_rep, **kwargs)
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name):
+        """Static size of a named mesh axis (jax < 0.5 has no
+        lax.axis_size): psum of a Python constant folds to the axis size
+        at trace time, so callers can use it in loop bounds / perms."""
+        return jax.lax.psum(1, axis_name)
+
 
 def all_gather_concat(x, axis_name: AxisName, axis: int = 1):
     """AllGather shards and concatenate them in host order along ``axis``."""

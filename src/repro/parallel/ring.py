@@ -16,6 +16,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.parallel import collectives
+
 NEG_INF = -1e30
 
 
@@ -56,7 +58,7 @@ def ring_attention_inner(q, k, v, axis_name: str,
     Sequence blocks are laid out in host order along ``axis_name``.
     """
     h_idx = jax.lax.axis_index(axis_name)
-    n_hosts = jax.lax.axis_size(axis_name)
+    n_hosts = collectives.axis_size(axis_name)
     lb = q.shape[1]
     scale = 1.0 / (q.shape[-1] ** 0.5)
     q_off = h_idx * lb

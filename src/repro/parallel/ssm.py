@@ -31,13 +31,15 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.parallel import collectives
+
 from repro.models import mamba2
 from repro.models.common import norm_apply
 
 
 def _halo_exchange(tail, axis_name: str):
     """Send each shard's conv tail to the next shard; shard 0 gets zeros."""
-    n = jax.lax.axis_size(axis_name)
+    n = collectives.axis_size(axis_name)
     perm = [(i, i + 1) for i in range(n - 1)]
     received = jax.lax.ppermute(tail, axis_name, perm)
     h_idx = jax.lax.axis_index(axis_name)
@@ -52,7 +54,7 @@ def _prefix_state(local_state, local_logdecay, axis_name: str,
     Returns the state entering this shard.
     """
     h_idx = jax.lax.axis_index(axis_name)
-    n = jax.lax.axis_size(axis_name)
+    n = collectives.axis_size(axis_name)
     states = jax.lax.all_gather(local_state, axis_name)        # (H,B,nh,P,N)
     lds = jax.lax.all_gather(local_logdecay, axis_name)        # (H,B,nh)
 

@@ -10,6 +10,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.parallel import collectives
+
 from repro.kernels import ref
 
 
@@ -26,7 +28,7 @@ def ulysses_attention_inner(q, k, v, axis_name: str,
     Requires H % axis_size == 0 and KV % axis_size == 0 (the architectural
     scalability bound the paper contrasts APB against).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = collectives.axis_size(axis_name)
     h, kvh = q.shape[2], k.shape[2]
     if h % n or kvh % n:
         raise ValueError(

@@ -18,6 +18,33 @@ import jax
 import jax.numpy as jnp
 
 
+def pow2_bucket(n: int) -> int:
+    """Round n up to a power of two — shared compile-cache bucketing for
+    jitted scan lengths (Engine.generate, Scheduler chunks): distinct
+    values stay O(log n) instead of one compile per length."""
+    return 1 << (n - 1).bit_length() if n > 0 else 0
+
+
+def attn_cache_len(caches) -> int:
+    """Sequence length of the (stacked) attention doc caches; 0 for
+    pure-SSM models."""
+    for c in caches:
+        if "k" in c:
+            return c["k"].shape[2]
+    return 0
+
+
+def first_decode_position(n_doc: int, lq: int) -> int:
+    """Global RoPE position of the first generated token.
+
+    The serving convention places a query copy before the document and
+    the real query after it ([query | doc | query] — paper Alg. 1), so
+    generation starts at lq + n_doc + lq.  Single source of truth for the
+    fused loop, the stepwise oracle and the scheduler.
+    """
+    return lq + n_doc + lq
+
+
 def to_decode_caches(prefill_caches) -> Tuple:
     """Collapse prefill mamba caches (shard-stacked) to decode format."""
     out = []
@@ -51,6 +78,96 @@ def absorb_query_states(decode_caches, query_tails) -> Tuple:
         else:
             out.append(c)
     return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Slotted (preallocated) layout — continuous-batching serving
+# ---------------------------------------------------------------------------
+#
+# All pytrees below are *stacked per block*: leading axis = number of
+# blocks in the pattern repetition scan, so an attention tail buffer is
+# (blocks, B_slots, T_max, KV, D) and the sequence axis is 2 at this
+# level (1 inside a layer).  Buffers are preallocated at a fixed capacity
+# and written with ``dynamic_update_slice`` so decode-step shapes never
+# change: the whole token loop compiles once and runs as a single scan.
+
+
+def make_tail_buffers(query_tails, capacity: int) -> Tuple[Tuple, "jnp.ndarray"]:
+    """Preallocate slot tail buffers from the query-pass tails.
+
+    Attention tails (blocks, B, lq, KV, D) land in the first ``lq`` rows
+    of a zeroed (blocks, B, capacity, KV, D) buffer; mamba layers carry no
+    attention tail.  Returns (tails, tail_len (B,) int32).
+    """
+    out, lq, b = [], 0, None
+    for t in query_tails:
+        if "k" in t:
+            lq = t["k"].shape[2]
+            b = t["k"].shape[1]
+            if capacity < lq:
+                raise ValueError(
+                    f"tail capacity {capacity} < query length {lq}")
+            pad = [(0, 0)] * t["k"].ndim
+            pad[2] = (0, capacity - lq)
+            out.append({"k": jnp.pad(t["k"], pad), "v": jnp.pad(t["v"], pad)})
+        else:
+            b = t["state"].shape[1] if "state" in t else b
+            out.append({})
+    if b is None:
+        raise ValueError("no tails to build buffers from")
+    return tuple(out), jnp.full((b,), lq, jnp.int32)
+
+
+def pad_doc_caches(caches, capacity: int) -> Tuple:
+    """Zero-pad attention doc caches (blocks, B, n, KV, D) on the sequence
+    axis to ``capacity`` (mamba states are length-free and pass through).
+    Padded rows are masked out by the per-slot ``doc_len`` at attention
+    time."""
+    out = []
+    for c in caches:
+        if "k" in c:
+            n = c["k"].shape[2]
+            if capacity < n:
+                raise ValueError(f"doc capacity {capacity} < cache len {n}")
+            pad = [(0, 0)] * c["k"].ndim
+            pad[2] = (0, capacity - n)
+            out.append({"k": jnp.pad(c["k"], pad), "v": jnp.pad(c["v"], pad)})
+        else:
+            out.append(c)
+    return tuple(out)
+
+
+def write_request_slot(caches, tails, req_caches, req_tails, slot: int
+                       ) -> Tuple[Tuple, Tuple]:
+    """Paste one prefilled request (batch 1, already padded to the slot
+    capacities) into batch slot ``slot`` of the shared buffers.  Host-side:
+    runs once per admission, not per token."""
+    new_caches = []
+    for c, rc in zip(caches, req_caches):
+        new_caches.append({k: c[k].at[:, slot].set(rc[k][:, 0])
+                           for k in c})
+    new_tails = []
+    for t, rt in zip(tails, req_tails):
+        new_tails.append({k: t[k].at[:, slot].set(rt[k][:, 0])
+                          for k in t})
+    return tuple(new_caches), tuple(new_tails)
+
+
+def fold_updates_slotted(caches, tails, updates) -> Tuple[Tuple, Tuple]:
+    """Slotted-layout fold: attention updates *are* the updated tail
+    buffers (same shapes — replace); mamba updates replace the state."""
+    new_caches, new_tails = [], []
+    for c, t, u in zip(caches, tails, updates):
+        if "k" in u and "k" in t:
+            new_caches.append(c)
+            new_tails.append(u)
+        elif "state" in u:
+            new_caches.append({"state": u["state"], "conv": u["conv"]})
+            new_tails.append(t)
+        else:
+            new_caches.append(c)
+            new_tails.append(t)
+    return tuple(new_caches), tuple(new_tails)
 
 
 def append_updates(caches, tails, updates) -> Tuple[Tuple, Tuple]:

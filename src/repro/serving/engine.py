@@ -8,25 +8,37 @@ The paper's inference procedure (Alg. 1):
   3. exact query pass over the distributed cache (first answer token),
   4. token-by-token decode via LSE-merged distributed attention (Alg. 3).
 
-The engine drives steps 1-4 for a batch of requests, manages caches
-(serving.cache) and exposes greedy / sampled generation.  On a mesh it
-jits the step functions with the sharding policy from
-repro.parallel.sharding; on a single device it runs the same code paths
-unsharded (used by tests, examples and the quality benchmarks).
+The engine drives steps 1-4 for a batch of requests.  Decode runs as a
+**fused jitted loop** (core.decode.decode_loop): the tail KV lives in
+preallocated slot buffers (serving.cache), every step is a static-shape
+``dynamic_update_slice`` write + masked attention, sampling
+(serving.sampling) and per-slot stop tracking happen on device, and the
+host syncs once per generate call (or once per scheduler chunk) instead
+of once per token.  The seed per-token Python loop is kept as
+``generate_stepwise`` — it is the baseline ``benchmarks/bench_serving.py``
+measures against and the exactness oracle for the ring-buffer tests.
+
+On a mesh the step functions are jitted with the sharding policy from
+repro.parallel; on a single device the same code paths run unsharded
+(tests, examples, quality benchmarks).  Continuous batching across
+requests is layered on top by serving.scheduler.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import decode as dec
 from repro.models import model as model_lib
 from repro.models.transformer import RunCtx
 from repro.serving import cache as cache_lib
+from repro.serving import sampling as sampling_lib
+from repro.serving.sampling import SamplingParams
 
 
 @dataclasses.dataclass
@@ -44,10 +56,12 @@ class GenerationResult:
 class Engine:
     """Batched prefill+decode driver for one model + strategy."""
 
-    def __init__(self, cfg, params, rctx: RunCtx, jit: bool = True):
+    def __init__(self, cfg, params, rctx: RunCtx, jit: bool = True,
+                 sampling: SamplingParams = sampling_lib.GREEDY):
         self.cfg = cfg
         self.params = params
         self.rctx = rctx
+        self.sampling = sampling
         self.model = model_lib.build(cfg)
         if jit:
             self._prefill = jax.jit(
@@ -55,38 +69,186 @@ class Engine:
             self._serve = jax.jit(
                 lambda p, t, pos, c, tl: self.model.serve_step(
                     p, t, pos, c, tl, rctx))
+            # pad_token stays traced: serving mixed stop/pad ids must not
+            # recompile the scan per value
+            self._loop = jax.jit(
+                self._loop_impl,
+                static_argnames=("num_steps", "sampling"))
         else:
             self._prefill = lambda p, d, q: self.model.prefill_step(
                 p, d, q, rctx)
             self._serve = lambda p, t, pos, c, tl: self.model.serve_step(
                 p, t, pos, c, tl, rctx)
+            self._loop = self._loop_impl
+
+    # ------------------------------------------------------------------
+    # Fused decode loop
+    # ------------------------------------------------------------------
+    def _loop_impl(self, params, state: dec.DecodeState, num_steps: int,
+                   sampling: SamplingParams, pad_token: int = 0):
+        def serve(tok, pos, caches, tails, tail_len, doc_len):
+            return self.model.serve_step(
+                params, tok, pos, caches, tails, self.rctx,
+                valid_len=doc_len, tail_valid=tail_len)
+
+        def sample(logits, key):
+            return sampling_lib.sample(logits, key, sampling)
+
+        return dec.decode_loop(serve, cache_lib.fold_updates_slotted,
+                               sample, state, num_steps,
+                               pad_token=pad_token)
+
+    def decode_chunk(self, state: dec.DecodeState, num_steps: int,
+                     sampling: Optional[SamplingParams] = None,
+                     pad_token: int = 0):
+        """Advance the shared decode batch by ``num_steps`` tokens.
+        Returns (tokens (B, num_steps), new state).  Used by the
+        scheduler between admissions; the compile is cached per
+        (num_steps, sampling)."""
+        return self._loop(self.params, state, num_steps=num_steps,
+                          sampling=sampling or self.sampling,
+                          pad_token=pad_token)
+
+    # ------------------------------------------------------------------
+    def prefill(self, doc, query):
+        """Prefill + query pass; returns (first-token logits, decode-format
+        caches, query tails).  Shared by generate() and the scheduler."""
+        logits0, caches, q_tails = self._prefill(self.params, doc, query)
+        caches = cache_lib.to_decode_caches(caches)
+        caches = cache_lib.absorb_query_states(caches, q_tails)
+        return logits0, caches, q_tails
 
     # ------------------------------------------------------------------
     def generate(self, doc, query, max_new_tokens: int = 8,
-                 stop_token: Optional[int] = None) -> GenerationResult:
-        """doc: (B, n) ints or (B, n, d) embeds; query: (B, lq) ints."""
+                 stop_token: Optional[int] = None,
+                 sampling: Optional[SamplingParams] = None,
+                 rng: Optional[jax.Array] = None) -> GenerationResult:
+        """doc: (B, n) ints or (B, n, d) embeds; query: (B, lq) ints.
+
+        Decode is one jitted scan over preallocated slot caches: no
+        per-token host sync, no per-step concatenation.  A slot that
+        emits ``stop_token`` keeps emitting it for the remaining steps
+        (output stays rectangular at ``max_new_tokens``).  The scan
+        length and tail capacity are bucketed to powers of two so
+        varying budgets reuse compiles.
+        """
+        if max_new_tokens < 1:
+            # the first token falls out of the prefill query pass
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if self.cfg.is_encoder_decoder:
+            # self-attention tails grow inside encdec.decode_tokens; the
+            # static-shape slotted loop does not apply — seed loop
+            # (argmax-only: reject sampling rather than silently ignore it)
+            if not (sampling or self.sampling).greedy:
+                raise ValueError("sampled decoding is not supported for "
+                                 "encoder-decoder models (greedy stepwise "
+                                 "fallback only)")
+            return self.generate_stepwise(doc, query, max_new_tokens,
+                                          stop_token,
+                                          sampling=sampling or self.sampling)
+        sampling = sampling or self.sampling
         lq = query.shape[1]
         n = doc.shape[1]
 
         t0 = time.perf_counter()
-        logits0, caches, q_tails = self._prefill(self.params, doc, query)
+        logits0, caches, q_tails = self.prefill(doc, query)
         logits0 = jax.block_until_ready(logits0)
         t_prefill = time.perf_counter() - t0
 
-        caches = cache_lib.to_decode_caches(caches)
-        caches = cache_lib.absorb_query_states(caches, q_tails)
-        tails = cache_lib.init_tails(q_tails)
+        # bucket the scan length / tail capacity: budgets 4-5 share one
+        # compile (num_steps 3-4 -> bucket 4), 6-9 the next, etc.; extra
+        # steps decode as pads (budget exhausted -> done), sliced off below
+        num_steps = max_new_tokens - 1
+        steps_bucket = cache_lib.pow2_bucket(num_steps)
+        tails, tail_len = cache_lib.make_tail_buffers(
+            q_tails, capacity=lq + 1 + steps_bucket)
+        key = rng if rng is not None else jax.random.PRNGKey(0)
+        key, sub = jax.random.split(key)
+        tok0 = sampling_lib.sample(logits0, sub, sampling)      # (B,)
+        b = tok0.shape[0]
+        pad_token = stop_token if stop_token is not None else 0
+        stop = jnp.full((b,), -1 if stop_token is None else stop_token,
+                        jnp.int32)
+
+        t0 = time.perf_counter()
+        if num_steps > 0:
+            state = dec.DecodeState(
+                tokens=tok0[:, None],
+                positions=jnp.full(
+                    (b, 1), cache_lib.first_decode_position(n, lq),
+                    jnp.int32),
+                tail_len=tail_len,
+                doc_len=jnp.full((b,), cache_lib.attn_cache_len(caches),
+                                 jnp.int32),
+                steps_left=jnp.full((b,), num_steps, jnp.int32),
+                stop_tokens=stop,
+                done=tok0 == stop,
+                rng=key,
+                caches=caches,
+                tails=tails)
+            out, _ = self._loop(self.params, state,
+                                num_steps=steps_bucket,
+                                sampling=sampling, pad_token=pad_token)
+            tokens = jnp.concatenate([tok0[:, None], out],
+                                     axis=1)[:, :max_new_tokens]
+        else:
+            tokens = tok0[:, None]
+        tokens = np.asarray(jax.block_until_ready(tokens))
+        t_decode = time.perf_counter() - t0
+
+        return GenerationResult(tokens, logits0, t_prefill, t_decode)
+
+    # ------------------------------------------------------------------
+    def generate_stepwise(self, doc, query, max_new_tokens: int = 8,
+                          stop_token: Optional[int] = None,
+                          sampling: Optional[SamplingParams] = None
+                          ) -> GenerationResult:
+        """Seed decode loop: one host round-trip and one tail
+        ``jnp.concatenate`` per token.  Kept as the benchmark baseline
+        and as the exactness oracle for the slotted ring-buffer path.
+        Greedy-only — a sampling request (explicit, or inherited from a
+        sampling-configured engine) is rejected rather than silently
+        decoded as a different distribution.
+
+        Stop handling keeps the seed semantics (break only when the
+        whole batch emits ``stop_token`` in the same step, rows advance
+        past their own stop) — compare against ``generate`` with
+        ``stop_token=None``, which is what the parity tests do."""
+        if not (sampling or self.sampling).greedy:
+            raise ValueError("generate_stepwise is the greedy seed "
+                             "oracle; use generate() for sampling")
+        lq = query.shape[1]
+        n = doc.shape[1]
+        is_encdec = self.cfg.is_encoder_decoder
+
+        t0 = time.perf_counter()
+        if is_encdec:
+            # cross-KV caches stay fixed; self-attention tails are
+            # rebuilt (concat inside decode_tokens) and replace wholesale
+            logits0, caches, tails = self._prefill(self.params, doc, query)
+        else:
+            logits0, caches, q_tails = self.prefill(doc, query)
+            tails = cache_lib.init_tails(q_tails)
+        logits0 = jax.block_until_ready(logits0)
+        t_prefill = time.perf_counter() - t0
 
         tok = jnp.argmax(logits0, axis=-1)[:, None].astype(jnp.int32)
         out_tokens = [np.asarray(tok)]
-        pos0 = lq + n + lq                      # query copy + doc + query
+        # encdec positions are decoder-relative (lq tokens emitted so far)
+        pos0 = (lq if is_encdec
+                else cache_lib.first_decode_position(n, lq))
 
         t0 = time.perf_counter()
         for step in range(max_new_tokens - 1):
             pos = jnp.full((tok.shape[0], 1), pos0 + step, jnp.int32)
             logits, updates = self._serve(self.params, tok, pos, caches,
                                           tails)
-            caches, tails = cache_lib.append_updates(caches, tails, updates)
+            if is_encdec:
+                tails = updates
+            else:
+                caches, tails = cache_lib.append_updates(caches, tails,
+                                                         updates)
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             out_tokens.append(np.asarray(tok))
             if stop_token is not None and bool(

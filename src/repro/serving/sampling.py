@@ -1,0 +1,81 @@
+"""Token sampling for the serving engine: greedy / temperature / top-k /
+top-p (nucleus).
+
+``SamplingParams`` is a frozen (hashable) dataclass so it can be passed as
+a static jit argument: the sampling method specialises the compiled decode
+loop, the PRNG key stays a traced input.  ``sample`` is pure and runs
+on-device inside the fused decode scan (core.decode.decode_loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decode import NEG_INF
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """temperature <= 0 selects greedy argmax; top_k=0 / top_p=1 disable
+    the respective filters.  Filters combined with a greedy temperature
+    are rejected at construction — they would be silently ignored."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(
+                f"top_p must be in (0, 1], got {self.top_p}")
+        if self.temperature <= 0.0 and (self.top_k or self.top_p < 1.0):
+            raise ValueError(
+                "top_k/top_p require temperature > 0 (temperature <= 0 "
+                "means greedy decoding and would ignore the filters)")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def _apply_top_k(logits, k: int):
+    k = min(k, logits.shape[-1])            # k >= vocab: keep everything
+    kth = jax.lax.top_k(logits, k)[0][:, -1:]        # O(V log k), no sort
+    return jnp.where(logits < kth, NEG_INF, logits)
+
+
+def _apply_top_p(logits, p: float):
+    order = jnp.argsort(-logits, axis=-1)
+    sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    # keep tokens while the cumulative mass *before* them is < p, so the
+    # set just covers p; the top token is force-kept (p=0 must mean
+    # greedy, not an empty set)
+    cum_before = jnp.cumsum(probs, axis=-1) - probs
+    keep = (cum_before < p).at[..., 0].set(True)
+    masked = jnp.where(keep, sorted_logits, NEG_INF)
+    inv = jnp.argsort(order, axis=-1)
+    return jnp.take_along_axis(masked, inv, axis=-1)
+
+
+def sample(logits, key, params: SamplingParams):
+    """logits: (B, V) -> tokens (B,) int32.
+
+    ``params`` must be a Python-level constant at trace time (static jit
+    arg or closure); only ``logits`` and ``key`` are traced.
+    """
+    if params.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    x = logits.astype(jnp.float32) / params.temperature
+    if params.top_k and params.top_k > 0:
+        x = _apply_top_k(x, params.top_k)
+    if params.top_p < 1.0:
+        x = _apply_top_p(x, params.top_p)
+    return jax.random.categorical(key, x, axis=-1).astype(jnp.int32)

@@ -1,0 +1,306 @@
+"""Continuous-batching request scheduler over the fused decode loop.
+
+Medha-style serving ("no request left behind"): heterogeneous
+long-context requests share one fixed-slot decode batch.  The scheduler
+
+  * admits pending requests into free batch slots — each admission runs
+    the APB prefill + query pass for that request alone (batch 1), pads
+    its doc cache / tail to the shared slot capacities and pastes it into
+    the preallocated slot buffers (serving.cache.write_request_slot);
+  * advances all live slots together with jitted multi-token decode
+    chunks (Engine.decode_chunk — one compile, one host sync per chunk);
+  * tracks per-slot stop tokens / budgets on device (core.decode), frees
+    slots as requests finish and immediately refills them, so a short
+    request never waits for a long one and a long one is never evicted.
+
+Capacities are static: ``doc_capacity`` bounds the per-request document
+cache length, ``tail_capacity`` bounds query + generated tokens.  Both
+default to the max over submitted requests at ``run()`` time.
+
+Caveat — MoE architectures: capacity-based expert dispatch couples all
+batch rows (any token competes for per-expert capacity with every other
+row, including empty slots' pad tokens), so scheduled output is only
+guaranteed to match single-request generation for non-MoE models or
+generous ``moe_capacity_factor``.  This is inherent to batched MoE
+decoding, not specific to the scheduler.
+
+Caveat — sampled serving: one batch-wide PRNG chain advances per decode
+step, so a request's sampled tokens depend on co-scheduled requests and
+chunk boundaries.  Reproducibility holds for an identical submission
+sequence + seed, not per request in isolation (greedy decoding is
+always deterministic).  Per-slot key chains are future work.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decode as dec
+from repro.serving import cache as cache_lib
+from repro.serving import sampling as sampling_lib
+from repro.serving.engine import Engine
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  doc: (n,) or (1, n) ints, or (n, d) /
+    (1, n, d) embeds (VLM/audio frontends); query: (lq,) or (1, lq) ints."""
+
+    rid: str
+    doc: jnp.ndarray
+    query: jnp.ndarray
+    max_new_tokens: int = 8
+    stop_token: Optional[int] = None
+
+
+def _doc_is_tokens(doc) -> bool:
+    return jnp.issubdtype(doc.dtype, jnp.integer)
+
+
+def _doc_seq_len(doc) -> int:
+    """Sequence length of a doc in either layout (last axis of embeds is
+    the feature dim, not the sequence)."""
+    return doc.shape[-1] if _doc_is_tokens(doc) else doc.shape[-2]
+
+
+def _doc_batched(doc):
+    batched_ndim = 2 if _doc_is_tokens(doc) else 3
+    return doc if doc.ndim == batched_ndim else doc[None]
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: str
+    tokens: np.ndarray            # (T,) generated ids, stop token included
+    stopped: bool                 # hit its stop token (vs budget exhausted)
+    prefill_time_s: float
+    admitted_at_chunk: int
+    finished_at_chunk: int
+
+
+class _SlotInfo:
+    def __init__(self, req: Request, first_token: int, prefill_s: float,
+                 chunk: int):
+        self.req = req
+        self.tokens: List[int] = [first_token]
+        self.stopped = (req.stop_token is not None
+                        and first_token == req.stop_token)
+        self.prefill_s = prefill_s
+        self.admitted_at_chunk = chunk
+
+    @property
+    def remaining(self) -> int:
+        if self.stopped:
+            return 0
+        return self.req.max_new_tokens - len(self.tokens)
+
+
+class Scheduler:
+    def __init__(self, engine: Engine, n_slots: int = 2,
+                 decode_chunk: int = 8,
+                 doc_capacity: Optional[int] = None,
+                 tail_capacity: Optional[int] = None,
+                 sampling: Optional[sampling_lib.SamplingParams] = None,
+                 rng: Optional[jax.Array] = None):
+        if engine.cfg.is_encoder_decoder:
+            # encdec self-attention tails grow by concat inside
+            # decode_tokens — not representable in the static-shape
+            # slotted loop (Engine.generate falls back to the stepwise
+            # path for the same reason).
+            raise ValueError("Scheduler requires a decoder-only model; "
+                             "serve encoder-decoder requests through "
+                             "Engine.generate instead")
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if decode_chunk < 1:
+            raise ValueError(
+                f"decode_chunk must be >= 1, got {decode_chunk}")
+        self.engine = engine
+        self.n_slots = n_slots
+        self.decode_chunk = decode_chunk
+        self.doc_capacity = doc_capacity
+        self.tail_capacity = tail_capacity
+        self.sampling = sampling or engine.sampling
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.pending: deque = deque()
+        self.active: Dict[int, _SlotInfo] = {}
+        self.results: Dict[str, RequestResult] = {}
+        self.state: Optional[dec.DecodeState] = None
+        self.chunks_run = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.max_new_tokens < 1:
+            # the first token falls out of the prefill query pass, so a
+            # request always yields at least one
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{req.max_new_tokens} ({req.rid})")
+        batched_ndim = 2 if _doc_is_tokens(req.doc) else 3
+        if req.doc.ndim == batched_ndim and req.doc.shape[0] != 1:
+            # a slot holds one sequence; silently serving row 0 of a
+            # multi-row doc would drop the rest
+            raise ValueError(
+                f"request {req.rid}: docs must be a single sequence "
+                f"((n,)/(1, n) tokens or (n, d)/(1, n, d) embeds), got "
+                f"batch {req.doc.shape[0]} — submit one Request per "
+                f"sequence")
+        self.pending.append(req)
+
+    # ------------------------------------------------------------------
+    def _resolve_capacities(self) -> None:
+        reqs = list(self.pending)
+        if self.doc_capacity is None:
+            self.doc_capacity = max(_doc_seq_len(r.doc) for r in reqs)
+        if self.tail_capacity is None:
+            self.tail_capacity = max(
+                r.query.shape[-1] + r.max_new_tokens for r in reqs)
+
+    def _prefill_request(self, req: Request):
+        need = req.query.shape[-1] + req.max_new_tokens
+        if need > self.tail_capacity:
+            # write_tail_at clips overflow writes, which would silently
+            # corrupt tokens — reject instead
+            raise ValueError(
+                f"request {req.rid} needs {need} tail rows (lq + "
+                f"max_new_tokens) but tail_capacity={self.tail_capacity}")
+        if _doc_seq_len(req.doc) > self.doc_capacity:
+            # capacities freeze when the slot buffers are first allocated
+            # (a later run() cannot grow them); screen before spending the
+            # prefill — pad_doc_caches backstops with the exact cache len
+            raise ValueError(
+                f"request {req.rid} doc length {_doc_seq_len(req.doc)} "
+                f"exceeds doc_capacity={self.doc_capacity}; use a new "
+                f"Scheduler or pass doc_capacity explicitly")
+        doc = _doc_batched(req.doc)
+        query = req.query if req.query.ndim == 2 else req.query[None]
+        t0 = time.perf_counter()
+        logits0, caches, q_tails = self.engine.prefill(doc, query)
+        logits0 = jax.block_until_ready(logits0)
+        t_prefill = time.perf_counter() - t0
+        doc_len = cache_lib.attn_cache_len(caches)
+        caches = cache_lib.pad_doc_caches(caches, self.doc_capacity)
+        tails, tail_len = cache_lib.make_tail_buffers(
+            q_tails, self.tail_capacity)
+        # tail fill level == lq for attention models, 0 for pure-SSM
+        # (no attention tail) — distinct from the query length
+        return logits0, caches, tails, int(tail_len[0]), doc_len, t_prefill
+
+    def _alloc_state(self, req_caches, req_tails) -> dec.DecodeState:
+        """Zero slot buffers shaped after one padded request, widened to
+        ``n_slots`` on the batch axis (axis 1 of the block-stacked
+        pytrees); all slots start empty (done=True)."""
+        def widen(leaf):
+            shape = (leaf.shape[0], self.n_slots) + leaf.shape[2:]
+            return jnp.zeros(shape, leaf.dtype)
+
+        caches = jax.tree.map(widen, req_caches)
+        tails = jax.tree.map(widen, req_tails)
+        s = self.n_slots
+        return dec.DecodeState(
+            tokens=jnp.zeros((s, 1), jnp.int32),
+            positions=jnp.zeros((s, 1), jnp.int32),
+            tail_len=jnp.zeros((s,), jnp.int32),
+            doc_len=jnp.zeros((s,), jnp.int32),
+            steps_left=jnp.zeros((s,), jnp.int32),
+            stop_tokens=jnp.full((s,), -1, jnp.int32),
+            done=jnp.ones((s,), bool),
+            rng=self.rng,
+            caches=caches,
+            tails=tails)
+
+    def _admit(self, req: Request, slot: int) -> None:
+        (logits0, caches, tails, tail_fill, doc_len,
+         t_prefill) = self._prefill_request(req)
+        st = self.state
+        if st is None:
+            st = self._alloc_state(caches, tails)
+        st_rng, sub = jax.random.split(st.rng)
+        tok0 = int(sampling_lib.sample(logits0, sub, self.sampling)[0])
+        info = _SlotInfo(req, tok0, t_prefill, self.chunks_run)
+        pos0 = cache_lib.first_decode_position(_doc_seq_len(req.doc),
+                                               req.query.shape[-1])
+        done = info.remaining == 0
+        new_caches, new_tails = cache_lib.write_request_slot(
+            st.caches, st.tails, caches, tails, slot)
+        stop = -1 if req.stop_token is None else req.stop_token
+        self.state = dec.DecodeState(
+            tokens=st.tokens.at[slot, 0].set(tok0),
+            positions=st.positions.at[slot, 0].set(pos0),
+            tail_len=st.tail_len.at[slot].set(tail_fill),
+            doc_len=st.doc_len.at[slot].set(doc_len),
+            steps_left=st.steps_left.at[slot].set(req.max_new_tokens - 1),
+            stop_tokens=st.stop_tokens.at[slot].set(stop),
+            done=st.done.at[slot].set(done),
+            rng=st_rng,
+            caches=new_caches,
+            tails=new_tails)
+        self.active[slot] = info
+        if done:
+            self._finish(slot)
+
+    def _admit_all(self) -> None:
+        for slot in range(self.n_slots):
+            if not self.pending:
+                break
+            if slot not in self.active:
+                # pop only after a successful admit so a request that
+                # fails validation is not silently lost from the queue
+                self._admit(self.pending[0], slot)
+                self.pending.popleft()
+
+    # ------------------------------------------------------------------
+    def _finish(self, slot: int) -> None:
+        info = self.active.pop(slot)
+        self.results[info.req.rid] = RequestResult(
+            rid=info.req.rid,
+            tokens=np.asarray(info.tokens, np.int32),
+            stopped=info.stopped,
+            prefill_time_s=info.prefill_s,
+            admitted_at_chunk=info.admitted_at_chunk,
+            finished_at_chunk=self.chunks_run)
+
+    def _decode_chunk(self) -> None:
+        # don't run wasted pad steps past the longest remaining budget —
+        # this also re-admits pending requests sooner.  Rounded up to a
+        # power of two so the per-steps jit cache stays at
+        # O(log decode_chunk) compiles instead of one per value; the few
+        # pad steps the round-up re-introduces are far cheaper than the
+        # extra compiles exact-length chunks would cost.
+        need = max(1, max(i.remaining for i in self.active.values()))
+        steps = min(self.decode_chunk, cache_lib.pow2_bucket(need))
+        out, self.state = self.engine.decode_chunk(
+            self.state, steps, sampling=self.sampling)
+        out_np = np.asarray(out)                 # one host sync per chunk
+        self.chunks_run += 1
+        for slot in list(self.active):
+            info = self.active[slot]
+            for tok in out_np[slot]:
+                if info.remaining <= 0:
+                    break
+                info.tokens.append(int(tok))
+                if (info.req.stop_token is not None
+                        and int(tok) == info.req.stop_token):
+                    info.stopped = True
+                    break
+            if info.remaining <= 0:
+                self._finish(slot)
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[str, RequestResult]:
+        """Drive all submitted requests to completion; returns
+        rid -> RequestResult."""
+        if not self.pending and not self.active:
+            return self.results
+        if self.pending:
+            self._resolve_capacities()
+        while self.pending or self.active:
+            self._admit_all()
+            if self.active:
+                self._decode_chunk()
+        return self.results

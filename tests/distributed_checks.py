@@ -34,6 +34,7 @@ from repro.models import model as model_lib
 from repro.models import transformer as tf
 from repro.models.mamba2 import mamba_init, mamba_apply, mamba_finish
 from repro.models.transformer import RunCtx
+from repro.parallel import collectives
 from repro.parallel import ssm as ssm_par
 
 OK = []
@@ -151,7 +152,7 @@ def main():
     def plain_inner(xx):
         y, final = ssm_par.mamba_parallel_plain(pm, cfgm, xx, "model")
         return y, final[None]
-    fn = jax.shard_map(
+    fn = collectives.shard_map(
         plain_inner, mesh=mesh, in_specs=(P("data", "model", None),),
         out_specs=(P("data", "model", None),
                    P("model", "data", None, None, None)))
@@ -168,7 +169,7 @@ def main():
         y, final = ssm_par.mamba_augmented_inner(pm, cfgm, xx, "model",
                                                  la=la, lq=laym.lq)
         return y, final[None]
-    fn_aug = jax.shard_map(
+    fn_aug = collectives.shard_map(
         aug_inner, mesh=mesh, in_specs=(P("data", "model", None),),
         out_specs=(P("data", "model", None),
                    P("model", "data", None, None, None)))

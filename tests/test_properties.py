@@ -1,6 +1,12 @@
-"""Property-based tests (hypothesis) on the system's core invariants."""
-import hypothesis
-from hypothesis import given, settings, strategies as st
+"""Property-based tests (hypothesis) on the system's core invariants.
+
+``hypothesis`` is an optional dev dependency (``pip install -e .[dev]``);
+without it this module degrades to a skip instead of a collection error.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,0 +1,336 @@
+"""Serving stack: slotted ring-buffer caches, fused decode loop,
+continuous-batching scheduler, sampling.
+
+The exactness oracle throughout is ``Engine.generate_stepwise`` — the
+seed per-token loop with growing concat tails — which the fused
+slotted-buffer path must reproduce bit-for-bit (same attention math,
+different cache layout)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import decode as dec
+from repro.models import model as model_lib
+from repro.models.transformer import RunCtx
+from repro.serving import cache as cache_lib
+from repro.serving.engine import Engine
+from repro.serving.sampling import SamplingParams, sample
+from repro.serving.scheduler import Request, Scheduler
+
+B, N, LQ = 2, 64, 8
+
+
+def _mk_engine(key, arch="granite-3-2b", **kw):
+    cfg = get_config(arch).reduced()
+    if cfg.has_moe:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    return cfg, Engine(cfg, params, RunCtx(strategy="full"), **kw)
+
+
+def _mk_inputs(key, cfg, b=B, n=N, lq=LQ):
+    doc = jax.random.randint(key, (b, n), 0, cfg.vocab_size)
+    query = jax.random.randint(jax.random.fold_in(key, 1), (b, lq), 0,
+                               cfg.vocab_size)
+    return doc, query
+
+
+# ---------------------------------------------------------------------------
+# Ring buffer == concat tail
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "mamba2-780m",
+                                  "jamba-1.5-large-398b"])
+def test_fused_loop_matches_seed_loop(arch, key):
+    """The jitted scan over preallocated slot caches must reproduce the
+    seed per-token concat loop token-for-token."""
+    cfg, eng = _mk_engine(key, arch)
+    doc, query = _mk_inputs(key, cfg)
+    fused = eng.generate(doc, query, max_new_tokens=6)
+    seed = eng.generate_stepwise(doc, query, max_new_tokens=6)
+    np.testing.assert_array_equal(fused.tokens, seed.tokens)
+
+
+def test_ring_buffer_tail_bit_exact(key):
+    """The ring buffer is a lossless store: replaying the seed concat
+    path's per-step KV updates through the preallocated buffers must
+    reproduce the concat tail bit-for-bit, and the masked slotted
+    attention must match the concat attention's logits to float eps."""
+    cfg, eng = _mk_engine(key, jit=False)
+    doc, query = _mk_inputs(key, cfg)
+    logits0, caches, q_tails = eng.prefill(doc, query)
+    tok = jnp.argmax(logits0, -1)[:, None].astype(jnp.int32)
+
+    # concat layout (seed oracle)
+    c_cat = caches
+    t_cat = cache_lib.init_tails(q_tails)
+    # slotted layout driven through the same serve path
+    capacity = LQ + 5
+    t_slot, tail_len = cache_lib.make_tail_buffers(q_tails, capacity)
+    c_slot = caches
+    # ring buffers fed with the *concat path's* KV stream (pure writes)
+    t_ring, ring_len = cache_lib.make_tail_buffers(q_tails, capacity)
+    write = jax.vmap(dec.write_tail_at, in_axes=(0, 0, None))   # per block
+
+    pos0 = cache_lib.first_decode_position(N, LQ)
+    for step in range(4):
+        pos = jnp.full((B, 1), pos0 + step, jnp.int32)
+        lg_c, upd = eng.model.serve_step(eng.params, tok, pos, c_cat,
+                                         t_cat, eng.rctx)
+        lg_s, upd_s = eng.model.serve_step(
+            eng.params, tok, pos, c_slot, t_slot, eng.rctx,
+            tail_valid=tail_len)
+        # same inputs, two layouts: logits equal to reduction-order eps
+        np.testing.assert_allclose(np.asarray(lg_c), np.asarray(lg_s),
+                                   atol=1e-5, rtol=1e-5)
+        t_ring = tuple(
+            {k: write(tr[k], u[k], ring_len) for k in tr}
+            for tr, u in zip(t_ring, upd))
+        ring_len = ring_len + 1
+        c_cat, t_cat = cache_lib.append_updates(c_cat, t_cat, upd)
+        c_slot, t_slot = cache_lib.fold_updates_slotted(c_slot, t_slot,
+                                                        upd_s)
+        tail_len = tail_len + 1
+        tok = jnp.argmax(lg_c, -1)[:, None].astype(jnp.int32)
+
+    filled = LQ + 4
+    for tc, tr in zip(t_cat, t_ring):
+        if "k" not in tc:
+            continue
+        # stacked layout (blocks, B, seq, KV, D): the ring buffer's valid
+        # prefix must equal the concat tail bit-for-bit
+        np.testing.assert_array_equal(
+            np.asarray(tc["k"]), np.asarray(tr["k"][:, :, :filled]))
+        np.testing.assert_array_equal(
+            np.asarray(tc["v"]), np.asarray(tr["v"][:, :, :filled]))
+        # beyond the fill level the buffer is untouched zero padding
+        assert not np.asarray(tr["k"][:, :, filled:]).any()
+
+
+def test_stop_token_freezes_slot(key):
+    cfg, eng = _mk_engine(key)
+    doc, query = _mk_inputs(key, cfg)
+    ref = eng.generate(doc, query, max_new_tokens=8).tokens
+    stop = int(ref[0, 3])
+    out = eng.generate(doc, query, max_new_tokens=8, stop_token=stop).tokens
+    assert out.shape == ref.shape
+    # up to and including the stop token, row 0 matches; then freezes
+    np.testing.assert_array_equal(out[0, :4], ref[0, :4])
+    assert (out[0, 4:] == stop).all()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler / continuous batching
+# ---------------------------------------------------------------------------
+
+def test_scheduler_mixed_lengths_match_single_requests(key):
+    """Mixed-length requests served through shared slots must match each
+    request generated alone (greedy) — padding/masking is exact."""
+    cfg, eng = _mk_engine(key)
+
+    def mk(n, lq, seed):
+        r = np.random.default_rng(seed)
+        return (jnp.asarray(r.integers(0, cfg.vocab_size, (1, n)),
+                            jnp.int32),
+                jnp.asarray(r.integers(0, cfg.vocab_size, (1, lq)),
+                            jnp.int32))
+
+    d1, q1 = mk(64, 8, 1)                   # long doc
+    d2, q2 = mk(24, 4, 2)                   # short doc, short query
+    ref1 = eng.generate(d1, q1, max_new_tokens=10).tokens[0]
+    ref2 = eng.generate(d2, q2, max_new_tokens=4).tokens[0]
+
+    sch = Scheduler(eng, n_slots=2, decode_chunk=3)
+    sch.submit(Request("long", d1, q1, max_new_tokens=10))
+    sch.submit(Request("short", d2, q2, max_new_tokens=4))
+    res = sch.run()
+    np.testing.assert_array_equal(res["long"].tokens, np.asarray(ref1))
+    np.testing.assert_array_equal(res["short"].tokens, np.asarray(ref2))
+
+
+def test_scheduler_admits_mid_decode_with_per_slot_stops(key):
+    """Three requests, two slots: the third is admitted mid-decode when a
+    slot frees; per-slot stop tokens cut the right request short."""
+    cfg, eng = _mk_engine(key)
+
+    def mk(n, lq, seed):
+        r = np.random.default_rng(seed)
+        return (jnp.asarray(r.integers(0, cfg.vocab_size, (1, n)),
+                            jnp.int32),
+                jnp.asarray(r.integers(0, cfg.vocab_size, (1, lq)),
+                            jnp.int32))
+
+    d1, q1 = mk(64, 8, 1)
+    d2, q2 = mk(24, 4, 2)
+    d3, q3 = mk(48, 8, 3)
+    ref1 = eng.generate(d1, q1, max_new_tokens=12).tokens[0]
+    ref3 = eng.generate(d3, q3, max_new_tokens=9).tokens[0]
+    stop1 = int(ref1[5])                     # long doc stops after 6 tokens
+
+    sch = Scheduler(eng, n_slots=2, decode_chunk=4)
+    sch.submit(Request("r1", d1, q1, max_new_tokens=12, stop_token=stop1))
+    sch.submit(Request("r2", d2, q2, max_new_tokens=5))
+    sch.submit(Request("r3", d3, q3, max_new_tokens=9))
+    res = sch.run()
+
+    assert res["r1"].stopped and res["r1"].tokens[-1] == stop1
+    np.testing.assert_array_equal(res["r1"].tokens, np.asarray(ref1[:6]))
+    assert not res["r3"].stopped
+    np.testing.assert_array_equal(res["r3"].tokens, np.asarray(ref3))
+    assert len(res["r2"].tokens) == 5
+    # r3 only fit after r1 or r2 freed a slot
+    assert res["r3"].admitted_at_chunk > 0
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "jamba-1.5-large-398b"])
+def test_scheduler_hybrid_ssm_with_idle_slots(arch, key):
+    """SSM/hybrid state widening, write_request_slot on mamba caches, and
+    decode over never-admitted all-zero slots (doc_len=0, fully masked)
+    must not perturb the live request."""
+    cfg, eng = _mk_engine(key, arch)
+    r = np.random.default_rng(5)
+    doc = jnp.asarray(r.integers(0, cfg.vocab_size, (1, 32)), jnp.int32)
+    query = jnp.asarray(r.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
+    ref = eng.generate(doc, query, max_new_tokens=6).tokens[0]
+    sch = Scheduler(eng, n_slots=3, decode_chunk=4)   # 2 slots stay idle
+    sch.submit(Request("solo", doc, query, max_new_tokens=6))
+    res = sch.run()
+    np.testing.assert_array_equal(res["solo"].tokens, np.asarray(ref))
+
+
+def test_scheduler_embedding_docs(key):
+    """Embedding docs (VLM/audio frontends, (n, d) / (1, n, d)) go through
+    capacity/position bookkeeping by sequence length, not feature dim."""
+    cfg, eng = _mk_engine(key)
+    n, lq = 48, 8
+    doc = jax.random.normal(key, (1, n, cfg.d_model)) * 0.02
+    query = jax.random.randint(jax.random.fold_in(key, 1), (1, lq), 0,
+                               cfg.vocab_size)
+    ref = eng.generate(doc, query, max_new_tokens=6).tokens[0]
+    sch = Scheduler(eng, n_slots=2, decode_chunk=3)
+    sch.submit(Request("batched", doc, query, max_new_tokens=6))
+    sch.submit(Request("unbatched", doc[0], query[0], max_new_tokens=6))
+    res = sch.run()
+    np.testing.assert_array_equal(res["batched"].tokens, np.asarray(ref))
+    np.testing.assert_array_equal(res["unbatched"].tokens, np.asarray(ref))
+
+
+def test_scheduler_with_apb_prefill(key):
+    """Admissions through the APB (augmented-layout) prefill path: the
+    local-block doc cache has length n_doc, so the default capacities
+    hold, and scheduler output matches single-request generation."""
+    from repro.core.splitting import make_layout
+    cfg = get_config("granite-3-2b").reduced()
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    n, lq = 64, 8
+    lay = make_layout(n, lq, 4, anchor_frac=cfg.anchor_frac,
+                      passing_frac=cfg.passing_frac)
+    eng = Engine(cfg, params, RunCtx(strategy="apb", layout=lay))
+
+    def mk(seed):                            # layout fixes (n, lq)
+        r = np.random.default_rng(seed)
+        return (jnp.asarray(r.integers(0, cfg.vocab_size, (1, n)),
+                            jnp.int32),
+                jnp.asarray(r.integers(0, cfg.vocab_size, (1, lq)),
+                            jnp.int32))
+
+    d1, q1 = mk(1)
+    d2, q2 = mk(2)
+    ref1 = eng.generate(d1, q1, max_new_tokens=6).tokens[0]
+    ref2 = eng.generate(d2, q2, max_new_tokens=4).tokens[0]
+    sch = Scheduler(eng, n_slots=2, decode_chunk=3)
+    sch.submit(Request("a", d1, q1, max_new_tokens=6))
+    sch.submit(Request("b", d2, q2, max_new_tokens=4))
+    res = sch.run()
+    np.testing.assert_array_equal(res["a"].tokens, np.asarray(ref1))
+    np.testing.assert_array_equal(res["b"].tokens, np.asarray(ref2))
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+def test_sampling_reproducible_under_fixed_key(key):
+    cfg, eng = _mk_engine(key)
+    doc, query = _mk_inputs(key, cfg)
+    sp = SamplingParams(temperature=0.8, top_k=50, top_p=0.95)
+    a = eng.generate(doc, query, max_new_tokens=8, sampling=sp,
+                     rng=jax.random.PRNGKey(7)).tokens
+    b = eng.generate(doc, query, max_new_tokens=8, sampling=sp,
+                     rng=jax.random.PRNGKey(7)).tokens
+    c = eng.generate(doc, query, max_new_tokens=8, sampling=sp,
+                     rng=jax.random.PRNGKey(8)).tokens
+    np.testing.assert_array_equal(a, b)
+    assert not (a == c).all()
+
+
+def test_sampling_filters():
+    key = jax.random.PRNGKey(0)
+    logits = jnp.asarray([[0.0, 1.0, 2.0, 3.0, 10.0]])
+    # temperature -> greedy limit
+    assert int(sample(logits, key, SamplingParams())[0]) == 4
+    # top_k=1 is greedy regardless of temperature
+    for seed in range(5):
+        t = sample(logits, jax.random.PRNGKey(seed),
+                   SamplingParams(temperature=5.0, top_k=1))
+        assert int(t[0]) == 4
+    # top_p tiny keeps only the argmax token
+    for seed in range(5):
+        t = sample(logits, jax.random.PRNGKey(seed),
+                   SamplingParams(temperature=5.0, top_p=1e-6))
+        assert int(t[0]) == 4
+
+
+def test_engine_encdec_fallback(key):
+    """Encoder-decoder models decode through the stepwise path (growing
+    self-attention tails can't use the slotted loop) and match a manual
+    serve_step loop; sampling requests are rejected, explicit greedy
+    overrides work."""
+    cfg = get_config("whisper-tiny").reduced()
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    eng = Engine(cfg, params, RunCtx(strategy="full"),
+                 sampling=SamplingParams(temperature=0.8))
+    frames = jax.random.normal(key, (1, 16, cfg.d_model)) * 0.1
+    query = jnp.zeros((1, 4), jnp.int32)
+
+    from repro.serving.sampling import GREEDY
+    res = eng.generate(frames, query, max_new_tokens=5, sampling=GREEDY)
+
+    rctx = RunCtx(strategy="full")
+    lg, xc, tails = model.prefill_step(params, frames, query, rctx)
+    tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+    toks = [int(tok[0, 0])]
+    for step in range(4):
+        lg2, tails = model.serve_step(params, tok, 4 + step, xc, tails,
+                                      rctx)
+        tok = jnp.argmax(lg2, -1)[:, None].astype(jnp.int32)
+        toks.append(int(tok[0, 0]))
+    np.testing.assert_array_equal(res.tokens, np.asarray([toks]))
+
+    with pytest.raises(ValueError):
+        eng.generate(frames, query, max_new_tokens=4)   # sampling engine
+
+
+def test_decode_state_is_pytree(key):
+    """DecodeState must flatten cleanly (scheduler jits over it)."""
+    st = dec.DecodeState(
+        tokens=jnp.zeros((2, 1), jnp.int32),
+        positions=jnp.zeros((2, 1), jnp.int32),
+        tail_len=jnp.zeros((2,), jnp.int32),
+        doc_len=jnp.zeros((2,), jnp.int32),
+        steps_left=jnp.zeros((2,), jnp.int32),
+        stop_tokens=jnp.full((2,), -1, jnp.int32),
+        done=jnp.ones((2,), bool),
+        rng=jax.random.PRNGKey(0),
+        caches=({"k": jnp.zeros((1, 2, 4, 1, 2))},),
+        tails=({"k": jnp.zeros((1, 2, 4, 1, 2))},))
+    leaves, treedef = jax.tree.flatten(st)
+    st2 = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(st2, dec.DecodeState)
