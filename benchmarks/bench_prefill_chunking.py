@@ -1,0 +1,129 @@
+"""Head-of-line blocking: chunked vs monolithic prefill admissions.
+
+The paper's target metric is prefill speed, but a serving scheduler also
+has to *place* that prefill: with monolithic admissions a single long
+document stalls every other request behind its full prefill (the
+head-of-line problem Medha — "no request left behind" — identifies).
+This benchmark measures the time-to-first-token of short requests
+submitted right behind one long request, under
+
+  * ``monolithic``  — Scheduler(prefill_chunk=None): each admission runs
+    one full-document prefill; shorts wait for the whole long prefill.
+  * ``chunked``     — Scheduler(prefill_chunk=CHUNK): admissions stream
+    in power-of-two chunks, shortest-remaining-first, decode interleaved,
+    so a short request's admission costs O(its own chunks).
+
+Both paths produce bit-identical greedy tokens (tests/test_chunked_prefill.py
+asserts this; here a disagreement is warned on stderr and recorded as
+``token_agreement`` in the JSON rather than aborting the suite — the
+bench_serving convention for near-tie argmax flips).  Emits the standard
+CSV rows and ``results/bench_prefill_chunking.json``.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, emit_json
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.models.transformer import RunCtx
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Request, Scheduler
+
+ARCH = "granite-3-2b"
+N_LONG, N_SHORT = 2048, 64
+LQ_LONG, LQ_SHORT = 8, 4
+N_SHORT_REQS = 3
+CHUNK = 128
+MAX_NEW = 8
+N_SLOTS = 4
+
+
+def _requests(cfg):
+    reqs = []
+    r = np.random.default_rng(0)
+    reqs.append(Request(
+        "long",
+        jnp.asarray(r.integers(10, cfg.vocab_size, (1, N_LONG)), jnp.int32),
+        jnp.asarray(r.integers(10, cfg.vocab_size, (1, LQ_LONG)), jnp.int32),
+        max_new_tokens=MAX_NEW))
+    for i in range(N_SHORT_REQS):
+        ri = np.random.default_rng(100 + i)
+        reqs.append(Request(
+            f"short{i}",
+            jnp.asarray(ri.integers(10, cfg.vocab_size, (1, N_SHORT)),
+                        jnp.int32),
+            jnp.asarray(ri.integers(10, cfg.vocab_size, (1, LQ_SHORT)),
+                        jnp.int32),
+            max_new_tokens=MAX_NEW))
+    return reqs
+
+
+def _run_sched(engine, cfg, prefill_chunk):
+    sch = Scheduler(engine, n_slots=N_SLOTS, decode_chunk=4,
+                    prefill_chunk=prefill_chunk)
+    for req in _requests(cfg):                  # long submitted first
+        sch.submit(req)
+    return sch.run()
+
+
+def run():
+    cfg = get_config(ARCH).reduced()
+    model = model_lib.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, RunCtx(strategy="full"))
+
+    # warm both paths (compiles excluded from the measured runs)
+    _run_sched(engine, cfg, None)
+    _run_sched(engine, cfg, CHUNK)
+
+    res_mono = _run_sched(engine, cfg, None)
+    res_chunk = _run_sched(engine, cfg, CHUNK)
+
+    # greedy outputs must agree — the monolithic scheduler is the oracle
+    agree = all(
+        np.array_equal(res_mono[rid].tokens, res_chunk[rid].tokens)
+        for rid in res_mono)
+    if not agree:
+        print("# warning: chunked vs monolithic token mismatch",
+              file=sys.stderr)
+
+    shorts = [f"short{i}" for i in range(N_SHORT_REQS)]
+    ttft_mono = float(np.mean([res_mono[s].ttft_s for s in shorts]))
+    ttft_chunk = float(np.mean([res_chunk[s].ttft_s for s in shorts]))
+    speedup = ttft_mono / max(ttft_chunk, 1e-9)
+    long_mono = res_mono["long"].ttft_s
+    long_chunk = res_chunk["long"].ttft_s
+
+    records = [
+        {"name": "ttft_short_monolithic", "us_per_call": ttft_mono * 1e6,
+         "ttft_s": ttft_mono,
+         "derived": f"short_ttft={ttft_mono * 1e3:.1f}ms"},
+        {"name": "ttft_short_chunked", "us_per_call": ttft_chunk * 1e6,
+         "ttft_s": ttft_chunk, "speedup_vs_monolithic": speedup,
+         "token_agreement": bool(agree),
+         "derived": f"short_ttft={ttft_chunk * 1e3:.1f}ms;"
+                    f"vs_mono={speedup:.2f}x"},
+        {"name": "ttft_long_monolithic", "us_per_call": long_mono * 1e6,
+         "ttft_s": long_mono,
+         "derived": f"long_ttft={long_mono * 1e3:.1f}ms"},
+        {"name": "ttft_long_chunked", "us_per_call": long_chunk * 1e6,
+         "ttft_s": long_chunk,
+         "derived": f"long_ttft={long_chunk * 1e3:.1f}ms"},
+    ]
+    for rec in records:
+        emit(rec["name"], rec["us_per_call"], rec["derived"])
+    emit_json("bench_prefill_chunking", records,
+              meta={"arch": ARCH, "n_long": N_LONG, "n_short": N_SHORT,
+                    "n_short_reqs": N_SHORT_REQS, "chunk": CHUNK,
+                    "max_new_tokens": MAX_NEW, "n_slots": N_SLOTS,
+                    "token_agreement": bool(agree),
+                    "device": jax.devices()[0].platform})
+
+
+if __name__ == "__main__":
+    run()

@@ -19,6 +19,7 @@ MODULES = [
     ("hosts", "benchmarks.bench_hosts"),                 # Table 4
     ("roofline", "benchmarks.bench_roofline"),           # EXPERIMENTS §Roofline
     ("serving", "benchmarks.bench_serving"),             # decode/serving perf
+    ("prefill_chunking", "benchmarks.bench_prefill_chunking"),  # HOL / TTFT
 ]
 
 

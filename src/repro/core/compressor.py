@@ -59,14 +59,20 @@ def select_topk(scores, k_cache, v_cache, lp: int,
                 method: str = "retain",
                 rng: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Select the top-``lp`` KV units per KV head of the local block.
+    """Select the top-``min(lp, L)`` KV units per KV head of the local block.
 
     scores: (B, L, KV); k_cache/v_cache: (B, L, KV, dh).
-    Returns (k_sel, v_sel, indices) with shapes (B, lp, KV, dh) and
-    (B, lp, KV).  Selected units are re-ordered by original position so the
-    compressed block stays position-monotonic (RoPE positions preserved).
+    Returns (k_sel, v_sel, indices) with shapes (B, min(lp, L), KV, dh) and
+    (B, min(lp, L), KV).  ``lp`` is clamped to the block length: a passing
+    budget larger than the local block selects every unit (``lax.top_k``
+    with k > L is an error, and zero-padding the selection would leave
+    zero-keys that still draw softmax mass).  Callers account for the
+    clamp in their ``pass_valid`` bookkeeping.  Selected units are
+    re-ordered by original position so the compressed block stays
+    position-monotonic (RoPE positions preserved).
     """
     b, l, kvh = scores.shape
+    lp = min(lp, l)
     if method == "random":
         assert rng is not None
         scores = jax.random.uniform(rng, scores.shape)

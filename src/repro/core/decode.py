@@ -164,7 +164,15 @@ def query_context_attention(q, k_cache, v_cache, k_self, v_self, *,
 
 def write_tail_at(buf, new, index):
     """Per-slot dynamic write: buf (B, T, KV, D) <- new (B, t, KV, D) at
-    per-batch offsets ``index`` (B,) along the sequence axis."""
+    per-batch offsets ``index`` (B,) along the sequence axis.
+
+    The clip below exists for *done* slots, which keep re-writing their
+    (discarded) pad-token KV at a frozen fill level inside the fused scan
+    — it must never absorb a real overflow, because a clipped live write
+    silently overwrites the buffer's last rows.  Admission paths guard
+    against that before any token is decoded
+    (serving.cache.check_tail_capacity: capacity >= lq + token budget).
+    """
     idx = jnp.clip(index, 0, buf.shape[1] - new.shape[1]).astype(jnp.int32)
     return jax.vmap(
         lambda b, n, i: jax.lax.dynamic_update_slice_in_dim(b, n, i, axis=0)

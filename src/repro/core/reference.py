@@ -24,6 +24,7 @@ def apb_attention_hostloop(q, k, v, retain_params, layout: APBLayout, *,
                            window: int = 0,
                            softcap: Optional[float] = None,
                            q_query=None,
+                           bidirectional: bool = False,
                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Reference for strategies._apb_inner over the *global* augmented
     arrays.
@@ -31,8 +32,13 @@ def apb_attention_hostloop(q, k, v, retain_params, layout: APBLayout, *,
     q: (B, H*(la+lb), Hh, D) — augmented layout, host-major.
     Returns (attn_out (global augmented), k_cache, v_cache (B, n_doc, ...)).
     ``compressor_method`` may also be "oracle" (needs q_query).
+    ``bidirectional`` selects the whisper-encoder variant: full visibility
+    within anchor/local, passing blocks from every *other* host (the own
+    block is excluded outright — the oracle for the shard_map path's
+    rotate-and-mask exclusion).
     """
     la, lb, lp, H = layout.la, layout.lb, layout.lp, layout.n_hosts
+    lp = min(lp, lb)         # selection saturates at the block (select_topk)
     host_len = la + lb
     if rng is None:
         rng = jax.random.PRNGKey(0)
@@ -64,8 +70,17 @@ def apb_attention_hostloop(q, k, v, retain_params, layout: APBLayout, *,
         ka, kl_ = k[:, s:s + la], k[:, s + la:s + host_len]
         va, vl_ = v[:, s:s + la], v[:, s + la:s + host_len]
         if strategy == "apb" and lp > 0 and H > 1:
-            kp, vp = k_gathered, v_gathered
-            pass_valid = h * lp
+            if bidirectional:
+                # every other host's compressed block; own block dropped
+                # exactly (no zero-key placeholder left in the layout)
+                kp = jnp.concatenate(
+                    [b for i, b in enumerate(k_sel_all) if i != h], axis=1)
+                vp = jnp.concatenate(
+                    [b for i, b in enumerate(v_sel_all) if i != h], axis=1)
+                pass_valid = (H - 1) * lp
+            else:
+                kp, vp = k_gathered, v_gathered
+                pass_valid = h * lp
         else:
             pcap = layout.pcap if strategy == "apb" else 0
             kp = jnp.zeros((k.shape[0], pcap) + k.shape[2:], k.dtype)
@@ -76,7 +91,8 @@ def apb_attention_hostloop(q, k, v, retain_params, layout: APBLayout, *,
             qa, ql_, ka, kp, kl_, va, vp, vl_,
             anchor_valid=jnp.asarray(anchor_valid, jnp.int32),
             pass_valid=jnp.asarray(pass_valid, jnp.int32),
-            window=window, softcap=softcap, use_kernel=False)
+            window=window, softcap=softcap, causal=not bidirectional,
+            use_kernel=False)
         outs.append(jnp.concatenate([oa, ol], axis=1))
         kcs.append(kl_)
         vcs.append(vl_)

@@ -71,6 +71,10 @@ def _apb_inner(q, k, v, retain_params, rng, *, layout: APBLayout,
     anchor_valid = jnp.where(h_idx == 0, 0, la).astype(jnp.int32)
 
     if strategy == "apb" and lp > 0 and n_hosts > 1:
+        # a passing budget larger than the local block saturates at the
+        # block: select_topk clamps the selection, so the gathered blocks
+        # and every pass_valid below are scaled by the effective length
+        lp = min(lp, lb)
         # ---- block compression (paper §3.4) -----------------------------
         scores = comp.compressor_scores(retain_params, ql, kl, vl)
         if compressor_method == "random":
@@ -82,15 +86,15 @@ def _apb_inner(q, k, v, retain_params, rng, *, layout: APBLayout,
         vp = collectives.all_gather_concat(v_sel, seq_axis, axis=1)
         if bidirectional:
             # whisper-encoder variant: passing blocks from *all* other
-            # hosts; own block excluded by masking its slot via validity
-            # trick is not positional here, so keep all and let the local
-            # block dominate (self entries duplicate local keys — masked
-            # out by zeroing own slot).
-            own = jax.nn.one_hot(h_idx, n_hosts, dtype=kp.dtype)
-            own = jnp.repeat(own, lp)[None, :, None, None]
-            kp = kp * (1.0 - own)
-            vp = vp * (1.0 - own)
-            pass_valid = jnp.asarray(n_hosts * lp, jnp.int32)
+            # hosts.  The host's own block duplicates local keys and must
+            # be *invisible*, not zeroed — zeroed keys still score
+            # q·0 = 0 and drain softmax mass towards zero-values.  The
+            # pass mask is a validity prefix, so rotate the gathered
+            # blocks to put the own block last and mark only the other
+            # hosts' blocks valid.
+            kp = jnp.roll(kp, -(h_idx + 1) * lp, axis=1)
+            vp = jnp.roll(vp, -(h_idx + 1) * lp, axis=1)
+            pass_valid = jnp.asarray((n_hosts - 1) * lp, jnp.int32)
         else:
             pass_valid = (h_idx * lp).astype(jnp.int32)
     else:
@@ -145,7 +149,7 @@ def prefill_attention(cfg, strategy: str, q, k, v, *,
         out, kc, vc = reference.apb_attention_hostloop(
             q, k, v, retain_params, layout, strategy=strategy,
             compressor_method=compressor_method, rng=rng, window=window,
-            softcap=softcap)
+            softcap=softcap, bidirectional=bidirectional)
         return out, kc, vc
 
     if strategy == "full" or mesh is None or pctx.n_hosts == 1:

@@ -114,12 +114,12 @@ def _kernel(scalar_ref,                    # (2,) int32: [anchor_valid, pass_val
         is_anchor_q = i < la
         is_anchor_k = j < la
         is_pass_k = (j >= la) & (j < la + pcap)
-        in_anchor = (j <= i) if causal else (j <= j)
+        in_anchor = (j <= i) if causal else jnp.ones((bq, bkv), jnp.bool_)
         vis_anchor_q = (is_anchor_q & is_anchor_k & in_anchor
                         & (j < anchor_valid))
         vis_a = is_anchor_k & (j < anchor_valid)
         vis_p = is_pass_k & ((j - la) < pass_valid)
-        in_local = (lk <= li) if causal else (lk <= lk)
+        in_local = (lk <= li) if causal else jnp.ones((bq, bkv), jnp.bool_)
         if window > 0:
             dist = (li - lk) if causal else jnp.abs(li - lk)
             in_local = in_local & (dist < window)

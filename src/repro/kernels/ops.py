@@ -218,13 +218,11 @@ def causal_flash_attention(q, k, v, *, window: int = 0,
     qp = _pad_to(q, l_p, 1)
     kp = _pad_to(k, l_p, 1)
     vp = _pad_to(v, l_p, 1)
-    empty_q = jnp.zeros((q.shape[0], 0) + q.shape[2:], q.dtype)
     out = apb_flash_attention(
         qp, kp, vp, la=0, pcap=0,
         anchor_valid=jnp.int32(0), pass_valid=jnp.int32(0),
         window=window, softcap=softcap, causal=causal, block_q=bq,
         block_kv=bkv, interpret=interpret)
-    del empty_q
     return out[:, :l]
 
 

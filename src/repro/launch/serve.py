@@ -25,6 +25,10 @@ def main() -> None:
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0, help="sampling PRNG seed")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="power-of-two chunk size for streamed (chunked) "
+                         "prefill; only the exact full/ring strategies "
+                         "can chunk (default: monolithic prefill)")
     args = ap.parse_args()
 
     if args.devices > 1:
@@ -78,9 +82,16 @@ def main() -> None:
                                    (args.batch, args.n_doc)), jnp.int32)
     query = jnp.asarray(rng.integers(10, cfg.vocab_size,
                                      (args.batch, args.lq)), jnp.int32)
+    if args.prefill_chunk and not engine.supports_chunked_prefill:
+        raise SystemExit(
+            f"--prefill-chunk is not available for this configuration "
+            f"(arch={args.arch}, strategy={args.strategy}): only exact "
+            f"plain-layout prefills without sliding-window layers can be "
+            f"chunked; drop the flag to use the monolithic prefill")
     res = engine.generate(doc, query, max_new_tokens=args.new_tokens,
                           sampling=sampling,
-                          rng=jax.random.PRNGKey(args.seed))
+                          rng=jax.random.PRNGKey(args.seed),
+                          prefill_chunk=args.prefill_chunk)
     n_in = args.n_doc + args.lq
     print(f"strategy={args.strategy} hosts={hosts} "
           f"prefill={res.prefill_time_s*1e3:.1f}ms "

@@ -9,6 +9,10 @@
         caches, tail caches)
   * ``serve_step(params, token, pos, caches, tails, rctx, ...)`` — one
         decode step over the sharded doc cache (decode_32k / long_500k)
+  * ``chunk_step(params, chunk, pos, caches, rctx, valid_len)`` — one
+        chunked-prefill step (decoder-only): the chunk attends to the
+        valid prefix of the decode-format doc caches + causally to
+        itself; drives both mid-document chunks and the final query pass
 
 Decoder-only architectures use repro.models.transformer; whisper uses
 repro.models.encdec (prefill = encode + decoder start, serve = one
@@ -37,6 +41,7 @@ class Model:
     prefill_step: Callable
     serve_step: Callable
     query_step: Callable = None
+    chunk_step: Callable = None
 
 
 def make_layout(cfg, n_doc: int, lq: int, n_hosts: int):
@@ -143,7 +148,21 @@ def _build_decoder_only(cfg):
                                             valid_len=valid_len)
         return tf.logits(params, cfg, hidden), tails
 
-    return Model(cfg, init, loss_fn, prefill_step, serve_step, query_step)
+    def chunk_step(params, chunk, positions, caches, rctx: RunCtx,
+                   valid_len=None):
+        """chunk: (B, t) ints or (B, t, d) embeds at global ``positions``;
+        caches: decode-format doc caches with ``valid_len`` (B,) valid
+        rows.  Returns (last-position logits (B, V), per-layer updates) —
+        attention updates are the chunk's KV, mamba updates the advanced
+        state (see transformer.forward_chunk)."""
+        hidden, updates, _ = tf.forward_chunk(params, cfg, chunk, positions,
+                                              caches, rctx,
+                                              valid_len=valid_len)
+        lg = tf.logits(params, cfg, hidden[:, -1:])
+        return lg[:, 0], updates
+
+    return Model(cfg, init, loss_fn, prefill_step, serve_step, query_step,
+                 chunk_step)
 
 
 # ---------------------------------------------------------------------------

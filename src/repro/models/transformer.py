@@ -389,19 +389,31 @@ def forward_decode(params, cfg, token, positions, caches, tails,
     return x, updates, aux
 
 
-def forward_query(params, cfg, q_tokens, positions, caches, rctx: RunCtx,
+def forward_chunk(params, cfg, chunk, positions, caches, rctx: RunCtx,
                   valid_len=None):
-    """Query pass (paper Alg. 1, lines 13-25 with x = q): lq tokens attend
-    to the sharded doc cache + causally to themselves; mamba layers
-    continue from the end-of-document state.  Returns
-    (hidden, tail_caches, aux)."""
-    x = embed(params, cfg, q_tokens)
+    """One chunked-prefill step over *decode-format* doc caches.
+
+    chunk: (B, t) int tokens or (B, t, d) embeddings — the next ``t``
+    document (or query) tokens.  caches: decode-format slot buffers
+    (attention {"k","v"} (blocks, B, cap, KV, D) with the first
+    ``valid_len`` rows valid; mamba {"state","conv"} carried states).
+
+    Each chunk attends to the valid cache prefix (chunks 0..c-1) and
+    causally to itself, LSE-merged — ``dec.query_context_attention``
+    generalised from the query pass to arbitrary mid-document chunks.
+    Mamba layers continue from the carried state.  Returns
+    (hidden, per-layer updates, aux): attention updates {"k","v"} are the
+    chunk's own KV (the caller appends them into the doc cache, or keeps
+    them as the tail when the chunk is the query), mamba updates
+    {"state","conv"} supersede the carried state.
+    """
+    x = embed(params, cfg, chunk)
     pattern = cfg.block_pattern
 
     def body(carry, scanned):
         x, aux = carry
         block_params, block_caches = scanned
-        tails = []
+        updates = []
         for i, kind in enumerate(pattern):
             p = block_params[i]
             h = norm_apply(p["norm1"], x, cfg.norm, cfg.norm_eps)
@@ -413,22 +425,58 @@ def forward_query(params, cfg, q_tokens, positions, caches, rctx: RunCtx,
                     cache_axes=rctx.cache_axes, valid_len=valid_len,
                     softcap=cfg.attn_logit_softcap)
                 x = x + attn.attn_out(p["attn"], cfg, out)
-                tails.append({"k": k_new, "v": v_new})
+                updates.append({"k": k_new, "v": v_new})
             else:
-                state = block_caches[i]["state"][-1]      # last shard
-                conv = block_caches[i]["conv"][-1]
+                conv_prev = block_caches[i]["conv"]
                 local, (z, c, conv_tail) = mamba2.mamba_apply(
-                    p["mamba"], cfg, h, init_state=state,
-                    conv_left=conv, return_local=True)
+                    p["mamba"], cfg, h,
+                    init_state=block_caches[i]["state"],
+                    conv_left=conv_prev, return_local=True)
                 y = mamba2.mamba_finish(p["mamba"], cfg, local, z, c,
                                         jnp.zeros_like(local.state))
                 x = x + y.astype(x.dtype)
-                tails.append({"state": local.state, "conv": conv_tail})
+                # a chunk shorter than the conv window yields a short
+                # conv_tail — stitch it onto the carried context so the
+                # next chunk's left context stays (B, w-1, C) and spans
+                # the chunk boundary
+                cat = jnp.concatenate([conv_prev, conv_tail], axis=1)
+                new_conv = cat[:, cat.shape[1] - conv_prev.shape[1]:]
+                updates.append({"state": local.state, "conv": new_conv})
             x, a = _ffn_part(p, cfg, kind, x, rctx)
             aux = aux + a
-        return (x, aux), tuple(tails)
+        return (x, aux), tuple(updates)
 
-    (x, aux), tails = jax.lax.scan(
+    (x, aux), updates = jax.lax.scan(
         body, (x, jnp.zeros((), jnp.float32)),
         (params["blocks"], caches), unroll=rctx.unroll)
-    return x, tails, aux
+    return x, updates, aux
+
+
+def collapse_prefill_caches(prefill_caches) -> Tuple:
+    """Prefill-format -> decode-format caches: shard-stacked mamba
+    states/convs ((blocks, S, B, ...)) collapse to the last shard — the
+    true end-of-document state ((blocks, B, ...)); attention caches are
+    identical in both formats.  Single source of truth for the format
+    contract (serving.cache.to_decode_caches re-exports it)."""
+    out = []
+    for c in prefill_caches:
+        if "state" in c:
+            out.append({"state": c["state"][:, -1], "conv": c["conv"][:, -1]})
+        else:
+            out.append(c)
+    return tuple(out)
+
+
+def forward_query(params, cfg, q_tokens, positions, caches, rctx: RunCtx,
+                  valid_len=None):
+    """Query pass (paper Alg. 1, lines 13-25 with x = q): lq tokens attend
+    to the sharded doc cache + causally to themselves; mamba layers
+    continue from the end-of-document state.  Returns
+    (hidden, tail_caches, aux).
+
+    The query pass *is* the final chunk of a chunked prefill, so this
+    delegates to ``forward_chunk`` — one attention/mamba body for both —
+    after collapsing the prefill-format caches to decode format."""
+    return forward_chunk(params, cfg, q_tokens, positions,
+                         collapse_prefill_caches(caches), rctx,
+                         valid_len=valid_len)

@@ -25,6 +25,54 @@ def pow2_bucket(n: int) -> int:
     return 1 << (n - 1).bit_length() if n > 0 else 0
 
 
+def chunk_plan(n: int, chunk_size: int):
+    """Split a document of ``n`` tokens into prefill chunks.
+
+    Returns [(offset, length)] covering 0..n in order: full ``chunk_size``
+    chunks, then a descending power-of-two ladder for the remainder, so
+    every chunk length is a power of two <= chunk_size and the jitted
+    chunk step compiles O(log chunk_size) distinct shapes (never one per
+    remainder value).  ``chunk_size`` must itself be a power of two.
+    """
+    if n < 1:
+        raise ValueError(f"document length must be >= 1, got {n}")
+    if chunk_size < 1 or pow2_bucket(chunk_size) != chunk_size:
+        raise ValueError(
+            f"prefill chunk size must be a power of two >= 1, got "
+            f"{chunk_size}")
+    plan, off = [], 0
+    while n - off >= chunk_size:
+        plan.append((off, chunk_size))
+        off += chunk_size
+    rem = n - off
+    while rem:
+        step = 1 << (rem.bit_length() - 1)       # largest pow2 <= rem
+        plan.append((off, step))
+        off += step
+        rem -= step
+    return plan
+
+
+def check_tail_capacity(capacity: int, lq: int, budget: int,
+                        context: str = "request") -> None:
+    """Admission/generate-time guard for the preallocated tail buffers.
+
+    A request needs ``lq + budget`` tail rows (query KV plus one row per
+    generated token).  The in-loop write (core.decode.write_tail_at) clips
+    its index into range for the done-slot rewrites, so an undersized
+    buffer would *silently overwrite its last entries* instead of failing
+    — every admission path must run this check before spending a prefill.
+    """
+    need = lq + budget
+    if need > capacity:
+        raise ValueError(
+            f"{context} needs {need} tail rows (query length {lq} + "
+            f"token budget {budget}) but tail capacity is {capacity}; "
+            f"raise tail_capacity (or lower max_new_tokens) — an "
+            f"overflowing tail buffer would silently overwrite its last "
+            f"entries")
+
+
 def attn_cache_len(caches) -> int:
     """Sequence length of the (stacked) attention doc caches; 0 for
     pure-SSM models."""
@@ -46,14 +94,13 @@ def first_decode_position(n_doc: int, lq: int) -> int:
 
 
 def to_decode_caches(prefill_caches) -> Tuple:
-    """Collapse prefill mamba caches (shard-stacked) to decode format."""
-    out = []
-    for c in prefill_caches:
-        if "state" in c:
-            out.append({"state": c["state"][:, -1], "conv": c["conv"][:, -1]})
-        else:
-            out.append(c)
-    return tuple(out)
+    """Collapse prefill mamba caches (shard-stacked) to decode format.
+
+    The format contract lives in models.transformer (forward_query uses
+    the same collapse to delegate to forward_chunk); this re-export keeps
+    the serving-side name."""
+    from repro.models.transformer import collapse_prefill_caches
+    return collapse_prefill_caches(prefill_caches)
 
 
 def init_tails(query_tails) -> Tuple:
@@ -132,6 +179,56 @@ def pad_doc_caches(caches, capacity: int) -> Tuple:
             pad = [(0, 0)] * c["k"].ndim
             pad[2] = (0, capacity - n)
             out.append({"k": jnp.pad(c["k"], pad), "v": jnp.pad(c["v"], pad)})
+        else:
+            out.append(c)
+    return tuple(out)
+
+
+def alloc_doc_caches(cfg, batch: int, capacity: int, dtype=jnp.float32
+                     ) -> Tuple:
+    """Zero decode-format doc caches for chunked prefill.
+
+    One dict per block-pattern slot, leaves stacked on a leading
+    ``num_blocks`` axis (the pattern-repetition scan): attention caches
+    (blocks, B, capacity, KV, D) filled by ``append_doc_chunk``; mamba
+    states start at the zero state (== a fresh document: ``ssd_chunked``
+    with no ``init_state`` and ``_causal_conv`` with no left context are
+    exactly the zero-state/zero-context runs)."""
+    out = []
+    nb = cfg.num_blocks
+    for kind in cfg.block_pattern:
+        if kind.mixer == "attn":
+            shape = (nb, batch, capacity, cfg.num_kv_heads, cfg.head_dim)
+            out.append({"k": jnp.zeros(shape, dtype),
+                        "v": jnp.zeros(shape, dtype)})
+        else:
+            p = cfg.d_inner // cfg.n_ssm_heads
+            conv_c = cfg.d_inner + 2 * cfg.ssm_state
+            out.append({
+                "state": jnp.zeros(
+                    (nb, batch, cfg.n_ssm_heads, p, cfg.ssm_state),
+                    jnp.float32),
+                "conv": jnp.zeros(
+                    (nb, batch, cfg.ssm_conv_width - 1, conv_c), dtype)})
+    return tuple(out)
+
+
+def append_doc_chunk(caches, updates, doc_len) -> Tuple:
+    """Fold one prefill chunk into decode-format doc caches.
+
+    Attention updates {"k","v"} (blocks, B, t, KV, D) are written into the
+    preallocated doc buffers at per-slot offsets ``doc_len`` (B,) int32
+    (static-shape ``dynamic_update_slice`` — same recipe as the decode
+    tails); mamba updates replace the carried {"state","conv"}."""
+    from repro.core import decode as dec
+    write = jax.vmap(dec.write_tail_at, in_axes=(0, 0, None))
+    out = []
+    for c, u in zip(caches, updates):
+        if "k" in u and "k" in c:
+            out.append({"k": write(c["k"], u["k"], doc_len),
+                        "v": write(c["v"], u["v"], doc_len)})
+        elif "state" in u:
+            out.append({"state": u["state"], "conv": u["conv"]})
         else:
             out.append(c)
     return tuple(out)

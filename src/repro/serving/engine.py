@@ -74,12 +74,23 @@ class Engine:
             self._loop = jax.jit(
                 self._loop_impl,
                 static_argnames=("num_steps", "sampling"))
+            # chunked prefill: positions/doc_len stay traced, so the
+            # compile cache is keyed by chunk *length* only (pow2 plan);
+            # the doc-cache buffers are donated — the caller rebinds the
+            # result, and without donation every chunk step would copy
+            # the whole doc-capacity buffer (on backends that honour
+            # donation; CPU ignores it)
+            self._prefill_chunk = jax.jit(self._prefill_chunk_impl,
+                                          donate_argnums=(3,))
+            self._chunk_query = jax.jit(self._chunk_query_impl)
         else:
             self._prefill = lambda p, d, q: self.model.prefill_step(
                 p, d, q, rctx)
             self._serve = lambda p, t, pos, c, tl: self.model.serve_step(
                 p, t, pos, c, tl, rctx)
             self._loop = self._loop_impl
+            self._prefill_chunk = self._prefill_chunk_impl
+            self._chunk_query = self._chunk_query_impl
 
     # ------------------------------------------------------------------
     # Fused decode loop
@@ -119,10 +130,73 @@ class Engine:
         return logits0, caches, q_tails
 
     # ------------------------------------------------------------------
+    # Chunked prefill
+    # ------------------------------------------------------------------
+    def _prefill_chunk_impl(self, params, chunk, positions, caches,
+                            doc_len):
+        """One doc chunk: attend (cache prefix + causal self), append the
+        chunk's KV into the doc cache at ``doc_len``."""
+        _, updates = self.model.chunk_step(params, chunk, positions, caches,
+                                           self.rctx, valid_len=doc_len)
+        return cache_lib.append_doc_chunk(caches, updates, doc_len)
+
+    def _chunk_query_impl(self, params, query, positions, caches, doc_len):
+        """The query pass as the final chunk: same step, but the KV
+        updates become the decode tail instead of doc-cache rows."""
+        return self.model.chunk_step(params, query, positions, caches,
+                                     self.rctx, valid_len=doc_len)
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill covers the *exact* (plain-layout) prefill
+        paths.  Excluded: encoder-decoder models (growing self tails),
+        augmented star/apb layouts (the approximate anchor/passing prefill
+        is a different computation per host — chunking it is an open
+        item), sliding-window layers (the chunk step has no windowed
+        context attention yet), and bidirectional contexts (the chunk
+        step is strictly causal-prefix + self)."""
+        if self.cfg.is_encoder_decoder or self.model.chunk_step is None:
+            return False
+        if self.rctx.bidirectional:
+            return False
+        if any(kind.window for kind in self.cfg.block_pattern):
+            return False
+        lay = self.rctx.layout
+        if (self.rctx.strategy in ("star", "apb") and lay is not None
+                and lay.n_hosts > 1):
+            return False
+        return True
+
+    def start_chunked_prefill(self, doc, query, chunk_size: int,
+                              doc_capacity: Optional[int] = None
+                              ) -> "ChunkedPrefill":
+        """Begin an incremental chunked prefill (one ``step()`` per chunk;
+        the scheduler interleaves decode chunks between steps)."""
+        return ChunkedPrefill(self, doc, query, chunk_size,
+                              doc_capacity=doc_capacity)
+
+    def prefill_chunked(self, doc, query, chunk_size: int,
+                        doc_capacity: Optional[int] = None):
+        """Chunked prefill + query pass, driven to completion.
+
+        Same contract as :meth:`prefill` — (first-token logits,
+        decode-format caches, query tails) — except the attention doc
+        caches come back padded to ``doc_capacity`` (default: the exact
+        document length, making the two paths interchangeable).  Greedy
+        outputs are bit-exact vs the monolithic path; the monolithic path
+        stays the oracle."""
+        cp = self.start_chunked_prefill(doc, query, chunk_size,
+                                        doc_capacity=doc_capacity)
+        while cp.chunks_left:
+            cp.step(sync=False)        # pipeline dispatches; finish() blocks
+        return cp.finish()
+
+    # ------------------------------------------------------------------
     def generate(self, doc, query, max_new_tokens: int = 8,
                  stop_token: Optional[int] = None,
                  sampling: Optional[SamplingParams] = None,
-                 rng: Optional[jax.Array] = None) -> GenerationResult:
+                 rng: Optional[jax.Array] = None,
+                 prefill_chunk: Optional[int] = None) -> GenerationResult:
         """doc: (B, n) ints or (B, n, d) embeds; query: (B, lq) ints.
 
         Decode is one jitted scan over preallocated slot caches: no
@@ -131,6 +205,10 @@ class Engine:
         (output stays rectangular at ``max_new_tokens``).  The scan
         length and tail capacity are bucketed to powers of two so
         varying budgets reuse compiles.
+
+        ``prefill_chunk`` (a power of two) streams the document through
+        the chunked prefill path instead of one monolithic pass —
+        bit-exact greedy outputs, bounded per-chunk peak memory/latency.
         """
         if max_new_tokens < 1:
             # the first token falls out of the prefill query pass
@@ -152,7 +230,11 @@ class Engine:
         n = doc.shape[1]
 
         t0 = time.perf_counter()
-        logits0, caches, q_tails = self.prefill(doc, query)
+        if prefill_chunk is not None:
+            logits0, caches, q_tails = self.prefill_chunked(
+                doc, query, prefill_chunk)
+        else:
+            logits0, caches, q_tails = self.prefill(doc, query)
         logits0 = jax.block_until_ready(logits0)
         t_prefill = time.perf_counter() - t0
 
@@ -259,3 +341,87 @@ class Engine:
 
         return GenerationResult(np.concatenate(out_tokens, axis=1),
                                 logits0, t_prefill, t_decode)
+
+
+class ChunkedPrefill:
+    """Incremental chunked prefill for one request (paper Alg. 1 lines
+    1-12, streamed).
+
+    The document is split into power-of-two chunks
+    (``cache_lib.chunk_plan``); chunk *c* attends to the doc cache built
+    from chunks ``0..c-1`` plus causally to itself (the LSE-merge query
+    machinery generalised to mid-document chunks) and its KV is appended
+    into a preallocated doc-cache buffer with ``dynamic_update_slice`` —
+    the prefill twin of the decode tail ring buffers.  ``step()``
+    processes one chunk, so a scheduler can interleave decode chunks
+    between steps; ``finish()`` runs the query pass and returns the same
+    (logits0, caches, q_tails) contract as ``Engine.prefill``.
+    """
+
+    def __init__(self, engine: Engine, doc, query, chunk_size: int,
+                 doc_capacity: Optional[int] = None):
+        if not engine.supports_chunked_prefill:
+            raise ValueError(
+                "chunked prefill requires a decoder-only model without "
+                "sliding-window layers on a plain (non-augmented) "
+                "strategy; use the monolithic Engine.prefill for this "
+                "configuration")
+        self.engine = engine
+        self.doc = doc
+        self.query = query
+        self.batch = doc.shape[0]
+        self.n = doc.shape[1]
+        self.lq = query.shape[1]
+        cap = doc_capacity if doc_capacity is not None else self.n
+        if cap < self.n:
+            raise ValueError(
+                f"doc capacity {cap} < document length {self.n}")
+        self._plan = list(cache_lib.chunk_plan(self.n, chunk_size))
+        self._next = 0
+        self.doc_len = 0
+        self.caches = cache_lib.alloc_doc_caches(
+            engine.cfg, self.batch, cap,
+            dtype=engine.params["embed"].dtype)
+        self.prefill_time_s = 0.0
+
+    @property
+    def chunks_left(self) -> int:
+        return len(self._plan) - self._next
+
+    def step(self, sync: bool = True) -> int:
+        """Process the next document chunk; returns chunks remaining.
+
+        ``sync=True`` blocks until the chunk is on device — the scheduler
+        needs real per-chunk boundaries for its decode interleave and
+        TTFT accounting.  A straight-through drive (prefill_chunked)
+        passes ``sync=False`` so XLA pipelines the chunk dispatches and
+        the single block in ``finish()`` pays the only roundtrip."""
+        off, t = self._plan[self._next]
+        t0 = time.perf_counter()
+        chunk = self.doc[:, off:off + t]
+        positions = (self.lq + off + jnp.arange(t))[None]
+        doc_len = jnp.full((self.batch,), self.doc_len, jnp.int32)
+        self.caches = self.engine._prefill_chunk(
+            self.engine.params, chunk, positions, self.caches, doc_len)
+        if sync:
+            jax.block_until_ready(self.caches)
+        self.prefill_time_s += time.perf_counter() - t0
+        self._next += 1
+        self.doc_len += t
+        return self.chunks_left
+
+    def finish(self):
+        """Query pass over the completed doc cache; returns
+        (first-token logits, decode-format caches, query tails)."""
+        if self.chunks_left:
+            raise ValueError(
+                f"{self.chunks_left} prefill chunks still pending")
+        t0 = time.perf_counter()
+        positions = (self.lq + self.n + jnp.arange(self.lq))[None]
+        doc_len = jnp.full((self.batch,), self.doc_len, jnp.int32)
+        logits0, q_tails = self.engine._chunk_query(
+            self.engine.params, self.query, positions, self.caches, doc_len)
+        logits0 = jax.block_until_ready(logits0)
+        caches = cache_lib.absorb_query_states(self.caches, q_tails)
+        self.prefill_time_s += time.perf_counter() - t0
+        return logits0, caches, q_tails

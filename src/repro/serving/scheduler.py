@@ -13,6 +13,17 @@ long-context requests share one fixed-slot decode batch.  The scheduler
     slots as requests finish and immediately refills them, so a short
     request never waits for a long one and a long one is never evicted.
 
+With ``prefill_chunk`` set, admissions stream through the **chunked
+prefill** path (Engine.ChunkedPrefill) instead of one monolithic
+document pass: every scheduler tick processes one power-of-two document
+chunk of the in-flight admission with the fewest chunks remaining
+(shortest-remaining-first, so a short request's admission is never stuck
+behind a long document — the Medha head-of-line problem), then runs up to
+``decode_per_prefill`` decode chunks so live slots keep generating while
+the long admission streams in.  A monolithic 100k-token prefill stall
+becomes a sequence of bounded per-chunk stalls.  ``prefill_chunk=None``
+(default) keeps the monolithic admission path — the bit-exactness oracle.
+
 Capacities are static: ``doc_capacity`` bounds the per-request document
 cache length, ``tail_capacity`` bounds query + generated tokens.  Both
 default to the max over submitted requests at ``run()`` time.
@@ -82,17 +93,23 @@ class RequestResult:
     prefill_time_s: float
     admitted_at_chunk: int
     finished_at_chunk: int
+    ttft_s: float = 0.0           # run() start -> first token available
+    admitted_after_prefill_chunks: int = 0   # global prefill ticks before
+                                             # this admission completed
 
 
 class _SlotInfo:
     def __init__(self, req: Request, first_token: int, prefill_s: float,
-                 chunk: int):
+                 chunk: int, ttft_s: float = 0.0,
+                 prefill_chunks_before: int = 0):
         self.req = req
         self.tokens: List[int] = [first_token]
         self.stopped = (req.stop_token is not None
                         and first_token == req.stop_token)
         self.prefill_s = prefill_s
         self.admitted_at_chunk = chunk
+        self.ttft_s = ttft_s
+        self.prefill_chunks_before = prefill_chunks_before
 
     @property
     def remaining(self) -> int:
@@ -101,13 +118,30 @@ class _SlotInfo:
         return self.req.max_new_tokens - len(self.tokens)
 
 
+class _Admission:
+    """One in-flight chunked admission bound to a reserved slot."""
+
+    def __init__(self, req: Request, cp, order: int):
+        self.req = req
+        self.cp = cp                   # engine.ChunkedPrefill
+        self.order = order             # FIFO tiebreak for SRPT
+
+
 class Scheduler:
     def __init__(self, engine: Engine, n_slots: int = 2,
                  decode_chunk: int = 8,
                  doc_capacity: Optional[int] = None,
                  tail_capacity: Optional[int] = None,
                  sampling: Optional[sampling_lib.SamplingParams] = None,
-                 rng: Optional[jax.Array] = None):
+                 rng: Optional[jax.Array] = None,
+                 prefill_chunk: Optional[int] = None,
+                 decode_per_prefill: int = 1):
+        """``prefill_chunk``: power-of-two document chunk size enabling
+        streamed admissions (None = monolithic prefill, the oracle).
+        ``decode_per_prefill``: decode chunks run after each prefill
+        chunk while admissions are in flight — the decode:prefill
+        interleave ratio (0 = prefill greedily, decode only between
+        admissions)."""
         if engine.cfg.is_encoder_decoder:
             # encdec self-attention tails grow by concat inside
             # decode_tokens — not representable in the static-shape
@@ -121,6 +155,21 @@ class Scheduler:
         if decode_chunk < 1:
             raise ValueError(
                 f"decode_chunk must be >= 1, got {decode_chunk}")
+        if prefill_chunk is not None:
+            if (prefill_chunk < 1 or
+                    cache_lib.pow2_bucket(prefill_chunk) != prefill_chunk):
+                raise ValueError(
+                    f"prefill_chunk must be a power of two >= 1, got "
+                    f"{prefill_chunk}")
+            if not engine.supports_chunked_prefill:
+                raise ValueError(
+                    "this engine cannot chunk its prefill (encoder-"
+                    "decoder, sliding-window layers, or an augmented "
+                    "star/apb layout); use prefill_chunk=None")
+        if decode_per_prefill < 0:
+            raise ValueError(
+                f"decode_per_prefill must be >= 0, got "
+                f"{decode_per_prefill}")
         self.engine = engine
         self.n_slots = n_slots
         self.decode_chunk = decode_chunk
@@ -128,11 +177,17 @@ class Scheduler:
         self.tail_capacity = tail_capacity
         self.sampling = sampling or engine.sampling
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.prefill_chunk = prefill_chunk
+        self.decode_per_prefill = decode_per_prefill
         self.pending: deque = deque()
         self.active: Dict[int, _SlotInfo] = {}
+        self.admissions: Dict[int, _Admission] = {}
         self.results: Dict[str, RequestResult] = {}
         self.state: Optional[dec.DecodeState] = None
         self.chunks_run = 0
+        self.prefill_chunks_done = 0
+        self._submitted = 0
+        self._run_t0: Optional[float] = None
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -161,14 +216,14 @@ class Scheduler:
             self.tail_capacity = max(
                 r.query.shape[-1] + r.max_new_tokens for r in reqs)
 
-    def _prefill_request(self, req: Request):
-        need = req.query.shape[-1] + req.max_new_tokens
-        if need > self.tail_capacity:
-            # write_tail_at clips overflow writes, which would silently
-            # corrupt tokens — reject instead
-            raise ValueError(
-                f"request {req.rid} needs {need} tail rows (lq + "
-                f"max_new_tokens) but tail_capacity={self.tail_capacity}")
+    def _validate_request(self, req: Request) -> None:
+        """Admission-time capacity screening — before any prefill compute
+        is spent.  The tail guard is load-bearing: the in-loop tail write
+        clips its index, so an oversubscribed budget would silently
+        overwrite the last tail rows instead of failing."""
+        cache_lib.check_tail_capacity(
+            self.tail_capacity, req.query.shape[-1], req.max_new_tokens,
+            context=f"request {req.rid}")
         if _doc_seq_len(req.doc) > self.doc_capacity:
             # capacities freeze when the slot buffers are first allocated
             # (a later run() cannot grow them); screen before spending the
@@ -177,6 +232,9 @@ class Scheduler:
                 f"request {req.rid} doc length {_doc_seq_len(req.doc)} "
                 f"exceeds doc_capacity={self.doc_capacity}; use a new "
                 f"Scheduler or pass doc_capacity explicitly")
+
+    def _prefill_request(self, req: Request):
+        self._validate_request(req)
         doc = _doc_batched(req.doc)
         query = req.query if req.query.ndim == 2 else req.query[None]
         t0 = time.perf_counter()
@@ -214,15 +272,21 @@ class Scheduler:
             caches=caches,
             tails=tails)
 
-    def _admit(self, req: Request, slot: int) -> None:
-        (logits0, caches, tails, tail_fill, doc_len,
-         t_prefill) = self._prefill_request(req)
+    def _install(self, req: Request, slot: int, logits0, caches, tails,
+                 tail_fill: int, doc_len: int, t_prefill: float) -> None:
+        """Paste one prefilled request (padded caches + tail buffers)
+        into ``slot`` and sample its first token — shared by the
+        monolithic and chunked admission paths."""
         st = self.state
         if st is None:
             st = self._alloc_state(caches, tails)
         st_rng, sub = jax.random.split(st.rng)
         tok0 = int(sampling_lib.sample(logits0, sub, self.sampling)[0])
-        info = _SlotInfo(req, tok0, t_prefill, self.chunks_run)
+        ttft = (time.perf_counter() - self._run_t0
+                if self._run_t0 is not None else 0.0)
+        info = _SlotInfo(req, tok0, t_prefill, self.chunks_run,
+                         ttft_s=ttft,
+                         prefill_chunks_before=self.prefill_chunks_done)
         pos0 = cache_lib.first_decode_position(_doc_seq_len(req.doc),
                                                req.query.shape[-1])
         done = info.remaining == 0
@@ -244,6 +308,12 @@ class Scheduler:
         if done:
             self._finish(slot)
 
+    def _admit(self, req: Request, slot: int) -> None:
+        (logits0, caches, tails, tail_fill, doc_len,
+         t_prefill) = self._prefill_request(req)
+        self._install(req, slot, logits0, caches, tails, tail_fill,
+                      doc_len, t_prefill)
+
     def _admit_all(self) -> None:
         for slot in range(self.n_slots):
             if not self.pending:
@@ -254,6 +324,57 @@ class Scheduler:
                 self._admit(self.pending[0], slot)
                 self.pending.popleft()
 
+    # ---------------------------------------------- chunked admissions
+    def _start_admissions(self) -> None:
+        """Bind pending requests to free slots as in-flight chunked
+        admissions (their doc caches stream in chunk by chunk)."""
+        for slot in range(self.n_slots):
+            if not self.pending:
+                break
+            if slot in self.active or slot in self.admissions:
+                continue
+            req = self.pending[0]
+            self._validate_request(req)       # raises before the pop
+            self.pending.popleft()
+            cp = self.engine.start_chunked_prefill(
+                _doc_batched(req.doc),
+                req.query if req.query.ndim == 2 else req.query[None],
+                self.prefill_chunk, doc_capacity=self.doc_capacity)
+            self.admissions[slot] = _Admission(req, cp, self._submitted)
+            self._submitted += 1
+
+    def _prefill_tick(self) -> bool:
+        """Advance the in-flight admission with the fewest chunks left
+        (shortest-remaining-first; FIFO tiebreak) by one document chunk;
+        activate it when its document is fully streamed in.  Returns
+        False when no admission is in flight."""
+        if not self.admissions:
+            return False
+        slot = min(self.admissions,
+                   key=lambda s: (self.admissions[s].cp.chunks_left,
+                                  self.admissions[s].order))
+        adm = self.admissions[slot]
+        if adm.cp.chunks_left:
+            adm.cp.step()
+            self.prefill_chunks_done += 1
+        if not adm.cp.chunks_left:
+            self._activate(slot)
+        return True
+
+    def _activate(self, slot: int) -> None:
+        """Query pass + slot installation for a fully-prefilled chunked
+        admission."""
+        adm = self.admissions.pop(slot)
+        req, cp = adm.req, adm.cp
+        logits0, caches, q_tails = cp.finish()
+        # the chunked path allocated the doc caches at doc_capacity
+        # already; only the tail buffers remain to build
+        doc_len = cp.n if cache_lib.attn_cache_len(caches) else 0
+        tails, tail_len = cache_lib.make_tail_buffers(
+            q_tails, self.tail_capacity)
+        self._install(req, slot, logits0, caches, tails,
+                      int(tail_len[0]), doc_len, cp.prefill_time_s)
+
     # ------------------------------------------------------------------
     def _finish(self, slot: int) -> None:
         info = self.active.pop(slot)
@@ -263,7 +384,9 @@ class Scheduler:
             stopped=info.stopped,
             prefill_time_s=info.prefill_s,
             admitted_at_chunk=info.admitted_at_chunk,
-            finished_at_chunk=self.chunks_run)
+            finished_at_chunk=self.chunks_run,
+            ttft_s=info.ttft_s,
+            admitted_after_prefill_chunks=info.prefill_chunks_before)
 
     def _decode_chunk(self) -> None:
         # don't run wasted pad steps past the longest remaining budget —
@@ -295,12 +418,29 @@ class Scheduler:
     def run(self) -> Dict[str, RequestResult]:
         """Drive all submitted requests to completion; returns
         rid -> RequestResult."""
-        if not self.pending and not self.active:
+        if not self.pending and not self.active and not self.admissions:
             return self.results
+        # per-cycle TTFT origin: a request admitted in a later run()
+        # cycle is measured from that cycle's start, not the first one's
+        self._run_t0 = time.perf_counter()
         if self.pending:
             self._resolve_capacities()
-        while self.pending or self.active:
-            self._admit_all()
-            if self.active:
+        if self.prefill_chunk is None:
+            while self.pending or self.active:
+                self._admit_all()
+                if self.active:
+                    self._decode_chunk()
+            return self.results
+        while self.pending or self.admissions or self.active:
+            self._start_admissions()
+            prefilling = self._prefill_tick()
+            if prefilling:
+                # interleave: bounded decode progress per prefill chunk
+                for _ in range(self.decode_per_prefill):
+                    if not self.active:
+                        break
+                    self._decode_chunk()
+            elif self.active:
+                # nothing streaming in (or all slots busy): pure decode
                 self._decode_chunk()
         return self.results

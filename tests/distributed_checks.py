@@ -103,6 +103,22 @@ def main():
             check(f"shard_map {strat}/{method} == host-loop",
                   close(out_sm, out_ref) and close(kc, kc_r))
 
+    # bidirectional (whisper-encoder) APB: the shard_map path excludes the
+    # host's own passing block by rotating it out of the validity prefix;
+    # the host-loop drops it outright — both must agree (regression for
+    # the zero-key softmax-mass leak)
+    for method in ["retain", "recent"]:
+        out_sm, _, _ = strategies.prefill_attention(
+            cfg3, "apb", q3, k3, v3, pctx=pctx, layout=lay,
+            retain_params=retain, compressor_method=method,
+            rng=jax.random.PRNGKey(7), bidirectional=True)
+        out_ref, _, _ = reference.apb_attention_hostloop(
+            q3, k3, v3, retain, lay, strategy="apb",
+            compressor_method=method, rng=jax.random.PRNGKey(7),
+            bidirectional=True)
+        check(f"shard_map apb bidirectional/{method} == host-loop",
+              close(out_sm, out_ref))
+
     # --------------------------------------------- 4: distributed decode
     cfg4 = get_config("granite-3-2b").reduced()
     model = model_lib.build(cfg4)

@@ -1,0 +1,138 @@
+"""Bidirectional (whisper-encoder) APB: own-passing-block exclusion.
+
+Regression for the zero-key softmax-mass leak: the bidirectional path
+used to *zero* the host's own passing block inside the gathered KV.
+Zeroed keys still score q·0 = 0 and receive exp(0 - m) softmax mass, so
+every local query's attention was silently diluted towards zero-values.
+The fix masks the own block out of *visibility* (rotate it behind the
+``pass_valid`` prefix in the shard_map path; drop it outright in the
+host-loop reference).  These tests pin the host-loop oracle to an
+independent dense reference and prove the zero-key variant really leaks
+mass; shard_map == host-loop is asserted in distributed_checks.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import reference
+from repro.core.splitting import APBLayout
+from repro.kernels import ref as kref
+
+B, HOSTS, LA_DOC, LQ, LB, LP = 2, 4, 4, 2, 16, 4
+H, KV, D = 4, 2, 16
+
+
+def _setup(key):
+    lay = APBLayout(n_doc=LB * HOSTS, lq=LQ, n_hosts=HOSTS, lb=LB,
+                    la_doc=LA_DOC, lp=LP)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, lay.aug_len, H, D))
+    k = jax.random.normal(ks[1], (B, lay.aug_len, KV, D))
+    v = jax.random.normal(ks[2], (B, lay.aug_len, KV, D))
+    # zero retain params: the "recent" selector overrides the scores, so
+    # the selection is deterministic (last LP positions of each block)
+    din = (H + 2 * KV) * D
+    retain = {"w1": jnp.zeros((din, 8)), "b1": jnp.zeros((8,)),
+              "w2": jnp.zeros((8, KV)), "b2": jnp.zeros((KV,))}
+    return lay, q, k, v, retain
+
+
+def _dense_host_reference(lay, q, k, v, h):
+    """Brute-force attention for host ``h``'s local queries: every valid
+    anchor key, the last-LP keys of every *other* host's local block
+    (the "recent" selection), and the full own local block — own passing
+    block excluded outright."""
+    la, host_len = lay.la, lay.host_len
+    s = h * host_len
+    kp, vp = [], []
+    for o in range(HOSTS):
+        if o == h:
+            continue
+        so = o * host_len + la
+        kp.append(k[:, so + LB - LP: so + LB])
+        vp.append(v[:, so + LB - LP: so + LB])
+    anchor_valid = 0 if h == 0 else la
+    k_all = jnp.concatenate(
+        [k[:, s:s + anchor_valid]] + kp + [k[:, s + la:s + host_len]], 1)
+    v_all = jnp.concatenate(
+        [v[:, s:s + anchor_valid]] + vp + [v[:, s + la:s + host_len]], 1)
+    ql = q[:, s + la:s + host_len]
+    mask = jnp.ones((ql.shape[1], k_all.shape[1]), bool)
+    return kref.masked_attention(ql, k_all, v_all, mask)
+
+
+def test_bidirectional_hostloop_matches_dense_reference(key):
+    lay, q, k, v, retain = _setup(key)
+    out, _, _ = reference.apb_attention_hostloop(
+        q, k, v, retain, lay, strategy="apb", compressor_method="recent",
+        bidirectional=True)
+    for h in range(HOSTS):
+        s = h * lay.host_len
+        got = out[:, s + lay.la:s + lay.host_len]
+        want = _dense_host_reference(lay, q, k, v, h)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_zero_key_variant_leaks_mass(key):
+    """The pre-fix behaviour (own block zeroed but *visible*) must differ
+    from the exclusion oracle — proving the leak the fix removes."""
+    lay, q, k, v, retain = _setup(key)
+    out, _, _ = reference.apb_attention_hostloop(
+        q, k, v, retain, lay, strategy="apb", compressor_method="recent",
+        bidirectional=True)
+    h = 1                                      # any host with a valid anchor
+    s = h * lay.host_len
+    la = lay.la
+    # rebuild host h's attention the old way: all HOSTS passing slots
+    # visible, own slot's K/V forced to zero
+    kp, vp = [], []
+    for o in range(HOSTS):
+        so = o * lay.host_len + la
+        ksel = k[:, so + LB - LP: so + LB]
+        vsel = v[:, so + LB - LP: so + LB]
+        if o == h:
+            ksel, vsel = jnp.zeros_like(ksel), jnp.zeros_like(vsel)
+        kp.append(ksel)
+        vp.append(vsel)
+    k_all = jnp.concatenate(
+        [k[:, s:s + la]] + kp + [k[:, s + la:s + lay.host_len]], 1)
+    v_all = jnp.concatenate(
+        [v[:, s:s + la]] + vp + [v[:, s + la:s + lay.host_len]], 1)
+    ql = q[:, s + la:s + lay.host_len]
+    mask = jnp.ones((ql.shape[1], k_all.shape[1]), bool)
+    leaked = kref.masked_attention(ql, k_all, v_all, mask)
+    fixed = out[:, s + la:s + lay.host_len]
+    # the zeroed-but-visible keys drain softmax mass: outputs must differ
+    assert float(jnp.max(jnp.abs(leaked - fixed))) > 1e-3
+
+
+def test_single_device_dispatch_uses_bidirectional_hostloop(key):
+    """strategies.prefill_attention on one device (augmented layout, no
+    mesh) must forward ``bidirectional`` to the host-loop emulation —
+    the pre-fix code dropped it and emulated the *causal* mask."""
+    from repro.configs import get_config
+    from repro.core import strategies
+    from repro.core.compressor import compressor_init
+
+    cfg = get_config("granite-3-2b").reduced()
+    lay = APBLayout(n_doc=LB * HOSTS, lq=LQ, n_hosts=HOSTS, lb=LB,
+                    la_doc=LA_DOC, lp=LP)
+    retain = compressor_init(jax.random.fold_in(key, 1), cfg)
+    hh, kv, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, lay.aug_len, hh, d))
+    k = jax.random.normal(ks[1], (B, lay.aug_len, kv, d))
+    v = jax.random.normal(ks[2], (B, lay.aug_len, kv, d))
+    out_disp, _, _ = strategies.prefill_attention(
+        cfg, "apb", q, k, v, pctx=strategies.ParallelCtx(), layout=lay,
+        retain_params=retain, rng=jax.random.PRNGKey(7),
+        bidirectional=True)
+    out_ref, _, _ = reference.apb_attention_hostloop(
+        q, k, v, retain, lay, strategy="apb", rng=jax.random.PRNGKey(7),
+        bidirectional=True)
+    np.testing.assert_allclose(np.asarray(out_disp), np.asarray(out_ref),
+                               atol=1e-5, rtol=1e-5)
+    out_causal, _, _ = reference.apb_attention_hostloop(
+        q, k, v, retain, lay, strategy="apb", rng=jax.random.PRNGKey(7))
+    assert float(jnp.max(jnp.abs(out_disp - out_causal))) > 1e-3

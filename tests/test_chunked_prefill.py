@@ -1,0 +1,256 @@
+"""Chunked prefill: bit-exactness vs the monolithic oracle, streamed
+scheduler admissions (head-of-line behaviour), and the tail-capacity
+guard.
+
+The monolithic ``Engine.prefill`` path stays the oracle throughout: the
+chunked path must reproduce its greedy outputs token-for-token for every
+chunk size, including a chunk larger than the whole document (single-
+chunk degenerate case).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.models.transformer import RunCtx
+from repro.serving import cache as cache_lib
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Request, Scheduler
+
+
+def _mk_engine(key, arch="granite-3-2b", **kw):
+    cfg = get_config(arch).reduced()
+    if cfg.has_moe:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    return cfg, Engine(cfg, params, RunCtx(strategy="full"), **kw)
+
+
+def _mk_req(cfg, n, lq, seed):
+    r = np.random.default_rng(seed)
+    return (jnp.asarray(r.integers(0, cfg.vocab_size, (1, n)), jnp.int32),
+            jnp.asarray(r.integers(0, cfg.vocab_size, (1, lq)), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Chunk planning
+# ---------------------------------------------------------------------------
+
+def test_chunk_plan_covers_document_in_pow2_chunks():
+    for n in (1, 7, 8, 50, 64, 100):
+        plan = cache_lib.chunk_plan(n, 16)
+        # contiguous cover of 0..n
+        off = 0
+        for o, t in plan:
+            assert o == off and t >= 1
+            assert cache_lib.pow2_bucket(t) == t and t <= 16
+            off += t
+        assert off == n
+    with pytest.raises(ValueError):
+        cache_lib.chunk_plan(10, 12)           # not a power of two
+    with pytest.raises(ValueError):
+        cache_lib.chunk_plan(0, 8)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level bit-exactness vs the monolithic oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "mamba2-780m",
+                                  "jamba-1.5-large-398b"])
+def test_chunked_matches_monolithic(arch, key):
+    """Greedy outputs must match the monolithic path token-for-token for
+    small chunks, an uneven pow2-ladder tail (n=50), and a chunk size
+    larger than the document (single chunk)."""
+    cfg, eng = _mk_engine(key, arch)
+    doc, query = _mk_req(cfg, 50, 8, 0)
+    ref = eng.generate(doc, query, max_new_tokens=6).tokens
+    for chunk in (8, 64):
+        out = eng.generate(doc, query, max_new_tokens=6,
+                           prefill_chunk=chunk).tokens
+        np.testing.assert_array_equal(out, ref)
+
+
+def test_chunked_prefill_cache_contract(key):
+    """prefill_chunked returns the Engine.prefill contract: same logits,
+    caches at the requested capacity with the valid prefix equal to the
+    monolithic doc cache to float eps."""
+    cfg, eng = _mk_engine(key)
+    doc, query = _mk_req(cfg, 48, 8, 1)
+    lg_m, caches_m, _ = eng.prefill(doc, query)
+    lg_c, caches_c, _ = eng.prefill_chunked(doc, query, 16,
+                                            doc_capacity=64)
+    np.testing.assert_allclose(np.asarray(lg_m), np.asarray(lg_c),
+                               atol=1e-5, rtol=1e-5)
+    for cm, cc in zip(caches_m, caches_c):
+        if "k" not in cm:
+            continue
+        assert cc["k"].shape[2] == 64              # padded to capacity
+        np.testing.assert_allclose(np.asarray(cm["k"]),
+                                   np.asarray(cc["k"][:, :, :48]),
+                                   atol=1e-5, rtol=1e-5)
+        # beyond doc_len the buffer is untouched zero padding
+        assert not np.asarray(cc["k"][:, :, 48:]).any()
+
+
+def test_chunked_prefill_embedding_doc(key):
+    """Embedding documents (VLM/audio frontends) chunk along the sequence
+    axis, not the feature axis."""
+    cfg, eng = _mk_engine(key)
+    doc = jax.random.normal(key, (1, 40, cfg.d_model)) * 0.02
+    query = jax.random.randint(jax.random.fold_in(key, 1), (1, 8), 0,
+                               cfg.vocab_size)
+    ref = eng.generate(doc, query, max_new_tokens=5).tokens
+    out = eng.generate(doc, query, max_new_tokens=5,
+                       prefill_chunk=16).tokens
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_chunked_prefill_rejected_for_augmented_layout(key):
+    """The augmented star/apb prefill is a different (approximate)
+    computation — chunking it must be rejected loudly, not silently
+    served through the exact path."""
+    from repro.core.splitting import make_layout
+    cfg = get_config("granite-3-2b").reduced()
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    lay = make_layout(64, 8, 4, anchor_frac=cfg.anchor_frac,
+                      passing_frac=cfg.passing_frac)
+    eng = Engine(cfg, params, RunCtx(strategy="apb", layout=lay))
+    assert not eng.supports_chunked_prefill
+    doc, query = _mk_req(cfg, 64, 8, 2)
+    with pytest.raises(ValueError):
+        eng.prefill_chunked(doc, query, 16)
+    with pytest.raises(ValueError):
+        Scheduler(eng, prefill_chunk=16)
+    # bidirectional contexts are excluded too: the chunk step is strictly
+    # causal-prefix + self and would silently diverge from the oracle
+    eng_bidir = Engine(cfg, params, RunCtx(strategy="full",
+                                           bidirectional=True))
+    assert not eng_bidir.supports_chunked_prefill
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: streamed admissions
+# ---------------------------------------------------------------------------
+
+def test_scheduler_chunked_matches_single_requests(key):
+    """Chunked admissions must reproduce each request generated alone
+    (greedy), exactly like the monolithic scheduler path."""
+    cfg, eng = _mk_engine(key)
+    d1, q1 = _mk_req(cfg, 96, 8, 1)
+    d2, q2 = _mk_req(cfg, 24, 4, 2)
+    d3, q3 = _mk_req(cfg, 48, 8, 3)
+    ref1 = eng.generate(d1, q1, max_new_tokens=10).tokens[0]
+    ref2 = eng.generate(d2, q2, max_new_tokens=4).tokens[0]
+    ref3 = eng.generate(d3, q3, max_new_tokens=9).tokens[0]
+
+    sch = Scheduler(eng, n_slots=2, decode_chunk=3, prefill_chunk=16)
+    sch.submit(Request("long", d1, q1, max_new_tokens=10))
+    sch.submit(Request("short", d2, q2, max_new_tokens=4))
+    sch.submit(Request("r3", d3, q3, max_new_tokens=9))
+    res = sch.run()
+    np.testing.assert_array_equal(res["long"].tokens, np.asarray(ref1))
+    np.testing.assert_array_equal(res["short"].tokens, np.asarray(ref2))
+    np.testing.assert_array_equal(res["r3"].tokens, np.asarray(ref3))
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "jamba-1.5-large-398b"])
+def test_scheduler_chunked_ssm_and_hybrid(arch, key):
+    """Chunked admissions carry SSM states across chunk boundaries
+    (including chunks shorter than the conv window via the pow2 tail)."""
+    cfg, eng = _mk_engine(key, arch)
+    doc, query = _mk_req(cfg, 37, 8, 5)      # 32+4+1: exercises t < w-1
+    ref = eng.generate(doc, query, max_new_tokens=6).tokens[0]
+    sch = Scheduler(eng, n_slots=2, decode_chunk=4, prefill_chunk=32)
+    sch.submit(Request("solo", doc, query, max_new_tokens=6))
+    res = sch.run()
+    np.testing.assert_array_equal(res["solo"].tokens, np.asarray(ref))
+
+
+def test_short_request_not_blocked_behind_long_admission(key):
+    """The head-of-line property: with chunked prefill, a short request
+    submitted behind a long one is admitted after O(its own chunks)
+    prefill ticks (shortest-remaining-first), not after the long
+    document's full prefill; under the monolithic scheduler it must wait
+    for the whole long prefill."""
+    cfg, eng = _mk_engine(key)
+    d_long, q_long = _mk_req(cfg, 128, 8, 1)     # 8 chunks of 16
+    d_short, q_short = _mk_req(cfg, 16, 4, 2)    # 1 chunk
+
+    sch = Scheduler(eng, n_slots=2, decode_chunk=4, prefill_chunk=16)
+    sch.submit(Request("long", d_long, q_long, max_new_tokens=8))
+    sch.submit(Request("short", d_short, q_short, max_new_tokens=4))
+    res = sch.run()
+    # the short admission completed after at most 2 global prefill ticks
+    # (its own single chunk, plus at most one long chunk that tied SRPT),
+    # while the long one needed all 8 of its chunks first
+    assert res["short"].admitted_after_prefill_chunks <= 2
+    assert res["long"].admitted_after_prefill_chunks >= 8
+    # and the short request finished while the long doc was still around
+    assert res["short"].ttft_s < res["long"].ttft_s
+
+
+def test_decode_interleaves_with_prefill(key):
+    """While a long admission streams in, already-active slots must keep
+    decoding: the first request finishes its whole budget before the
+    second (long) admission completes."""
+    cfg, eng = _mk_engine(key)
+    d1, q1 = _mk_req(cfg, 16, 4, 1)
+    d2, q2 = _mk_req(cfg, 128, 8, 2)
+    sch = Scheduler(eng, n_slots=2, decode_chunk=2, prefill_chunk=16,
+                    decode_per_prefill=1)
+    sch.submit(Request("first", d1, q1, max_new_tokens=6))
+    sch.submit(Request("long", d2, q2, max_new_tokens=4))
+    res = sch.run()
+    assert len(res["first"].tokens) == 6
+    # decode chunks ran before the long admission finished streaming
+    assert res["long"].admitted_at_chunk > 0
+
+
+def test_scheduler_chunked_sampling_reproducible(key):
+    """Sampled serving through chunked admissions stays reproducible for
+    an identical submission sequence + seed."""
+    from repro.serving.sampling import SamplingParams
+    cfg, eng = _mk_engine(key)
+    doc, query = _mk_req(cfg, 40, 8, 7)
+    sp = SamplingParams(temperature=0.8, top_k=50)
+
+    def run_once():
+        sch = Scheduler(eng, n_slots=2, decode_chunk=3, prefill_chunk=16,
+                        sampling=sp, rng=jax.random.PRNGKey(11))
+        sch.submit(Request("a", doc, query, max_new_tokens=8))
+        return sch.run()["a"].tokens
+
+    np.testing.assert_array_equal(run_once(), run_once())
+
+
+# ---------------------------------------------------------------------------
+# Tail-capacity guard (write_tail_at overflow regression)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prefill_chunk", [None, 16])
+def test_tail_overflow_rejected_at_admission(key, prefill_chunk):
+    """A budget that would overflow the tail buffers must be rejected
+    with a clear error *before* any prefill compute — the in-loop write
+    clips and would otherwise silently overwrite the last tail rows."""
+    cfg, eng = _mk_engine(key)
+    doc, query = _mk_req(cfg, 24, 4, 3)
+    sch = Scheduler(eng, n_slots=1, decode_chunk=2, tail_capacity=6,
+                    prefill_chunk=prefill_chunk)
+    sch.submit(Request("big", doc, query, max_new_tokens=8))
+    with pytest.raises(ValueError, match="tail"):
+        sch.run()
+    # the failed request is still at the head of the queue, not lost
+    assert len(sch.pending) == 1
+
+
+def test_check_tail_capacity_helper():
+    cache_lib.check_tail_capacity(12, 4, 8)            # exactly enough
+    with pytest.raises(ValueError, match="13"):
+        cache_lib.check_tail_capacity(12, 4, 9)

@@ -25,6 +25,57 @@ def test_select_topk_order_and_content(key):
     np.testing.assert_array_equal(np.asarray(idx), np.asarray(top))
 
 
+def test_select_topk_clamps_oversized_budget(key):
+    """lp > L (tiny local block, large passing budget) must select every
+    unit instead of tripping lax.top_k — regression for the unguarded
+    ``top_k(..., lp)`` call."""
+    B, L, KV, D = 2, 6, 2, 8
+    scores = jax.random.normal(key, (B, L, KV))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, L, KV, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, L, KV, D))
+    ks, vs, idx = comp.select_topk(scores, k, v, 4 * L)
+    # saturates at the block: all L units, in position order
+    assert ks.shape == (B, L, KV, D) and idx.shape == (B, L, KV)
+    np.testing.assert_array_equal(
+        np.asarray(idx),
+        np.broadcast_to(np.arange(L)[None, :, None], (B, L, KV)))
+    np.testing.assert_allclose(np.asarray(ks), np.asarray(k))
+    np.testing.assert_allclose(np.asarray(vs), np.asarray(v))
+    # identical to an exactly-sized budget
+    ks_eq, vs_eq, idx_eq = comp.select_topk(scores, k, v, L)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_eq))
+
+
+def test_hostloop_saturated_passing_budget(key):
+    """A hand-built layout with lp > lb must behave exactly like lp == lb
+    (the selection saturates; no zero-key padding enters the pass
+    region)."""
+    from repro.core import reference
+    from repro.core.splitting import APBLayout
+
+    B, HOSTS, LB, H, KV, D = 1, 4, 8, 2, 2, 16
+    din = (H + 2 * KV) * D
+    retain = {"w1": jax.random.normal(key, (din, 8)) * 0.1,
+              "b1": jnp.zeros((8,)),
+              "w2": jax.random.normal(jax.random.fold_in(key, 1),
+                                      (8, KV)) * 0.1,
+              "b2": jnp.zeros((KV,))}
+    kq = jax.random.split(jax.random.fold_in(key, 2), 3)
+    lay_over = APBLayout(n_doc=LB * HOSTS, lq=2, n_hosts=HOSTS, lb=LB,
+                         la_doc=2, lp=3 * LB)
+    lay_exact = APBLayout(n_doc=LB * HOSTS, lq=2, n_hosts=HOSTS, lb=LB,
+                          la_doc=2, lp=LB)
+    q = jax.random.normal(kq[0], (B, lay_over.aug_len, H, D))
+    k = jax.random.normal(kq[1], (B, lay_over.aug_len, KV, D))
+    v = jax.random.normal(kq[2], (B, lay_over.aug_len, KV, D))
+    out_over, _, _ = reference.apb_attention_hostloop(
+        q, k, v, retain, lay_over, strategy="apb")
+    out_exact, _, _ = reference.apb_attention_hostloop(
+        q, k, v, retain, lay_exact, strategy="apb")
+    np.testing.assert_allclose(np.asarray(out_over), np.asarray(out_exact),
+                               atol=1e-6, rtol=1e-6)
+
+
 def test_oracle_scores_find_needle(key):
     """A key present in both query and cache must receive high mass."""
     B, LQ, L, H, KV, D = 1, 4, 64, 4, 2, 16
