@@ -20,6 +20,7 @@ MODULES = [
     ("roofline", "benchmarks.bench_roofline"),           # EXPERIMENTS §Roofline
     ("serving", "benchmarks.bench_serving"),             # decode/serving perf
     ("prefill_chunking", "benchmarks.bench_prefill_chunking"),  # HOL / TTFT
+    ("paged_cache", "benchmarks.bench_paged_cache"),     # paged vs dense HBM
 ]
 
 

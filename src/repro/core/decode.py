@@ -162,6 +162,54 @@ def query_context_attention(q, k_cache, v_cache, k_self, v_self, *,
 # the host syncs once per loop, not once per token.
 
 
+def paged_gather(pool, page_table):
+    """Dense view of one layer's paged doc cache.
+
+    pool: (num_pages, page_size, KV, D) — the global page pool;
+    page_table: (B, P) int32 — per-slot logical->physical page map.
+    Returns (B, P*page_size, KV, D): slot b's pages gathered in logical
+    order (``jnp.take`` over the table).  Rows past the slot's
+    ``valid_len`` are whatever the gathered pages hold — attention masks
+    them, exactly as it masks the zero padding of the dense layout, so
+    the two layouts are bit-identical through the LSE-merge machinery.
+    """
+    g = jnp.take(pool, page_table, axis=0)          # (B, P, ps, KV, D)
+    b, p, ps = g.shape[:3]
+    return g.reshape((b, p * ps) + g.shape[3:])
+
+
+def paged_gather_kv(pool_k, pool_v, page_table):
+    """One layer's paged K and V gathered through the same page table —
+    the read path every paged attention site goes through (decode step,
+    chunk step, layout conversion)."""
+    return (paged_gather(pool_k, page_table),
+            paged_gather(pool_v, page_table))
+
+
+def paged_scatter(pool, new, page_table, start):
+    """Write ``new`` (B, t, KV, D) into the page pool at logical row
+    offsets ``start`` (B,) through ``page_table`` (B, P).
+
+    The scatter is index-computed per row (page = row // page_size,
+    offset = row % page_size), so ``t`` and ``start`` need not align with
+    page boundaries — a prefill chunk freely straddles pages.  Distinct
+    slots must hold distinct pages (the allocator guarantees it);
+    logical page indices are clipped into the table like
+    ``write_tail_at`` clips — admission-time capacity checks are the real
+    guard, the clip only keeps done-slot no-op writes in range.
+    """
+    ps = pool.shape[1]
+    b, t = new.shape[:2]
+    rows = start[:, None].astype(jnp.int32) + jnp.arange(t, dtype=jnp.int32)
+    logical = jnp.clip(rows // ps, 0, page_table.shape[1] - 1)
+    phys = jnp.take_along_axis(page_table, logical, axis=1)      # (B, t)
+    flat = phys * ps + rows % ps
+    pool_flat = pool.reshape((-1,) + pool.shape[2:])
+    pool_flat = pool_flat.at[flat.reshape(-1)].set(
+        new.reshape((b * t,) + new.shape[2:]))
+    return pool_flat.reshape(pool.shape)
+
+
 def write_tail_at(buf, new, index):
     """Per-slot dynamic write: buf (B, T, KV, D) <- new (B, t, KV, D) at
     per-batch offsets ``index`` (B,) along the sequence axis.
@@ -212,7 +260,7 @@ class DecodeState(NamedTuple):
     steps_left: jax.Array   # (B,)  int32 — remaining token budget
     stop_tokens: jax.Array  # (B,)  int32 — per-slot stop id (-1 = none)
     done: jax.Array         # (B,)  bool  — slot finished (or empty)
-    rng: jax.Array          # PRNG key for sampled decoding
+    rng: jax.Array          # (B, 2) uint32 — per-slot PRNG key chains
     caches: Any             # per-layer doc KV / SSM state pytree
     tails: Any              # per-layer preallocated tail buffers
 
@@ -224,7 +272,13 @@ def decode_loop(serve_fn: Callable, fold_fn: Callable, sample_fn: Callable,
     serve_fn(tokens, positions, caches, tails, tail_len, doc_len)
         -> (logits (B, V), per-layer updates)
     fold_fn(caches, tails, updates) -> (caches, tails)   — static shapes
-    sample_fn(logits, key) -> (B,) int32 next tokens
+    sample_fn(logits, keys) -> (B,) int32 next tokens, keys (B, 2)
+
+    ``state.rng`` is a stack of per-slot key chains (B, 2): every step
+    splits each slot's key independently, so the sampled stream a slot
+    consumes depends only on its own chain — not on which requests share
+    the batch or where decode-chunk boundaries fall (the scheduler seeds
+    a slot's chain from its request id at admission).
 
     Per-slot stop handling: a slot whose sampled token equals its stop id
     (or whose budget runs out) is marked done; done slots emit
@@ -238,8 +292,9 @@ def decode_loop(serve_fn: Callable, fold_fn: Callable, sample_fn: Callable,
                                    carry.caches, carry.tails,
                                    carry.tail_len, carry.doc_len)
         caches, tails = fold_fn(carry.caches, carry.tails, updates)
-        rng, sub = jax.random.split(carry.rng)
-        nxt = sample_fn(logits, sub)
+        keys = jax.vmap(jax.random.split)(carry.rng)        # (B, 2, 2)
+        rng = keys[:, 0]
+        nxt = sample_fn(logits, keys[:, 1])
         nxt = jnp.where(carry.done, pad_token, nxt).astype(jnp.int32)
         steps_left = jnp.where(carry.done, carry.steps_left,
                                carry.steps_left - 1)

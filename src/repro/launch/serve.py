@@ -29,6 +29,13 @@ def main() -> None:
                     help="power-of-two chunk size for streamed (chunked) "
                          "prefill; only the exact full/ring strategies "
                          "can chunk (default: monolithic prefill)")
+    ap.add_argument("--cache-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="decode-format doc-cache storage: dense per-slot "
+                         "buffers (the oracle) or a paged pool + page "
+                         "tables (single-device only; see docs/serving.md)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="rows per page for --cache-layout paged")
     args = ap.parse_args()
 
     if args.devices > 1:
@@ -75,7 +82,13 @@ def main() -> None:
               if args.strategy in ("apb", "star") else None)
     rctx = RunCtx(strategy=args.strategy, pctx=pctx, layout=layout,
                   cache_axes=cache_axes)
-    engine = Engine(cfg, params, rctx)
+    if args.cache_layout == "paged" and cache_axes:
+        raise SystemExit(
+            "--cache-layout paged needs a single-device run (the sharded "
+            "doc cache cannot be gathered through a local page table); "
+            "use --devices 1 or --cache-layout dense")
+    engine = Engine(cfg, params, rctx, cache_layout=args.cache_layout,
+                    page_size=args.page_size)
 
     rng = np.random.default_rng(0)
     doc = jnp.asarray(rng.integers(10, cfg.vocab_size,

@@ -133,6 +133,9 @@ def _build_decoder_only(cfg):
         Returns (logits (B, V), per-layer cache updates).  With
         ``tail_valid`` (B,) the tails are static-shape slot buffers and the
         updates are the updated buffers (fused decode-loop layout).
+        ``caches`` may be dense ({"k","v"} per-slot buffers masked by
+        ``valid_len``) or paged (pool + "pt" page tables, serving.cache)
+        — the layer gathers a dense view per block either way.
         """
         hidden, updates, _ = tf.forward_decode(
             params, cfg, token, position, caches, tails, rctx,
@@ -151,10 +154,12 @@ def _build_decoder_only(cfg):
     def chunk_step(params, chunk, positions, caches, rctx: RunCtx,
                    valid_len=None):
         """chunk: (B, t) ints or (B, t, d) embeds at global ``positions``;
-        caches: decode-format doc caches with ``valid_len`` (B,) valid
-        rows.  Returns (last-position logits (B, V), per-layer updates) —
-        attention updates are the chunk's KV, mamba updates the advanced
-        state (see transformer.forward_chunk)."""
+        caches: decode-format doc caches (dense or paged) with
+        ``valid_len`` (B,) valid rows.  Returns (last-position logits
+        (B, V), per-layer updates) — attention updates are the chunk's
+        KV (the caller appends them: dense ``dynamic_update_slice`` or
+        paged row scatter, serving.cache.append_doc_chunk), mamba
+        updates the advanced state (see transformer.forward_chunk)."""
         hidden, updates, _ = tf.forward_chunk(params, cfg, chunk, positions,
                                               caches, rctx,
                                               valid_len=valid_len)

@@ -284,14 +284,24 @@ def apply_layer_decode(p, cfg, kind, x, positions, cache, tail,
     shapes — the fused decode scan carries it).  Without it, the seed
     behaviour: tail grows by concatenation and the update is just the new
     token's KV.
+
+    A *paged* doc cache (a "pt" page table alongside the {"k","v"} pool,
+    serving.cache layout) is gathered to a dense per-slot view first;
+    ``valid_len`` masks past each slot's logical document length exactly
+    as it masks dense zero padding, so the layouts are bit-identical.
     """
     h = norm_apply(p["norm1"], x, cfg.norm, cfg.norm_eps)
 
     if kind.mixer == "attn":
         q, k_new, v_new = attn.attn_qkv(p["attn"], cfg, h, positions)
         window = kind.window or 0
+        if "pt" in cache:
+            k_doc, v_doc = dec.paged_gather_kv(cache["k"], cache["v"],
+                                               cache["pt"])
+        else:
+            k_doc, v_doc = cache["k"], cache["v"]
         ctx_out, ctx_lse = dec.decode_attention_distributed(
-            q, cache["k"], cache["v"], pctx=rctx.pctx,
+            q, k_doc, v_doc, pctx=rctx.pctx,
             cache_axes=rctx.cache_axes, valid_len=valid_len,
             total_len=total_len, window=window,
             softcap=cfg.attn_logit_softcap)
@@ -396,7 +406,9 @@ def forward_chunk(params, cfg, chunk, positions, caches, rctx: RunCtx,
     chunk: (B, t) int tokens or (B, t, d) embeddings — the next ``t``
     document (or query) tokens.  caches: decode-format slot buffers
     (attention {"k","v"} (blocks, B, cap, KV, D) with the first
-    ``valid_len`` rows valid; mamba {"state","conv"} carried states).
+    ``valid_len`` rows valid — or the paged pool + "pt" page-table
+    layout, read through a gather; mamba {"state","conv"} carried
+    states).
 
     Each chunk attends to the valid cache prefix (chunks 0..c-1) and
     causally to itself, LSE-merged — ``dec.query_context_attention``
@@ -419,8 +431,16 @@ def forward_chunk(params, cfg, chunk, positions, caches, rctx: RunCtx,
             h = norm_apply(p["norm1"], x, cfg.norm, cfg.norm_eps)
             if kind.mixer == "attn":
                 q, k_new, v_new = attn.attn_qkv(p["attn"], cfg, h, positions)
+                if "pt" in block_caches[i]:
+                    # paged doc cache: gather the dense per-slot view
+                    # through the page table; valid_len masks the rest
+                    ck, cv = dec.paged_gather_kv(block_caches[i]["k"],
+                                                 block_caches[i]["v"],
+                                                 block_caches[i]["pt"])
+                else:
+                    ck, cv = block_caches[i]["k"], block_caches[i]["v"]
                 out = dec.query_context_attention(
-                    q, block_caches[i]["k"], block_caches[i]["v"],
+                    q, ck, cv,
                     k_new, v_new, pctx=rctx.pctx,
                     cache_axes=rctx.cache_axes, valid_len=valid_len,
                     softcap=cfg.attn_logit_softcap)

@@ -9,13 +9,40 @@ Cache layout after prefill (decoder-only):
   * mamba layers: the running {"state", "conv"} (post-query), updated in
     place each step; the per-shard doc states from prefill are collapsed
     to the last shard's (the true end-of-document state).
+
+Slotted decode-format doc caches come in two storage layouts (see
+docs/architecture.md for the full picture):
+
+  * **dense** — per-slot buffers {"k","v"} (blocks, B, doc_capacity, KV,
+    D) padded to the largest admitted document; rows past the per-slot
+    ``valid_len``/``doc_len`` are zero padding, masked at attention time.
+  * **paged** — a vLLM-style global pool {"k","v"} (blocks, num_pages,
+    page_size, KV, D) plus a per-slot page table "pt" (blocks, B, P)
+    int32 mapping logical page j of slot b to a physical pool page.  A
+    slot only holds ``ceil(doc_len / page_size)`` pages, so admission
+    memory is O(actual document length) and short requests stop paying
+    the longest request's capacity.  Reads gather a dense per-slot view
+    through the table (``paged_read``); writes scatter per row
+    (``append_doc_chunk``) or per page (``write_doc_pages``).  Page-table
+    entries past a slot's reserved pages are stale/zero — every row they
+    could expose is masked by ``valid_len`` exactly like dense padding,
+    which is why the two layouts are bit-identical in output.
+
+Fill-level vocabulary used throughout the serving stack:
+  * ``doc_len`` / ``valid_len`` — valid rows in a slot's *document*
+    cache (dense prefix length, or logical length through the page
+    table).
+  * ``tail_valid`` / ``tail_len`` — valid rows in a slot's *tail* ring
+    buffer (query KV + generated tokens); capped by ``tail_capacity``.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import decode as dec
 
 
 def pow2_bucket(n: int) -> int:
@@ -75,11 +102,24 @@ def check_tail_capacity(capacity: int, lq: int, budget: int,
 
 def attn_cache_len(caches) -> int:
     """Sequence length of the (stacked) attention doc caches; 0 for
-    pure-SSM models."""
+    pure-SSM models.
+
+    For a paged cache this is the *logical capacity* a page table can
+    address (P * page_size), not any slot's actual document length —
+    callers needing the true fill level must track ``doc_len``
+    themselves (the engine/scheduler do)."""
     for c in caches:
         if "k" in c:
+            if "pt" in c:
+                return c["pt"].shape[-1] * c["k"].shape[2]
             return c["k"].shape[2]
     return 0
+
+
+def has_attn_cache(caches) -> bool:
+    """True if any layer carries an attention doc cache (dense or paged);
+    False for pure-SSM stacks, whose document state is length-free."""
+    return any("k" in c for c in caches)
 
 
 def first_decode_position(n_doc: int, lq: int) -> int:
@@ -104,8 +144,10 @@ def to_decode_caches(prefill_caches) -> Tuple:
 
 
 def init_tails(query_tails) -> Tuple:
-    """Tails straight from the query pass: attention tails keep {"k","v"};
-    mamba tails are *states* and move into the decode cache instead."""
+    """Tails straight from the query pass (concat layout): attention
+    tails keep {"k","v"} (blocks, B, lq, KV, D) and grow by
+    concatenation each step; mamba tails are *states* and move into the
+    decode cache instead (empty dict here)."""
     out = []
     for t in query_tails:
         if "k" in t:
@@ -117,7 +159,8 @@ def init_tails(query_tails) -> Tuple:
 
 def absorb_query_states(decode_caches, query_tails) -> Tuple:
     """After the query pass, mamba states advanced past the query: the
-    query-tail states supersede the doc-final states."""
+    query-tail {"state","conv"} supersede the doc-final states in the
+    decode caches (attention caches — dense or paged — pass through)."""
     out = []
     for c, t in zip(decode_caches, query_tails):
         if "state" in c and "state" in t:
@@ -184,8 +227,212 @@ def pad_doc_caches(caches, capacity: int) -> Tuple:
     return tuple(out)
 
 
-def alloc_doc_caches(cfg, batch: int, capacity: int, dtype=jnp.float32
-                     ) -> Tuple:
+# ---------------------------------------------------------------------------
+# Paged layout — global page pool + per-slot page tables
+# ---------------------------------------------------------------------------
+
+
+def pages_for(n: int, page_size: int) -> int:
+    """Pages needed to hold ``n`` document rows (>= 1: even an empty
+    reservation pins one page so a slot's table row is never empty)."""
+    if page_size < 1:
+        raise ValueError(f"page_size must be >= 1, got {page_size}")
+    return max(1, -(-n // page_size))
+
+
+class PageAllocator:
+    """Host-side free-list allocator over a fixed pool of pages.
+
+    The serving pool is ``num_pages`` fixed-size pages; a request
+    reserves ``pages_for(doc_len)`` of them at admission time and
+    releases them when its slot retires (completion, stop token, or
+    budget exhaustion).  Any free page satisfies any reservation — page
+    granularity means churned mixed-length traffic cannot fragment the
+    pool below its free count.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        self.num_pages = num_pages
+        # pop() from the tail -> ascending physical order for fresh pools
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._reserved = set()
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._reserved)
+
+    def reserve(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` pages off the free list; None (reserve nothing) if
+        fewer than ``n`` are free — the caller queues the admission."""
+        if n < 1:
+            raise ValueError(f"reservation must be >= 1 pages, got {n}")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._reserved.update(pages)
+        return pages
+
+    def release(self, pages: List[int]) -> None:
+        """Return a reservation to the free list.  Double release (or a
+        page this allocator never issued) raises — silently recycling a
+        live page would hand one request's KV to another."""
+        for p in pages:
+            if p not in self._reserved:
+                raise ValueError(
+                    f"page {p} is not currently reserved (double release "
+                    f"or foreign page)")
+        for p in pages:
+            self._reserved.discard(p)
+            self._free.append(p)
+
+
+def paged_read(pool_k, pool_v, page_table):
+    """Gather dense per-slot views (B, P*page_size, KV, D) of one layer's
+    paged K/V through its page table (B, P).
+
+    Pure ``jnp.take`` (core.decode.paged_gather_kv — the same primitive
+    the model's attention sites call) — the result feeds the existing
+    LSE-merge attention machinery unchanged; rows past a slot's
+    ``valid_len`` are masked there, so gathered garbage from stale table
+    entries is inert."""
+    return dec.paged_gather_kv(pool_k, pool_v, page_table)
+
+
+def dense_to_paged(caches, page_size: int) -> Tuple:
+    """Dense stacked doc caches -> paged, with identity page tables.
+
+    Attention {"k","v"} (blocks, B, n, KV, D) becomes a pool
+    {"k","v"} (blocks, B*P, page_size, KV, D) + "pt" (blocks, B, P) where
+    row b owns the contiguous pages [b*P, (b+1)*P) — a pure pad+reshape,
+    so the valid rows are bit-identical to the dense layout.  Mamba
+    states are length-free and pass through.  Used by ``Engine.generate``
+    (single-batch paged serving); the scheduler allocates its shared pool
+    directly (``alloc_paged_slots``)."""
+    out = []
+    for c in caches:
+        if "k" in c:
+            blocks, b, n = c["k"].shape[:3]
+            p = pages_for(n, page_size)
+            pad = [(0, 0)] * c["k"].ndim
+            pad[2] = (0, p * page_size - n)
+            pt = jnp.broadcast_to(
+                jnp.arange(b * p, dtype=jnp.int32).reshape(b, p),
+                (blocks, b, p))
+            out.append({
+                "k": jnp.pad(c["k"], pad).reshape(
+                    (blocks, b * p, page_size) + c["k"].shape[3:]),
+                "v": jnp.pad(c["v"], pad).reshape(
+                    (blocks, b * p, page_size) + c["v"].shape[3:]),
+                "pt": pt})
+        else:
+            out.append(c)
+    return tuple(out)
+
+
+def paged_to_dense(caches) -> Tuple:
+    """Gather paged stacked doc caches back to the dense layout
+    (blocks, B, P*page_size, KV, D) — the inverse view of
+    ``dense_to_paged`` (rows past each slot's ``doc_len`` are whatever
+    the pages held; callers mask or slice by the true length)."""
+    read = jax.vmap(paged_read)                  # over the blocks axis
+    out = []
+    for c in caches:
+        if "pt" in c:
+            k, v = read(c["k"], c["v"], c["pt"])
+            out.append({"k": k, "v": v})
+        else:
+            out.append(c)
+    return tuple(out)
+
+
+def alloc_paged_slots(req_caches, n_slots: int, num_pages: int,
+                      page_size: int, table_width: int, widen) -> Tuple:
+    """Shared slot caches for the paged scheduler, shaped after one
+    prefilled request: attention layers get a zero global pool
+    {"k","v"} (blocks, num_pages, page_size, KV, D) + zero page tables
+    "pt" (blocks, n_slots, table_width); mamba layers are widened to
+    ``n_slots`` on the batch axis by ``widen`` (they stay per-slot dense —
+    their state is length-free, paging buys nothing)."""
+    out = []
+    for c in req_caches:
+        if "k" in c:
+            blocks = c["k"].shape[0]
+            tail_shape = c["k"].shape[3:]
+            pool_shape = (blocks, num_pages, page_size) + tail_shape
+            out.append({
+                "k": jnp.zeros(pool_shape, c["k"].dtype),
+                "v": jnp.zeros(pool_shape, c["v"].dtype),
+                "pt": jnp.zeros((blocks, n_slots, table_width),
+                                jnp.int32)})
+        else:
+            out.append({k: widen(v) for k, v in c.items()})
+    return tuple(out)
+
+
+def write_doc_pages(caches, req_caches, slot: int, pages: List[int],
+                    page_size: int) -> Tuple:
+    """Paste one prefilled request into the paged shared caches.
+
+    Attention — two request layouts:
+      * dense (monolithic admission): the request's doc cache
+        (blocks, 1, m, KV, D) is split into ``len(pages)`` pages
+        (zero-padded to the page boundary) and written into the pool at
+        the reserved physical pages;
+      * paged (chunked admission): the request streamed into an
+        exact-length mini-pool with an identity table (batch 1 — pool
+        page j *is* logical page j), so its pages copy straight across,
+        no densify/re-split round trip.
+    Either way slot ``slot``'s page-table row maps logical
+    0..len(pages)-1 to the reservation (stale entries past it are zeroed
+    — they are masked by ``doc_len`` anyway, but a clean table keeps the
+    layout auditable).  Mamba: per-slot paste, same as the dense layout.
+    Host-side: runs once per admission, not per token."""
+    pages_arr = jnp.asarray(pages, jnp.int32)
+    npg = len(pages)
+    out = []
+    for c, rc in zip(caches, req_caches):
+        if "pt" in c and "pt" in rc:
+            if rc["k"].shape[1] != npg or rc["k"].shape[2] != page_size:
+                raise ValueError(
+                    f"request mini-pool holds {rc['k'].shape[1]} pages of "
+                    f"{rc['k'].shape[2]} rows but {npg} pages of "
+                    f"{page_size} were reserved")
+            pt = c["pt"].at[:, slot, :].set(0)
+            pt = pt.at[:, slot, :npg].set(pages_arr)
+            out.append({"k": c["k"].at[:, pages_arr].set(rc["k"]),
+                        "v": c["v"].at[:, pages_arr].set(rc["v"]),
+                        "pt": pt})
+        elif "pt" in c:
+            blocks, _, m = rc["k"].shape[:3]
+            if m > npg * page_size:
+                raise ValueError(
+                    f"request cache has {m} rows but only {npg} pages "
+                    f"({npg * page_size} rows) were reserved")
+            pad = [(0, 0)] * rc["k"].ndim
+            pad[2] = (0, npg * page_size - m)
+            tail_shape = rc["k"].shape[3:]
+            paged_rows = {
+                k: jnp.pad(rc[k], pad).reshape(
+                    (blocks, npg, page_size) + tail_shape)
+                for k in ("k", "v")}
+            pt = c["pt"].at[:, slot, :].set(0)
+            pt = pt.at[:, slot, :npg].set(pages_arr)
+            out.append({"k": c["k"].at[:, pages_arr].set(paged_rows["k"]),
+                        "v": c["v"].at[:, pages_arr].set(paged_rows["v"]),
+                        "pt": pt})
+        else:
+            out.append({k: c[k].at[:, slot].set(rc[k][:, 0]) for k in c})
+    return tuple(out)
+
+
+def alloc_doc_caches(cfg, batch: int, capacity: int, dtype=jnp.float32,
+                     page_size: Optional[int] = None) -> Tuple:
     """Zero decode-format doc caches for chunked prefill.
 
     One dict per block-pattern slot, leaves stacked on a leading
@@ -193,11 +440,26 @@ def alloc_doc_caches(cfg, batch: int, capacity: int, dtype=jnp.float32
     (blocks, B, capacity, KV, D) filled by ``append_doc_chunk``; mamba
     states start at the zero state (== a fresh document: ``ssd_chunked``
     with no ``init_state`` and ``_causal_conv`` with no left context are
-    exactly the zero-state/zero-context runs)."""
+    exactly the zero-state/zero-context runs).
+
+    With ``page_size`` set the attention caches come out *paged*: a pool
+    {"k","v"} (blocks, B*P, page_size, KV, D) with identity page tables
+    "pt" (blocks, B, P), P = pages_for(capacity) — chunk KV is then
+    scattered page-by-page by ``append_doc_chunk``."""
     out = []
     nb = cfg.num_blocks
     for kind in cfg.block_pattern:
         if kind.mixer == "attn":
+            if page_size is not None:
+                p = pages_for(capacity, page_size)
+                shape = (nb, batch * p, page_size, cfg.num_kv_heads,
+                         cfg.head_dim)
+                pt = jnp.broadcast_to(
+                    jnp.arange(batch * p, dtype=jnp.int32).reshape(
+                        batch, p), (nb, batch, p))
+                out.append({"k": jnp.zeros(shape, dtype),
+                            "v": jnp.zeros(shape, dtype), "pt": pt})
+                continue
             shape = (nb, batch, capacity, cfg.num_kv_heads, cfg.head_dim)
             out.append({"k": jnp.zeros(shape, dtype),
                         "v": jnp.zeros(shape, dtype)})
@@ -216,15 +478,22 @@ def alloc_doc_caches(cfg, batch: int, capacity: int, dtype=jnp.float32
 def append_doc_chunk(caches, updates, doc_len) -> Tuple:
     """Fold one prefill chunk into decode-format doc caches.
 
-    Attention updates {"k","v"} (blocks, B, t, KV, D) are written into the
-    preallocated doc buffers at per-slot offsets ``doc_len`` (B,) int32
-    (static-shape ``dynamic_update_slice`` — same recipe as the decode
-    tails); mamba updates replace the carried {"state","conv"}."""
-    from repro.core import decode as dec
+    Attention updates {"k","v"} (blocks, B, t, KV, D) are written at
+    per-slot row offsets ``doc_len`` (B,) int32: into dense doc buffers
+    via static-shape ``dynamic_update_slice`` (same recipe as the decode
+    tails), or — when the cache carries a page table "pt" — scattered
+    row-by-row into the page pool through the table (chunks freely
+    straddle page boundaries; ``page_size`` need not divide the chunk).
+    Mamba updates replace the carried {"state","conv"}."""
     write = jax.vmap(dec.write_tail_at, in_axes=(0, 0, None))
+    scatter = jax.vmap(dec.paged_scatter, in_axes=(0, 0, 0, None))
     out = []
     for c, u in zip(caches, updates):
-        if "k" in u and "k" in c:
+        if "k" in u and "pt" in c:
+            out.append({"k": scatter(c["k"], u["k"], c["pt"], doc_len),
+                        "v": scatter(c["v"], u["v"], c["pt"], doc_len),
+                        "pt": c["pt"]})
+        elif "k" in u and "k" in c:
             out.append({"k": write(c["k"], u["k"], doc_len),
                         "v": write(c["v"], u["v"], doc_len)})
         elif "state" in u:
@@ -234,25 +503,30 @@ def append_doc_chunk(caches, updates, doc_len) -> Tuple:
     return tuple(out)
 
 
+def write_slot(dicts, req_dicts, slot: int) -> Tuple:
+    """Paste one request's per-layer dict leaves (batch 1, axis 1 =
+    batch of the stacked (blocks, B, ...) layout) into batch slot
+    ``slot`` of the shared per-slot buffers."""
+    return tuple({k: d[k].at[:, slot].set(rd[k][:, 0]) for k in d}
+                 for d, rd in zip(dicts, req_dicts))
+
+
 def write_request_slot(caches, tails, req_caches, req_tails, slot: int
                        ) -> Tuple[Tuple, Tuple]:
     """Paste one prefilled request (batch 1, already padded to the slot
-    capacities) into batch slot ``slot`` of the shared buffers.  Host-side:
-    runs once per admission, not per token."""
-    new_caches = []
-    for c, rc in zip(caches, req_caches):
-        new_caches.append({k: c[k].at[:, slot].set(rc[k][:, 0])
-                           for k in c})
-    new_tails = []
-    for t, rt in zip(tails, req_tails):
-        new_tails.append({k: t[k].at[:, slot].set(rt[k][:, 0])
-                          for k in t})
-    return tuple(new_caches), tuple(new_tails)
+    capacities) into batch slot ``slot`` of the shared *dense* buffers
+    (doc caches and tail ring buffers alike — every leaf is per-slot on
+    axis 1; the paged pool instead goes through ``write_doc_pages``).
+    Host-side: runs once per admission, not per token."""
+    return (write_slot(caches, req_caches, slot),
+            write_slot(tails, req_tails, slot))
 
 
 def fold_updates_slotted(caches, tails, updates) -> Tuple[Tuple, Tuple]:
-    """Slotted-layout fold: attention updates *are* the updated tail
-    buffers (same shapes — replace); mamba updates replace the state."""
+    """Slotted-layout fold (one decode step, static shapes): attention
+    updates *are* the updated tail ring buffers (blocks, B, T_max, KV, D)
+    — replace wholesale, the doc cache (dense or paged) is untouched;
+    mamba updates replace the carried {"state","conv"}."""
     new_caches, new_tails = [], []
     for c, t, u in zip(caches, tails, updates):
         if "k" in u and "k" in t:
@@ -268,8 +542,9 @@ def fold_updates_slotted(caches, tails, updates) -> Tuple[Tuple, Tuple]:
 
 
 def append_updates(caches, tails, updates) -> Tuple[Tuple, Tuple]:
-    """Fold one decode step's cache updates in:
-    attention -> append new KV to the tail; mamba -> replace state."""
+    """Concat-layout fold (seed/stepwise oracle): attention updates are
+    the new token's KV (blocks, B, 1, KV, D), concatenated onto the tail
+    — shapes grow per step; mamba updates replace the state."""
     new_caches, new_tails = [], []
     for c, t, u in zip(caches, tails, updates):
         if "k" in u and "k" in t:

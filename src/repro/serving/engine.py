@@ -54,14 +54,42 @@ class GenerationResult:
 
 
 class Engine:
-    """Batched prefill+decode driver for one model + strategy."""
+    """Batched prefill+decode driver for one model + strategy.
+
+    ``cache_layout`` picks the decode-format doc-cache storage:
+    ``"dense"`` (per-slot buffers padded to capacity — the bit-exactness
+    oracle) or ``"paged"`` (global page pool + per-slot page tables,
+    ``page_size`` rows per page; admission memory O(actual doc length)).
+    Both layouts produce identical greedy tokens — tests/test_paged_cache
+    holds them to it.
+    """
 
     def __init__(self, cfg, params, rctx: RunCtx, jit: bool = True,
-                 sampling: SamplingParams = sampling_lib.GREEDY):
+                 sampling: SamplingParams = sampling_lib.GREEDY,
+                 cache_layout: str = "dense", page_size: int = 64):
+        if cache_layout not in ("dense", "paged"):
+            raise ValueError(
+                f"cache_layout must be 'dense' or 'paged', got "
+                f"{cache_layout!r}")
+        if cache_layout == "paged":
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            if cfg.is_encoder_decoder:
+                raise ValueError(
+                    "the paged cache layout requires a decoder-only "
+                    "model (encoder-decoder self tails grow by concat)")
+            if rctx.cache_axes:
+                raise ValueError(
+                    "the paged cache layout is single-host only for now: "
+                    "a mesh-sharded doc cache (cache_axes set) cannot be "
+                    "gathered through a local page table — use "
+                    "cache_layout='dense'")
         self.cfg = cfg
         self.params = params
         self.rctx = rctx
         self.sampling = sampling
+        self.cache_layout = cache_layout
+        self.page_size = page_size
         self.model = model_lib.build(cfg)
         if jit:
             self._prefill = jax.jit(
@@ -102,8 +130,9 @@ class Engine:
                 params, tok, pos, caches, tails, self.rctx,
                 valid_len=doc_len, tail_valid=tail_len)
 
-        def sample(logits, key):
-            return sampling_lib.sample(logits, key, sampling)
+        def sample(logits, keys):
+            # keys (B, 2): one chain per slot (sampling.sample_batch)
+            return sampling_lib.sample_batch(logits, keys, sampling)
 
         return dec.decode_loop(serve, cache_lib.fold_updates_slotted,
                                sample, state, num_steps,
@@ -147,6 +176,11 @@ class Engine:
                                      self.rctx, valid_len=doc_len)
 
     @property
+    def paged(self) -> bool:
+        """True when decode-format doc caches use the paged layout."""
+        return self.cache_layout == "paged"
+
+    @property
     def supports_chunked_prefill(self) -> bool:
         """Chunked prefill covers the *exact* (plain-layout) prefill
         paths.  Excluded: encoder-decoder models (growing self tails),
@@ -182,9 +216,10 @@ class Engine:
         Same contract as :meth:`prefill` — (first-token logits,
         decode-format caches, query tails) — except the attention doc
         caches come back padded to ``doc_capacity`` (default: the exact
-        document length, making the two paths interchangeable).  Greedy
-        outputs are bit-exact vs the monolithic path; the monolithic path
-        stays the oracle."""
+        document length, making the two paths interchangeable); on a
+        paged engine they come back in the paged pool + page-table
+        layout instead.  Greedy outputs are bit-exact vs the monolithic
+        path; the monolithic path stays the oracle."""
         cp = self.start_chunked_prefill(doc, query, chunk_size,
                                         doc_capacity=doc_capacity)
         while cp.chunks_left:
@@ -231,10 +266,19 @@ class Engine:
 
         t0 = time.perf_counter()
         if prefill_chunk is not None:
+            # chunked paged prefill allocates the page pool up front and
+            # scatters each chunk page-by-page (no dense intermediate);
+            # the full document streamed in, so its cache length is n
             logits0, caches, q_tails = self.prefill_chunked(
                 doc, query, prefill_chunk)
+            doc_len_val = n if cache_lib.has_attn_cache(caches) else 0
         else:
             logits0, caches, q_tails = self.prefill(doc, query)
+            doc_len_val = cache_lib.attn_cache_len(caches)
+            if self.paged:
+                # monolithic prefill produced dense caches: repage them
+                # (identity tables — a pad+reshape, bit-preserving)
+                caches = cache_lib.dense_to_paged(caches, self.page_size)
         logits0 = jax.block_until_ready(logits0)
         t_prefill = time.perf_counter() - t0
 
@@ -246,9 +290,11 @@ class Engine:
         tails, tail_len = cache_lib.make_tail_buffers(
             q_tails, capacity=lq + 1 + steps_bucket)
         key = rng if rng is not None else jax.random.PRNGKey(0)
-        key, sub = jax.random.split(key)
-        tok0 = sampling_lib.sample(logits0, sub, sampling)      # (B,)
-        b = tok0.shape[0]
+        b = logits0.shape[0]
+        # per-slot key chains: row b's sampled stream depends only on its
+        # own chain (core.decode.decode_loop splits them independently)
+        chains = jax.vmap(jax.random.split)(jax.random.split(key, b))
+        tok0 = sampling_lib.sample_batch(logits0, chains[:, 1], sampling)
         pad_token = stop_token if stop_token is not None else 0
         stop = jnp.full((b,), -1 if stop_token is None else stop_token,
                         jnp.int32)
@@ -261,12 +307,11 @@ class Engine:
                     (b, 1), cache_lib.first_decode_position(n, lq),
                     jnp.int32),
                 tail_len=tail_len,
-                doc_len=jnp.full((b,), cache_lib.attn_cache_len(caches),
-                                 jnp.int32),
+                doc_len=jnp.full((b,), doc_len_val, jnp.int32),
                 steps_left=jnp.full((b,), num_steps, jnp.int32),
                 stop_tokens=stop,
                 done=tok0 == stop,
-                rng=key,
+                rng=chains[:, 0],
                 caches=caches,
                 tails=tails)
             out, _ = self._loop(self.params, state,
@@ -356,6 +401,13 @@ class ChunkedPrefill:
     processes one chunk, so a scheduler can interleave decode chunks
     between steps; ``finish()`` runs the query pass and returns the same
     (logits0, caches, q_tails) contract as ``Engine.prefill``.
+
+    On a paged engine the doc caches are allocated as a page pool with
+    identity page tables and each chunk's KV is scattered page-by-page
+    (``cache_lib.append_doc_chunk`` through the table) — ``finish()``
+    then returns *paged* caches; ``cache_lib.paged_to_dense`` recovers
+    the dense view when a caller needs it (the scheduler copies the
+    pages into its shared pool instead).
     """
 
     def __init__(self, engine: Engine, doc, query, chunk_size: int,
@@ -381,7 +433,8 @@ class ChunkedPrefill:
         self.doc_len = 0
         self.caches = cache_lib.alloc_doc_caches(
             engine.cfg, self.batch, cap,
-            dtype=engine.params["embed"].dtype)
+            dtype=engine.params["embed"].dtype,
+            page_size=engine.page_size if engine.paged else None)
         self.prefill_time_s = 0.0
 
     @property

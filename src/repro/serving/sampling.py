@@ -9,6 +9,7 @@ on-device inside the fused decode scan (core.decode.decode_loop).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -79,3 +80,26 @@ def sample(logits, key, params: SamplingParams):
     if params.top_p < 1.0:
         x = _apply_top_p(x, params.top_p)
     return jax.random.categorical(key, x, axis=-1).astype(jnp.int32)
+
+
+def sample_batch(logits, keys, params: SamplingParams):
+    """Per-slot sampling: logits (B, V), keys (B, 2) — one PRNG key per
+    batch slot -> tokens (B,) int32.
+
+    Row b's draw depends only on ``keys[b]`` (and its logits), so a
+    request's sampled stream is independent of co-scheduled slots; greedy
+    ignores the keys entirely and stays bit-identical to ``sample``.
+    """
+    if params.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.vmap(lambda lg, k: sample(lg[None], k, params)[0])(
+        logits, keys)
+
+
+def slot_chain_key(base_key, request_id: str):
+    """Seed a slot's per-request key chain: fold a stable hash of the
+    request id into the scheduler's base key.  Deterministic across runs
+    and independent of admission order / co-scheduled requests — the
+    invariant behind per-request reproducible sampled serving."""
+    salt = zlib.crc32(str(request_id).encode("utf-8"))
+    return jax.random.fold_in(base_key, jnp.uint32(salt))

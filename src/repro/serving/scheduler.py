@@ -28,6 +28,22 @@ Capacities are static: ``doc_capacity`` bounds the per-request document
 cache length, ``tail_capacity`` bounds query + generated tokens.  Both
 default to the max over submitted requests at ``run()`` time.
 
+With a **paged** engine (``Engine(cache_layout="paged")``) the document
+caches live in a global page pool instead of per-slot dense buffers:
+admission reserves ``ceil(doc_len / page_size)`` pages from a free-list
+allocator (serving.cache.PageAllocator) *before* any prefill compute is
+spent, so memory is O(actual document length) per request — a short
+request no longer pays the longest request's ``doc_capacity``.  When the
+pool is exhausted the admission stays queued (counted in
+``admission_deferrals``) until a retiring slot releases its pages; a
+request that could never fit the whole pool is rejected at validation.
+``num_pages`` sizes the pool (default: the dense-equivalent
+``n_slots * ceil(doc_capacity / page_size)``, i.e. no admission the
+dense layout could take is ever deferred); shrink it to trade memory for
+queueing, or raise ``n_slots`` beyond the dense budget to serve more
+concurrent short requests in the same bytes —
+``benchmarks/bench_paged_cache.py`` measures exactly that.
+
 Caveat — MoE architectures: capacity-based expert dispatch couples all
 batch rows (any token competes for per-expert capacity with every other
 row, including empty slots' pad tokens), so scheduled output is only
@@ -35,11 +51,13 @@ guaranteed to match single-request generation for non-MoE models or
 generous ``moe_capacity_factor``.  This is inherent to batched MoE
 decoding, not specific to the scheduler.
 
-Caveat — sampled serving: one batch-wide PRNG chain advances per decode
-step, so a request's sampled tokens depend on co-scheduled requests and
-chunk boundaries.  Reproducibility holds for an identical submission
-sequence + seed, not per request in isolation (greedy decoding is
-always deterministic).  Per-slot key chains are future work.
+Sampled serving is reproducible **per request**: every slot carries its
+own PRNG key chain, seeded from the scheduler's base ``rng`` and the
+request id (serving.sampling.slot_chain_key) at admission.  A request's
+sampled tokens therefore depend only on (base seed, request id, its own
+logits) — not on co-scheduled requests, admission order, or where
+decode/prefill chunk boundaries fall.  (Greedy decoding is always
+deterministic.)
 """
 from __future__ import annotations
 
@@ -119,12 +137,14 @@ class _SlotInfo:
 
 
 class _Admission:
-    """One in-flight chunked admission bound to a reserved slot."""
+    """One in-flight chunked admission bound to a reserved slot (and, on
+    a paged engine, to its reserved pool pages)."""
 
-    def __init__(self, req: Request, cp, order: int):
+    def __init__(self, req: Request, cp, order: int, pages=None):
         self.req = req
         self.cp = cp                   # engine.ChunkedPrefill
         self.order = order             # FIFO tiebreak for SRPT
+        self.pages = pages             # reserved pool pages (paged only)
 
 
 class Scheduler:
@@ -135,13 +155,16 @@ class Scheduler:
                  sampling: Optional[sampling_lib.SamplingParams] = None,
                  rng: Optional[jax.Array] = None,
                  prefill_chunk: Optional[int] = None,
-                 decode_per_prefill: int = 1):
+                 decode_per_prefill: int = 1,
+                 num_pages: Optional[int] = None):
         """``prefill_chunk``: power-of-two document chunk size enabling
         streamed admissions (None = monolithic prefill, the oracle).
         ``decode_per_prefill``: decode chunks run after each prefill
         chunk while admissions are in flight — the decode:prefill
         interleave ratio (0 = prefill greedily, decode only between
-        admissions)."""
+        admissions).  ``num_pages`` sizes the paged engine's global page
+        pool (default: dense-equivalent n_slots * pages(doc_capacity));
+        ignored for a dense engine."""
         if engine.cfg.is_encoder_decoder:
             # encdec self-attention tails grow by concat inside
             # decode_tokens — not representable in the static-shape
@@ -170,6 +193,8 @@ class Scheduler:
             raise ValueError(
                 f"decode_per_prefill must be >= 0, got "
                 f"{decode_per_prefill}")
+        if num_pages is not None and num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
         self.engine = engine
         self.n_slots = n_slots
         self.decode_chunk = decode_chunk
@@ -179,6 +204,7 @@ class Scheduler:
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.prefill_chunk = prefill_chunk
         self.decode_per_prefill = decode_per_prefill
+        self.num_pages = num_pages
         self.pending: deque = deque()
         self.active: Dict[int, _SlotInfo] = {}
         self.admissions: Dict[int, _Admission] = {}
@@ -186,6 +212,15 @@ class Scheduler:
         self.state: Optional[dec.DecodeState] = None
         self.chunks_run = 0
         self.prefill_chunks_done = 0
+        # paged bookkeeping: the free-list allocator (built once the
+        # capacities resolve), per-slot reservations, and admission stats
+        # (peak concurrency / pool-exhaustion deferrals — what
+        # bench_paged_cache measures)
+        self._paged = engine.paged
+        self._allocator: Optional[cache_lib.PageAllocator] = None
+        self._slot_pages: Dict[int, List[int]] = {}
+        self.peak_active = 0
+        self.admission_deferrals = 0
         self._submitted = 0
         self._run_t0: Optional[float] = None
 
@@ -215,6 +250,18 @@ class Scheduler:
         if self.tail_capacity is None:
             self.tail_capacity = max(
                 r.query.shape[-1] + r.max_new_tokens for r in reqs)
+        if self._paged and self._allocator is None:
+            if self.num_pages is None:
+                # dense-equivalent default: the pool holds what n_slots
+                # dense buffers at doc_capacity would — nothing a dense
+                # scheduler could admit is ever deferred
+                self.num_pages = self.n_slots * cache_lib.pages_for(
+                    self.doc_capacity, self.engine.page_size)
+            self._allocator = cache_lib.PageAllocator(self.num_pages)
+
+    def _pages_needed(self, req: Request) -> int:
+        return cache_lib.pages_for(_doc_seq_len(req.doc),
+                                   self.engine.page_size)
 
     def _validate_request(self, req: Request) -> None:
         """Admission-time capacity screening — before any prefill compute
@@ -232,6 +279,22 @@ class Scheduler:
                 f"request {req.rid} doc length {_doc_seq_len(req.doc)} "
                 f"exceeds doc_capacity={self.doc_capacity}; use a new "
                 f"Scheduler or pass doc_capacity explicitly")
+        if self._paged and self._pages_needed(req) > self.num_pages:
+            # a reservation larger than the whole pool can never be
+            # satisfied — reject now instead of queueing forever
+            raise ValueError(
+                f"request {req.rid} needs {self._pages_needed(req)} pages "
+                f"but the pool holds {self.num_pages}; raise num_pages "
+                f"(or page_size)")
+
+    def _reserve_pages(self, req: Request) -> Optional[List[int]]:
+        """Admission-time page reservation (paged engine).  None means
+        the pool is exhausted right now — the request stays queued and
+        the deferral is counted; pages come back when slots retire."""
+        pages = self._allocator.reserve(self._pages_needed(req))
+        if pages is None:
+            self.admission_deferrals += 1
+        return pages
 
     def _prefill_request(self, req: Request):
         self._validate_request(req)
@@ -242,7 +305,10 @@ class Scheduler:
         logits0 = jax.block_until_ready(logits0)
         t_prefill = time.perf_counter() - t0
         doc_len = cache_lib.attn_cache_len(caches)
-        caches = cache_lib.pad_doc_caches(caches, self.doc_capacity)
+        if not self._paged:
+            # dense slots need the request padded to the shared capacity;
+            # the paged install scatters the exact-length rows into pages
+            caches = cache_lib.pad_doc_caches(caches, self.doc_capacity)
         tails, tail_len = cache_lib.make_tail_buffers(
             q_tails, self.tail_capacity)
         # tail fill level == lq for attention models, 0 for pure-SSM
@@ -252,12 +318,22 @@ class Scheduler:
     def _alloc_state(self, req_caches, req_tails) -> dec.DecodeState:
         """Zero slot buffers shaped after one padded request, widened to
         ``n_slots`` on the batch axis (axis 1 of the block-stacked
-        pytrees); all slots start empty (done=True)."""
+        pytrees); all slots start empty (done=True).  On a paged engine
+        the attention caches become the shared page pool + zero page
+        tables instead of widened dense buffers."""
         def widen(leaf):
             shape = (leaf.shape[0], self.n_slots) + leaf.shape[2:]
             return jnp.zeros(shape, leaf.dtype)
 
-        caches = jax.tree.map(widen, req_caches)
+        if self._paged:
+            caches = cache_lib.alloc_paged_slots(
+                req_caches, self.n_slots, self.num_pages,
+                self.engine.page_size,
+                cache_lib.pages_for(self.doc_capacity,
+                                    self.engine.page_size),
+                widen)
+        else:
+            caches = jax.tree.map(widen, req_caches)
         tails = jax.tree.map(widen, req_tails)
         s = self.n_slots
         return dec.DecodeState(
@@ -268,20 +344,29 @@ class Scheduler:
             steps_left=jnp.zeros((s,), jnp.int32),
             stop_tokens=jnp.full((s,), -1, jnp.int32),
             done=jnp.ones((s,), bool),
-            rng=self.rng,
+            rng=jnp.tile(self.rng[None], (s, 1)),
             caches=caches,
             tails=tails)
 
     def _install(self, req: Request, slot: int, logits0, caches, tails,
-                 tail_fill: int, doc_len: int, t_prefill: float) -> None:
-        """Paste one prefilled request (padded caches + tail buffers)
-        into ``slot`` and sample its first token — shared by the
-        monolithic and chunked admission paths."""
+                 tail_fill: int, doc_len: int, t_prefill: float,
+                 pages: Optional[List[int]] = None) -> None:
+        """Paste one prefilled request (dense request caches + tail
+        buffers) into ``slot`` and sample its first token — shared by the
+        monolithic and chunked admission paths.  ``pages`` is the paged
+        engine's reservation: attention rows are scattered into those
+        pool pages and the slot's page-table row is pointed at them.
+
+        The slot's PRNG chain is seeded from (scheduler rng, request id)
+        here, so the request's sampled stream never depends on which
+        slot it landed in or what else is scheduled."""
         st = self.state
         if st is None:
             st = self._alloc_state(caches, tails)
-        st_rng, sub = jax.random.split(st.rng)
-        tok0 = int(sampling_lib.sample(logits0, sub, self.sampling)[0])
+        chain = sampling_lib.slot_chain_key(self.rng, req.rid)
+        chain, sub = jax.random.split(chain)
+        tok0 = int(sampling_lib.sample_batch(logits0, sub[None],
+                                             self.sampling)[0])
         ttft = (time.perf_counter() - self._run_t0
                 if self._run_t0 is not None else 0.0)
         info = _SlotInfo(req, tok0, t_prefill, self.chunks_run,
@@ -290,8 +375,14 @@ class Scheduler:
         pos0 = cache_lib.first_decode_position(_doc_seq_len(req.doc),
                                                req.query.shape[-1])
         done = info.remaining == 0
-        new_caches, new_tails = cache_lib.write_request_slot(
-            st.caches, st.tails, caches, tails, slot)
+        if self._paged:
+            new_caches = cache_lib.write_doc_pages(
+                st.caches, caches, slot, pages, self.engine.page_size)
+            new_tails = cache_lib.write_slot(st.tails, tails, slot)
+            self._slot_pages[slot] = pages
+        else:
+            new_caches, new_tails = cache_lib.write_request_slot(
+                st.caches, st.tails, caches, tails, slot)
         stop = -1 if req.stop_token is None else req.stop_token
         self.state = dec.DecodeState(
             tokens=st.tokens.at[slot, 0].set(tok0),
@@ -301,33 +392,51 @@ class Scheduler:
             steps_left=st.steps_left.at[slot].set(req.max_new_tokens - 1),
             stop_tokens=st.stop_tokens.at[slot].set(stop),
             done=st.done.at[slot].set(done),
-            rng=st_rng,
+            rng=st.rng.at[slot].set(chain),
             caches=new_caches,
             tails=new_tails)
         self.active[slot] = info
+        self.peak_active = max(self.peak_active, len(self.active))
         if done:
             self._finish(slot)
 
-    def _admit(self, req: Request, slot: int) -> None:
+    def _admit(self, req: Request, slot: int,
+               pages: Optional[List[int]] = None) -> None:
         (logits0, caches, tails, tail_fill, doc_len,
          t_prefill) = self._prefill_request(req)
         self._install(req, slot, logits0, caches, tails, tail_fill,
-                      doc_len, t_prefill)
+                      doc_len, t_prefill, pages=pages)
 
     def _admit_all(self) -> None:
         for slot in range(self.n_slots):
             if not self.pending:
                 break
-            if slot not in self.active:
-                # pop only after a successful admit so a request that
-                # fails validation is not silently lost from the queue
-                self._admit(self.pending[0], slot)
-                self.pending.popleft()
+            if slot in self.active:
+                continue
+            # pop only after a successful admit so a request that
+            # fails validation is not silently lost from the queue
+            req = self.pending[0]
+            pages = None
+            if self._paged:
+                self._validate_request(req)   # raises before the reserve
+                pages = self._reserve_pages(req)
+                if pages is None:
+                    break          # pool exhausted: wait for retirements
+            try:
+                self._admit(req, slot, pages=pages)
+            except Exception:
+                if pages is not None:
+                    self._allocator.release(pages)
+                raise
+            self.pending.popleft()
 
     # ---------------------------------------------- chunked admissions
     def _start_admissions(self) -> None:
         """Bind pending requests to free slots as in-flight chunked
-        admissions (their doc caches stream in chunk by chunk)."""
+        admissions (their doc caches stream in chunk by chunk).  On a
+        paged engine the pool pages are reserved here — before the first
+        chunk is computed — and the streaming buffer is exact-length
+        (O(doc len)), not doc_capacity."""
         for slot in range(self.n_slots):
             if not self.pending:
                 break
@@ -335,12 +444,25 @@ class Scheduler:
                 continue
             req = self.pending[0]
             self._validate_request(req)       # raises before the pop
+            pages = None
+            if self._paged:
+                pages = self._reserve_pages(req)
+                if pages is None:
+                    break          # pool exhausted: wait for retirements
             self.pending.popleft()
-            cp = self.engine.start_chunked_prefill(
-                _doc_batched(req.doc),
-                req.query if req.query.ndim == 2 else req.query[None],
-                self.prefill_chunk, doc_capacity=self.doc_capacity)
-            self.admissions[slot] = _Admission(req, cp, self._submitted)
+            try:
+                cp = self.engine.start_chunked_prefill(
+                    _doc_batched(req.doc),
+                    req.query if req.query.ndim == 2 else req.query[None],
+                    self.prefill_chunk,
+                    doc_capacity=(None if self._paged
+                                  else self.doc_capacity))
+            except Exception:
+                if pages is not None:
+                    self._allocator.release(pages)
+                raise
+            self.admissions[slot] = _Admission(req, cp, self._submitted,
+                                               pages=pages)
             self._submitted += 1
 
     def _prefill_tick(self) -> bool:
@@ -367,17 +489,25 @@ class Scheduler:
         adm = self.admissions.pop(slot)
         req, cp = adm.req, adm.cp
         logits0, caches, q_tails = cp.finish()
-        # the chunked path allocated the doc caches at doc_capacity
-        # already; only the tail buffers remain to build
-        doc_len = cp.n if cache_lib.attn_cache_len(caches) else 0
+        doc_len = cp.n if cache_lib.has_attn_cache(caches) else 0
+        # paged: the exact-length mini-pool's pages copy straight into
+        # the shared pool (write_doc_pages, identity-table fast path);
+        # dense: the chunked path allocated the doc caches at
+        # doc_capacity already — only the tail buffers remain to build
         tails, tail_len = cache_lib.make_tail_buffers(
             q_tails, self.tail_capacity)
         self._install(req, slot, logits0, caches, tails,
-                      int(tail_len[0]), doc_len, cp.prefill_time_s)
+                      int(tail_len[0]), doc_len, cp.prefill_time_s,
+                      pages=adm.pages)
 
     # ------------------------------------------------------------------
     def _finish(self, slot: int) -> None:
         info = self.active.pop(slot)
+        pages = self._slot_pages.pop(slot, None)
+        if pages is not None:
+            # release-on-completion: stop token, budget exhaustion and
+            # degenerate 1-token admissions all come through here
+            self._allocator.release(pages)
         self.results[info.req.rid] = RequestResult(
             rid=info.req.rid,
             tokens=np.asarray(info.tokens, np.int32),
@@ -430,6 +560,14 @@ class Scheduler:
                 self._admit_all()
                 if self.active:
                     self._decode_chunk()
+                elif self.pending:
+                    # unreachable by construction: with nothing active or
+                    # in flight every page is free, so the head either
+                    # admits or fails validation — guard against a silent
+                    # spin if that invariant ever breaks
+                    raise RuntimeError(
+                        "scheduler stalled: pending requests but nothing "
+                        "active or admissible")
             return self.results
         while self.pending or self.admissions or self.active:
             self._start_admissions()
@@ -443,4 +581,8 @@ class Scheduler:
             elif self.active:
                 # nothing streaming in (or all slots busy): pure decode
                 self._decode_chunk()
+            elif self.pending:
+                raise RuntimeError(          # same invariant as above
+                    "scheduler stalled: pending requests but nothing "
+                    "active or admissible")
         return self.results

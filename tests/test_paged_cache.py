@@ -1,0 +1,308 @@
+"""Paged doc cache: the paged layout (global page pool + per-slot page
+tables) must be *bit-identical* to the dense layout — the dense engine
+is the oracle — and the free-list allocator must survive exhaustion,
+early release and mixed retire/admit churn without leaking or
+double-issuing pages.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import decode as dec
+from repro.models import model as model_lib
+from repro.models.transformer import RunCtx
+from repro.serving import cache as cache_lib
+from repro.serving.cache import PageAllocator, pages_for
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Request, Scheduler
+
+ARCHS = ["granite-3-2b", "jamba-1.5-large-398b", "llama3-8b"]
+# transformer w/ softcap+GQA, mamba-mix hybrid, plain GQA transformer
+
+
+def _mk_engines(key, arch, **kw):
+    """One param set, two engines: dense (oracle) and paged."""
+    cfg = get_config(arch).reduced()
+    if cfg.has_moe:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    dense = Engine(cfg, params, RunCtx(strategy="full"))
+    paged = Engine(cfg, params, RunCtx(strategy="full"),
+                   cache_layout="paged", **kw)
+    return cfg, dense, paged
+
+
+def _mk_req(cfg, n, lq, seed):
+    r = np.random.default_rng(seed)
+    return (jnp.asarray(r.integers(0, cfg.vocab_size, (1, n)), jnp.int32),
+            jnp.asarray(r.integers(0, cfg.vocab_size, (1, lq)), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Engine-level bit-exactness: paged == dense
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_paged_matches_dense_monolithic_and_chunked(arch, key):
+    """Greedy tokens must be bit-identical across layouts for both the
+    monolithic and the chunked prefill path (page_size chosen to not
+    divide the document: the last page is partially filled)."""
+    cfg, dense, paged = _mk_engines(key, arch, page_size=16)
+    r = np.random.default_rng(0)
+    doc = jnp.asarray(r.integers(0, cfg.vocab_size, (2, 50)), jnp.int32)
+    query = jnp.asarray(r.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    ref = dense.generate(doc, query, max_new_tokens=6).tokens
+    out = paged.generate(doc, query, max_new_tokens=6).tokens
+    np.testing.assert_array_equal(out, ref)
+    out_c = paged.generate(doc, query, max_new_tokens=6,
+                           prefill_chunk=16).tokens
+    np.testing.assert_array_equal(out_c, ref)
+
+
+def test_paged_doc_length_at_page_boundary(key):
+    """A document exactly filling its pages (n == k * page_size) must
+    not read a phantom extra page or drop the last row."""
+    cfg, dense, paged = _mk_engines(key, "granite-3-2b", page_size=16)
+    doc, query = _mk_req(cfg, 64, 8, 1)          # 64 = 4 * 16 exactly
+    ref = dense.generate(doc, query, max_new_tokens=6).tokens
+    np.testing.assert_array_equal(
+        paged.generate(doc, query, max_new_tokens=6).tokens, ref)
+    np.testing.assert_array_equal(
+        paged.generate(doc, query, max_new_tokens=6,
+                       prefill_chunk=16).tokens, ref)
+
+
+def test_paged_page_size_not_dividing_prefill_chunk(key):
+    """page_size and prefill_chunk need not align: chunks straddle page
+    boundaries and the row-scatter write must still be exact."""
+    cfg, dense, paged = _mk_engines(key, "granite-3-2b", page_size=24)
+    doc, query = _mk_req(cfg, 50, 8, 2)
+    ref = dense.generate(doc, query, max_new_tokens=6).tokens
+    for chunk in (16, 32):                       # 24 ∤ 16, 24 ∤ 32
+        out = paged.generate(doc, query, max_new_tokens=6,
+                             prefill_chunk=chunk).tokens
+        np.testing.assert_array_equal(out, ref)
+
+
+def test_paged_cache_layout_validation(key):
+    cfg = get_config("granite-3-2b").reduced()
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    with pytest.raises(ValueError, match="cache_layout"):
+        Engine(cfg, params, RunCtx(strategy="full"), cache_layout="sparse")
+    with pytest.raises(ValueError, match="page_size"):
+        Engine(cfg, params, RunCtx(strategy="full"), cache_layout="paged",
+               page_size=0)
+    with pytest.raises(ValueError, match="single-host"):
+        Engine(cfg, params, RunCtx(strategy="full", cache_axes=("model",)),
+               cache_layout="paged")
+    whisper = get_config("whisper-tiny").reduced()
+    wparams = model_lib.build(whisper).init(key)
+    with pytest.raises(ValueError, match="decoder-only"):
+        Engine(whisper, wparams, RunCtx(strategy="full"),
+               cache_layout="paged")
+
+
+# ---------------------------------------------------------------------------
+# Layout round-trips (pure cache math, no model)
+# ---------------------------------------------------------------------------
+
+def test_dense_paged_round_trip(key):
+    """dense -> paged -> dense is exact on the valid prefix, and the
+    paged scatter (append path) lands rows where the gather reads them."""
+    blocks, b, n, kv, d = 2, 3, 37, 2, 4
+    dense = {"k": jax.random.normal(key, (blocks, b, n, kv, d)),
+             "v": jax.random.normal(jax.random.fold_in(key, 1),
+                                    (blocks, b, n, kv, d))}
+    paged = cache_lib.dense_to_paged((dense,), page_size=8)[0]
+    assert paged["pt"].shape == (blocks, b, pages_for(n, 8))
+    back = cache_lib.paged_to_dense((paged,))[0]
+    np.testing.assert_array_equal(np.asarray(back["k"][:, :, :n]),
+                                  np.asarray(dense["k"]))
+    # scatter a "chunk" at per-slot offsets, read it back via gather
+    t = 5
+    upd = jax.random.normal(jax.random.fold_in(key, 2), (blocks, b, t, kv, d))
+    off = jnp.asarray([0, 7, 30], jnp.int32)     # page-aligned and not
+    scat = jax.vmap(dec.paged_scatter, in_axes=(0, 0, 0, None))
+    pool = scat(paged["k"], upd, paged["pt"], off)
+    view = jax.vmap(dec.paged_gather)(pool, paged["pt"])
+    for row in range(b):
+        o = int(off[row])
+        np.testing.assert_array_equal(np.asarray(view[:, row, o:o + t]),
+                                      np.asarray(upd[:, row]))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler over the paged pool
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prefill_chunk", [None, 16])
+def test_paged_scheduler_matches_single_requests(key, prefill_chunk):
+    """Mixed-length requests through the shared page pool must match each
+    request generated alone — monolithic and streamed admissions."""
+    cfg, dense, paged = _mk_engines(key, "granite-3-2b", page_size=16)
+    d1, q1 = _mk_req(cfg, 64, 8, 1)
+    d2, q2 = _mk_req(cfg, 24, 4, 2)
+    ref1 = dense.generate(d1, q1, max_new_tokens=10).tokens[0]
+    ref2 = dense.generate(d2, q2, max_new_tokens=4).tokens[0]
+    sch = Scheduler(paged, n_slots=2, decode_chunk=3,
+                    prefill_chunk=prefill_chunk)
+    sch.submit(Request("long", d1, q1, max_new_tokens=10))
+    sch.submit(Request("short", d2, q2, max_new_tokens=4))
+    res = sch.run()
+    np.testing.assert_array_equal(res["long"].tokens, np.asarray(ref1))
+    np.testing.assert_array_equal(res["short"].tokens, np.asarray(ref2))
+
+
+@pytest.mark.parametrize("prefill_chunk", [None, 16])
+def test_pool_exhaustion_queues_and_recovers(key, prefill_chunk):
+    """A pool too small for two long docs serializes them (deferral, not
+    corruption): every request still matches its solo generation, and
+    all pages return to the free list at the end."""
+    cfg, dense, paged = _mk_engines(key, "granite-3-2b", page_size=16)
+    d1, q1 = _mk_req(cfg, 64, 8, 1)              # 4 pages
+    d2, q2 = _mk_req(cfg, 64, 8, 2)              # 4 pages
+    d3, q3 = _mk_req(cfg, 24, 4, 3)              # 2 pages
+    refs = {"a": dense.generate(d1, q1, max_new_tokens=6).tokens[0],
+            "b": dense.generate(d2, q2, max_new_tokens=6).tokens[0],
+            "c": dense.generate(d3, q3, max_new_tokens=4).tokens[0]}
+    sch = Scheduler(paged, n_slots=3, decode_chunk=2, num_pages=5,
+                    prefill_chunk=prefill_chunk)
+    sch.submit(Request("a", d1, q1, max_new_tokens=6))
+    sch.submit(Request("b", d2, q2, max_new_tokens=6))
+    sch.submit(Request("c", d3, q3, max_new_tokens=4))
+    res = sch.run()
+    for rid, ref in refs.items():
+        np.testing.assert_array_equal(res[rid].tokens, np.asarray(ref))
+    assert sch.admission_deferrals > 0           # the pool did push back
+    assert sch._allocator.free_pages == sch.num_pages   # all released
+
+
+def test_request_larger_than_pool_rejected(key):
+    """A reservation no amount of waiting can satisfy fails loudly at
+    validation (queueing it forever would deadlock the scheduler)."""
+    cfg, dense, paged = _mk_engines(key, "granite-3-2b", page_size=16)
+    doc, query = _mk_req(cfg, 64, 8, 1)          # needs 4 pages
+    sch = Scheduler(paged, n_slots=2, decode_chunk=2, num_pages=2,
+                    doc_capacity=64)
+    sch.submit(Request("big", doc, query, max_new_tokens=4))
+    with pytest.raises(ValueError, match="pool holds 2"):
+        sch.run()
+    assert len(sch.pending) == 1                 # not silently dropped
+
+
+def test_pages_released_on_early_stop(key):
+    """A stop token retires the slot mid-budget; its pages must come back
+    (release-on-completion) and be reusable by a later admission."""
+    cfg, dense, paged = _mk_engines(key, "granite-3-2b", page_size=16)
+    doc, query = _mk_req(cfg, 64, 8, 1)
+    ref = dense.generate(doc, query, max_new_tokens=8).tokens[0]
+    stop = int(ref[2])
+    d2, q2 = _mk_req(cfg, 64, 8, 2)
+    ref2 = dense.generate(d2, q2, max_new_tokens=4).tokens[0]
+    # pool fits exactly one 64-token doc: the second admission *requires*
+    # the first one's early release
+    sch = Scheduler(paged, n_slots=2, decode_chunk=4, num_pages=4)
+    sch.submit(Request("stopper", doc, query, max_new_tokens=8,
+                       stop_token=stop))
+    sch.submit(Request("next", d2, q2, max_new_tokens=4))
+    res = sch.run()
+    assert res["stopper"].stopped
+    np.testing.assert_array_equal(res["next"].tokens, np.asarray(ref2))
+    assert sch._allocator.free_pages == 4
+
+
+def test_paged_scheduler_with_apb_prefill(key):
+    """Admissions through the APB (augmented-layout, host-loop) prefill:
+    the local-block doc cache pages into the pool like any dense cache."""
+    from repro.core.splitting import make_layout
+    cfg = get_config("granite-3-2b").reduced()
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    n, lq = 64, 8
+    lay = make_layout(n, lq, 4, anchor_frac=cfg.anchor_frac,
+                      passing_frac=cfg.passing_frac)
+    dense = Engine(cfg, params, RunCtx(strategy="apb", layout=lay))
+    paged = Engine(cfg, params, RunCtx(strategy="apb", layout=lay),
+                   cache_layout="paged", page_size=16)
+    r = np.random.default_rng(1)
+    doc = jnp.asarray(r.integers(0, cfg.vocab_size, (1, n)), jnp.int32)
+    query = jnp.asarray(r.integers(0, cfg.vocab_size, (1, lq)), jnp.int32)
+    ref = dense.generate(doc, query, max_new_tokens=6).tokens[0]
+    sch = Scheduler(paged, n_slots=2, decode_chunk=3)
+    sch.submit(Request("apb", doc, query, max_new_tokens=6))
+    res = sch.run()
+    np.testing.assert_array_equal(res["apb"].tokens, np.asarray(ref))
+
+
+def test_paged_scheduler_hybrid_ssm(key):
+    """Hybrid attention+mamba: mamba states stay per-slot dense while
+    attention pages through the pool; idle slots must not perturb it."""
+    cfg, dense, paged = _mk_engines(key, "jamba-1.5-large-398b",
+                                    page_size=16)
+    doc, query = _mk_req(cfg, 32, 8, 5)
+    ref = dense.generate(doc, query, max_new_tokens=6).tokens[0]
+    sch = Scheduler(paged, n_slots=3, decode_chunk=4)   # 2 idle slots
+    sch.submit(Request("solo", doc, query, max_new_tokens=6))
+    res = sch.run()
+    np.testing.assert_array_equal(res["solo"].tokens, np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_allocator_exhaustion_and_release():
+    a = PageAllocator(4)
+    r1 = a.reserve(3)
+    assert sorted(r1) == [0, 1, 2] and a.free_pages == 1
+    assert a.reserve(2) is None                  # exhausted: no partial take
+    assert a.free_pages == 1                     # failed reserve takes nothing
+    r2 = a.reserve(1)
+    assert a.free_pages == 0
+    a.release(r1)
+    assert a.free_pages == 3
+    with pytest.raises(ValueError, match="double release"):
+        a.release(r1)
+    a.release(r2)
+    assert a.free_pages == 4
+
+
+def test_allocator_churn_no_fragmentation():
+    """Page-granular free lists cannot fragment: after arbitrary mixed
+    retire/admit churn, any reservation <= free_pages succeeds and no
+    page is ever issued twice concurrently."""
+    rng = np.random.default_rng(0)
+    a = PageAllocator(16)
+    held = []
+    for _ in range(200):
+        if held and rng.random() < 0.45:
+            a.release(held.pop(rng.integers(len(held))))
+        else:
+            n = int(rng.integers(1, 5))
+            r = a.reserve(n)
+            if r is None:
+                assert a.free_pages < n          # only exhaustion defers
+            else:
+                held.append(r)
+        live = [p for r in held for p in r]
+        assert len(live) == len(set(live))       # no double issue
+        assert len(live) + a.free_pages == 16    # conservation
+    for r in held:
+        a.release(r)
+    assert a.free_pages == 16
+
+
+def test_pages_for():
+    assert pages_for(0, 8) == 1                  # empty still pins a page
+    assert pages_for(1, 8) == 1
+    assert pages_for(8, 8) == 1
+    assert pages_for(9, 8) == 2
+    assert pages_for(64, 16) == 4
+    with pytest.raises(ValueError):
+        pages_for(8, 0)

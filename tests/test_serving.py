@@ -270,6 +270,53 @@ def test_sampling_reproducible_under_fixed_key(key):
     assert not (a == c).all()
 
 
+def test_sampled_request_reproducible_regardless_of_coscheduling(key):
+    """Per-slot PRNG chains (seeded from the request id): a request's
+    sampled tokens must be identical whether it runs alone, co-scheduled
+    with other requests, submitted in a different order, or admitted
+    through chunked prefill — the ROADMAP per-slot-chain item."""
+    cfg, eng = _mk_engine(key)
+    sp = SamplingParams(temperature=0.8, top_k=50)
+
+    def mk(n, lq, seed):
+        r = np.random.default_rng(seed)
+        return (jnp.asarray(r.integers(0, cfg.vocab_size, (1, n)),
+                            jnp.int32),
+                jnp.asarray(r.integers(0, cfg.vocab_size, (1, lq)),
+                            jnp.int32))
+
+    dR, qR = mk(40, 8, 7)
+    dS, qS = mk(24, 4, 8)
+    dT, qT = mk(64, 8, 9)
+    reqR = lambda: Request("R", dR, qR, max_new_tokens=8)   # noqa: E731
+
+    def run(reqs, prefill_chunk=None):
+        sch = Scheduler(eng, n_slots=2, decode_chunk=3, sampling=sp,
+                        rng=jax.random.PRNGKey(11),
+                        prefill_chunk=prefill_chunk,
+                        doc_capacity=64, tail_capacity=20)
+        for r in reqs:
+            sch.submit(r)
+        return sch.run()["R"].tokens
+
+    alone = run([reqR()])
+    crowd = run([reqR(), Request("S", dS, qS, max_new_tokens=5),
+                 Request("T", dT, qT, max_new_tokens=7)])
+    reordered = run([Request("T", dT, qT, max_new_tokens=7),
+                     Request("S", dS, qS, max_new_tokens=5), reqR()])
+    chunked = run([Request("S", dS, qS, max_new_tokens=5), reqR()],
+                  prefill_chunk=16)
+    np.testing.assert_array_equal(alone, crowd)
+    np.testing.assert_array_equal(alone, reordered)
+    np.testing.assert_array_equal(alone, chunked)
+    # a different base seed still changes the stream
+    sch = Scheduler(eng, n_slots=2, decode_chunk=3, sampling=sp,
+                    rng=jax.random.PRNGKey(12), doc_capacity=64,
+                    tail_capacity=20)
+    sch.submit(reqR())
+    assert not np.array_equal(alone, sch.run()["R"].tokens)
+
+
 def test_sampling_filters():
     key = jax.random.PRNGKey(0)
     logits = jnp.asarray([[0.0, 1.0, 2.0, 3.0, 10.0]])

@@ -1,0 +1,48 @@
+"""Fail CI on broken intra-repo markdown links.
+
+    python tools/check_links.py [files/dirs...]
+
+Default scan set: README.md and docs/**/*.md.  Checks every inline
+markdown link ``[text](target)`` whose target is a relative path
+(external http(s)/mailto links and pure #anchors are skipped; a
+``path#anchor`` target is checked for the path only).  Exit 1 with one
+line per broken link.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def targets(md: pathlib.Path):
+    text = md.read_text(encoding="utf-8")
+    # strip fenced code blocks: example links in them are not navigable
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for m in LINK.finditer(text):
+        t = m.group(1)
+        if not t.startswith(SKIP):
+            yield t.split("#", 1)[0]
+
+
+def main(argv) -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    files = ([pathlib.Path(a) for a in argv] if argv
+             else [root / "README.md", *sorted((root / "docs").glob("**/*.md"))])
+    broken = []
+    for md in files:
+        for t in targets(md):
+            if t and not (md.parent / t).exists():
+                broken.append(f"{md.relative_to(root)}: broken link -> {t}")
+    for line in broken:
+        print(line, file=sys.stderr)
+    print(f"checked {len(files)} file(s): "
+          f"{'FAIL' if broken else 'ok'} ({len(broken)} broken)")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
