@@ -21,6 +21,7 @@ MODULES = [
     ("serving", "benchmarks.bench_serving"),             # decode/serving perf
     ("prefill_chunking", "benchmarks.bench_prefill_chunking"),  # HOL / TTFT
     ("paged_cache", "benchmarks.bench_paged_cache"),     # paged vs dense HBM
+    ("apb_chunked", "benchmarks.bench_apb_chunked"),     # HOL, augmented
 ]
 
 

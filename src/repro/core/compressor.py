@@ -89,6 +89,92 @@ def select_topk(scores, k_cache, v_cache, lp: int,
             idx.transpose(0, 2, 1))
 
 
+# ---------------------------------------------------------------------------
+# Incremental (streaming) top-k — chunked augmented prefill
+# ---------------------------------------------------------------------------
+#
+# The chunked star/apb prefill streams a host's local block through the
+# serving chunk machinery, so the compressor never sees the whole block at
+# once.  The running state below folds one chunk of scores/KV at a time and
+# is *selection-identical* to ``select_topk`` over everything seen so far:
+# candidates are kept sorted by original block position and new rows append
+# after them, so ``lax.top_k``'s stable tie-break (lowest index wins)
+# resolves ties exactly as the monolithic selection's position order does.
+
+# Sentinel position for not-yet-filled candidate rows: sorts after every
+# real block position, and the matching -inf score keeps the row from ever
+# displacing a real candidate.
+TOPK_INVALID_POS = 2 ** 30
+
+
+def running_topk_init(lp: int, kv_heads: int, head_dim: int,
+                      batch_shape: Tuple[int, ...], dtype=jnp.float32):
+    """Empty running-selection state holding ``lp`` candidates per KV head.
+
+    ``batch_shape`` is the leading shape of every leaf (e.g. ``(B,)`` for
+    one layer, ``(blocks, B)`` for a stacked pattern slot — updates are
+    then vmapped over the blocks axis).  Leaves: ``score``/``pos``
+    (*batch_shape*, KV, lp) and ``k``/``v`` (*batch_shape*, KV, lp, dh).
+    """
+    bs = tuple(batch_shape)
+    return {
+        "score": jnp.full(bs + (kv_heads, lp), -jnp.inf, jnp.float32),
+        "pos": jnp.full(bs + (kv_heads, lp), TOPK_INVALID_POS, jnp.int32),
+        "k": jnp.zeros(bs + (kv_heads, lp, head_dim), dtype),
+        "v": jnp.zeros(bs + (kv_heads, lp, head_dim), dtype),
+    }
+
+
+def running_topk_reset(state):
+    """Fresh state with the same shapes/dtypes — reused between hosts."""
+    return {
+        "score": jnp.full_like(state["score"], -jnp.inf),
+        "pos": jnp.full_like(state["pos"], TOPK_INVALID_POS),
+        "k": jnp.zeros_like(state["k"]),
+        "v": jnp.zeros_like(state["v"]),
+    }
+
+
+def running_topk_update(state, scores, k_chunk, v_chunk, offset):
+    """Fold one chunk into the running selection.
+
+    scores: (B, t, KV); k_chunk/v_chunk: (B, t, KV, dh); ``offset`` is the
+    block-local position of the chunk's first row (a traced scalar).
+    Returns the updated state, still position-sorted — after the last
+    chunk of a block of length ``L >= lp`` the state holds exactly
+    ``select_topk``'s selection over the whole block.
+    """
+    b, t, kvh = scores.shape
+    s = jnp.concatenate(
+        [state["score"], scores.transpose(0, 2, 1).astype(jnp.float32)],
+        axis=-1)                                           # (B, KV, lp+t)
+    pos_new = jnp.broadcast_to(
+        (jnp.asarray(offset, jnp.int32)
+         + jnp.arange(t, dtype=jnp.int32))[None, None, :], (b, kvh, t))
+    p = jnp.concatenate([state["pos"], pos_new], axis=-1)
+    kc = jnp.concatenate([state["k"], k_chunk.transpose(0, 2, 1, 3)], axis=2)
+    vc = jnp.concatenate([state["v"], v_chunk.transpose(0, 2, 1, 3)], axis=2)
+    lp = state["score"].shape[-1]
+    top_s, idx = jax.lax.top_k(s, lp)                      # stable ties
+    sel_pos = jnp.take_along_axis(p, idx, axis=-1)
+    order = jnp.argsort(sel_pos, axis=-1)                  # keep position order
+    idx_sorted = jnp.take_along_axis(idx, order, axis=-1)
+    return {
+        "score": jnp.take_along_axis(top_s, order, axis=-1),
+        "pos": jnp.take_along_axis(sel_pos, order, axis=-1),
+        "k": jnp.take_along_axis(kc, idx_sorted[..., None], axis=2),
+        "v": jnp.take_along_axis(vc, idx_sorted[..., None], axis=2),
+    }
+
+
+def running_topk_finalize(state):
+    """(k_sel, v_sel, indices) in ``select_topk``'s layout:
+    (B, lp, KV, dh) / (B, lp, KV), position-ordered."""
+    return (state["k"].transpose(0, 2, 1, 3),
+            state["v"].transpose(0, 2, 1, 3),
+            state["pos"].transpose(0, 2, 1))
+
+
 def oracle_scores(q_query, k_cache) -> jax.Array:
     """Analysis-only oracle: attention mass the *query* puts on each unit.
 

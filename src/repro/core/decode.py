@@ -127,6 +127,120 @@ def decode_attention_distributed(q, k_cache, v_cache, *,
     return fn(q, k_cache, v_cache, vl_arg)
 
 
+def _chunk_ctx_mask(t: int, s_loc: int, gpos, valid_len, start, window):
+    """(B, t, S_loc) visibility of chunk rows into a doc-cache slice.
+
+    Chunk row ``i`` sits at cache row ``valid_len + i`` (chunks append at
+    the end of the valid prefix); it sees cache rows in
+    ``[max(start, row - window + 1), valid_len)``.  ``gpos`` (S_loc,) are
+    the slice's global row indices (shard offset already applied).
+    """
+    vl = jnp.reshape(jnp.asarray(valid_len), (-1, 1, 1))         # (B|1,1,1)
+    g = gpos[None, None, :]
+    mask = g < vl
+    if start is not None:
+        mask = mask & (g >= jnp.reshape(jnp.asarray(start), (-1, 1, 1)))
+    if window and window > 0:
+        row = vl + jnp.arange(t)[None, :, None]                  # (B|1,t,1)
+        mask = mask & (g > row - window)
+    return mask
+
+
+def chunk_context_attention(q, k_cache, v_cache, k_self, v_self, *,
+                            pctx: ParallelCtx,
+                            cache_axes: Tuple[str, ...],
+                            valid_len=None,
+                            start=None,
+                            window: int = 0,
+                            softcap: Optional[float] = None,
+                            k_extra=None, v_extra=None, extra_mask=None):
+    """Chunked-prefill attention: ``t`` chunk rows appended at the end of
+    a doc-cache prefix attend to
+
+      * cache rows ``[start, valid_len)`` — optionally through a sliding
+        ``window`` measured in cache-row distance (each chunk row ``i``
+        lives at cache row ``valid_len + i``), the per-row mask plain
+        decode masking cannot express;
+      * themselves, causally (same window);
+      * an optional *extra* prefix context (``k_extra``/``v_extra``
+        (B, S_e, KV, D) with ``extra_mask`` (S_e,) / (t, S_e) /
+        (B, t, S_e)) that bypasses the window — the augmented layout's
+        anchor + passing KV, which keep attention-sink visibility on
+        windowed layers;
+
+    all parts LSE-merged.  With ``window=0``, ``start=None`` and no extra
+    context this is exactly the query pass (``query_context_attention``).
+    """
+    t = q.shape[1]
+    mesh = pctx.mesh
+    total = k_cache.shape[1]
+    vl = valid_len if valid_len is not None else total
+
+    if mesh is None or not cache_axes:
+        mask = jnp.broadcast_to(
+            _chunk_ctx_mask(t, total, jnp.arange(total), vl, start, window),
+            (q.shape[0], t, total))
+        ctx_out, ctx_lse = partial_attention_lse(
+            q, k_cache, v_cache, mask, softcap=softcap)
+    else:
+        shard_len = total
+        for ax in cache_axes:
+            shard_len //= mesh.shape[ax]
+        bspec = pctx.batch_spec()
+        qspec = P(bspec, None, None, None)
+        cspec = P(bspec, cache_axes, None, None)
+        lspec = P(bspec, None, None)
+        vl_arg = (jnp.asarray(vl) if valid_len is not None
+                  else jnp.full((q.shape[0],), total, jnp.int32))
+        st_arg = (jnp.zeros((q.shape[0],), jnp.int32) if start is None
+                  else jnp.broadcast_to(jnp.asarray(start, jnp.int32),
+                                        (q.shape[0],)))
+
+        def body(qq, kk, vv, vvl, sst):
+            offset = jnp.asarray(0, jnp.int32)
+            stride = shard_len
+            for ax in reversed(cache_axes):
+                offset = offset + jax.lax.axis_index(ax) * stride
+                stride = stride * collectives.axis_size(ax)
+            gpos = offset + jnp.arange(kk.shape[1])
+            mask = jnp.broadcast_to(
+                _chunk_ctx_mask(t, kk.shape[1], gpos, vvl, sst, window),
+                (qq.shape[0], t, kk.shape[1]))
+            out, lse = partial_attention_lse(qq, kk, vv, mask,
+                                             softcap=softcap)
+            return collectives.lse_merge_psum(out, lse, cache_axes)
+
+        fn = collectives.shard_map(
+            body, mesh=mesh,
+            in_specs=(qspec, cspec, cspec, P(bspec), P(bspec)),
+            out_specs=(qspec, lspec))
+        ctx_out, ctx_lse = fn(q, k_cache, v_cache, vl_arg, st_arg)
+
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    if window and window > 0:
+        i = jnp.arange(t)[:, None]
+        j = jnp.arange(t)[None, :]
+        causal = causal & ((i - j) < window)
+    self_out, self_lse = partial_attention_lse(
+        q, k_self, v_self, causal, softcap=softcap)
+    out, lse = collectives.lse_merge_pair(ctx_out, ctx_lse,
+                                          self_out, self_lse)
+
+    if k_extra is not None:
+        em = extra_mask
+        if em is None:
+            em = jnp.ones((k_extra.shape[1],), bool)
+        if em.ndim == 1:
+            em = jnp.broadcast_to(em[None, :], (t, em.shape[-1]))
+        if em.ndim == 2:
+            em = em[None]
+        em = jnp.broadcast_to(em, (q.shape[0], t, k_extra.shape[1]))
+        e_out, e_lse = partial_attention_lse(q, k_extra, v_extra, em,
+                                             softcap=softcap)
+        out, lse = collectives.lse_merge_pair(out, lse, e_out, e_lse)
+    return out
+
+
 def query_context_attention(q, k_cache, v_cache, k_self, v_self, *,
                             pctx: ParallelCtx,
                             cache_axes: Tuple[str, ...],
@@ -134,18 +248,14 @@ def query_context_attention(q, k_cache, v_cache, k_self, v_self, *,
                             softcap: Optional[float] = None):
     """Query pass: lq tokens attend to the whole (sharded) doc cache plus
     causally to themselves; the two parts are LSE-merged (paper Alg. 1).
+    The named special case of ``chunk_context_attention`` — no window, no
+    start offset, no extra prefix.
 
     q/k_self/v_self: (B, lq, ·, D) replicated over cache axes.
     """
-    ctx_out, ctx_lse = decode_attention_distributed(
-        q, k_cache, v_cache, pctx=pctx, cache_axes=cache_axes,
-        valid_len=valid_len, softcap=softcap)
-    lq = q.shape[1]
-    causal = jnp.tril(jnp.ones((lq, lq), bool))
-    self_out, self_lse = partial_attention_lse(
-        q, k_self, v_self, causal, softcap=softcap)
-    out, _ = collectives.lse_merge_pair(ctx_out, ctx_lse, self_out, self_lse)
-    return out
+    return chunk_context_attention(
+        q, k_cache, v_cache, k_self, v_self, pctx=pctx,
+        cache_axes=cache_axes, valid_len=valid_len, softcap=softcap)
 
 
 # ---------------------------------------------------------------------------

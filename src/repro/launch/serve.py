@@ -27,8 +27,11 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0, help="sampling PRNG seed")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="power-of-two chunk size for streamed (chunked) "
-                         "prefill; only the exact full/ring strategies "
-                         "can chunk (default: monolithic prefill)")
+                         "prefill; plain strategies chunk everywhere, "
+                         "star/apb chunk on a single device (the "
+                         "host-loop path streams each emulated host's "
+                         "block with incremental compression); default: "
+                         "monolithic prefill")
     ap.add_argument("--cache-layout", default="dense",
                     choices=["dense", "paged"],
                     help="decode-format doc-cache storage: dense per-slot "
@@ -98,9 +101,11 @@ def main() -> None:
     if args.prefill_chunk and not engine.supports_chunked_prefill:
         raise SystemExit(
             f"--prefill-chunk is not available for this configuration "
-            f"(arch={args.arch}, strategy={args.strategy}): only exact "
-            f"plain-layout prefills without sliding-window layers can be "
-            f"chunked; drop the flag to use the monolithic prefill")
+            f"(arch={args.arch}, strategy={args.strategy}, "
+            f"devices={args.devices}): mesh-sharded star/apb, augmented "
+            f"mamba/MoE and encoder-decoder prefills stay monolithic; "
+            f"drop the flag (or use --devices 1 for the host-loop "
+            f"augmented chunked path)")
     res = engine.generate(doc, query, max_new_tokens=args.new_tokens,
                           sampling=sampling,
                           rng=jax.random.PRNGKey(args.seed),

@@ -152,17 +152,26 @@ def _build_decoder_only(cfg):
         return tf.logits(params, cfg, hidden), tails
 
     def chunk_step(params, chunk, positions, caches, rctx: RunCtx,
-                   valid_len=None):
+                   valid_len=None, use_window: bool = False, aug=None):
         """chunk: (B, t) ints or (B, t, d) embeds at global ``positions``;
         caches: decode-format doc caches (dense or paged) with
         ``valid_len`` (B,) valid rows.  Returns (last-position logits
         (B, V), per-layer updates) — attention updates are the chunk's
         KV (the caller appends them: dense ``dynamic_update_slice`` or
         paged row scatter, serving.cache.append_doc_chunk), mamba
-        updates the advanced state (see transformer.forward_chunk)."""
+        updates the advanced state (see transformer.forward_chunk).
+
+        ``use_window`` applies per-layer sliding windows (mid-document
+        chunks; the query chunk keeps the monolithic query pass's
+        unwindowed view); ``aug`` is the augmented star/apb chunk context
+        (anchor/passing KV + host scalars — see forward_chunk), under
+        which non-windowed apb layers also emit compressor ``score``
+        updates for the streaming block compression."""
         hidden, updates, _ = tf.forward_chunk(params, cfg, chunk, positions,
                                               caches, rctx,
-                                              valid_len=valid_len)
+                                              valid_len=valid_len,
+                                              use_window=use_window,
+                                              aug=aug)
         lg = tf.logits(params, cfg, hidden[:, -1:])
         return lg[:, 0], updates
 

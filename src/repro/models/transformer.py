@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compressor as comp
 from repro.core import decode as dec
 from repro.core import strategies
 from repro.core.compressor import compressor_init
@@ -400,7 +401,7 @@ def forward_decode(params, cfg, token, positions, caches, tails,
 
 
 def forward_chunk(params, cfg, chunk, positions, caches, rctx: RunCtx,
-                  valid_len=None):
+                  valid_len=None, use_window: bool = False, aug=None):
     """One chunked-prefill step over *decode-format* doc caches.
 
     chunk: (B, t) int tokens or (B, t, d) embeddings — the next ``t``
@@ -411,26 +412,58 @@ def forward_chunk(params, cfg, chunk, positions, caches, rctx: RunCtx,
     states).
 
     Each chunk attends to the valid cache prefix (chunks 0..c-1) and
-    causally to itself, LSE-merged — ``dec.query_context_attention``
+    causally to itself, LSE-merged — ``dec.chunk_context_attention``
     generalised from the query pass to arbitrary mid-document chunks.
     Mamba layers continue from the carried state.  Returns
     (hidden, per-layer updates, aux): attention updates {"k","v"} are the
     chunk's own KV (the caller appends them into the doc cache, or keeps
     them as the tail when the chunk is the query), mamba updates
     {"state","conv"} supersede the carried state.
+
+    ``use_window=True`` applies each layer's sliding window to the
+    cache-context and self attention (mid-document chunks of a windowed
+    model); the final *query* chunk keeps ``False`` — the monolithic
+    query pass attends to the whole doc cache on every layer, and the
+    chunked path must reproduce it.
+
+    ``aug`` switches on the augmented (star/apb) chunk computation for
+    one host's local block.  It is a dict of
+      * ``anchor``:  per-slot tuple of {"k","v"} (blocks, B, la, KV, D)
+        — the shared anchor-slot KV (attention-sink, never windowed);
+      * ``passing``: per-slot tuple of {"k","v"} (blocks, B, H*lp, KV, D)
+        holding earlier hosts' compressed blocks (None for star /
+        ``lp == 0``);
+      * traced scalars ``anchor_valid`` (0 on host 0 else la),
+        ``pass_valid`` (host * lp), ``block_start`` (host * lb — the
+        local block's first doc-cache row; earlier hosts' raw rows are
+        *invisible*, they are only reachable through the passing block)
+        and ``block_off`` (block-local offset of this chunk).
+    Non-windowed apb attention layers additionally emit a ``score`` leaf
+    in their update — the compressor scores of the chunk's KV units,
+    which the caller folds into its running top-k selection
+    (core.compressor.running_topk_update).
     """
     x = embed(params, cfg, chunk)
     pattern = cfg.block_pattern
+    t_len = chunk.shape[1]
 
     def body(carry, scanned):
         x, aux = carry
-        block_params, block_caches = scanned
+        if aug is None:
+            block_params, block_caches = scanned
+            block_anchor = block_pass = None
+        elif aug["passing"] is None:
+            block_params, block_caches, block_anchor = scanned
+            block_pass = None
+        else:
+            block_params, block_caches, block_anchor, block_pass = scanned
         updates = []
         for i, kind in enumerate(pattern):
             p = block_params[i]
             h = norm_apply(p["norm1"], x, cfg.norm, cfg.norm_eps)
             if kind.mixer == "attn":
                 q, k_new, v_new = attn.attn_qkv(p["attn"], cfg, h, positions)
+                window = (kind.window or 0) if use_window else 0
                 if "pt" in block_caches[i]:
                     # paged doc cache: gather the dense per-slot view
                     # through the page table; valid_len masks the rest
@@ -439,13 +472,52 @@ def forward_chunk(params, cfg, chunk, positions, caches, rctx: RunCtx,
                                                  block_caches[i]["pt"])
                 else:
                     ck, cv = block_caches[i]["k"], block_caches[i]["v"]
-                out = dec.query_context_attention(
+                start = k_extra = v_extra = extra_mask = None
+                use_pass = False
+                if aug is not None:
+                    start = aug["block_start"]
+                    ak, av = block_anchor[i]["k"], block_anchor[i]["v"]
+                    la = ak.shape[1]
+                    # windowed layers keep anchor visibility but skip the
+                    # passing mechanism (apb degrades to star for them —
+                    # same rule as apply_layer_prefill)
+                    use_pass = (block_pass is not None and not kind.window
+                                and rctx.strategy == "apb")
+                    if use_pass:
+                        pk, pv = block_pass[i]["k"], block_pass[i]["v"]
+                        pcap = pk.shape[1]
+                        k_extra = jnp.concatenate([ak, pk], axis=1)
+                        v_extra = jnp.concatenate([av, pv], axis=1)
+                        cols = jnp.arange(la + pcap)
+                        extra_mask = jnp.where(
+                            cols < la, cols < aug["anchor_valid"],
+                            (cols - la) < aug["pass_valid"])
+                    else:
+                        k_extra, v_extra = ak, av
+                        extra_mask = jnp.arange(la) < aug["anchor_valid"]
+                out = dec.chunk_context_attention(
                     q, ck, cv,
                     k_new, v_new, pctx=rctx.pctx,
                     cache_axes=rctx.cache_axes, valid_len=valid_len,
-                    softcap=cfg.attn_logit_softcap)
+                    start=start, window=window,
+                    softcap=cfg.attn_logit_softcap,
+                    k_extra=k_extra, v_extra=v_extra,
+                    extra_mask=extra_mask)
                 x = x + attn.attn_out(p["attn"], cfg, out)
-                updates.append({"k": k_new, "v": v_new})
+                upd = {"k": k_new, "v": v_new}
+                if use_pass:
+                    # streaming compression: score this chunk's KV units
+                    # for the running top-k (select_topk's chunked twin)
+                    if rctx.compressor_method == "recent":
+                        kvh = k_new.shape[2]
+                        upd["score"] = jnp.broadcast_to(
+                            (aug["block_off"]
+                             + jnp.arange(t_len)).astype(jnp.float32)
+                            [None, :, None], (x.shape[0], t_len, kvh))
+                    else:
+                        upd["score"] = comp.compressor_scores(
+                            p["retain"], q, k_new, v_new)
+                updates.append(upd)
             else:
                 conv_prev = block_caches[i]["conv"]
                 local, (z, c, conv_tail) = mamba2.mamba_apply(
@@ -466,9 +538,14 @@ def forward_chunk(params, cfg, chunk, positions, caches, rctx: RunCtx,
             aux = aux + a
         return (x, aux), tuple(updates)
 
+    xs = [params["blocks"], caches]
+    if aug is not None:
+        xs.append(aug["anchor"])
+        if aug["passing"] is not None:
+            xs.append(aug["passing"])
     (x, aux), updates = jax.lax.scan(
-        body, (x, jnp.zeros((), jnp.float32)),
-        (params["blocks"], caches), unroll=rctx.unroll)
+        body, (x, jnp.zeros((), jnp.float32)), tuple(xs),
+        unroll=rctx.unroll)
     return x, updates, aux
 
 

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compressor as comp
 from repro.core import decode as dec
 from repro.models import model as model_lib
 from repro.models.transformer import RunCtx
@@ -91,6 +92,16 @@ class Engine:
         self.cache_layout = cache_layout
         self.page_size = page_size
         self.model = model_lib.build(cfg)
+        # augmented engines (star/apb with an emulated host-loop layout)
+        # serve two request populations: documents matching the layout
+        # geometry go through the approximate anchor/passing prefill,
+        # everything else through the exact plain path (APB targets the
+        # long-context regime; a short request has nothing to split)
+        lay = rctx.layout
+        self._aug = (rctx.strategy in ("star", "apb") and lay is not None
+                     and lay.n_hosts > 1 and not rctx.seq_sharded)
+        self._plain_rctx = (dataclasses.replace(rctx, layout=None)
+                           if self._aug else rctx)
         if jit:
             self._prefill = jax.jit(
                 lambda p, d, q: self.model.prefill_step(p, d, q, rctx))
@@ -111,6 +122,18 @@ class Engine:
             self._prefill_chunk = jax.jit(self._prefill_chunk_impl,
                                           donate_argnums=(3,))
             self._chunk_query = jax.jit(self._chunk_query_impl)
+            self._prefill_plain = (jax.jit(
+                lambda p, d, q: self.model.prefill_step(
+                    p, d, q, self._plain_rctx))
+                if self._aug else self._prefill)
+            # caches and the running top-k state are dead after each
+            # step (the caller rebinds both) — donate them; the anchor
+            # and passing buffers are re-read every chunk and must not be
+            self._aug_chunk = jax.jit(self._aug_chunk_impl,
+                                      donate_argnums=(3, 7))
+            self._aug_anchor = jax.jit(self._aug_anchor_impl)
+            self._aug_finalize = jax.jit(self._aug_finalize_impl,
+                                         donate_argnums=(0, 1))
         else:
             self._prefill = lambda p, d, q: self.model.prefill_step(
                 p, d, q, rctx)
@@ -119,6 +142,13 @@ class Engine:
             self._loop = self._loop_impl
             self._prefill_chunk = self._prefill_chunk_impl
             self._chunk_query = self._chunk_query_impl
+            self._prefill_plain = (
+                (lambda p, d, q: self.model.prefill_step(
+                    p, d, q, self._plain_rctx))
+                if self._aug else self._prefill)
+            self._aug_chunk = self._aug_chunk_impl
+            self._aug_anchor = self._aug_anchor_impl
+            self._aug_finalize = self._aug_finalize_impl
 
     # ------------------------------------------------------------------
     # Fused decode loop
@@ -150,10 +180,24 @@ class Engine:
                           pad_token=pad_token)
 
     # ------------------------------------------------------------------
+    def _plain_request(self, doc, query) -> bool:
+        """True when a request's geometry does not match an augmented
+        engine's layout — it is then served through the exact plain
+        path (the augmented split is built for one (n_doc, lq))."""
+        if not self._aug:
+            return False
+        lay = self.rctx.layout
+        return (doc.shape[1] != lay.n_doc
+                or query.shape[1] != lay.lq)
+
     def prefill(self, doc, query):
         """Prefill + query pass; returns (first-token logits, decode-format
-        caches, query tails).  Shared by generate() and the scheduler."""
-        logits0, caches, q_tails = self._prefill(self.params, doc, query)
+        caches, query tails).  Shared by generate() and the scheduler.
+        On an augmented engine, requests whose geometry does not match
+        the layout take the exact plain prefill instead."""
+        fn = (self._prefill_plain if self._plain_request(doc, query)
+              else self._prefill)
+        logits0, caches, q_tails = fn(self.params, doc, query)
         caches = cache_lib.to_decode_caches(caches)
         caches = cache_lib.absorb_query_states(caches, q_tails)
         return logits0, caches, q_tails
@@ -163,17 +207,76 @@ class Engine:
     # ------------------------------------------------------------------
     def _prefill_chunk_impl(self, params, chunk, positions, caches,
                             doc_len):
-        """One doc chunk: attend (cache prefix + causal self), append the
-        chunk's KV into the doc cache at ``doc_len``."""
+        """One doc chunk: attend (cache prefix + causal self, sliding
+        windows applied per layer), append the chunk's KV into the doc
+        cache at ``doc_len``."""
         _, updates = self.model.chunk_step(params, chunk, positions, caches,
-                                           self.rctx, valid_len=doc_len)
+                                           self.rctx, valid_len=doc_len,
+                                           use_window=True)
         return cache_lib.append_doc_chunk(caches, updates, doc_len)
 
     def _chunk_query_impl(self, params, query, positions, caches, doc_len):
         """The query pass as the final chunk: same step, but the KV
-        updates become the decode tail instead of doc-cache rows."""
+        updates become the decode tail instead of doc-cache rows (and no
+        window — the monolithic query pass sees the whole doc cache on
+        every layer)."""
         return self.model.chunk_step(params, query, positions, caches,
                                      self.rctx, valid_len=doc_len)
+
+    # ---------------------------------------- augmented (star/apb) chunks
+    def _aug_anchor_impl(self, params, anchor, positions, caches):
+        """The shared anchor slot ([query | first la doc tokens] at
+        positions 0..la-1) as a chunk over an *empty* cache prefix: pure
+        causal self attention through every layer, no window (the
+        monolithic anchor region is never windowed).  Its per-layer KV is
+        the anchor context every later local chunk attends to."""
+        zero = jnp.zeros((anchor.shape[0],), jnp.int32)
+        _, updates = self.model.chunk_step(params, anchor, positions,
+                                           caches, self.rctx,
+                                           valid_len=zero)
+        return updates
+
+    def _aug_chunk_impl(self, params, chunk, positions, caches, doc_len,
+                        anchor, passing, topk, scal):
+        """One local-block chunk of the augmented prefill: attend to the
+        anchor (valid for hosts > 0), earlier hosts' compressed passing
+        blocks, this host's local prefix and causally to itself; append
+        the chunk KV into the doc cache and fold its compressor scores
+        into the running top-k selection (streaming compression)."""
+        aug = {"anchor": anchor, "passing": passing, **scal}
+        _, updates = self.model.chunk_step(params, chunk, positions, caches,
+                                           self.rctx, valid_len=doc_len,
+                                           use_window=True, aug=aug)
+        new_caches = cache_lib.append_doc_chunk(caches, updates, doc_len)
+        new_topk = []
+        for st, u in zip(topk, updates):
+            if st and "score" in u:
+                upd = jax.vmap(comp.running_topk_update,
+                               in_axes=(0, 0, 0, 0, None))
+                new_topk.append(upd(st, u["score"], u["k"], u["v"],
+                                    scal["block_off"]))
+            else:
+                new_topk.append(st)
+        return new_caches, tuple(new_topk)
+
+    def _aug_finalize_impl(self, topk, passing, pass_off):
+        """A host's local block completed: finalize its running top-k
+        into the compressed block and 'communicate' it — write it into
+        the passing buffers at rows [pass_off, pass_off + lp) where the
+        *next* hosts' chunks will see it (pass_valid masking makes it
+        invisible to earlier hosts).  Returns (passing', reset top-k)."""
+        write = jax.vmap(dec.write_tail_at, in_axes=(0, 0, None))
+        new_pass, new_topk = [], []
+        for st, pb in zip(topk, passing):
+            if st and "k" in pb:
+                ksel, vsel, _ = jax.vmap(comp.running_topk_finalize)(st)
+                new_pass.append({"k": write(pb["k"], ksel, pass_off),
+                                 "v": write(pb["v"], vsel, pass_off)})
+                new_topk.append(comp.running_topk_reset(st))
+            else:
+                new_pass.append(pb)
+                new_topk.append(st)
+        return tuple(new_pass), tuple(new_topk)
 
     @property
     def paged(self) -> bool:
@@ -182,30 +285,46 @@ class Engine:
 
     @property
     def supports_chunked_prefill(self) -> bool:
-        """Chunked prefill covers the *exact* (plain-layout) prefill
-        paths.  Excluded: encoder-decoder models (growing self tails),
-        augmented star/apb layouts (the approximate anchor/passing prefill
-        is a different computation per host — chunking it is an open
-        item), sliding-window layers (the chunk step has no windowed
-        context attention yet), and bidirectional contexts (the chunk
-        step is strictly causal-prefix + self)."""
+        """Chunked prefill covers the plain-layout prefill paths
+        (including sliding-window layers, whose chunks go through the
+        windowed chunk-context attention) and the single-device augmented
+        star/apb layouts, whose local blocks stream through the same
+        machinery with incremental Locret compression.  Still excluded:
+        encoder-decoder models (growing self tails), bidirectional
+        contexts (the chunk step is strictly causal-prefix + self),
+        mesh-sharded augmented layouts (lockstep shards cannot stream the
+        sequentially-dependent passing blocks), augmented layouts with
+        mamba layers (augmented mamba itself needs the mesh) or MoE
+        layers (capacity dispatch couples every augmented token in the
+        monolithic pass), and the random/oracle compressors (their
+        scores are not reproducible chunk-by-chunk)."""
         if self.cfg.is_encoder_decoder or self.model.chunk_step is None:
             return False
         if self.rctx.bidirectional:
             return False
-        if any(kind.window for kind in self.cfg.block_pattern):
-            return False
         lay = self.rctx.layout
         if (self.rctx.strategy in ("star", "apb") and lay is not None
                 and lay.n_hosts > 1):
-            return False
+            if self.rctx.seq_sharded:
+                return False
+            if self.cfg.has_mamba or self.cfg.has_moe:
+                return False
+            if (self.rctx.strategy == "apb"
+                    and self.rctx.compressor_method
+                    not in ("retain", "recent")):
+                return False
         return True
 
     def start_chunked_prefill(self, doc, query, chunk_size: int,
                               doc_capacity: Optional[int] = None
                               ) -> "ChunkedPrefill":
         """Begin an incremental chunked prefill (one ``step()`` per chunk;
-        the scheduler interleaves decode chunks between steps)."""
+        the scheduler interleaves decode chunks between steps).  On an
+        augmented engine, layout-matching requests stream through the
+        augmented state machine; everything else through the plain one."""
+        if self._aug and not self._plain_request(doc, query):
+            return AugmentedChunkedPrefill(self, doc, query, chunk_size,
+                                           doc_capacity=doc_capacity)
         return ChunkedPrefill(self, doc, query, chunk_size,
                               doc_capacity=doc_capacity)
 
@@ -414,10 +533,11 @@ class ChunkedPrefill:
                  doc_capacity: Optional[int] = None):
         if not engine.supports_chunked_prefill:
             raise ValueError(
-                "chunked prefill requires a decoder-only model without "
-                "sliding-window layers on a plain (non-augmented) "
-                "strategy; use the monolithic Engine.prefill for this "
-                "configuration")
+                "this engine cannot chunk its prefill (see "
+                "Engine.supports_chunked_prefill: encoder-decoder, "
+                "bidirectional, mesh-sharded augmented layout, augmented "
+                "mamba/MoE, or a random/oracle compressor); use the "
+                "monolithic Engine.prefill for this configuration")
         self.engine = engine
         self.doc = doc
         self.query = query
@@ -478,3 +598,145 @@ class ChunkedPrefill:
         caches = cache_lib.absorb_query_states(self.caches, q_tails)
         self.prefill_time_s += time.perf_counter() - t0
         return logits0, caches, q_tails
+
+
+class AugmentedChunkedPrefill(ChunkedPrefill):
+    """Chunked prefill for the augmented star/apb layout (paper Alg. 2,
+    streamed on the single-device host loop).
+
+    The monolithic augmented prefill computes, per host, attention over
+    ``[anchor | passing | local]`` and compresses the local block's KV
+    for the next hosts.  This state machine reproduces it as a sequence
+    of bounded chunk steps so the scheduler can interleave decode:
+
+      1. **anchor tick** — the shared anchor slot ([query | first la doc
+         tokens] at positions 0..la-1) runs once as a causal chunk over
+         an empty cache; its per-layer KV is identical for every host
+         (host 0's copy is masked away by ``anchor_valid = 0``).
+      2. **local chunks, host-major** — host h's block streams through
+         ``chunk_context_attention``: each chunk sees the anchor, the
+         valid prefix of the passing buffers (``pass_valid = h * lp``),
+         its own block's earlier rows in the doc cache
+         (``block_start = h * lb`` hides earlier hosts' raw rows — they
+         are reachable only via their compressed blocks) and itself,
+         windowed where the layer is.  The chunk's compressor scores
+         fold into a per-layer **running top-k**
+         (core.compressor.running_topk_update) — the streaming twin of
+         ``select_topk`` — so compression needs the block resident only
+         as scores + lp candidates, never all at once.
+      3. **block completion** — the running selection finalizes into the
+         passing buffers at rows [h*lp, (h+1)*lp) (the "communication";
+         on a real mesh this is the AllGather) and the top-k state
+         resets for the next host.
+
+    ``finish()`` is the ordinary exact query pass over the completed doc
+    cache, unchanged from the plain path.  Hosts stream *sequentially*
+    because host h's chunks consume hosts 0..h-1's finalized blocks —
+    the same dependency the mesh hides inside one lockstep layer pass,
+    which is why the mesh-sharded augmented prefill stays monolithic.
+
+    Greedy outputs are bit-exact vs the monolithic augmented prefill
+    (the host-loop oracle, itself pinned to the shard_map path by
+    tests/distributed_checks.py).
+    """
+
+    def __init__(self, engine: Engine, doc, query, chunk_size: int,
+                 doc_capacity: Optional[int] = None):
+        lay = engine.rctx.layout
+        if doc.shape[1] != lay.n_doc or query.shape[1] != lay.lq:
+            raise ValueError(
+                f"augmented chunked prefill needs the layout geometry "
+                f"(n_doc={lay.n_doc}, lq={lay.lq}), got doc length "
+                f"{doc.shape[1]} / query length {query.shape[1]} — "
+                f"mismatching requests are served through the plain path "
+                f"(Engine.start_chunked_prefill dispatches)")
+        super().__init__(engine, doc, query, chunk_size,
+                         doc_capacity=doc_capacity)
+        self.lay = lay
+        self.lp_eff = (min(lay.lp, lay.lb)
+                       if engine.rctx.strategy == "apb" else 0)
+        cfg = engine.cfg
+        dtype = engine.params["embed"].dtype
+        nb = cfg.num_blocks
+        # anchor slot content: [query | first la_doc doc tokens] (query
+        # embedded first when the doc is an embedding tensor — same
+        # recipe as the monolithic augmented prefill_step)
+        if doc.ndim == 2:
+            self._anchor_inputs = jnp.concatenate(
+                [query, doc[:, :lay.la_doc]], axis=1)
+        else:
+            q_emb = engine.params["embed"][query].astype(doc.dtype)
+            self._anchor_inputs = jnp.concatenate(
+                [q_emb, doc[:, :lay.la_doc]], axis=1)
+        self._anchor = None
+        if self.lp_eff > 0:
+            # windowed layers degrade apb -> star (no passing, no
+            # compression), so they carry neither passing buffers nor a
+            # running selection
+            self._passing = tuple(
+                ({} if kind.window else
+                 {"k": jnp.zeros((nb, self.batch,
+                                  lay.n_hosts * self.lp_eff,
+                                  cfg.num_kv_heads, cfg.head_dim), dtype),
+                  "v": jnp.zeros((nb, self.batch,
+                                  lay.n_hosts * self.lp_eff,
+                                  cfg.num_kv_heads, cfg.head_dim), dtype)})
+                for kind in cfg.block_pattern)
+            self._topk = tuple(
+                ({} if kind.window else comp.running_topk_init(
+                    self.lp_eff, cfg.num_kv_heads, cfg.head_dim,
+                    (nb, self.batch), dtype))
+                for kind in cfg.block_pattern)
+        else:
+            self._passing = None
+            self._topk = tuple({} for _ in cfg.block_pattern)
+        # host-major plan: one anchor tick, then each host's local block
+        # in power-of-two chunks; the last chunk of a block triggers the
+        # compression finalize ("communication")
+        plan = [("anchor",)]
+        for h in range(lay.n_hosts):
+            for off, t in cache_lib.chunk_plan(lay.lb, chunk_size):
+                plan.append(("local", h, off, t, off + t == lay.lb))
+        self._plan = plan
+        self._next = 0
+
+    def step(self, sync: bool = True) -> int:
+        """Process the next plan entry (anchor tick or one local chunk);
+        returns entries remaining.  Same sync contract as the plain
+        path."""
+        entry = self._plan[self._next]
+        eng = self.engine
+        t0 = time.perf_counter()
+        if entry[0] == "anchor":
+            positions = jnp.arange(self.lay.la)[None]
+            self._anchor = eng._aug_anchor(
+                eng.params, self._anchor_inputs, positions, self.caches)
+            if sync:
+                jax.block_until_ready(self._anchor)
+        else:
+            _, h, off, t, last = entry
+            lay = self.lay
+            s = h * lay.lb + off
+            chunk = self.doc[:, s:s + t]
+            positions = (lay.lq + s + jnp.arange(t))[None]
+            doc_len = jnp.full((self.batch,), self.doc_len, jnp.int32)
+            scal = {
+                "anchor_valid": jnp.int32(lay.la if h else 0),
+                "pass_valid": jnp.int32(h * self.lp_eff),
+                "block_start": jnp.int32(h * lay.lb),
+                "block_off": jnp.int32(off),
+            }
+            self.caches, self._topk = eng._aug_chunk(
+                eng.params, chunk, positions, self.caches, doc_len,
+                self._anchor, self._passing, self._topk, scal)
+            self.doc_len += t
+            if last and self._passing is not None:
+                pass_off = jnp.full((self.batch,), h * self.lp_eff,
+                                    jnp.int32)
+                self._passing, self._topk = eng._aug_finalize(
+                    self._topk, self._passing, pass_off)
+            if sync:
+                jax.block_until_ready(self.caches)
+        self.prefill_time_s += time.perf_counter() - t0
+        self._next += 1
+        return self.chunks_left

@@ -23,6 +23,12 @@ behind a long document — the Medha head-of-line problem), then runs up to
 the long admission streams in.  A monolithic 100k-token prefill stall
 becomes a sequence of bounded per-chunk stalls.  ``prefill_chunk=None``
 (default) keeps the monolithic admission path — the bit-exactness oracle.
+Augmented (star/apb) admissions join the same queue: a layout-matching
+request streams through ``Engine.AugmentedChunkedPrefill`` (anchor tick,
+then each emulated host's local block with streaming compression), while
+requests whose geometry does not match the engine's layout are served
+through the exact plain path — both orderings fall out of the one SRPT
+tiebreak on chunks remaining.
 
 Capacities are static: ``doc_capacity`` bounds the per-request document
 cache length, ``tail_capacity`` bounds query + generated tokens.  Both
@@ -187,8 +193,9 @@ class Scheduler:
             if not engine.supports_chunked_prefill:
                 raise ValueError(
                     "this engine cannot chunk its prefill (encoder-"
-                    "decoder, sliding-window layers, or an augmented "
-                    "star/apb layout); use prefill_chunk=None")
+                    "decoder, bidirectional, a mesh-sharded augmented "
+                    "layout, augmented mamba/MoE, or a random/oracle "
+                    "compressor); use prefill_chunk=None")
         if decode_per_prefill < 0:
             raise ValueError(
                 f"decode_per_prefill must be >= 0, got "

@@ -11,6 +11,10 @@ Checks:
   5. sequence-parallel mamba (plain + augmented) == single-device chain
   6. end-to-end: sharded train loss (ring) == single-device loss (full)
   7. APB prefill_step lowers and runs end-to-end on the mesh
+  8. local-routed MoE == reference MoE
+  9. chunked augmented prefill (host-loop engine, streaming compression)
+     == the mesh shard_map monolithic prefill — the bridge that pins the
+     serving-side chunked star/apb path to the distributed computation
 """
 import os
 
@@ -263,6 +267,26 @@ def main():
         capacity_factor=8.0)
     check("local-routed MoE == reference", close(y_loc_m, y_ref_m)
           and close(aux_loc_m, aux_ref_m))
+
+    # ------------- 9: chunked augmented prefill == shard_map monolithic
+    # The serving engine chunks the star/apb prefill only on the
+    # single-device host loop (hosts stream sequentially; lockstep mesh
+    # shards cannot).  Its outputs must still match the *mesh*
+    # computation: chunked hostloop -> monolithic hostloop (tier-1) ->
+    # shard_map (check 3) closes the chain; this check takes the two
+    # ends directly.
+    from repro.serving.engine import Engine
+    eng9 = Engine(cfg7, p7, RunCtx(strategy="apb", layout=lay7))
+    check("single-device augmented engine can chunk",
+          eng9.supports_chunked_prefill)
+    lg9, caches9, _ = eng9.prefill_chunked(doc7, qry, 64)
+    check("chunked apb logits == mesh prefill", close(lg9, lg7, 5e-4))
+    k9 = caches9[0]["k"]
+    check("chunked apb doc cache == mesh prefill",
+          k9.shape == k_cache.shape and close(k9, k_cache, 5e-4))
+    eng9m = Engine(cfg7, p7, r7, jit=False)
+    check("mesh augmented gate stays closed",
+          not eng9m.supports_chunked_prefill)
 
     n_fail = OK.count(False)
     print(f"\n{len(OK) - n_fail}/{len(OK)} distributed checks passed")

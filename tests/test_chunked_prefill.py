@@ -5,7 +5,12 @@ guard.
 The monolithic ``Engine.prefill`` path stays the oracle throughout: the
 chunked path must reproduce its greedy outputs token-for-token for every
 chunk size, including a chunk larger than the whole document (single-
-chunk degenerate case).
+chunk degenerate case).  That covers the plain layouts (incl.
+sliding-window layers through the windowed chunk-context attention) and
+the augmented star/apb layouts, whose chunked path streams each emulated
+host's local block with incremental Locret compression — the monolithic
+host-loop prefill is their oracle (itself pinned to the shard_map path
+by tests/distributed_checks.py).
 """
 import dataclasses
 
@@ -14,7 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config
+from repro.configs import ALL_ARCHS, get_config
+from repro.core.splitting import make_layout
 from repro.models import model as model_lib
 from repro.models.transformer import RunCtx
 from repro.serving import cache as cache_lib
@@ -22,13 +28,37 @@ from repro.serving.engine import Engine
 from repro.serving.scheduler import Request, Scheduler
 
 
-def _mk_engine(key, arch="granite-3-2b", **kw):
+def _prep_cfg(arch, window=None):
+    """Reduced config; MoE capacity raised so capacity-based dispatch
+    never drops tokens (batched MoE coupling, see scheduler docstring);
+    ``window`` shrinks sliding windows below the test doc lengths so the
+    windowed masking actually fires (gemma2's 4096 would be inert)."""
     cfg = get_config(arch).reduced()
     if cfg.has_moe:
         cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    if window is not None:
+        pat = tuple(dataclasses.replace(k, window=window) if k.window else k
+                    for k in cfg.block_pattern)
+        cfg = dataclasses.replace(cfg, block_pattern=pat)
+    return cfg
+
+
+def _mk_engine(key, arch="granite-3-2b", **kw):
+    cfg = _prep_cfg(arch)
     model = model_lib.build(cfg)
     params = model.init(key)
     return cfg, Engine(cfg, params, RunCtx(strategy="full"), **kw)
+
+
+def _mk_aug_engine(key, arch, n, lq, hosts, strategy="apb", window=None,
+                   **kw):
+    cfg = _prep_cfg(arch, window=window)
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    lay = make_layout(n, lq, hosts, anchor_frac=cfg.anchor_frac,
+                      passing_frac=cfg.passing_frac)
+    return cfg, Engine(cfg, params, RunCtx(strategy=strategy, layout=lay),
+                       **kw)
 
 
 def _mk_req(cfg, n, lq, seed):
@@ -111,28 +141,169 @@ def test_chunked_prefill_embedding_doc(key):
     np.testing.assert_array_equal(out, ref)
 
 
-def test_chunked_prefill_rejected_for_augmented_layout(key):
-    """The augmented star/apb prefill is a different (approximate)
-    computation — chunking it must be rejected loudly, not silently
-    served through the exact path."""
-    from repro.core.splitting import make_layout
+def test_chunked_prefill_gate_exclusions(key):
+    """What stays gated out of chunked prefill — and why — must be
+    rejected loudly, not silently served through a diverging path."""
     cfg = get_config("granite-3-2b").reduced()
     model = model_lib.build(cfg)
     params = model.init(key)
     lay = make_layout(64, 8, 4, anchor_frac=cfg.anchor_frac,
                       passing_frac=cfg.passing_frac)
-    eng = Engine(cfg, params, RunCtx(strategy="apb", layout=lay))
-    assert not eng.supports_chunked_prefill
-    doc, query = _mk_req(cfg, 64, 8, 2)
-    with pytest.raises(ValueError):
-        eng.prefill_chunked(doc, query, 16)
-    with pytest.raises(ValueError):
-        Scheduler(eng, prefill_chunk=16)
-    # bidirectional contexts are excluded too: the chunk step is strictly
-    # causal-prefix + self and would silently diverge from the oracle
+    # bidirectional contexts: the chunk step is strictly causal-prefix +
+    # self and would silently diverge from the oracle
     eng_bidir = Engine(cfg, params, RunCtx(strategy="full",
                                            bidirectional=True))
     assert not eng_bidir.supports_chunked_prefill
+    # random compressor scores are drawn over the whole block at once —
+    # not reproducible chunk-by-chunk
+    eng_rand = Engine(cfg, params, RunCtx(strategy="apb", layout=lay,
+                                          compressor_method="random"))
+    assert not eng_rand.supports_chunked_prefill
+    doc, query = _mk_req(cfg, 64, 8, 2)
+    with pytest.raises(ValueError):
+        eng_rand.prefill_chunked(doc, query, 16)
+    with pytest.raises(ValueError):
+        Scheduler(eng_rand, prefill_chunk=16)
+    # augmented mamba needs the mesh seq axis — no host-loop oracle to
+    # chunk against
+    cfg_m = get_config("jamba-1.5-large-398b").reduced()
+    model_m = model_lib.build(cfg_m)
+    params_m = model_m.init(key)
+    lay_m = make_layout(64, 8, 4, anchor_frac=cfg_m.anchor_frac,
+                        passing_frac=cfg_m.passing_frac)
+    eng_m = Engine(cfg_m, params_m, RunCtx(strategy="apb", layout=lay_m))
+    assert not eng_m.supports_chunked_prefill
+
+
+# ---------------------------------------------------------------------------
+# Augmented (star/apb) chunked prefill vs the monolithic host-loop oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,window", [("granite-3-2b", None),
+                                         ("gemma2-2b", 6)])
+@pytest.mark.parametrize("cache_layout", ["dense", "paged"])
+def test_aug_chunked_matches_monolithic(arch, window, cache_layout, key):
+    """Chunked augmented (apb) prefill must reproduce the monolithic
+    augmented prefill's greedy tokens — dense and paged doc caches, a
+    dense arch and a sliding-window one (gemma2 windows shrunk below the
+    block length so the windowed chunk masking actually fires)."""
+    kw = ({"cache_layout": "paged", "page_size": 8}
+          if cache_layout == "paged" else {})
+    cfg, eng = _mk_aug_engine(key, arch, 64, 8, 4, window=window, **kw)
+    assert eng.supports_chunked_prefill
+    doc, query = _mk_req(cfg, 64, 8, 0)
+    ref = eng.generate(doc, query, max_new_tokens=6).tokens
+    for chunk in (8, 16):
+        out = eng.generate(doc, query, max_new_tokens=6,
+                           prefill_chunk=chunk).tokens
+        np.testing.assert_array_equal(out, ref)
+
+
+def test_star_chunked_matches_monolithic(key):
+    """STARATTN (anchor only, no passing/compression) chunks through the
+    same machinery."""
+    cfg, eng = _mk_aug_engine(key, "granite-3-2b", 64, 8, 4,
+                              strategy="star")
+    doc, query = _mk_req(cfg, 64, 8, 3)
+    ref = eng.generate(doc, query, max_new_tokens=6).tokens
+    out = eng.generate(doc, query, max_new_tokens=6,
+                       prefill_chunk=8).tokens
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_aug_chunked_cache_contract(key):
+    """The augmented chunked path returns the Engine.prefill contract:
+    same first-token logits, and a doc cache whose valid prefix equals
+    the monolithic augmented cache (local-block KV) to float eps."""
+    cfg, eng = _mk_aug_engine(key, "granite-3-2b", 64, 8, 4)
+    doc, query = _mk_req(cfg, 64, 8, 1)
+    lg_m, caches_m, _ = eng.prefill(doc, query)
+    lg_c, caches_c, _ = eng.prefill_chunked(doc, query, 8,
+                                            doc_capacity=96)
+    np.testing.assert_allclose(np.asarray(lg_m), np.asarray(lg_c),
+                               atol=1e-4, rtol=1e-4)
+    for cm, cc in zip(caches_m, caches_c):
+        if "k" not in cm:
+            continue
+        assert cc["k"].shape[2] == 96
+        np.testing.assert_allclose(np.asarray(cm["k"]),
+                                   np.asarray(cc["k"][:, :, :64]),
+                                   atol=1e-4, rtol=1e-4)
+        assert not np.asarray(cc["k"][:, :, 64:]).any()
+
+
+def test_windowed_plain_chunked_matches_monolithic(key):
+    """Sliding-window layers on a *plain* layout chunk too (the stale
+    gate this PR removed): windowed chunk-context + windowed causal self
+    must reproduce the monolithic windowed prefill, across an uneven
+    pow2 tail where chunks straddle the window."""
+    cfg = _prep_cfg("gemma2-2b", window=6)
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    eng = Engine(cfg, params, RunCtx(strategy="full"))
+    assert eng.supports_chunked_prefill
+    doc, query = _mk_req(cfg, 50, 8, 4)
+    ref = eng.generate(doc, query, max_new_tokens=6).tokens
+    for chunk in (4, 16, 64):
+        out = eng.generate(doc, query, max_new_tokens=6,
+                           prefill_chunk=chunk).tokens
+        np.testing.assert_array_equal(out, ref)
+
+
+def test_scheduler_chunked_augmented_and_plain_mix(key):
+    """An augmented engine's scheduler serves both populations through
+    chunked admissions: a layout-matching request streams the augmented
+    state machine, a short request takes the exact plain path, and both
+    reproduce their solo generates — with the short one admitted first
+    (SRPT) despite being submitted second."""
+    cfg, eng = _mk_aug_engine(key, "granite-3-2b", 64, 8, 4)
+    d_long, q_long = _mk_req(cfg, 64, 8, 5)
+    d_short, q_short = _mk_req(cfg, 16, 4, 6)
+    ref_long = eng.generate(d_long, q_long, max_new_tokens=8).tokens[0]
+    ref_short = eng.generate(d_short, q_short, max_new_tokens=4).tokens[0]
+    sch = Scheduler(eng, n_slots=2, decode_chunk=3, prefill_chunk=8)
+    sch.submit(Request("long", d_long, q_long, max_new_tokens=8))
+    sch.submit(Request("short", d_short, q_short, max_new_tokens=4))
+    res = sch.run()
+    np.testing.assert_array_equal(res["long"].tokens, np.asarray(ref_long))
+    np.testing.assert_array_equal(res["short"].tokens,
+                                  np.asarray(ref_short))
+    # the long augmented admission needs anchor + 8 local chunks; the
+    # short plain one only its own 2 chunks (plus at most one SRPT tie)
+    assert res["short"].admitted_after_prefill_chunks <= 3
+    assert res["long"].admitted_after_prefill_chunks >= 9
+
+
+# ---------------------------------------------------------------------------
+# The gate must reflect reality — every config, both answers checked
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_supports_chunked_prefill_reflects_reality(arch, key):
+    """``supports_chunked_prefill`` is the scheduler's only oracle for
+    whether streaming admissions are safe.  For every registered config:
+    a True gate must mean ``prefill_chunked`` reproduces the monolithic
+    greedy tokens, a False gate must mean the chunked path refuses to
+    run (catches stale gates like the windowed exclusion this PR
+    removed, and gates that silently serve a diverging path)."""
+    cfg = _prep_cfg(arch, window=8)      # windows below the test doc len
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    if cfg.is_encoder_decoder:
+        eng = Engine(cfg, params, RunCtx(strategy="full"))
+        assert not eng.supports_chunked_prefill
+        frames = jnp.zeros((1, 8, cfg.d_model))
+        query = jnp.zeros((1, 4), jnp.int32)
+        with pytest.raises(ValueError):
+            eng.prefill_chunked(frames, query, 8)
+        return
+    eng = Engine(cfg, params, RunCtx(strategy="full"))
+    assert eng.supports_chunked_prefill
+    doc, query = _mk_req(cfg, 24, 4, 7)
+    ref = eng.generate(doc, query, max_new_tokens=4).tokens
+    out = eng.generate(doc, query, max_new_tokens=4,
+                       prefill_chunk=8).tokens
+    np.testing.assert_array_equal(out, ref)
 
 
 # ---------------------------------------------------------------------------

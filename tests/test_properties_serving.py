@@ -1,0 +1,157 @@
+"""Property-based tests (hypothesis) on the serving stack's allocator and
+compressor-selection invariants.
+
+``hypothesis`` is an optional dev dependency (``pip install -e .[dev]``);
+without it this module degrades to a skip instead of a collection error.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, strategies as st  # noqa: E402
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressor as comp
+from repro.serving.cache import PageAllocator, pages_for
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator: conservation, exclusive ownership, exhaustion recovery
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 32),
+       st.lists(st.tuples(st.booleans(), st.integers(1, 12)),
+                min_size=1, max_size=60),
+       st.integers(0, 2**31 - 1))
+def test_page_allocator_churn_invariants(num_pages, ops, seed):
+    """Random reserve/release churn: pages are conserved
+    (free + reserved == pool), every page is owned by at most one live
+    reservation, releases always land, and a failed reserve implies the
+    pool genuinely lacked the pages."""
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(num_pages)
+    live = []                                        # list of page lists
+    for is_reserve, n in ops:
+        if is_reserve:
+            free_before = alloc.free_pages
+            pages = alloc.reserve(n)
+            if pages is None:
+                # refusal must be honest: the pool really was short
+                assert n > free_before
+            else:
+                assert len(pages) == n
+                live.append(pages)
+        elif live:
+            idx = int(rng.integers(len(live)))
+            alloc.release(live.pop(idx))
+        # conservation + exclusivity after every op
+        held = [p for res in live for p in res]
+        assert len(held) == len(set(held))           # no double ownership
+        assert alloc.used_pages == len(held)
+        assert alloc.free_pages + alloc.used_pages == num_pages
+        assert all(0 <= p < num_pages for p in held)
+    # drain: everything comes back
+    for res in live:
+        alloc.release(res)
+    assert alloc.free_pages == num_pages and alloc.used_pages == 0
+
+
+@given(st.integers(1, 16), st.integers(1, 8))
+def test_page_allocator_exhaustion_then_recovery(num_pages, n):
+    """Filling the pool to exhaustion defers further reservations (None,
+    never an exception, never a short grant); releasing any reservation
+    makes those pages grantable again."""
+    alloc = PageAllocator(num_pages)
+    grants = []
+    while True:
+        g = alloc.reserve(n)
+        if g is None:
+            break
+        grants.append(g)
+    assert alloc.free_pages < n                      # honest exhaustion
+    assert len(grants) == num_pages // n
+    if grants:
+        alloc.release(grants.pop())
+        again = alloc.reserve(n)
+        assert again is not None and len(again) == n
+    # double release raises instead of silently recycling a live page
+    if grants:
+        alloc.release(grants[0])
+        with pytest.raises(ValueError):
+            alloc.release(grants[0])
+
+
+@given(st.integers(0, 500), st.integers(1, 64))
+def test_pages_for_covers_and_is_tight(n, page_size):
+    p = pages_for(n, page_size)
+    assert p * page_size >= n                        # covers the rows
+    assert p >= 1                                    # empty still pins one
+    if n > page_size:
+        assert (p - 1) * page_size < n               # no spare whole page
+
+
+# ---------------------------------------------------------------------------
+# select_topk: the lp > L clamp across random shapes
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 3), st.integers(1, 12), st.integers(1, 3),
+       st.integers(1, 24), st.integers(0, 1000))
+def test_select_topk_clamps_lp_to_block(b, l, kvh, lp, seed):
+    """A passing budget larger than the local block must saturate at the
+    block (select every unit, position-ordered) — never crash lax.top_k
+    or zero-pad the selection."""
+    key = jax.random.PRNGKey(seed)
+    dh = 4
+    scores = jax.random.normal(key, (b, l, kvh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, l, kvh, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, l, kvh, dh))
+    k_sel, v_sel, idx = comp.select_topk(scores, k, v, lp)
+    eff = min(lp, l)
+    assert k_sel.shape == (b, eff, kvh, dh)
+    assert v_sel.shape == (b, eff, kvh, dh)
+    assert idx.shape == (b, eff, kvh)
+    idx_np = np.asarray(idx)
+    assert (idx_np >= 0).all() and (idx_np < l).all()
+    # position-monotonic per (batch, head)
+    assert (np.diff(idx_np, axis=1) > 0).all() or eff == 1
+    if lp >= l:
+        # saturation selects *every* unit in order
+        np.testing.assert_array_equal(
+            idx_np, np.broadcast_to(np.arange(l)[None, :, None],
+                                    (b, l, kvh)))
+        np.testing.assert_allclose(np.asarray(k_sel),
+                                   np.asarray(k), atol=0, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# Streaming top-k == monolithic select_topk under arbitrary chunking
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 2), st.integers(1, 20), st.integers(1, 3),
+       st.integers(1, 16), st.integers(1, 6), st.integers(0, 1000))
+def test_running_topk_matches_select_topk(b, l, kvh, lp, n_chunks, seed):
+    """Folding a block through running_topk_update in arbitrary chunk
+    sizes must select exactly what select_topk selects over the whole
+    block — the invariant behind the streamed augmented compression."""
+    key = jax.random.PRNGKey(seed)
+    dh = 4
+    lp_eff = min(lp, l)
+    scores = jax.random.normal(key, (b, l, kvh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, l, kvh, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, l, kvh, dh))
+    bounds = np.unique(np.linspace(0, l, min(n_chunks, l) + 1).astype(int))
+    state = comp.running_topk_init(lp_eff, kvh, dh, (b,))
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        state = comp.running_topk_update(
+            state, scores[:, lo:hi], k[:, lo:hi], v[:, lo:hi], lo)
+    k_run, v_run, idx_run = comp.running_topk_finalize(state)
+    k_ref, v_ref, idx_ref = comp.select_topk(scores, k, v, lp_eff)
+    np.testing.assert_array_equal(np.asarray(idx_run), np.asarray(idx_ref))
+    np.testing.assert_array_equal(np.asarray(k_run), np.asarray(k_ref))
+    np.testing.assert_array_equal(np.asarray(v_run), np.asarray(v_ref))
