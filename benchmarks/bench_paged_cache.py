@@ -8,7 +8,7 @@ request left behind") that caps concurrent slots.  The paged layout
 request ``ceil(doc_len / page_size)`` pages, so the same bytes admit
 far more mixed traffic.
 
-Two measurements, both at a *fixed pool size in cache rows*:
+Three measurements, the first two at a *fixed pool size in cache rows*:
 
   1. **Allocator accounting** at the paper-scale mixed 128 / 2k / 16k
      request distribution (no model — pure page/slot arithmetic): max
@@ -20,6 +20,13 @@ Two measurements, both at a *fixed pool size in cache rows*:
      budget; peak concurrent slots, deferrals and wall time are
      recorded and the greedy tokens are cross-checked (the dense
      scheduler is the oracle).
+  3. **Fused-kernel vs gather read path**: the same paged engine decodes
+     through the fused Pallas paged-attention kernel
+     (``paged_impl="kernel"``; interpret-mode Pallas on CPU — the
+     compute-reduction story is a TPU one, the CPU number mostly
+     measures interpreter overhead, recorded honestly as such) and
+     through the dense-view ``jnp.take`` gather; tokens must agree
+     bit-exactly.
 
 Emits the standard CSV rows and ``results/bench_paged_cache.json``.
 """
@@ -32,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, emit_json
+from benchmarks.common import emit, emit_json, tiny
 from repro.configs import get_config
 from repro.models import model as model_lib
 from repro.models.transformer import RunCtx
@@ -53,8 +60,13 @@ E2E_DOC_CAPACITY = 512
 E2E_BUDGET_ROWS = 4 * E2E_DOC_CAPACITY     # dense: 4 slots
 E2E_PAGE = 32
 E2E_SLOTS_PAGED = 12
-E2E_LENGTHS = [512, 128, 64, 128, 64, 64, 128, 512, 64, 128, 64, 64]
+E2E_LENGTHS = tiny([512, 128, 64, 128, 64, 64, 128, 512, 64, 128, 64, 64],
+                   [512, 128, 64, 64])
 LQ, MAX_NEW = 4, 4
+
+# -- kernel-vs-gather read-path study --------------------------------------
+KRN_N_DOC = tiny(256, 128)
+KRN_MAX_NEW = tiny(16, 8)
 
 
 def _mixed_stream(lengths, weights, n):
@@ -178,6 +190,34 @@ def run():
     if not agree:
         print("# warning: paged vs dense token mismatch", file=sys.stderr)
 
+    # ---- fused-kernel vs gather read path --------------------------------
+    r = np.random.default_rng(7)
+    kdoc = jnp.asarray(r.integers(10, cfg.vocab_size, (2, KRN_N_DOC)),
+                       jnp.int32)
+    kqry = jnp.asarray(r.integers(10, cfg.vocab_size, (2, LQ)), jnp.int32)
+    krn_records = []
+    krn_tokens = {}
+    for impl in ("gather", "kernel"):
+        eng = Engine(cfg, params, RunCtx(strategy="full"),
+                     cache_layout="paged", page_size=E2E_PAGE,
+                     paged_impl=impl)
+        eng.generate(kdoc, kqry, max_new_tokens=KRN_MAX_NEW)    # warm
+        res = eng.generate(kdoc, kqry, max_new_tokens=KRN_MAX_NEW)
+        krn_tokens[impl] = res.tokens
+        tok_s = (kdoc.shape[0] * (KRN_MAX_NEW - 1)
+                 / max(res.decode_time_s, 1e-9))
+        krn_records.append(
+            {"name": f"read_path_{impl}_decode",
+             "us_per_call": res.decode_time_s * 1e6,
+             "decode_tok_per_s": tok_s,
+             "derived": f"{tok_s:.0f}tok/s"})
+    krn_agree = bool(np.array_equal(krn_tokens["kernel"],
+                                    krn_tokens["gather"]))
+    if not krn_agree:
+        print("# warning: kernel vs gather token mismatch", file=sys.stderr)
+    krn_records[-1]["token_agreement"] = krn_agree
+    records += krn_records
+
     records += [
         {"name": "e2e_dense_peak_slots", "us_per_call": t_d * 1e6,
          "peak_active": sch_d.peak_active,
@@ -205,6 +245,11 @@ def run():
                 "note": "CPU-sized scale-down of the 128/2k/16k "
                         "distribution measured in the accounting study"},
         "token_agreement": bool(agree),
+        "read_path": {"n_doc": KRN_N_DOC, "max_new": KRN_MAX_NEW,
+                      "token_agreement": krn_agree,
+                      "note": "CPU numbers run the kernel in Pallas "
+                              "interpret mode (overhead-dominated); the "
+                              "compute reduction is a TPU story"},
         "device": jax.devices()[0].platform})
 
 

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, emit_json
+from benchmarks.common import emit, emit_json, tiny
 from repro.configs import get_config
 from repro.models import model as model_lib
 from repro.models.transformer import RunCtx
@@ -35,7 +35,7 @@ from repro.serving.engine import Engine
 from repro.serving.scheduler import Request, Scheduler
 
 ARCH = "granite-3-2b"
-N_LONG, N_SHORT = 2048, 64
+N_LONG, N_SHORT = tiny(2048, 256), 64
 LQ_LONG, LQ_SHORT = 8, 4
 N_SHORT_REQS = 3
 CHUNK = 128

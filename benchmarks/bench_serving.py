@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, emit_json
+from benchmarks.common import emit, emit_json, tiny
 from repro.configs import get_config
 from repro.models import model as model_lib
 from repro.models.transformer import RunCtx
@@ -35,8 +35,8 @@ from repro.serving.engine import Engine
 from repro.serving.scheduler import Request, Scheduler
 
 ARCH = "granite-3-2b"
-B, N_DOC, LQ = 2, 256, 8
-MAX_NEW = 32
+B, N_DOC, LQ = 2, tiny(256, 64), 8
+MAX_NEW = tiny(32, 8)
 
 
 def _decode_tok_per_s(res, batch: int) -> float:

@@ -18,6 +18,23 @@ from typing import Callable
 import jax
 
 
+def is_tiny() -> bool:
+    """True in CI bench-smoke mode (``benchmarks.run --tiny`` sets
+    ``REPRO_BENCH_TINY=1``): benchmarks shrink their document lengths /
+    iteration counts to the smallest shapes that still exercise every
+    code path, so every PR runs them end-to-end and uploads the
+    ``results/*.json`` artifacts without burning CI minutes on
+    full-size timings (whose numbers are meaningless on shared runners
+    anyway).  Tiny-mode JSON carries ``"tiny": true`` in its meta so the
+    perf harness never mistakes a smoke number for a real one."""
+    return os.environ.get("REPRO_BENCH_TINY") == "1"
+
+
+def tiny(full, small):
+    """Pick the tiny-mode value of a benchmark size constant."""
+    return small if is_tiny() else full
+
+
 def emit_json(name: str, records, meta=None,
               out_dir: str = "results") -> str:
     """Write ``results/<name>.json``: {"benchmark", "meta", "records"}.
@@ -27,9 +44,12 @@ def emit_json(name: str, records, meta=None,
     fields.  Returns the path written.
     """
     os.makedirs(out_dir, exist_ok=True)
+    meta = dict(meta or {})
+    if is_tiny():
+        meta["tiny"] = True
     path = os.path.join(out_dir, f"{name}.json")
     with open(path, "w") as f:
-        json.dump({"benchmark": name, "meta": meta or {},
+        json.dump({"benchmark": name, "meta": meta,
                    "records": records}, f, indent=2, sort_keys=True)
     return path
 

@@ -1,12 +1,20 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--tiny]
 
 Prints ``name,us_per_call,derived`` CSV rows.
+
+``--tiny`` is the CI bench-smoke mode: it restricts the sweep to the
+serving-stack benchmarks (the ones that emit ``results/*.json``) and
+sets ``REPRO_BENCH_TINY=1`` so each module shrinks to its smallest
+still-representative shapes — the point is catching crashes and rotted
+result schemas on every PR (``tools/check_bench_results.py`` validates
+the artifacts), not producing meaningful timings on shared runners.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -24,15 +32,28 @@ MODULES = [
     ("apb_chunked", "benchmarks.bench_apb_chunked"),     # HOL, augmented
 ]
 
+# the --tiny (CI bench-smoke) sweep: every module that writes a
+# results/*.json artifact — kept in sync with tools/check_bench_results.py
+TINY_MODULES = ["serving", "prefill_chunking", "paged_cache",
+                "apb_chunked"]
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI bench-smoke: JSON-emitting modules only, "
+                         "smallest representative shapes")
     args = ap.parse_args()
+    if args.tiny:
+        # before any bench module import — they read it at module level
+        os.environ["REPRO_BENCH_TINY"] = "1"
 
     print("name,us_per_call,derived")
     failed = []
     for name, module in MODULES:
+        if args.tiny and name not in TINY_MODULES:
+            continue
         if args.only and args.only not in name:
             continue
         t0 = time.time()

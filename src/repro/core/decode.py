@@ -153,7 +153,8 @@ def chunk_context_attention(q, k_cache, v_cache, k_self, v_self, *,
                             start=None,
                             window: int = 0,
                             softcap: Optional[float] = None,
-                            k_extra=None, v_extra=None, extra_mask=None):
+                            k_extra=None, v_extra=None, extra_mask=None,
+                            page_table=None, paged_impl: str = "kernel"):
     """Chunked-prefill attention: ``t`` chunk rows appended at the end of
     a doc-cache prefix attend to
 
@@ -170,9 +171,29 @@ def chunk_context_attention(q, k_cache, v_cache, k_self, v_self, *,
 
     all parts LSE-merged.  With ``window=0``, ``start=None`` and no extra
     context this is exactly the query pass (``query_context_attention``).
+
+    With ``page_table`` set, ``k_cache``/``v_cache`` are one layer's page
+    *pool* (num_pages, page_size, KV, D) and the cache-context part runs
+    through the fused paged kernel (``paged_attention_distributed``,
+    row_base = valid_len — the chunk mask convention) instead of a dense
+    view; ``paged_impl="gather"`` keeps the dense-view oracle.
     """
     t = q.shape[1]
     mesh = pctx.mesh
+
+    if page_table is not None:
+        vl = (valid_len if valid_len is not None
+              else paged_capacity(page_table, k_cache.shape[1]))
+        ctx_out, ctx_lse = paged_attention_distributed(
+            q, k_cache, v_cache, page_table, pctx=pctx,
+            cache_axes=cache_axes, valid_len=vl,
+            row_base=jnp.asarray(vl, jnp.int32), start=start,
+            window=window, softcap=softcap, impl=paged_impl)
+        return _chunk_self_extra_merge(
+            q, k_self, v_self, ctx_out, ctx_lse, t, window=window,
+            softcap=softcap, k_extra=k_extra, v_extra=v_extra,
+            extra_mask=extra_mask)
+
     total = k_cache.shape[1]
     vl = valid_len if valid_len is not None else total
 
@@ -216,6 +237,18 @@ def chunk_context_attention(q, k_cache, v_cache, k_self, v_self, *,
             out_specs=(qspec, lspec))
         ctx_out, ctx_lse = fn(q, k_cache, v_cache, vl_arg, st_arg)
 
+    return _chunk_self_extra_merge(
+        q, k_self, v_self, ctx_out, ctx_lse, t, window=window,
+        softcap=softcap, k_extra=k_extra, v_extra=v_extra,
+        extra_mask=extra_mask)
+
+
+def _chunk_self_extra_merge(q, k_self, v_self, ctx_out, ctx_lse, t, *,
+                            window, softcap, k_extra, v_extra,
+                            extra_mask):
+    """Shared tail of the chunk attention: causal (windowed) self part
+    and the optional unwindowed extra prefix, LSE-merged onto the
+    cache-context part (dense or paged)."""
     causal = jnp.tril(jnp.ones((t, t), bool))
     if window and window > 0:
         i = jnp.arange(t)[:, None]
@@ -290,10 +323,143 @@ def paged_gather(pool, page_table):
 
 def paged_gather_kv(pool_k, pool_v, page_table):
     """One layer's paged K and V gathered through the same page table —
-    the read path every paged attention site goes through (decode step,
-    chunk step, layout conversion)."""
+    the dense-view read path (layout conversion, the ``"gather"`` oracle
+    of ``paged_partial_lse``; the fused kernel replaces it on the
+    decode/chunk hot path)."""
     return (paged_gather(pool_k, page_table),
             paged_gather(pool_v, page_table))
+
+
+def paged_capacity(page_table, page_size: int) -> int:
+    """Total rows a *layer-level* page table can address: P * page_size
+    per shard, times the shard count for the sharded (S, B, P) layout
+    (single-host tables are (B, P)).  The ``valid_len`` fallback of the
+    paged attention sites — the stacked-level twin lives in
+    serving.cache.attn_cache_len."""
+    shards = page_table.shape[0] if page_table.ndim == 3 else 1
+    return shards * page_table.shape[-1] * page_size
+
+
+def paged_partial_lse(q, pool_k, pool_v, page_table, *,
+                      valid_len, row_base, start=None, window: int = 0,
+                      softcap: Optional[float] = None,
+                      page_stride: int = 1, page_offset=0,
+                      impl: str = "kernel"):
+    """(out, lse) of q (B, t, H, D) against one layer's paged doc KV —
+    the single-shard body of the paged read path.
+
+    page_table: (B, P) int32 pool-local physical page ids; logical page
+    ``j`` of a slot holds global cache rows starting at
+    ``(j*page_stride + page_offset) * page_size`` — (1, 0) single-host,
+    (n_shards, shard_index) for the mesh-strided pool.  Query row ``i``
+    sees global row ``g`` iff ``start <= g < valid_len`` and (window>0)
+    ``g >= row_base + i - window + 1``; ``row_base = valid_len`` is the
+    chunk convention, ``valid_len - 1`` (with t=1) the decode one.
+
+    ``impl="kernel"`` runs the fused Pallas kernel (block-sparse over the
+    table, no dense intermediate; interpret-mode on CPU);
+    ``impl="gather"`` materialises the dense view via ``jnp.take`` and
+    masks — the bit-exactness oracle the kernel is held to.
+    """
+    if impl == "kernel":
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.paged_attention_lse(
+            q, pool_k, pool_v, page_table, valid_len=valid_len,
+            row_base=row_base, start=start, window=window,
+            softcap=softcap, page_stride=page_stride,
+            page_offset=page_offset)
+    if impl != "gather":
+        raise ValueError(f"paged impl must be 'kernel' or 'gather', "
+                         f"got {impl!r}")
+    k, v = paged_gather_kv(pool_k, pool_v, page_table)
+    t = q.shape[1]
+    ps = pool_k.shape[1]
+    s = k.shape[1]
+    jl = jnp.arange(s) // ps
+    g = ((jl * page_stride + page_offset) * ps + jnp.arange(s) % ps)
+    vl = jnp.reshape(jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32),
+                                      (q.shape[0],)), (-1, 1, 1))
+    mask = g[None, None, :] < vl
+    if start is not None:
+        st = jnp.reshape(jnp.broadcast_to(jnp.asarray(start, jnp.int32),
+                                          (q.shape[0],)), (-1, 1, 1))
+        mask = mask & (g[None, None, :] >= st)
+    if window and window > 0:
+        rb = jnp.reshape(jnp.broadcast_to(jnp.asarray(row_base, jnp.int32),
+                                          (q.shape[0],)), (-1, 1, 1))
+        lo = rb + jnp.arange(t)[None, :, None] - window + 1
+        mask = mask & (g[None, None, :] >= lo)
+    mask = jnp.broadcast_to(mask, (q.shape[0], t, s))
+    return partial_attention_lse(q, k, v, mask, softcap=softcap)
+
+
+def paged_attention_distributed(q, pool_k, pool_v, page_table, *,
+                                pctx: ParallelCtx,
+                                cache_axes: Tuple[str, ...],
+                                valid_len, row_base, start=None,
+                                window: int = 0,
+                                softcap: Optional[float] = None,
+                                impl: str = "kernel"):
+    """Paged-cache attention over a (possibly mesh-sharded) page pool.
+
+    Single-host (page_table (B, P)): one ``paged_partial_lse`` body.
+    Mesh (page_table (S, B, P), pool pages axis sharded over
+    ``cache_axes``): shard ``s`` owns logical pages ``j ≡ s (mod S)`` of
+    every slot (see docs/architecture.md) — each shard runs the fused
+    kernel over its own table with ``page_stride = S`` /
+    ``page_offset = axis index`` and the partial (out, lse) pairs merge
+    with ``lse_merge_psum``, exactly the dense mesh decode recipe
+    (paper Alg. 3 over pages instead of contiguous slices).  Table
+    entries hold *global* physical ids; each shard subtracts its base.
+
+    Returns (out (B, t, H, D), lse (B, H, t)) replicated over the cache
+    axes.
+    """
+    mesh = pctx.mesh
+    if page_table.ndim == 2:
+        if mesh is not None and cache_axes:
+            raise ValueError(
+                "mesh cache axes need the sharded page-table layout "
+                "(S, B, P); got a single-host (B, P) table")
+        return paged_partial_lse(
+            q, pool_k, pool_v, page_table, valid_len=valid_len,
+            row_base=row_base, start=start, window=window,
+            softcap=softcap, impl=impl)
+
+    n_shards = page_table.shape[0]
+    pps = pool_k.shape[0] // n_shards          # pool pages per shard
+    bspec = pctx.batch_spec()
+    qspec = P(bspec, None, None, None)
+    poolspec = P(cache_axes, None, None, None)
+    ptspec = P(cache_axes, bspec, None)
+    lspec = P(bspec, None, None)
+
+    def body(qq, kk, vv, tt, vl, rb, st):
+        off = jnp.asarray(0, jnp.int32)
+        stride = 1
+        for ax in reversed(cache_axes):
+            off = off + jax.lax.axis_index(ax) * stride
+            stride = stride * collectives.axis_size(ax)
+        local = jnp.clip(tt[0] - off * pps, 0, pps - 1)
+        out, lse = paged_partial_lse(
+            qq, kk, vv, local, valid_len=vl, row_base=rb, start=st,
+            window=window, softcap=softcap, page_stride=n_shards,
+            page_offset=off, impl=impl)
+        return collectives.lse_merge_psum(out, lse, cache_axes)
+
+    b = q.shape[0]
+    vl_arg = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+    rb_arg = jnp.broadcast_to(jnp.asarray(row_base, jnp.int32), (b,))
+    st_arg = (jnp.zeros((b,), jnp.int32) if start is None
+              else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)))
+    # check_rep=False: old jax has no replication rule for pallas_call
+    # (the fused kernel inside the body); new jax ignores the flag
+    fn = collectives.shard_map(
+        body, mesh=mesh,
+        in_specs=(qspec, poolspec, poolspec, ptspec,
+                  P(bspec), P(bspec), P(bspec)),
+        out_specs=(qspec, lspec), check_rep=False)
+    return fn(q, pool_k, pool_v, page_table, vl_arg, rb_arg, st_arg)
 
 
 def paged_scatter(pool, new, page_table, start):
@@ -313,6 +479,34 @@ def paged_scatter(pool, new, page_table, start):
     rows = start[:, None].astype(jnp.int32) + jnp.arange(t, dtype=jnp.int32)
     logical = jnp.clip(rows // ps, 0, page_table.shape[1] - 1)
     phys = jnp.take_along_axis(page_table, logical, axis=1)      # (B, t)
+    flat = phys * ps + rows % ps
+    pool_flat = pool.reshape((-1,) + pool.shape[2:])
+    pool_flat = pool_flat.at[flat.reshape(-1)].set(
+        new.reshape((b * t,) + new.shape[2:]))
+    return pool_flat.reshape(pool.shape)
+
+
+def paged_scatter_sharded(pool, new, page_table, start):
+    """Strided twin of ``paged_scatter`` for the mesh-sharded pool.
+
+    pool: (num_pages_global, page_size, KV, D); page_table: (S, B, P)
+    int32 *global* physical ids, shard ``s`` owning logical pages
+    ``j ≡ s (mod S)`` at local index ``j // S``.  ``new`` (B, t, KV, D)
+    rows at logical offsets ``start`` (B,) route through the right
+    shard's table row: global row r -> logical page j = r // page_size
+    -> physical ``page_table[j % S, b, j // S]``.  Same clip-for-done-
+    slots contract as ``paged_scatter``; with S = 1 the two are
+    identical.
+    """
+    s_shards, _, p = page_table.shape
+    ps = pool.shape[1]
+    b, t = new.shape[:2]
+    rows = start[:, None].astype(jnp.int32) + jnp.arange(t, dtype=jnp.int32)
+    j = jnp.clip(rows // ps, 0, s_shards * p - 1)            # (B, t)
+    # flatten (shard, local) -> one per-slot lookup table (B, S*P)
+    flat_pt = jnp.moveaxis(page_table, 1, 0).reshape(b, s_shards * p)
+    phys = jnp.take_along_axis(flat_pt, (j % s_shards) * p + j // s_shards,
+                               axis=1)                        # (B, t)
     flat = phys * ps + rows % ps
     pool_flat = pool.reshape((-1,) + pool.shape[2:])
     pool_flat = pool_flat.at[flat.reshape(-1)].set(

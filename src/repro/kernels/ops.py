@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.apb_attention import apb_flash_attention
+from repro.kernels.paged_attention import paged_flash_attention
 
 
 def _lse_attn(q, k, v, mask, softcap):
@@ -224,6 +225,29 @@ def causal_flash_attention(q, k, v, *, window: int = 0,
         window=window, softcap=softcap, causal=causal, block_q=bq,
         block_kv=bkv, interpret=interpret)
     return out[:, :l]
+
+
+def paged_attention_lse(q, pool_k, pool_v, page_table, *,
+                        valid_len, row_base, start=None, window: int = 0,
+                        softcap: Optional[float] = None,
+                        page_stride: int = 1, page_offset=0,
+                        interpret: Optional[bool] = None):
+    """Fused paged attention (kernels.paged_attention) with the standard
+    backend selection: interpret-mode Pallas on CPU (tier-1 validates the
+    kernel body there), compiled Mosaic on TPU.
+
+    Returns (out (B, t, H, D), lse (B, H, t)) of q against the paged
+    document KV — the per-shard body of the paged decode/chunk read
+    path; ``core.decode.paged_partial_lse`` holds the gather oracle with
+    the identical mask semantics.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    return paged_flash_attention(
+        q, pool_k, pool_v, page_table, valid_len=valid_len,
+        row_base=row_base, start=start, window=window, softcap=softcap,
+        page_stride=page_stride, page_offset=page_offset,
+        interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "softcap"))

@@ -1,0 +1,213 @@
+"""Pallas TPU kernel: fused paged-attention over a page-pool KV cache.
+
+The serving stack stores decode-format document KV in a vLLM-style page
+pool (``serving/cache.py``): a global ``(num_pages, page_size, KV, D)``
+pool plus per-slot page tables mapping logical page ``j`` of slot ``b``
+to a physical pool page.  The portable read path materialises a dense
+per-slot view first (``core/decode.paged_gather``) — a transient
+``(B, P*page_size, KV, D)`` gather per layer per step, exactly the
+memory the paged layout exists to avoid.  This kernel fuses the
+indirection into flash attention instead:
+
+* Grid = (batch, q_heads, num_logical_pages); the innermost (page)
+  dimension iterates sequentially on TPU, carrying the online-softmax
+  state (acc / m / l) in VMEM scratch — the standard flash-attention
+  recipe with one KV tile per *page*.
+* The page table arrives via **scalar prefetch** and is read inside the
+  K/V BlockSpec index maps, so each grid step DMAs exactly one physical
+  page from HBM — the dense view never exists.  GQA is likewise folded
+  into the index maps (q head -> kv head via integer division).
+* Block-sparse skipping: a logical page whose global rows are provably
+  outside ``[start, valid_len)`` (or beyond the sliding window) skips
+  the MXU work entirely via ``pl.when`` — short documents in a long
+  table pay only their own pages.
+* The *mesh-sharded* pool (pages strided across the cache axis,
+  ``docs/architecture.md``) reuses the same kernel: ``page_stride`` /
+  ``page_offset`` scalars place each shard's logical pages at their
+  global row positions, and the returned (out, lse) pair LSE-merges
+  across shards exactly like the dense mesh decode (paper Alg. 3).
+
+Mask semantics (shared with the gather oracle in ``core/decode``):
+query row ``i`` of a ``t``-row chunk sees global cache row ``g`` iff
+
+    start <= g < valid_len   and, when window > 0,
+    g >= row_base + i - window + 1
+
+``row_base = valid_len`` reproduces the chunked-prefill mask (row i
+lives at cache row valid_len + i); ``row_base = valid_len - 1`` with
+``t = 1`` reproduces the decode mask (last ``window`` valid rows).
+
+Returns (out, lse) so callers merge with tail/self attention through the
+existing LSE machinery.  ``interpret=True`` (default on CPU) runs the
+same kernel body through the Pallas interpreter so tier-1 stays green
+without a TPU; compiled Mosaic requires ``page_size`` and ``D`` aligned
+to the usual (8, 128) f32 tiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(pt_ref, vl_ref, rb_ref, st_ref, meta_ref,   # scalar prefetch
+            q_ref, k_ref, v_ref,                        # VMEM tiles
+            o_ref, lse_ref,
+            acc_ref, m_ref, l_ref,                      # scratch
+            *, t: int, ps: int, npages: int, window: int,
+            softcap: Optional[float], scale: float):
+    bi = pl.program_id(0)
+    ji = pl.program_id(2)
+
+    @pl.when(ji == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    vl = vl_ref[bi]
+    rb = rb_ref[bi]
+    st = st_ref[bi]
+    stride = meta_ref[0]
+    offset = meta_ref[1]
+    g0 = (ji * stride + offset) * ps        # first global row of this page
+
+    # --- page-level skip: provably invisible pages do no MXU work -------
+    live = (g0 < vl) & (g0 + ps > st)
+    if window > 0:
+        # the earliest row any query sees is row_base - window + 1 (i = 0)
+        live = live & (g0 + ps > rb - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)       # (t, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (ps, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        i = jax.lax.broadcasted_iota(jnp.int32, (t, ps), 0)
+        g = g0 + jax.lax.broadcasted_iota(jnp.int32, (t, ps), 1)
+        mask = (g < vl) & (g >= st)
+        if window > 0:
+            mask = mask & (g >= rb + i - window + 1)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                                   # (t,)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)  # (t, ps)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_ref[:, 0] + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ji == npages - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        m = m_ref[:, 0]
+        safe = jnp.maximum(l, 1e-30)
+        out = acc_ref[...] / safe[:, None]
+        out = jnp.where((l > 0.0)[:, None], out, 0.0)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+        lse_ref[0, 0, :] = jnp.where(l > 0.0, m + jnp.log(safe), NEG_INF)
+
+
+def paged_flash_attention(q, pool_k, pool_v, page_table, *,
+                          valid_len, row_base, start=None,
+                          window: int = 0,
+                          softcap: Optional[float] = None,
+                          page_stride: int = 1, page_offset=0,
+                          interpret: bool = False):
+    """Fused paged attention of q against one layer's page pool.
+
+    q: (B, t, H, D); pool_k/pool_v: (num_pool_pages, page_size, KV, D);
+    page_table: (B, P) int32 *pool-local* physical page ids (callers
+    holding global ids subtract their shard base first; entries are
+    clipped into the pool here so stale table rows — always masked by
+    ``valid_len`` — can never address out of bounds).
+
+    ``valid_len`` / ``row_base`` / ``start`` are (B,)-broadcastable
+    dynamic int32 row bounds (see module docstring for the mask);
+    ``page_stride``/``page_offset`` place logical page ``j`` at global
+    rows ``(j*stride + offset) * page_size`` — (1, 0) for a single-host
+    pool, (n_shards, shard_index) for a mesh-strided one.
+
+    Returns (out (B, t, H, D) in q.dtype, lse (B, H, t) float32) —
+    LSE-merge compatible with ``core.decode.partial_attention_lse``.
+    """
+    b, t, h, d = q.shape
+    npool, ps = pool_k.shape[:2]
+    kvh = pool_k.shape[2]
+    p = page_table.shape[1]
+    q_per_kv = h // kvh
+    scale = 1.0 / (d ** 0.5)
+
+    def vec(x, fill=None):
+        if x is None:
+            x = fill
+        return jnp.broadcast_to(jnp.asarray(x, jnp.int32), (b,))
+
+    pt = jnp.clip(page_table.astype(jnp.int32), 0, npool - 1)
+    vl = vec(valid_len)
+    rb = vec(row_base)
+    st = vec(start, fill=0)
+    meta = jnp.stack([jnp.asarray(page_stride, jnp.int32),
+                      jnp.asarray(page_offset, jnp.int32)])
+
+    grid = (b, h, p)
+
+    def q_index(bi, hi, ji, *refs):
+        del ji, refs
+        return (bi, 0, hi, 0)
+
+    def kv_index(bi, hi, ji, pt_ref, *refs):
+        del refs
+        return (pt_ref[bi, ji], 0, hi // q_per_kv, 0)
+
+    def lse_index(bi, hi, ji, *refs):
+        del ji, refs
+        return (bi, hi, 0)
+
+    kernel = functools.partial(
+        _kernel, t=t, ps=ps, npages=p, window=window, softcap=softcap,
+        scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t, 1, d), q_index),
+            pl.BlockSpec((1, ps, 1, d), kv_index),
+            pl.BlockSpec((1, ps, 1, d), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t, 1, d), q_index),
+            pl.BlockSpec((1, 1, t), lse_index),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((t, d), jnp.float32),
+            pltpu.VMEM((t, LANES), jnp.float32),
+            pltpu.VMEM((t, LANES), jnp.float32),
+        ],
+    )
+
+    out, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(q.shape, q.dtype),
+                   jax.ShapeDtypeStruct((b, h, t), jnp.float32)],
+        interpret=interpret,
+    )(pt, vl, rb, st, meta, q, pool_k, pool_v)
+    return out, lse

@@ -36,9 +36,22 @@ def main() -> None:
                     choices=["dense", "paged"],
                     help="decode-format doc-cache storage: dense per-slot "
                          "buffers (the oracle) or a paged pool + page "
-                         "tables (single-device only; see docs/serving.md)")
+                         "tables — sharded over the mesh cache axis on a "
+                         "multi-device run (see docs/serving.md)")
     ap.add_argument("--page-size", type=int, default=64,
                     help="rows per page for --cache-layout paged")
+    ap.add_argument("--paged-impl", default="kernel",
+                    choices=["kernel", "gather"],
+                    help="paged read path: fused Pallas paged-attention "
+                         "kernel (interpret-mode on CPU) or the dense-"
+                         "view gather oracle")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="size the paged pool explicitly (global pages; "
+                         "must divide by the cache shard count on a "
+                         "mesh) and serve through the continuous-"
+                         "batching Scheduler — one Request per batch "
+                         "row; default: Engine.generate with the "
+                         "implicit dense-equivalent pool")
     args = ap.parse_args()
 
     if args.devices > 1:
@@ -85,13 +98,11 @@ def main() -> None:
               if args.strategy in ("apb", "star") else None)
     rctx = RunCtx(strategy=args.strategy, pctx=pctx, layout=layout,
                   cache_axes=cache_axes)
-    if args.cache_layout == "paged" and cache_axes:
-        raise SystemExit(
-            "--cache-layout paged needs a single-device run (the sharded "
-            "doc cache cannot be gathered through a local page table); "
-            "use --devices 1 or --cache-layout dense")
+    if args.num_pages is not None and args.cache_layout != "paged":
+        raise SystemExit("--num-pages sizes the paged pool; add "
+                         "--cache-layout paged")
     engine = Engine(cfg, params, rctx, cache_layout=args.cache_layout,
-                    page_size=args.page_size)
+                    page_size=args.page_size, paged_impl=args.paged_impl)
 
     rng = np.random.default_rng(0)
     doc = jnp.asarray(rng.integers(10, cfg.vocab_size,
@@ -106,11 +117,40 @@ def main() -> None:
             f"mamba/MoE and encoder-decoder prefills stay monolithic; "
             f"drop the flag (or use --devices 1 for the host-loop "
             f"augmented chunked path)")
+    n_in = args.n_doc + args.lq
+    if args.num_pages is not None:
+        # explicit pool sizing: drive the continuous-batching scheduler
+        # (one Request per batch row) so pool pressure is observable —
+        # the end-of-run stats surface deferrals and peak concurrency
+        import time
+
+        from repro.serving.scheduler import Request, Scheduler
+
+        sch = Scheduler(engine, n_slots=args.batch,
+                        num_pages=args.num_pages,
+                        sampling=sampling,
+                        rng=jax.random.PRNGKey(args.seed),
+                        prefill_chunk=args.prefill_chunk)
+        for i in range(args.batch):
+            sch.submit(Request(f"r{i}", doc[i], query[i],
+                               max_new_tokens=args.new_tokens))
+        t0 = time.perf_counter()
+        results = sch.run()
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.tokens) for r in results.values())
+        print(f"strategy={args.strategy} hosts={hosts} "
+              f"requests={args.batch} num_pages={sch.num_pages} "
+              f"wall={wall*1e3:.1f}ms "
+              f"speed={(args.batch * n_in + toks) / max(wall, 1e-9):.0f} "
+              f"tok/s admission_deferrals={sch.admission_deferrals} "
+              f"peak_active={sch.peak_active}")
+        for rid in sorted(results):
+            print(f"{rid}: {results[rid].tokens.tolist()}")
+        return
     res = engine.generate(doc, query, max_new_tokens=args.new_tokens,
                           sampling=sampling,
                           rng=jax.random.PRNGKey(args.seed),
                           prefill_chunk=args.prefill_chunk)
-    n_in = args.n_doc + args.lq
     print(f"strategy={args.strategy} hosts={hosts} "
           f"prefill={res.prefill_time_s*1e3:.1f}ms "
           f"decode={res.decode_time_s*1e3:.1f}ms "

@@ -60,6 +60,9 @@ class RunCtx:
     cache_axes: Tuple[str, ...] = ()         # axes sharding the KV cache
     compressor_method: str = "retain"
     use_kernel: bool = False
+    paged_impl: str = "kernel"               # paged doc-cache read path:
+                                             # fused Pallas kernel, or the
+                                             # "gather" dense-view oracle
     moe_impl: str = "gspmd"                  # gspmd | local (§Perf iter 2)
     bidirectional: bool = False              # whisper-encoder APB variant
     remat: bool = False                      # checkpoint the scan body
@@ -297,15 +300,24 @@ def apply_layer_decode(p, cfg, kind, x, positions, cache, tail,
         q, k_new, v_new = attn.attn_qkv(p["attn"], cfg, h, positions)
         window = kind.window or 0
         if "pt" in cache:
-            k_doc, v_doc = dec.paged_gather_kv(cache["k"], cache["v"],
-                                               cache["pt"])
+            # paged doc cache: fused block-sparse attention through the
+            # page table (or the dense-view gather oracle, rctx.paged_impl)
+            # — single-host or mesh-strided pool alike; row_base = vl - 1
+            # reproduces the decode window mask (last `window` valid rows)
+            pt = cache["pt"]
+            vl = (valid_len if valid_len is not None
+                  else dec.paged_capacity(pt, cache["k"].shape[1]))
+            ctx_out, ctx_lse = dec.paged_attention_distributed(
+                q, cache["k"], cache["v"], pt, pctx=rctx.pctx,
+                cache_axes=rctx.cache_axes, valid_len=vl,
+                row_base=jnp.asarray(vl, jnp.int32) - 1, window=window,
+                softcap=cfg.attn_logit_softcap, impl=rctx.paged_impl)
         else:
-            k_doc, v_doc = cache["k"], cache["v"]
-        ctx_out, ctx_lse = dec.decode_attention_distributed(
-            q, k_doc, v_doc, pctx=rctx.pctx,
-            cache_axes=rctx.cache_axes, valid_len=valid_len,
-            total_len=total_len, window=window,
-            softcap=cfg.attn_logit_softcap)
+            ctx_out, ctx_lse = dec.decode_attention_distributed(
+                q, cache["k"], cache["v"], pctx=rctx.pctx,
+                cache_axes=rctx.cache_axes, valid_len=valid_len,
+                total_len=total_len, window=window,
+                softcap=cfg.attn_logit_softcap)
         if tail_valid is not None and tail is not None and "k" in tail:
             t_out, t_lse, kt, vt = dec.tail_attention_slotted(
                 q, tail["k"], tail["v"], k_new, v_new, tail_valid,
@@ -464,14 +476,11 @@ def forward_chunk(params, cfg, chunk, positions, caches, rctx: RunCtx,
             if kind.mixer == "attn":
                 q, k_new, v_new = attn.attn_qkv(p["attn"], cfg, h, positions)
                 window = (kind.window or 0) if use_window else 0
-                if "pt" in block_caches[i]:
-                    # paged doc cache: gather the dense per-slot view
-                    # through the page table; valid_len masks the rest
-                    ck, cv = dec.paged_gather_kv(block_caches[i]["k"],
-                                                 block_caches[i]["v"],
-                                                 block_caches[i]["pt"])
-                else:
-                    ck, cv = block_caches[i]["k"], block_caches[i]["v"]
+                # paged doc caches pass the pool + page table straight
+                # through — chunk_context_attention reads them via the
+                # fused kernel (no dense intermediate)
+                ck, cv = block_caches[i]["k"], block_caches[i]["v"]
+                ptab = block_caches[i].get("pt")
                 start = k_extra = v_extra = extra_mask = None
                 use_pass = False
                 if aug is not None:
@@ -502,7 +511,8 @@ def forward_chunk(params, cfg, chunk, positions, caches, rctx: RunCtx,
                     start=start, window=window,
                     softcap=cfg.attn_logit_softcap,
                     k_extra=k_extra, v_extra=v_extra,
-                    extra_mask=extra_mask)
+                    extra_mask=extra_mask, page_table=ptab,
+                    paged_impl=rctx.paged_impl)
                 x = x + attn.attn_out(p["attn"], cfg, out)
                 upd = {"k": k_new, "v": v_new}
                 if use_pass:

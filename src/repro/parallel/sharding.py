@@ -123,6 +123,47 @@ def opt_state_shardings(params_shape, mesh: Mesh, zero_axis: str = "pod"):
 
 
 # ---------------------------------------------------------------------------
+# Paged doc-cache placement
+# ---------------------------------------------------------------------------
+
+def paged_pool_spec(cache_axes: Tuple[str, ...]) -> P:
+    """PartitionSpec of a stacked page pool leaf {"k","v"}
+    (blocks, num_pages, page_size, KV, D): the *pages* axis shards over
+    the cache axes — shard ``s`` owns physical pages
+    ``[s*pps, (s+1)*pps)``, which is exactly the id range its
+    per-shard allocator issues (serving.cache.ShardedPageAllocator)."""
+    return P(None, cache_axes, None, None, None)
+
+
+def page_table_spec(cache_axes: Tuple[str, ...]) -> P:
+    """PartitionSpec of a stacked sharded page table "pt"
+    (blocks, S, B, P): the shard axis maps 1:1 onto the cache axes so
+    each device holds only its own slots' logical->physical map."""
+    return P(None, cache_axes, None, None)
+
+
+def shard_paged_caches(caches, mesh: Mesh,
+                       cache_axes: Tuple[str, ...]):
+    """Place stacked paged doc caches onto the mesh: pool leaves shard
+    on the pages axis, tables on the shard axis, everything else (mamba
+    state, dense leaves) replicated over the cache axes.  A no-op
+    (identity) off-mesh so call sites stay unconditional."""
+    if mesh is None or not cache_axes:
+        return caches
+    pool_sh = NamedSharding(mesh, paged_pool_spec(cache_axes))
+    table_sh = NamedSharding(mesh, page_table_spec(cache_axes))
+    out = []
+    for c in caches:
+        if "pt" in c and c["pt"].ndim == 4:
+            out.append({"k": jax.device_put(c["k"], pool_sh),
+                        "v": jax.device_put(c["v"], pool_sh),
+                        "pt": jax.device_put(c["pt"], table_sh)})
+        else:
+            out.append(c)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
 # Per-shape policies
 # ---------------------------------------------------------------------------
 

@@ -21,12 +21,27 @@ docs/architecture.md for the full picture):
     int32 mapping logical page j of slot b to a physical pool page.  A
     slot only holds ``ceil(doc_len / page_size)`` pages, so admission
     memory is O(actual document length) and short requests stop paying
-    the longest request's capacity.  Reads gather a dense per-slot view
-    through the table (``paged_read``); writes scatter per row
-    (``append_doc_chunk``) or per page (``write_doc_pages``).  Page-table
-    entries past a slot's reserved pages are stale/zero — every row they
-    could expose is masked by ``valid_len`` exactly like dense padding,
-    which is why the two layouts are bit-identical in output.
+    the longest request's capacity.  Reads go through the fused Pallas
+    paged-attention kernel (block-sparse over the table; the dense-view
+    gather stays as the oracle — ``core.decode.paged_partial_lse``);
+    writes scatter per row (``append_doc_chunk``) or per page
+    (``write_doc_pages``).  Page-table entries past a slot's reserved
+    pages are stale/zero — every row they could expose is masked by
+    ``valid_len`` exactly like dense padding, which is why the two
+    layouts are bit-identical in output.
+  * **paged, mesh-sharded** — the pool's pages axis is sharded over the
+    mesh cache axes (S shards): physical pages [s*pps, (s+1)*pps) live
+    on shard ``s`` and the page table grows a leading shard axis,
+    "pt" (blocks, S, B, P) int32 of *global* physical ids.  Logical page
+    ``j`` of a slot lives on shard ``j % S`` at shard-local index
+    ``j // S`` (round-robin striding keeps per-shard load within one
+    page of balanced for any document length), so admission memory is
+    O(doc length / S) per shard.  Each shard attends over its own pages
+    (global row of local page jl = (jl*S + s) * page_size) and the
+    partial (out, lse) pairs LSE-merge across shards — the dense mesh
+    decode recipe (paper Alg. 3) applied to strided pages.  Per-shard
+    free lists (``ShardedPageAllocator``) reserve all-or-nothing across
+    shards at admission time.
 
 Fill-level vocabulary used throughout the serving stack:
   * ``doc_len`` / ``valid_len`` — valid rows in a slot's *document*
@@ -111,7 +126,8 @@ def attn_cache_len(caches) -> int:
     for c in caches:
         if "k" in c:
             if "pt" in c:
-                return c["pt"].shape[-1] * c["k"].shape[2]
+                shards = c["pt"].shape[1] if c["pt"].ndim == 4 else 1
+                return shards * c["pt"].shape[-1] * c["k"].shape[2]
             return c["k"].shape[2]
     return 0
 
@@ -240,6 +256,32 @@ def pages_for(n: int, page_size: int) -> int:
     return max(1, -(-n // page_size))
 
 
+def split_pages(logical_pages: int, n_shards: int) -> List[int]:
+    """Round-robin split of ``logical_pages`` over ``n_shards``: logical
+    page ``j`` lives on shard ``j % S``, so shard ``s`` holds
+    ``#{j < logical_pages : j % S == s}`` — the single source of the
+    striping rule (allocator reservations and the admission paste must
+    agree on it, ``_write_doc_pages_sharded`` checks they do)."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    return [max(0, -(-(logical_pages - s) // n_shards))
+            for s in range(n_shards)]
+
+
+def shard_pages_for(n: int, page_size: int, n_shards: int) -> List[int]:
+    """Per-shard page counts for an ``n``-row document on an ``S``-way
+    sharded pool — ``split_pages`` of ``pages_for(n)``, balanced to
+    within one page for any document length."""
+    return split_pages(pages_for(n, page_size), n_shards)
+
+
+def table_width(capacity: int, page_size: int, n_shards: int = 1) -> int:
+    """Per-shard page-table width that can address ``capacity`` rows:
+    ``ceil(pages_for(capacity) / n_shards)`` — every shard's table has
+    the same width (trailing entries stale, masked by ``valid_len``)."""
+    return -(-pages_for(capacity, page_size) // n_shards)
+
+
 class PageAllocator:
     """Host-side free-list allocator over a fixed pool of pages.
 
@@ -292,19 +334,116 @@ class PageAllocator:
             self._free.append(p)
 
 
+class ShardedPageAllocator:
+    """Per-shard free-list allocators over a pool sharded on the pages
+    axis (S shards of ``num_pages / S`` physical pages each).
+
+    A reservation for ``p`` logical pages needs
+    ``shard_pages_for``-many pages *on each shard* (round-robin logical
+    striding) and is **all-or-nothing**: if any shard cannot satisfy its
+    part, nothing is taken anywhere and the caller queues the admission —
+    a half-granted reservation would deadlock against another half-
+    granted one.  Grants hold *global* physical ids (shard ``s`` owns
+    ``[s*pps, (s+1)*pps)``), the id space the sharded page tables store.
+    """
+
+    def __init__(self, num_pages: int, n_shards: int = 1):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if num_pages < n_shards or num_pages % n_shards:
+            raise ValueError(
+                f"num_pages ({num_pages}) must be a positive multiple of "
+                f"n_shards ({n_shards}) — the pool shards evenly over the "
+                f"mesh cache axes")
+        self.num_pages = num_pages
+        self.n_shards = n_shards
+        self.pages_per_shard = num_pages // n_shards
+        self._shards = [PageAllocator(self.pages_per_shard)
+                        for _ in range(n_shards)]
+
+    @property
+    def free_pages(self) -> int:
+        return sum(a.free_pages for a in self._shards)
+
+    @property
+    def used_pages(self) -> int:
+        return sum(a.used_pages for a in self._shards)
+
+    def shard_free(self, shard: int) -> int:
+        return self._shards[shard].free_pages
+
+    def fits(self, logical_pages: int) -> bool:
+        """Could this reservation *ever* succeed on an empty pool?"""
+        return max(split_pages(logical_pages, self.n_shards)) \
+            <= self.pages_per_shard
+
+    def reserve(self, logical_pages: int) -> Optional[List[List[int]]]:
+        """Reserve ``logical_pages`` round-robin pages; returns per-shard
+        lists of global physical ids (ordered by shard-local logical
+        index), or None — taking nothing — if any shard is exhausted."""
+        if logical_pages < 1:
+            raise ValueError(
+                f"reservation must be >= 1 pages, got {logical_pages}")
+        per = split_pages(logical_pages, self.n_shards)
+        grants: List[List[int]] = []
+        for s, n in enumerate(per):
+            if n == 0:
+                grants.append([])
+                continue
+            g = self._shards[s].reserve(n)
+            if g is None:
+                for s2, g2 in enumerate(grants):
+                    if g2:
+                        self._shards[s2].release(
+                            [p - s2 * self.pages_per_shard for p in g2])
+                return None
+            grants.append([p + s * self.pages_per_shard for p in g])
+        return grants
+
+    def release(self, grants: List[List[int]]) -> None:
+        """Return a reservation (per-shard global-id lists).  The same
+        double-release/foreign-page guard as ``PageAllocator`` — applied
+        per shard, after checking each id belongs to its shard's range."""
+        for s, g in enumerate(grants):
+            if not g:
+                continue
+            local = [p - s * self.pages_per_shard for p in g]
+            if any(lp < 0 or lp >= self.pages_per_shard for lp in local):
+                raise ValueError(
+                    f"pages {g} do not belong to shard {s} "
+                    f"(pages_per_shard={self.pages_per_shard})")
+            self._shards[s].release(local)
+
+
 def paged_read(pool_k, pool_v, page_table):
     """Gather dense per-slot views (B, P*page_size, KV, D) of one layer's
     paged K/V through its page table (B, P).
 
-    Pure ``jnp.take`` (core.decode.paged_gather_kv — the same primitive
-    the model's attention sites call) — the result feeds the existing
-    LSE-merge attention machinery unchanged; rows past a slot's
-    ``valid_len`` are masked there, so gathered garbage from stale table
-    entries is inert."""
+    Pure ``jnp.take`` (core.decode.paged_gather_kv) — the layout-
+    conversion primitive and the ``paged_impl="gather"`` read-path
+    oracle (the model's attention sites default to the fused Pallas
+    kernel, which never materialises this view); rows past a slot's
+    ``valid_len`` are masked at attention time, so gathered garbage from
+    stale table entries is inert."""
     return dec.paged_gather_kv(pool_k, pool_v, page_table)
 
 
-def dense_to_paged(caches, page_size: int) -> Tuple:
+def _identity_tables(blocks: int, b: int, p: int, n_shards: int):
+    """Identity page tables for a freshly laid-out pool: single-host
+    (blocks, B, P) with slot b owning pages [b*P, (b+1)*P); sharded
+    (blocks, S, B, P) with (shard s, slot b, local page jl) owning
+    global page ``s*B*P + b*P + jl``."""
+    if n_shards == 1:
+        return jnp.broadcast_to(
+            jnp.arange(b * p, dtype=jnp.int32).reshape(b, p),
+            (blocks, b, p))
+    base = (jnp.arange(n_shards, dtype=jnp.int32)[:, None, None] * (b * p)
+            + jnp.arange(b, dtype=jnp.int32)[None, :, None] * p
+            + jnp.arange(p, dtype=jnp.int32)[None, None, :])
+    return jnp.broadcast_to(base, (blocks,) + base.shape)
+
+
+def dense_to_paged(caches, page_size: int, n_shards: int = 1) -> Tuple:
     """Dense stacked doc caches -> paged, with identity page tables.
 
     Attention {"k","v"} (blocks, B, n, KV, D) becomes a pool
@@ -313,38 +452,57 @@ def dense_to_paged(caches, page_size: int) -> Tuple:
     so the valid rows are bit-identical to the dense layout.  Mamba
     states are length-free and pass through.  Used by ``Engine.generate``
     (single-batch paged serving); the scheduler allocates its shared pool
-    directly (``alloc_paged_slots``)."""
+    directly (``alloc_paged_slots``).
+
+    With ``n_shards > 1`` the pool comes out in the mesh layout: logical
+    page ``j`` strides to shard ``j % S`` at local index ``j // S``
+    (every shard's table padded to the same width P = ceil(pages/S)),
+    pool (blocks, S*B*P, page_size, KV, D) ordered (shard, slot, local
+    page), tables (blocks, S, B, P) of global ids."""
     out = []
     for c in caches:
         if "k" in c:
             blocks, b, n = c["k"].shape[:3]
-            p = pages_for(n, page_size)
+            p = -(-pages_for(n, page_size) // n_shards)   # per-shard width
+            cap = p * n_shards * page_size
             pad = [(0, 0)] * c["k"].ndim
-            pad[2] = (0, p * page_size - n)
-            pt = jnp.broadcast_to(
-                jnp.arange(b * p, dtype=jnp.int32).reshape(b, p),
-                (blocks, b, p))
-            out.append({
-                "k": jnp.pad(c["k"], pad).reshape(
-                    (blocks, b * p, page_size) + c["k"].shape[3:]),
-                "v": jnp.pad(c["v"], pad).reshape(
-                    (blocks, b * p, page_size) + c["v"].shape[3:]),
-                "pt": pt})
+            pad[2] = (0, cap - n)
+            pt = _identity_tables(blocks, b, p, n_shards)
+            entry = {"pt": pt}
+            for key in ("k", "v"):
+                rows = jnp.pad(c[key], pad).reshape(
+                    (blocks, b, p, n_shards, page_size) + c[key].shape[3:])
+                # logical page j = jl*S + s -> physical order (s, b, jl)
+                entry[key] = jnp.moveaxis(rows, 3, 1).reshape(
+                    (blocks, n_shards * b * p, page_size) + c[key].shape[3:])
+            out.append(entry)
         else:
             out.append(c)
     return tuple(out)
 
 
+def _logical_order_tables(pt):
+    """Sharded tables (blocks, S, B, P) -> (blocks, B, S*P) tables in
+    *logical page order* (j = jl*S + s ascending), so a plain gather
+    through them reconstructs the dense row order."""
+    blocks, s, b, p = pt.shape
+    # (blocks, B, P, S) then flatten (P, S) -> j = jl*S + s
+    return jnp.transpose(pt, (0, 2, 3, 1)).reshape(blocks, b, p * s)
+
+
 def paged_to_dense(caches) -> Tuple:
     """Gather paged stacked doc caches back to the dense layout
-    (blocks, B, P*page_size, KV, D) — the inverse view of
-    ``dense_to_paged`` (rows past each slot's ``doc_len`` are whatever
-    the pages held; callers mask or slice by the true length)."""
+    (blocks, B, S*P*page_size, KV, D) — the inverse view of
+    ``dense_to_paged``, single-host and mesh-sharded tables alike (rows
+    past each slot's ``doc_len`` are whatever the pages held; callers
+    mask or slice by the true length)."""
     read = jax.vmap(paged_read)                  # over the blocks axis
     out = []
     for c in caches:
         if "pt" in c:
-            k, v = read(c["k"], c["v"], c["pt"])
+            pt = (c["pt"] if c["pt"].ndim == 3
+                  else _logical_order_tables(c["pt"]))
+            k, v = read(c["k"], c["v"], pt)
             out.append({"k": k, "v": v})
         else:
             out.append(c)
@@ -352,30 +510,87 @@ def paged_to_dense(caches) -> Tuple:
 
 
 def alloc_paged_slots(req_caches, n_slots: int, num_pages: int,
-                      page_size: int, table_width: int, widen) -> Tuple:
+                      page_size: int, table_width: int, widen,
+                      n_shards: int = 1) -> Tuple:
     """Shared slot caches for the paged scheduler, shaped after one
     prefilled request: attention layers get a zero global pool
     {"k","v"} (blocks, num_pages, page_size, KV, D) + zero page tables
-    "pt" (blocks, n_slots, table_width); mamba layers are widened to
-    ``n_slots`` on the batch axis by ``widen`` (they stay per-slot dense —
-    their state is length-free, paging buys nothing)."""
+    "pt" (blocks, n_slots, table_width) — or, sharded, (blocks,
+    n_shards, n_slots, table_width) with ``table_width`` already the
+    *per-shard* width; mamba layers are widened to ``n_slots`` on the
+    batch axis by ``widen`` (they stay per-slot dense — their state is
+    length-free, paging buys nothing)."""
     out = []
     for c in req_caches:
         if "k" in c:
             blocks = c["k"].shape[0]
             tail_shape = c["k"].shape[3:]
             pool_shape = (blocks, num_pages, page_size) + tail_shape
+            pt_shape = ((blocks, n_slots, table_width) if n_shards == 1
+                        else (blocks, n_shards, n_slots, table_width))
             out.append({
                 "k": jnp.zeros(pool_shape, c["k"].dtype),
                 "v": jnp.zeros(pool_shape, c["v"].dtype),
-                "pt": jnp.zeros((blocks, n_slots, table_width),
-                                jnp.int32)})
+                "pt": jnp.zeros(pt_shape, jnp.int32)})
         else:
             out.append({k: widen(v) for k, v in c.items()})
     return tuple(out)
 
 
-def write_doc_pages(caches, req_caches, slot: int, pages: List[int],
+def _write_doc_pages_sharded(c, rc, slot: int, pages: List[List[int]],
+                             page_size: int):
+    """One attention layer of the sharded paste: ``pages`` is the
+    per-shard reservation (global ids, ordered by shard-local logical
+    index); shard ``s`` receives the request's logical pages
+    ``j ≡ s (mod S)``."""
+    n_shards = c["pt"].shape[1]
+    if len(pages) != n_shards:
+        raise ValueError(
+            f"reservation covers {len(pages)} shards but the pool has "
+            f"{n_shards}")
+    k, v, pt = c["k"], c["v"], c["pt"]
+    pt = pt.at[:, :, slot, :].set(0)
+    if "pt" in rc:
+        # chunked admission: exact-length sharded mini-pool, identity
+        # tables — shard s's local pages are rc pool [s*Pm, s*Pm + n_s)
+        p_mini = rc["pt"].shape[-1]
+        for s, grant in enumerate(pages):
+            if not grant:
+                continue
+            if len(grant) > p_mini:
+                raise ValueError(
+                    f"shard {s}: {len(grant)} pages reserved but the "
+                    f"request mini-pool holds {p_mini} per shard")
+            arr = jnp.asarray(grant, jnp.int32)
+            src = slice(s * p_mini, s * p_mini + len(grant))
+            k = k.at[:, arr].set(rc["k"][:, src])
+            v = v.at[:, arr].set(rc["v"][:, src])
+            pt = pt.at[:, s, slot, :len(grant)].set(arr)
+        return {"k": k, "v": v, "pt": pt}
+    blocks, _, m = rc["k"].shape[:3]
+    p = pages_for(m, page_size)
+    need = shard_pages_for(m, page_size, n_shards)
+    if [len(g) for g in pages] != need:
+        raise ValueError(
+            f"request needs per-shard pages {need} but the reservation "
+            f"holds {[len(g) for g in pages]}")
+    pad = [(0, 0)] * rc["k"].ndim
+    pad[2] = (0, p * page_size - m)
+    tail_shape = rc["k"].shape[3:]
+    rows = {key: jnp.pad(rc[key], pad).reshape(
+        (blocks, p, page_size) + tail_shape) for key in ("k", "v")}
+    for s, grant in enumerate(pages):
+        if not grant:
+            continue
+        arr = jnp.asarray(grant, jnp.int32)
+        js = jnp.arange(s, p, n_shards, dtype=jnp.int32)
+        k = k.at[:, arr].set(jnp.take(rows["k"], js, axis=1))
+        v = v.at[:, arr].set(jnp.take(rows["v"], js, axis=1))
+        pt = pt.at[:, s, slot, :len(grant)].set(arr)
+    return {"k": k, "v": v, "pt": pt}
+
+
+def write_doc_pages(caches, req_caches, slot: int, pages,
                     page_size: int) -> Tuple:
     """Paste one prefilled request into the paged shared caches.
 
@@ -392,11 +607,21 @@ def write_doc_pages(caches, req_caches, slot: int, pages: List[int],
     0..len(pages)-1 to the reservation (stale entries past it are zeroed
     — they are masked by ``doc_len`` anyway, but a clean table keeps the
     layout auditable).  Mamba: per-slot paste, same as the dense layout.
-    Host-side: runs once per admission, not per token."""
-    pages_arr = jnp.asarray(pages, jnp.int32)
-    npg = len(pages)
+    Host-side: runs once per admission, not per token.
+
+    On a mesh-sharded pool (stacked tables (blocks, S, B, P)) ``pages``
+    is the per-shard reservation from ``ShardedPageAllocator.reserve``
+    (a list of per-shard global-id lists) and the request's logical
+    pages stripe round-robin across the shards."""
     out = []
     for c, rc in zip(caches, req_caches):
+        if "pt" in c and c["pt"].ndim == 4:
+            out.append(_write_doc_pages_sharded(c, rc, slot, pages,
+                                                page_size))
+            continue
+        if "pt" in c:
+            pages_arr = jnp.asarray(pages, jnp.int32)
+            npg = len(pages)
         if "pt" in c and "pt" in rc:
             if rc["k"].shape[1] != npg or rc["k"].shape[2] != page_size:
                 raise ValueError(
@@ -432,7 +657,8 @@ def write_doc_pages(caches, req_caches, slot: int, pages: List[int],
 
 
 def alloc_doc_caches(cfg, batch: int, capacity: int, dtype=jnp.float32,
-                     page_size: Optional[int] = None) -> Tuple:
+                     page_size: Optional[int] = None,
+                     n_shards: int = 1) -> Tuple:
     """Zero decode-format doc caches for chunked prefill.
 
     One dict per block-pattern slot, leaves stacked on a leading
@@ -445,18 +671,18 @@ def alloc_doc_caches(cfg, batch: int, capacity: int, dtype=jnp.float32,
     With ``page_size`` set the attention caches come out *paged*: a pool
     {"k","v"} (blocks, B*P, page_size, KV, D) with identity page tables
     "pt" (blocks, B, P), P = pages_for(capacity) — chunk KV is then
-    scattered page-by-page by ``append_doc_chunk``."""
+    scattered page-by-page by ``append_doc_chunk``.  ``n_shards > 1``
+    lays the pool out mesh-sharded (round-robin logical striding, tables
+    (blocks, S, B, P) of global ids, P the per-shard width)."""
     out = []
     nb = cfg.num_blocks
     for kind in cfg.block_pattern:
         if kind.mixer == "attn":
             if page_size is not None:
-                p = pages_for(capacity, page_size)
-                shape = (nb, batch * p, page_size, cfg.num_kv_heads,
-                         cfg.head_dim)
-                pt = jnp.broadcast_to(
-                    jnp.arange(batch * p, dtype=jnp.int32).reshape(
-                        batch, p), (nb, batch, p))
+                p = table_width(capacity, page_size, n_shards)
+                shape = (nb, n_shards * batch * p, page_size,
+                         cfg.num_kv_heads, cfg.head_dim)
+                pt = _identity_tables(nb, batch, p, n_shards)
                 out.append({"k": jnp.zeros(shape, dtype),
                             "v": jnp.zeros(shape, dtype), "pt": pt})
                 continue
@@ -483,15 +709,20 @@ def append_doc_chunk(caches, updates, doc_len) -> Tuple:
     via static-shape ``dynamic_update_slice`` (same recipe as the decode
     tails), or — when the cache carries a page table "pt" — scattered
     row-by-row into the page pool through the table (chunks freely
-    straddle page boundaries; ``page_size`` need not divide the chunk).
+    straddle page boundaries; ``page_size`` need not divide the chunk;
+    mesh-sharded tables route each row through its shard's table,
+    ``core.decode.paged_scatter_sharded``).
     Mamba updates replace the carried {"state","conv"}."""
     write = jax.vmap(dec.write_tail_at, in_axes=(0, 0, None))
     scatter = jax.vmap(dec.paged_scatter, in_axes=(0, 0, 0, None))
+    scatter_sh = jax.vmap(dec.paged_scatter_sharded,
+                          in_axes=(0, 0, 0, None))
     out = []
     for c, u in zip(caches, updates):
         if "k" in u and "pt" in c:
-            out.append({"k": scatter(c["k"], u["k"], c["pt"], doc_len),
-                        "v": scatter(c["v"], u["v"], c["pt"], doc_len),
+            sc = scatter_sh if c["pt"].ndim == 4 else scatter
+            out.append({"k": sc(c["k"], u["k"], c["pt"], doc_len),
+                        "v": sc(c["v"], u["v"], c["pt"], doc_len),
                         "pt": c["pt"]})
         elif "k" in u and "k" in c:
             out.append({"k": write(c["k"], u["k"], doc_len),

@@ -61,17 +61,32 @@ class Engine:
     ``"dense"`` (per-slot buffers padded to capacity — the bit-exactness
     oracle) or ``"paged"`` (global page pool + per-slot page tables,
     ``page_size`` rows per page; admission memory O(actual doc length)).
-    Both layouts produce identical greedy tokens — tests/test_paged_cache
-    holds them to it.
+    On a mesh (``rctx.cache_axes`` set) the paged pool shards its pages
+    axis over the cache axes — logical pages stripe round-robin across
+    shards, so admission memory is O(doc length / shards) per device
+    (serving.cache module docstring has the layout).  Both layouts
+    produce identical greedy tokens — tests/test_paged_cache (and, on
+    the mesh, tests/distributed_checks.py) hold them to it.
+
+    ``paged_impl`` picks the paged read path: ``"kernel"`` (default)
+    runs the fused Pallas paged-attention kernel (block-sparse over the
+    page tables, interpret-mode on CPU); ``"gather"`` materialises the
+    dense per-slot view first — the oracle the kernel is benchmarked
+    and tested against.
     """
 
     def __init__(self, cfg, params, rctx: RunCtx, jit: bool = True,
                  sampling: SamplingParams = sampling_lib.GREEDY,
-                 cache_layout: str = "dense", page_size: int = 64):
+                 cache_layout: str = "dense", page_size: int = 64,
+                 paged_impl: str = "kernel"):
         if cache_layout not in ("dense", "paged"):
             raise ValueError(
                 f"cache_layout must be 'dense' or 'paged', got "
                 f"{cache_layout!r}")
+        if paged_impl not in ("kernel", "gather"):
+            raise ValueError(
+                f"paged_impl must be 'kernel' or 'gather', got "
+                f"{paged_impl!r}")
         if cache_layout == "paged":
             if page_size < 1:
                 raise ValueError(f"page_size must be >= 1, got {page_size}")
@@ -79,12 +94,13 @@ class Engine:
                 raise ValueError(
                     "the paged cache layout requires a decoder-only "
                     "model (encoder-decoder self tails grow by concat)")
-            if rctx.cache_axes:
+            if rctx.cache_axes and rctx.pctx.mesh is None:
                 raise ValueError(
-                    "the paged cache layout is single-host only for now: "
-                    "a mesh-sharded doc cache (cache_axes set) cannot be "
-                    "gathered through a local page table — use "
-                    "cache_layout='dense'")
+                    "paged cache_axes need a mesh: the sharded page pool "
+                    "is read through a shard_map over the cache axes — "
+                    "drop cache_axes (single-host pool) or supply the "
+                    "mesh ParallelCtx")
+        rctx = dataclasses.replace(rctx, paged_impl=paged_impl)
         self.cfg = cfg
         self.params = params
         self.rctx = rctx
@@ -284,6 +300,25 @@ class Engine:
         return self.cache_layout == "paged"
 
     @property
+    def cache_shards(self) -> int:
+        """Shards of the doc cache over the mesh cache axes (1 when
+        single-host) — the S of the sharded paged layout."""
+        mesh = self.rctx.pctx.mesh
+        if mesh is None or not self.rctx.cache_axes:
+            return 1
+        n = 1
+        for ax in self.rctx.cache_axes:
+            n *= mesh.shape[ax]
+        return n
+
+    def _place_paged(self, caches):
+        """Pin freshly-built paged caches to the mesh layout (pool pages
+        / table shard axes over the cache axes); identity off-mesh."""
+        from repro.parallel import sharding as sharding_lib
+        return sharding_lib.shard_paged_caches(
+            caches, self.rctx.pctx.mesh, self.rctx.cache_axes)
+
+    @property
     def supports_chunked_prefill(self) -> bool:
         """Chunked prefill covers the plain-layout prefill paths
         (including sliding-window layers, whose chunks go through the
@@ -396,8 +431,10 @@ class Engine:
             doc_len_val = cache_lib.attn_cache_len(caches)
             if self.paged:
                 # monolithic prefill produced dense caches: repage them
-                # (identity tables — a pad+reshape, bit-preserving)
-                caches = cache_lib.dense_to_paged(caches, self.page_size)
+                # (identity tables — a pad+reshape, bit-preserving; on a
+                # mesh, logical pages stripe across the cache shards)
+                caches = self._place_paged(cache_lib.dense_to_paged(
+                    caches, self.page_size, n_shards=self.cache_shards))
         logits0 = jax.block_until_ready(logits0)
         t_prefill = time.perf_counter() - t0
 
@@ -554,7 +591,10 @@ class ChunkedPrefill:
         self.caches = cache_lib.alloc_doc_caches(
             engine.cfg, self.batch, cap,
             dtype=engine.params["embed"].dtype,
-            page_size=engine.page_size if engine.paged else None)
+            page_size=engine.page_size if engine.paged else None,
+            n_shards=engine.cache_shards if engine.paged else 1)
+        if engine.paged:
+            self.caches = engine._place_paged(self.caches)
         self.prefill_time_s = 0.0
 
     @property

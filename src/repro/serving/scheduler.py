@@ -50,6 +50,15 @@ queueing, or raise ``n_slots`` beyond the dense budget to serve more
 concurrent short requests in the same bytes —
 ``benchmarks/bench_paged_cache.py`` measures exactly that.
 
+On a **mesh engine** (``rctx.cache_axes`` set) the paged pool shards its
+pages axis over the cache axes: ``num_pages`` is the global budget
+(a multiple of the shard count), each shard runs its own free list, and
+a request's logical pages stripe round-robin across shards
+(serving.cache.ShardedPageAllocator — reservations are all-or-nothing,
+so a half-granted admission can never deadlock another).  Admission
+memory is O(doc length / shards) per device; the dense mesh layout
+stays the bit-exactness oracle (tests/distributed_checks.py).
+
 Caveat — MoE architectures: capacity-based expert dispatch couples all
 batch rows (any token competes for per-expert capacity with every other
 row, including empty slots' pad tokens), so scheduled output is only
@@ -70,7 +79,11 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
+
+# one admission's page reservation: flat ids (single-host pool) or
+# per-shard global-id lists (mesh-sharded pool)
+PageGrant = Union[List[int], List[List[int]]]
 
 import jax
 import jax.numpy as jnp
@@ -220,12 +233,17 @@ class Scheduler:
         self.chunks_run = 0
         self.prefill_chunks_done = 0
         # paged bookkeeping: the free-list allocator (built once the
-        # capacities resolve), per-slot reservations, and admission stats
-        # (peak concurrency / pool-exhaustion deferrals — what
+        # capacities resolve; per-shard free lists when the pool shards
+        # over the mesh cache axes), per-slot reservations, and admission
+        # stats (peak concurrency / pool-exhaustion deferrals — what
         # bench_paged_cache measures)
         self._paged = engine.paged
-        self._allocator: Optional[cache_lib.PageAllocator] = None
-        self._slot_pages: Dict[int, List[int]] = {}
+        self._shards = engine.cache_shards if engine.paged else 1
+        self._allocator = None
+        # a grant is a flat List[int] of page ids (single-host pool) or
+        # per-shard List[List[int]] of global ids (sharded pool) — the
+        # shape write_doc_pages / the matching allocator expect
+        self._slot_pages: Dict[int, PageGrant] = {}
         self.peak_active = 0
         self.admission_deferrals = 0
         self._submitted = 0
@@ -261,14 +279,34 @@ class Scheduler:
             if self.num_pages is None:
                 # dense-equivalent default: the pool holds what n_slots
                 # dense buffers at doc_capacity would — nothing a dense
-                # scheduler could admit is ever deferred
-                self.num_pages = self.n_slots * cache_lib.pages_for(
-                    self.doc_capacity, self.engine.page_size)
-            self._allocator = cache_lib.PageAllocator(self.num_pages)
+                # scheduler could admit is ever deferred (rounded up to a
+                # shard multiple so the mesh pool shards evenly)
+                pages = self.n_slots * cache_lib.table_width(
+                    self.doc_capacity, self.engine.page_size,
+                    self._shards)
+                self.num_pages = pages * self._shards
+            if self.num_pages % self._shards:
+                raise ValueError(
+                    f"num_pages ({self.num_pages}) must be a multiple of "
+                    f"the cache shard count ({self._shards}) — the pool "
+                    f"shards evenly over the mesh cache axes")
+            if self._shards == 1:
+                self._allocator = cache_lib.PageAllocator(self.num_pages)
+            else:
+                self._allocator = cache_lib.ShardedPageAllocator(
+                    self.num_pages, self._shards)
 
     def _pages_needed(self, req: Request) -> int:
         return cache_lib.pages_for(_doc_seq_len(req.doc),
                                    self.engine.page_size)
+
+    def _fits_pool(self, req: Request) -> bool:
+        """Could this request's reservation ever be satisfied by an
+        empty pool?  (Sharded: the binding constraint is the per-shard
+        pool, max-loaded shard first.)"""
+        if self._shards == 1:
+            return self._pages_needed(req) <= self.num_pages
+        return self._allocator.fits(self._pages_needed(req))
 
     def _validate_request(self, req: Request) -> None:
         """Admission-time capacity screening — before any prefill compute
@@ -286,15 +324,17 @@ class Scheduler:
                 f"request {req.rid} doc length {_doc_seq_len(req.doc)} "
                 f"exceeds doc_capacity={self.doc_capacity}; use a new "
                 f"Scheduler or pass doc_capacity explicitly")
-        if self._paged and self._pages_needed(req) > self.num_pages:
-            # a reservation larger than the whole pool can never be
-            # satisfied — reject now instead of queueing forever
+        if self._paged and not self._fits_pool(req):
+            # a reservation larger than the whole pool (or, sharded, than
+            # any shard's slice of it) can never be satisfied — reject
+            # now instead of queueing forever
             raise ValueError(
                 f"request {req.rid} needs {self._pages_needed(req)} pages "
-                f"but the pool holds {self.num_pages}; raise num_pages "
-                f"(or page_size)")
+                f"but the pool holds {self.num_pages}"
+                + (f" ({self._shards} shards)" if self._shards > 1 else "")
+                + "; raise num_pages (or page_size)")
 
-    def _reserve_pages(self, req: Request) -> Optional[List[int]]:
+    def _reserve_pages(self, req: Request) -> Optional[PageGrant]:
         """Admission-time page reservation (paged engine).  None means
         the pool is exhausted right now — the request stays queued and
         the deferral is counted; pages come back when slots retire."""
@@ -336,9 +376,11 @@ class Scheduler:
             caches = cache_lib.alloc_paged_slots(
                 req_caches, self.n_slots, self.num_pages,
                 self.engine.page_size,
-                cache_lib.pages_for(self.doc_capacity,
-                                    self.engine.page_size),
-                widen)
+                cache_lib.table_width(self.doc_capacity,
+                                      self.engine.page_size,
+                                      self._shards),
+                widen, n_shards=self._shards)
+            caches = self.engine._place_paged(caches)
         else:
             caches = jax.tree.map(widen, req_caches)
         tails = jax.tree.map(widen, req_tails)
@@ -357,7 +399,7 @@ class Scheduler:
 
     def _install(self, req: Request, slot: int, logits0, caches, tails,
                  tail_fill: int, doc_len: int, t_prefill: float,
-                 pages: Optional[List[int]] = None) -> None:
+                 pages: Optional[PageGrant] = None) -> None:
         """Paste one prefilled request (dense request caches + tail
         buffers) into ``slot`` and sample its first token — shared by the
         monolithic and chunked admission paths.  ``pages`` is the paged
@@ -408,7 +450,7 @@ class Scheduler:
             self._finish(slot)
 
     def _admit(self, req: Request, slot: int,
-               pages: Optional[List[int]] = None) -> None:
+               pages: Optional[PageGrant] = None) -> None:
         (logits0, caches, tails, tail_fill, doc_len,
          t_prefill) = self._prefill_request(req)
         self._install(req, slot, logits0, caches, tails, tail_fill,

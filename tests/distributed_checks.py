@@ -15,6 +15,11 @@ Checks:
   9. chunked augmented prefill (host-loop engine, streaming compression)
      == the mesh shard_map monolithic prefill — the bridge that pins the
      serving-side chunked star/apb path to the distributed computation
+ 10. mesh-sharded paged doc cache == dense mesh cache == single-host
+     oracle (greedy tokens, monolithic + chunked prefill, fused Pallas
+     kernel + gather read paths), the paged scheduler over the sharded
+     pool incl. per-shard allocator conservation, and an augmented (apb)
+     mesh engine admitting paged requests
 """
 import os
 
@@ -287,6 +292,64 @@ def main():
     eng9m = Engine(cfg7, p7, r7, jit=False)
     check("mesh augmented gate stays closed",
           not eng9m.supports_chunked_prefill)
+
+    # ------------- 10: mesh-sharded paged cache == dense mesh == single
+    from repro.serving.scheduler import Request, Scheduler
+    cfg10 = cfg4                     # granite reduced, params from check 4
+    eng_single = Engine(cfg10, params, RunCtx(strategy="full"))
+    ref10 = eng_single.generate(doc, qry, max_new_tokens=6).tokens
+    rctx10 = RunCtx(strategy="full", pctx=pctx2, cache_axes=("model",))
+    eng_mesh_dense = Engine(cfg10, params, rctx10)
+    out_md = eng_mesh_dense.generate(doc, qry, max_new_tokens=6).tokens
+    check("mesh dense greedy == single-host",
+          bool(np.array_equal(out_md, ref10)))
+    for impl in ("kernel", "gather"):
+        engp = Engine(cfg10, params, rctx10, cache_layout="paged",
+                      page_size=16, paged_impl=impl)
+        outp = engp.generate(doc, qry, max_new_tokens=6).tokens
+        check(f"mesh paged[{impl}] greedy == single-host oracle",
+              bool(np.array_equal(outp, ref10)))
+        outc = engp.generate(doc, qry, max_new_tokens=6,
+                             prefill_chunk=16).tokens
+        check(f"mesh paged[{impl}] chunked greedy == oracle",
+              bool(np.array_equal(outc, ref10)))
+
+    # paged scheduler over the sharded pool: mixed lengths, monolithic
+    # and streamed admissions, pages conserved end-to-end
+    d1, q1 = doc[:1], qry[:1]
+    d2 = jax.random.randint(jax.random.fold_in(key, 30), (1, 24), 0,
+                            cfg10.vocab_size)
+    q2 = jax.random.randint(jax.random.fold_in(key, 31), (1, 4), 0,
+                            cfg10.vocab_size)
+    ref_a = eng_single.generate(d1, q1, max_new_tokens=8).tokens[0]
+    ref_b = eng_single.generate(d2, q2, max_new_tokens=4).tokens[0]
+    for pc in (None, 16):
+        engp = Engine(cfg10, params, rctx10, cache_layout="paged",
+                      page_size=16)
+        sch = Scheduler(engp, n_slots=2, decode_chunk=3, prefill_chunk=pc)
+        sch.submit(Request("a", d1, q1, max_new_tokens=8))
+        sch.submit(Request("b", d2, q2, max_new_tokens=4))
+        res = sch.run()
+        check(f"mesh paged scheduler (prefill_chunk={pc}) == solo",
+              bool(np.array_equal(res["a"].tokens, np.asarray(ref_a))
+                   and np.array_equal(res["b"].tokens,
+                                      np.asarray(ref_b))))
+        check(f"mesh paged pool conserved (prefill_chunk={pc})",
+              sch._allocator.free_pages == sch.num_pages
+              and sch.num_pages % engp.cache_shards == 0)
+
+    # augmented (apb) mesh engine admits paged requests: the sharded
+    # local-block doc cache pages into the strided pool like any dense
+    # cache; dense mesh apb is the oracle (apb itself is approximate)
+    eng_apb_d = Engine(cfg7, p7, r7)
+    ref_apb = eng_apb_d.generate(doc7[0:1], qry[0:1],
+                                 max_new_tokens=6).tokens[0]
+    eng_apb_p = Engine(cfg7, p7, r7, cache_layout="paged", page_size=32)
+    schp = Scheduler(eng_apb_p, n_slots=2, decode_chunk=3)
+    schp.submit(Request("apb", doc7[0:1], qry[0:1], max_new_tokens=6))
+    resp = schp.run()
+    check("apb mesh engine admits paged requests == dense mesh apb",
+          bool(np.array_equal(resp["apb"].tokens, np.asarray(ref_apb))))
 
     n_fail = OK.count(False)
     print(f"\n{len(OK) - n_fail}/{len(OK)} distributed checks passed")

@@ -1,8 +1,12 @@
 """Paged doc cache: the paged layout (global page pool + per-slot page
 tables) must be *bit-identical* to the dense layout — the dense engine
-is the oracle — and the free-list allocator must survive exhaustion,
-early release and mixed retire/admit churn without leaking or
-double-issuing pages.
+is the oracle — through both read paths (the fused Pallas
+paged-attention kernel, interpret-mode on CPU, and the dense-view
+"gather" oracle it replaces), and the free-list allocators (flat and
+per-shard) must survive exhaustion, early release and mixed
+retire/admit churn without leaking or double-issuing pages.  The
+mesh-sharded pool's greedy parity runs under 8 fake devices in
+tests/distributed_checks.py.
 """
 import dataclasses
 
@@ -16,15 +20,18 @@ from repro.core import decode as dec
 from repro.models import model as model_lib
 from repro.models.transformer import RunCtx
 from repro.serving import cache as cache_lib
-from repro.serving.cache import PageAllocator, pages_for
+from repro.serving.cache import (PageAllocator, ShardedPageAllocator,
+                                 pages_for, shard_pages_for)
 from repro.serving.engine import Engine
 from repro.serving.scheduler import Request, Scheduler
 
 ARCHS = ["granite-3-2b", "jamba-1.5-large-398b", "llama3-8b"]
 # transformer w/ softcap+GQA, mamba-mix hybrid, plain GQA transformer
 
+IMPLS = ["kernel", "gather"]
 
-def _mk_engines(key, arch, **kw):
+
+def _mk_engines(key, arch, paged_impl="kernel", **kw):
     """One param set, two engines: dense (oracle) and paged."""
     cfg = get_config(arch).reduced()
     if cfg.has_moe:
@@ -33,7 +40,7 @@ def _mk_engines(key, arch, **kw):
     params = model.init(key)
     dense = Engine(cfg, params, RunCtx(strategy="full"))
     paged = Engine(cfg, params, RunCtx(strategy="full"),
-                   cache_layout="paged", **kw)
+                   cache_layout="paged", paged_impl=paged_impl, **kw)
     return cfg, dense, paged
 
 
@@ -47,12 +54,15 @@ def _mk_req(cfg, n, lq, seed):
 # Engine-level bit-exactness: paged == dense
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("impl", IMPLS)
 @pytest.mark.parametrize("arch", ARCHS)
-def test_paged_matches_dense_monolithic_and_chunked(arch, key):
-    """Greedy tokens must be bit-identical across layouts for both the
-    monolithic and the chunked prefill path (page_size chosen to not
-    divide the document: the last page is partially filled)."""
-    cfg, dense, paged = _mk_engines(key, arch, page_size=16)
+def test_paged_matches_dense_monolithic_and_chunked(arch, impl, key):
+    """Greedy tokens must be bit-identical across layouts — through the
+    fused kernel and the gather oracle alike — for both the monolithic
+    and the chunked prefill path (page_size chosen to not divide the
+    document: the last page is partially filled)."""
+    cfg, dense, paged = _mk_engines(key, arch, page_size=16,
+                                    paged_impl=impl)
     r = np.random.default_rng(0)
     doc = jnp.asarray(r.integers(0, cfg.vocab_size, (2, 50)), jnp.int32)
     query = jnp.asarray(r.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
@@ -64,10 +74,12 @@ def test_paged_matches_dense_monolithic_and_chunked(arch, key):
     np.testing.assert_array_equal(out_c, ref)
 
 
-def test_paged_doc_length_at_page_boundary(key):
+@pytest.mark.parametrize("impl", IMPLS)
+def test_paged_doc_length_at_page_boundary(key, impl):
     """A document exactly filling its pages (n == k * page_size) must
     not read a phantom extra page or drop the last row."""
-    cfg, dense, paged = _mk_engines(key, "granite-3-2b", page_size=16)
+    cfg, dense, paged = _mk_engines(key, "granite-3-2b", page_size=16,
+                                    paged_impl=impl)
     doc, query = _mk_req(cfg, 64, 8, 1)          # 64 = 4 * 16 exactly
     ref = dense.generate(doc, query, max_new_tokens=6).tokens
     np.testing.assert_array_equal(
@@ -98,9 +110,13 @@ def test_paged_cache_layout_validation(key):
     with pytest.raises(ValueError, match="page_size"):
         Engine(cfg, params, RunCtx(strategy="full"), cache_layout="paged",
                page_size=0)
-    with pytest.raises(ValueError, match="single-host"):
+    with pytest.raises(ValueError, match="need a mesh"):
+        # cache axes without a mesh: nothing to shard_map the pool over
         Engine(cfg, params, RunCtx(strategy="full", cache_axes=("model",)),
                cache_layout="paged")
+    with pytest.raises(ValueError, match="paged_impl"):
+        Engine(cfg, params, RunCtx(strategy="full"), cache_layout="paged",
+               paged_impl="dense-view")
     whisper = get_config("whisper-tiny").reduced()
     wparams = model_lib.build(whisper).init(key)
     with pytest.raises(ValueError, match="decoder-only"):
@@ -135,6 +151,125 @@ def test_dense_paged_round_trip(key):
         o = int(off[row])
         np.testing.assert_array_equal(np.asarray(view[:, row, o:o + t]),
                                       np.asarray(upd[:, row]))
+
+
+def test_sharded_round_trip_and_scatter(key):
+    """dense -> mesh-sharded paged -> dense is exact on the valid
+    prefix, and the strided sharded scatter lands rows where both the
+    gather and the (strided) kernel mask expect them — pure cache math,
+    no mesh needed (the layout is just arrays)."""
+    blocks, b, n, kv, d, ps, S = 2, 3, 37, 2, 4, 8, 4
+    dense = {"k": jax.random.normal(key, (blocks, b, n, kv, d)),
+             "v": jax.random.normal(jax.random.fold_in(key, 1),
+                                    (blocks, b, n, kv, d))}
+    paged = cache_lib.dense_to_paged((dense,), page_size=ps, n_shards=S)[0]
+    p_shard = cache_lib.table_width(n, ps, S)
+    assert paged["pt"].shape == (blocks, S, b, p_shard)
+    assert paged["k"].shape[1] == S * b * p_shard
+    back = cache_lib.paged_to_dense((paged,))[0]
+    np.testing.assert_array_equal(np.asarray(back["k"][:, :, :n]),
+                                  np.asarray(dense["k"]))
+    # strided scatter through the sharded tables, read back via gather
+    t = 5
+    upd = jax.random.normal(jax.random.fold_in(key, 2),
+                            (blocks, b, t, kv, d))
+    off = jnp.asarray([0, 7, 30], jnp.int32)
+    scat = jax.vmap(dec.paged_scatter_sharded, in_axes=(0, 0, 0, None))
+    pool = scat(paged["k"], upd, paged["pt"], off)
+    view = cache_lib.paged_to_dense(
+        ({"k": pool, "v": pool, "pt": paged["pt"]},))[0]["k"]
+    for row in range(b):
+        o = int(off[row])
+        np.testing.assert_array_equal(np.asarray(view[:, row, o:o + t]),
+                                      np.asarray(upd[:, row]))
+
+
+def test_write_doc_pages_sharded_layouts(key):
+    """The sharded admission paste (dense request and chunked mini-pool
+    request alike) must land every logical page on its round-robin
+    shard, exactly where the logical-order gather reads it back — pure
+    array math, no mesh needed."""
+    blocks, kv, d, ps, S, n_slots = 2, 2, 4, 4, 2, 3
+    m = 22                                       # 6 logical pages: [3, 3]
+    p_shard = cache_lib.table_width(m, ps, S)
+    num_pages = n_slots * p_shard * S
+    shared = cache_lib.alloc_paged_slots(
+        ({"k": jnp.zeros((blocks, 1, m, kv, d)),
+          "v": jnp.zeros((blocks, 1, m, kv, d))},),
+        n_slots, num_pages, ps, p_shard,
+        lambda leaf: leaf, n_shards=S)
+    alloc = ShardedPageAllocator(num_pages, S)
+    req = {"k": jax.random.normal(key, (blocks, 1, m, kv, d)),
+           "v": jax.random.normal(jax.random.fold_in(key, 1),
+                                  (blocks, 1, m, kv, d))}
+    pages = alloc.reserve(pages_for(m, ps))
+    out = cache_lib.write_doc_pages(shared, (req,), 1, pages, ps)
+    dense = cache_lib.paged_to_dense(out)[0]
+    np.testing.assert_array_equal(np.asarray(dense["k"][:, 1, :m]),
+                                  np.asarray(req["k"][:, 0]))
+    # chunked-admission twin: stream the same rows into a sharded
+    # mini-pool, then fast-path copy its pages across
+    mini = cache_lib.alloc_doc_caches(
+        _MiniCfg(blocks, kv, d), 1, m, page_size=ps, n_shards=S)
+    doc_len = jnp.zeros((1,), jnp.int32)
+    for off in (0, 10, 17):                      # ragged chunk boundaries
+        t = min(m, [10, 7, m - 17][[0, 10, 17].index(off)])
+        upd = ({"k": req["k"][:, :, off:off + t],
+                "v": req["v"][:, :, off:off + t]},)
+        mini = cache_lib.append_doc_chunk(mini, upd, doc_len)
+        doc_len = doc_len + t
+    pages2 = alloc.reserve(pages_for(m, ps))
+    out2 = cache_lib.write_doc_pages(out, mini, 2, pages2, ps)
+    dense2 = cache_lib.paged_to_dense(out2)[0]
+    np.testing.assert_array_equal(np.asarray(dense2["k"][:, 2, :m]),
+                                  np.asarray(req["k"][:, 0]))
+    # slot 1 untouched by slot 2's paste
+    np.testing.assert_array_equal(np.asarray(dense2["k"][:, 1, :m]),
+                                  np.asarray(req["k"][:, 0]))
+    alloc.release(pages)
+    alloc.release(pages2)
+    assert alloc.free_pages == num_pages
+
+
+class _MiniCfg:
+    """Just enough config surface for alloc_doc_caches' attention arm."""
+
+    def __init__(self, num_blocks, kv, d):
+        self.num_blocks = num_blocks
+        self.num_kv_heads = kv
+        self.head_dim = d
+        self.block_pattern = [type("K", (), {"mixer": "attn",
+                                             "window": 0,
+                                             "moe": False})()]
+
+
+def test_paged_kernel_matches_gather_mask_semantics(key):
+    """The fused kernel and the gather oracle must agree (to float
+    tolerance) on (out, lse) across window / start / strided-layout
+    combinations — including fully-masked slots (valid_len = 0)."""
+    rng = np.random.default_rng(3)
+    b, t, h, kv, d = 3, 4, 4, 2, 16
+    npool, ps, p = 12, 8, 3
+    q = jnp.asarray(rng.standard_normal((b, t, h, d)), jnp.float32)
+    pk = jnp.asarray(rng.standard_normal((npool, ps, kv, d)), jnp.float32)
+    pv = jnp.asarray(rng.standard_normal((npool, ps, kv, d)), jnp.float32)
+    pt = jnp.asarray(rng.integers(0, npool, (b, p)), jnp.int32)
+    vl = jnp.asarray([0, 10, 24], jnp.int32)
+    st = jnp.asarray([0, 3, 0], jnp.int32)
+    for stride, offset in [(1, 0), (4, 2)]:
+        for window in (0, 7):
+            for softcap in (None, 20.0):
+                outs = [dec.paged_partial_lse(
+                    q, pk, pv, pt, valid_len=vl, row_base=vl, start=st,
+                    window=window, softcap=softcap, page_stride=stride,
+                    page_offset=offset, impl=impl)
+                    for impl in ("kernel", "gather")]
+                np.testing.assert_allclose(
+                    np.asarray(outs[0][0]), np.asarray(outs[1][0]),
+                    atol=2e-5)
+                np.testing.assert_allclose(
+                    np.minimum(np.asarray(outs[0][1]), 1e9),
+                    np.minimum(np.asarray(outs[1][1]), 1e9), atol=2e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -306,3 +441,47 @@ def test_pages_for():
     assert pages_for(64, 16) == 4
     with pytest.raises(ValueError):
         pages_for(8, 0)
+
+
+def test_shard_pages_for():
+    """Round-robin striping: per-shard counts sum to the logical total
+    and differ by at most one page."""
+    assert shard_pages_for(64, 16, 4) == [1, 1, 1, 1]
+    assert shard_pages_for(65, 16, 4) == [2, 1, 1, 1]     # 5 pages
+    assert shard_pages_for(8, 16, 4) == [1, 0, 0, 0]      # 1 page
+    for n in (0, 1, 17, 100, 129):
+        for s in (1, 2, 4, 8):
+            per = shard_pages_for(n, 16, s)
+            assert sum(per) == pages_for(n, 16)
+            assert max(per) - min(per) <= 1
+
+
+def test_sharded_allocator_all_or_nothing():
+    """A reservation one shard cannot satisfy takes nothing anywhere —
+    a half grant would deadlock against another half grant."""
+    a = ShardedPageAllocator(8, 4)               # 2 pages per shard
+    g1 = a.reserve(8)                            # 2 per shard: fills it
+    assert a.free_pages == 0
+    assert [len(s) for s in g1] == [2, 2, 2, 2]
+    a.release(g1)
+    g2 = a.reserve(5)                            # needs [2,1,1,1]
+    assert [len(s) for s in g2] == [2, 1, 1, 1]
+    assert a.shard_free(0) == 0 and a.shard_free(1) == 1
+    assert a.reserve(2) is None                  # shard 0 exhausted...
+    assert a.free_pages == 3                     # ...and nothing taken
+    assert a.reserve(1) is None                  # page 0 always lands on
+    a.release(g2)                                # shard 0 — still blocked
+    assert a.reserve(1) is not None
+
+
+def test_sharded_allocator_single_page_needs_shard_zero():
+    a = ShardedPageAllocator(8, 4)
+    g = a.reserve(2)                             # [1,1,0,0]
+    assert a.reserve(8) is None                  # shards 0/1 short
+    assert a.free_pages == 6
+    a.release(g)
+    assert a.fits(8) and not a.fits(9)           # 9 -> [3,2,2,2] > 2/shard
+    with pytest.raises(ValueError):
+        ShardedPageAllocator(6, 4)               # not an even split
+    with pytest.raises(ValueError):
+        a.release([[99], [], [], []])            # foreign page id

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compressor as comp
-from repro.serving.cache import PageAllocator, pages_for
+from repro.serving.cache import (PageAllocator, ShardedPageAllocator,
+                                 pages_for, shard_pages_for)
 
 hypothesis.settings.register_profile(
     "ci", deadline=None, max_examples=20,
@@ -85,6 +86,69 @@ def test_page_allocator_exhaustion_then_recovery(num_pages, n):
         alloc.release(grants[0])
         with pytest.raises(ValueError):
             alloc.release(grants[0])
+
+
+# ---------------------------------------------------------------------------
+# ShardedPageAllocator: per-shard conservation + all-or-nothing grants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 8), st.integers(1, 4),
+       st.lists(st.tuples(st.booleans(), st.integers(1, 12)),
+                min_size=1, max_size=60),
+       st.integers(0, 2**31 - 1))
+def test_sharded_allocator_churn_invariants(pps, n_shards, ops, seed):
+    """Random reserve/release churn over the per-shard free lists: every
+    shard conserves its own pages (free + reserved == pages_per_shard),
+    grants stripe round-robin (shard s gets shard_pages_for[s] pages of
+    its own id range), no page is owned twice, and a refusal is honest —
+    some shard genuinely lacked its share *and nothing was taken* (the
+    all-or-nothing contract a half-granted reservation would deadlock)."""
+    rng = np.random.default_rng(seed)
+    num_pages = pps * n_shards
+    alloc = ShardedPageAllocator(num_pages, n_shards)
+    live = []                               # list of per-shard grant lists
+    for is_reserve, n in ops:
+        if is_reserve:
+            free_before = [alloc.shard_free(s) for s in range(n_shards)]
+            need = shard_pages_for(n, 1, n_shards)   # page_size 1: n rows
+            grants = alloc.reserve(n)                # == n logical pages
+            if grants is None:
+                assert any(need[s] > free_before[s]
+                           for s in range(n_shards))
+                # nothing taken on refusal
+                assert [alloc.shard_free(s) for s in range(n_shards)] \
+                    == free_before
+            else:
+                assert [len(g) for g in grants] == need
+                for s, g in enumerate(grants):
+                    assert all(s * pps <= p < (s + 1) * pps for p in g)
+                live.append(grants)
+        elif live:
+            idx = int(rng.integers(len(live)))
+            alloc.release(live.pop(idx))
+        held = [p for gr in live for g in gr for p in g]
+        assert len(held) == len(set(held))           # no double ownership
+        assert alloc.used_pages == len(held)
+        assert alloc.free_pages + alloc.used_pages == num_pages
+        for s in range(n_shards):
+            held_s = [p for gr in live for p in gr[s]]
+            assert alloc.shard_free(s) + len(held_s) == pps
+    for gr in live:
+        alloc.release(gr)
+    assert alloc.free_pages == num_pages and alloc.used_pages == 0
+
+
+@given(st.integers(0, 300), st.integers(1, 32), st.integers(1, 8))
+def test_shard_pages_for_partitions(n, page_size, n_shards):
+    """The per-shard counts are a balanced partition of pages_for."""
+    per = shard_pages_for(n, page_size, n_shards)
+    assert sum(per) == pages_for(n, page_size)
+    assert max(per) - min(per) <= 1
+    assert all(p >= 0 for p in per)
+    # shard s holds exactly the logical pages j ≡ s (mod n_shards)
+    p = pages_for(n, page_size)
+    for s in range(n_shards):
+        assert per[s] == len(range(s, p, n_shards))
 
 
 @given(st.integers(0, 500), st.integers(1, 64))

@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Validate the benchmark JSON artifacts (stdlib only, like check_links).
+
+    python tools/check_bench_results.py [--dir results] [NAME ...]
+
+The CI ``bench-smoke`` job runs ``benchmarks.run --tiny`` and then this
+script: every expected ``results/<name>.json`` must exist, parse, and
+carry a non-empty ``records`` list whose rows have the harness's CSV
+schema (``name``, ``us_per_call``, ``derived``).  A benchmark that
+crashes fails the run itself; one that silently stops emitting (or
+emits an empty/renamed document) fails here — that is the rot this
+check exists to catch.
+
+Default NAMEs derive from ``benchmarks.run.TINY_MODULES`` (each module
+writes ``results/bench_<module>.json``), so adding a benchmark to the
+tiny sweep automatically puts its artifact under validation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.run import TINY_MODULES  # noqa: E402  (stdlib-only module)
+
+DEFAULT_EXPECTED = [f"bench_{name}" for name in TINY_MODULES]
+
+REQUIRED_RECORD_KEYS = ("name", "us_per_call", "derived")
+
+
+def check_one(path: str) -> list:
+    errors = []
+    if not os.path.exists(path):
+        return [f"{path}: missing"]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable JSON ({e})"]
+    records = doc.get("records")
+    if not isinstance(records, list) or not records:
+        errors.append(f"{path}: no records (empty or missing list)")
+        return errors
+    for i, rec in enumerate(records):
+        if not isinstance(rec, dict):
+            errors.append(f"{path}: records[{i}] is not an object")
+            continue
+        for key in REQUIRED_RECORD_KEYS:
+            if key not in rec:
+                errors.append(f"{path}: records[{i}] lacks {key!r}")
+    if "benchmark" not in doc:
+        errors.append(f"{path}: missing 'benchmark' field")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results")
+    ap.add_argument("names", nargs="*", default=None,
+                    help=f"artifact basenames (default: "
+                         f"{' '.join(DEFAULT_EXPECTED)})")
+    args = ap.parse_args()
+    names = args.names or DEFAULT_EXPECTED
+
+    errors = []
+    for name in names:
+        errors += check_one(os.path.join(args.dir, f"{name}.json"))
+    if errors:
+        for e in errors:
+            print(f"FAIL {e}")
+        return 1
+    print(f"OK: {len(names)} benchmark artifacts valid "
+          f"({', '.join(names)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
