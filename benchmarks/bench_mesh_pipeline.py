@@ -1,0 +1,186 @@
+"""Pipelined vs lockstep mesh prefill: TTFT and decode stall.
+
+``bench_apb_chunked`` measures the host-loop augmented streaming path;
+this is its mesh twin — the distributed workload the paper targets.  An
+8-device mesh serves an APB engine whose doc caches shard over the
+sequence axis; one long layout-matching document is submitted first,
+then short plain requests, under
+
+  * ``lockstep``  — the long admission runs the monolithic shard_map
+    prefill in one stall (all hosts AllGather their passing blocks
+    together); shorts and live decodes wait behind it.
+  * ``pipelined`` — the long admission streams through
+    ``MeshChunkedPrefill`` (the wave schedule: host h's pow2 chunks
+    trail host h-1's finalize, each compressed passing block handed one
+    hop to the next shard the moment its running top-k finalizes); SRPT
+    admits the shorts after O(their own chunks) and decode interleaves
+    between waves.
+
+Besides the scheduler TTFTs, the per-step stall is measured directly on
+a prefill session: the lockstep path's single stall is the whole
+monolithic pass, the pipelined path's is its longest single chunk step.
+Both paths produce bit-identical greedy tokens
+(tests/distributed_checks.py check 11 pins it; a disagreement is warned
+on stderr and recorded as ``token_agreement``).
+
+The mesh needs 8 fake CPU devices, which must be configured before jax
+initialises — the parent benchmark process already runs single-device,
+so ``run()`` re-executes this module in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.  Emits the
+standard CSV rows and ``results/bench_mesh_pipeline.json``.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+ARCH = "granite-3-2b"
+HOSTS = 8
+
+
+def run() -> None:
+    """Parent entry (benchmarks.run): spawn the 8-device child."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_mesh_pipeline",
+         "--child"],
+        env=env, capture_output=True, text=True)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    if proc.returncode:
+        raise RuntimeError(
+            f"bench_mesh_pipeline child failed ({proc.returncode})")
+
+
+def _child() -> None:
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import emit, emit_json, tiny
+    from repro.configs import get_config
+    from repro.core.splitting import make_layout
+    from repro.core.strategies import ParallelCtx
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import model as model_lib
+    from repro.models.transformer import RunCtx
+    from repro.serving.engine import Engine
+    from repro.serving.scheduler import Request, Scheduler
+
+    assert len(jax.devices()) == HOSTS, jax.devices()
+    n_long = tiny(4096, 512)           # 8 hosts x (512 | 64) local block
+    n_short, lq_long, lq_short = 64, 8, 4
+    n_short_reqs, max_new, n_slots = 2, 8, 3
+    chunk = tiny(128, 64)
+
+    cfg = get_config(ARCH).reduced()
+    model = model_lib.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    layout = make_layout(n_long, lq_long, HOSTS,
+                         anchor_frac=cfg.anchor_frac,
+                         passing_frac=cfg.passing_frac)
+    mesh = make_test_mesh(n_model=HOSTS)
+    pctx = ParallelCtx(mesh=mesh, seq_axis="model", batch_axes=("data",))
+    engine = Engine(cfg, params,
+                    RunCtx(strategy="apb", pctx=pctx, layout=layout,
+                           cache_axes=("model",)))
+
+    r = np.random.default_rng(0)
+    d_long = jnp.asarray(r.integers(10, cfg.vocab_size, (1, n_long)),
+                         jnp.int32)
+    q_long = jnp.asarray(r.integers(10, cfg.vocab_size, (1, lq_long)),
+                         jnp.int32)
+
+    def requests():
+        reqs = [Request("long", d_long, q_long, max_new_tokens=max_new)]
+        for i in range(n_short_reqs):
+            ri = np.random.default_rng(100 + i)
+            reqs.append(Request(
+                f"short{i}",
+                jnp.asarray(ri.integers(10, cfg.vocab_size, (1, n_short)),
+                            jnp.int32),
+                jnp.asarray(ri.integers(10, cfg.vocab_size,
+                                        (1, lq_short)), jnp.int32),
+                max_new_tokens=max_new))
+        return reqs
+
+    def run_sched(prefill_chunk):
+        sch = Scheduler(engine, n_slots=n_slots, decode_chunk=4,
+                        prefill_chunk=prefill_chunk)
+        for req in requests():                  # long submitted first
+            sch.submit(req)
+        return sch.run()
+
+    # warm both paths (compiles excluded from the measured runs)
+    run_sched(None)
+    run_sched(chunk)
+
+    res_lock = run_sched(None)
+    res_pipe = run_sched(chunk)
+    agree = all(
+        np.array_equal(res_lock[rid].tokens, res_pipe[rid].tokens)
+        for rid in res_lock)
+    if not agree:
+        print("# warning: pipelined vs lockstep token mismatch",
+              file=sys.stderr)
+
+    shorts = [f"short{i}" for i in range(n_short_reqs)]
+    ttft_lock = float(np.mean([res_lock[s].ttft_s for s in shorts]))
+    ttft_pipe = float(np.mean([res_pipe[s].ttft_s for s in shorts]))
+    speedup = ttft_lock / max(ttft_pipe, 1e-9)
+    waves = res_pipe["long"].prefill_waves
+
+    # direct stall measurement: the lockstep path's one stall is the
+    # whole monolithic pass; the pipelined path's is its longest single
+    # chunk step (what a concurrent decode waits for at most)
+    t0 = time.perf_counter()
+    jax.block_until_ready(engine.prefill(d_long, q_long)[0])
+    stall_lock = time.perf_counter() - t0
+    sess = engine.start_prefill(d_long, q_long, chunk_size=chunk)
+    step_times = []
+    while sess.chunks_left:
+        t0 = time.perf_counter()
+        sess.step()
+        step_times.append(time.perf_counter() - t0)
+    stall_pipe = max(step_times)
+    ratio = stall_lock / max(stall_pipe, 1e-9)
+
+    records = [
+        {"name": "ttft_short_mesh_lockstep",
+         "us_per_call": ttft_lock * 1e6, "ttft_s": ttft_lock,
+         "derived": f"short_ttft={ttft_lock * 1e3:.1f}ms"},
+        {"name": "ttft_short_mesh_pipelined",
+         "us_per_call": ttft_pipe * 1e6, "ttft_s": ttft_pipe,
+         "speedup_vs_lockstep": speedup,
+         "token_agreement": bool(agree),
+         "derived": f"short_ttft={ttft_pipe * 1e3:.1f}ms;"
+                    f"vs_lockstep={speedup:.2f}x"},
+        {"name": "stall_mesh_lockstep",
+         "us_per_call": stall_lock * 1e6, "stall_s": stall_lock,
+         "derived": f"stall={stall_lock * 1e3:.1f}ms"},
+        {"name": "stall_mesh_pipelined",
+         "us_per_call": stall_pipe * 1e6, "stall_s": stall_pipe,
+         "stall_ratio": ratio, "prefill_waves": int(waves),
+         "derived": f"max_step={stall_pipe * 1e3:.1f}ms;"
+                    f"bounded={ratio:.2f}x;waves={waves}"},
+    ]
+    for rec in records:
+        emit(rec["name"], rec["us_per_call"], rec["derived"])
+    emit_json("bench_mesh_pipeline", records,
+              meta={"arch": ARCH, "strategy": "apb", "hosts": HOSTS,
+                    "n_long": n_long, "n_short": n_short,
+                    "n_short_reqs": n_short_reqs, "chunk": chunk,
+                    "max_new_tokens": max_new, "n_slots": n_slots,
+                    "token_agreement": bool(agree),
+                    "device": jax.devices()[0].platform})
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child()
+    else:
+        run()

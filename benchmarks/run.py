@@ -30,12 +30,13 @@ MODULES = [
     ("prefill_chunking", "benchmarks.bench_prefill_chunking"),  # HOL / TTFT
     ("paged_cache", "benchmarks.bench_paged_cache"),     # paged vs dense HBM
     ("apb_chunked", "benchmarks.bench_apb_chunked"),     # HOL, augmented
+    ("mesh_pipeline", "benchmarks.bench_mesh_pipeline"), # pipelined mesh
 ]
 
 # the --tiny (CI bench-smoke) sweep: every module that writes a
 # results/*.json artifact — kept in sync with tools/check_bench_results.py
 TINY_MODULES = ["serving", "prefill_chunking", "paged_cache",
-                "apb_chunked"]
+                "apb_chunked", "mesh_pipeline"]
 
 
 def main() -> None:

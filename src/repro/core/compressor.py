@@ -167,6 +167,21 @@ def running_topk_update(state, scores, k_chunk, v_chunk, offset):
     }
 
 
+def running_topk_update_where(state, scores, k_chunk, v_chunk, offset,
+                              active):
+    """``running_topk_update`` gated by a traced boolean.
+
+    The pipelined mesh prefill carries one running selection per shard
+    (the state grows a leading host axis, sharded over the sequence
+    axis); every shard traces the same chunk update but only the host
+    that owns the streaming block may fold it in.  ``active`` is that
+    per-shard scalar — inactive shards return their state unchanged, so
+    under ``vmap`` over the host axis the update stays shard-local.
+    """
+    new = running_topk_update(state, scores, k_chunk, v_chunk, offset)
+    return jax.tree.map(lambda n, o: jnp.where(active, n, o), new, state)
+
+
 def running_topk_finalize(state):
     """(k_sel, v_sel, indices) in ``select_topk``'s layout:
     (B, lp, KV, dh) / (B, lp, KV), position-ordered."""

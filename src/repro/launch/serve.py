@@ -28,9 +28,11 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="power-of-two chunk size for streamed (chunked) "
                          "prefill; plain strategies chunk everywhere, "
-                         "star/apb chunk on a single device (the "
-                         "host-loop path streams each emulated host's "
-                         "block with incremental compression); default: "
+                         "star/apb chunk on a single device (host-loop) "
+                         "and on the mesh (the pipelined wave schedule: "
+                         "each host's block streams with incremental "
+                         "compression and hands its compressed passing "
+                         "block one hop to the next shard); default: "
                          "monolithic prefill")
     ap.add_argument("--cache-layout", default="dense",
                     choices=["dense", "paged"],
@@ -68,6 +70,7 @@ def main() -> None:
     from repro.launch.mesh import make_test_mesh
     from repro.models import model as model_lib
     from repro.models.transformer import RunCtx
+    from repro.serving.config import ServeConfig
     from repro.serving.engine import Engine
     from repro.serving.sampling import SamplingParams
 
@@ -101,22 +104,35 @@ def main() -> None:
     if args.num_pages is not None and args.cache_layout != "paged":
         raise SystemExit("--num-pages sizes the paged pool; add "
                          "--cache-layout paged")
-    engine = Engine(cfg, params, rctx, cache_layout=args.cache_layout,
-                    page_size=args.page_size, paged_impl=args.paged_impl)
+    # one validated config from the flags; Engine and Scheduler each
+    # consume the fields they own
+    try:
+        serve_cfg = ServeConfig(cache_layout=args.cache_layout,
+                                page_size=args.page_size,
+                                paged_impl=args.paged_impl,
+                                n_slots=args.batch,
+                                prefill_chunk=args.prefill_chunk,
+                                num_pages=args.num_pages,
+                                max_new=args.new_tokens)
+    except ValueError as e:
+        raise SystemExit(str(e))
+    engine = Engine(cfg, params, rctx, config=serve_cfg)
 
     rng = np.random.default_rng(0)
     doc = jnp.asarray(rng.integers(10, cfg.vocab_size,
                                    (args.batch, args.n_doc)), jnp.int32)
     query = jnp.asarray(rng.integers(10, cfg.vocab_size,
                                      (args.batch, args.lq)), jnp.int32)
-    if args.prefill_chunk and not engine.supports_chunked_prefill:
+    caps = engine.prefill_capabilities
+    if args.prefill_chunk and not caps:
         raise SystemExit(
             f"--prefill-chunk is not available for this configuration "
             f"(arch={args.arch}, strategy={args.strategy}, "
-            f"devices={args.devices}): mesh-sharded star/apb, augmented "
-            f"mamba/MoE and encoder-decoder prefills stay monolithic; "
-            f"drop the flag (or use --devices 1 for the host-loop "
-            f"augmented chunked path)")
+            f"devices={args.devices}): Engine.prefill_capabilities."
+            f"reason={caps.reason!r} — augmented mamba/MoE, random/"
+            f"oracle compressors and encoder-decoder prefills stay "
+            f"monolithic; drop the flag (mesh star/apb streams through "
+            f"the pipelined wave schedule, so it no longer needs to)")
     n_in = args.n_doc + args.lq
     if args.num_pages is not None:
         # explicit pool sizing: drive the continuous-batching scheduler
@@ -126,26 +142,27 @@ def main() -> None:
 
         from repro.serving.scheduler import Request, Scheduler
 
-        sch = Scheduler(engine, n_slots=args.batch,
-                        num_pages=args.num_pages,
+        sch = Scheduler(engine, config=serve_cfg,
                         sampling=sampling,
-                        rng=jax.random.PRNGKey(args.seed),
-                        prefill_chunk=args.prefill_chunk)
+                        rng=jax.random.PRNGKey(args.seed))
         for i in range(args.batch):
             sch.submit(Request(f"r{i}", doc[i], query[i],
-                               max_new_tokens=args.new_tokens))
+                               max_new_tokens=serve_cfg.max_new))
         t0 = time.perf_counter()
         results = sch.run()
         wall = time.perf_counter() - t0
         toks = sum(len(r.tokens) for r in results.values())
+        waves = sum(r.prefill_waves for r in results.values())
         print(f"strategy={args.strategy} hosts={hosts} "
               f"requests={args.batch} num_pages={sch.num_pages} "
               f"wall={wall*1e3:.1f}ms "
               f"speed={(args.batch * n_in + toks) / max(wall, 1e-9):.0f} "
               f"tok/s admission_deferrals={sch.admission_deferrals} "
-              f"peak_active={sch.peak_active}")
+              f"peak_active={sch.peak_active} prefill_waves={waves}")
         for rid in sorted(results):
-            print(f"{rid}: {results[rid].tokens.tolist()}")
+            r = results[rid]
+            print(f"{rid}: waves={r.prefill_waves} "
+                  f"tokens={r.tokens.tolist()}")
         return
     res = engine.generate(doc, query, max_new_tokens=args.new_tokens,
                           sampling=sampling,
@@ -154,7 +171,8 @@ def main() -> None:
     print(f"strategy={args.strategy} hosts={hosts} "
           f"prefill={res.prefill_time_s*1e3:.1f}ms "
           f"decode={res.decode_time_s*1e3:.1f}ms "
-          f"speed={res.tok_per_s(n_in):.0f} tok/s")
+          f"speed={res.tok_per_s(n_in):.0f} tok/s "
+          f"prefill_waves={res.prefill_waves}")
     print(f"tokens: {res.tokens.tolist()}")
 
 

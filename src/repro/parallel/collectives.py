@@ -6,7 +6,11 @@ All distributed attention in this framework reduces to two primitives:
   compressed-KV AllGather, paper §3.5),
 * LSE merging — combine partial attention outputs computed against
   disjoint KV shards (paper Alg. 3 / STARATTN stage 2), either via
-  ``psum`` across a mesh axis or pairwise.
+  ``psum`` across a mesh axis or pairwise,
+* ``pass_block_onehop`` — the point-to-point twin of the AllGather for
+  the *pipelined* mesh prefill: each host hands its passing-block buffer
+  to host h+1 the moment its running top-k finalizes, so the compressed
+  block travels exactly one hop instead of being broadcast everywhere.
 """
 from __future__ import annotations
 
@@ -49,6 +53,22 @@ def all_gather_concat(x, axis_name: AxisName, axis: int = 1):
     shape = list(x.shape)
     shape[axis] = -1
     return g.reshape(shape)
+
+
+def pass_block_onehop(x, axis_name: str):
+    """Shift each host's buffer one hop down the host chain.
+
+    ``ppermute`` with the open chain ``h -> h+1``: host h receives host
+    h-1's buffer, host 0 receives zeros (it has no predecessor), and the
+    last host's buffer is dropped (nothing consumes it — the pipelined
+    schedule ends with host H-1's wave).  This is the communication
+    pattern of the pipelined chunked augmented prefill: unlike
+    ``all_gather_concat`` (the lockstep AllGather) the compressed block
+    exists only on the producing and consuming shards.
+    """
+    n = axis_size(axis_name)
+    perm = [(i, i + 1) for i in range(n - 1)]
+    return jax.lax.ppermute(x, axis_name, perm)
 
 
 def lse_merge_psum(out, lse, axis_name: AxisName):

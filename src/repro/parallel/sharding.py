@@ -164,6 +164,72 @@ def shard_paged_caches(caches, mesh: Mesh,
 
 
 # ---------------------------------------------------------------------------
+# Dense doc-cache + pipelined-prefill stream-state placement
+# ---------------------------------------------------------------------------
+
+def dense_cache_spec(cache_axes: Tuple[str, ...]) -> P:
+    """PartitionSpec of a stacked dense doc-cache leaf {"k","v"}
+    (blocks, B, capacity, KV, D): the *length* axis shards over the
+    cache axes — the decode-time layout (distributed LSE-merge reads a
+    contiguous length slice per shard), which the chunked mesh prefill
+    therefore writes in place."""
+    return P(None, None, cache_axes, None, None)
+
+
+def shard_dense_caches(caches, mesh: Mesh, cache_axes: Tuple[str, ...]):
+    """Place stacked dense doc caches onto the mesh (length axis over
+    the cache axes); SSM / paged leaves pass through, and a capacity
+    that does not divide the shard count stays unsharded (GSPMD still
+    resolves reads — only the placement hint is skipped).  Identity
+    off-mesh so call sites stay unconditional."""
+    if mesh is None or not cache_axes:
+        return caches
+    shards = 1
+    for ax in cache_axes:
+        shards *= mesh.shape[ax]
+    sh = NamedSharding(mesh, dense_cache_spec(cache_axes))
+    out = []
+    for c in caches:
+        if ("k" in c and "pt" not in c and c["k"].ndim == 5
+                and c["k"].shape[2] % shards == 0):
+            out.append({"k": jax.device_put(c["k"], sh),
+                        "v": jax.device_put(c["v"], sh)})
+        else:
+            out.append(c)
+    return tuple(out)
+
+
+def pass_recv_spec(seq_axis: str, ndim: int = 6) -> P:
+    """PartitionSpec of a per-shard passing-block receive buffer
+    (blocks, H, B, pcap, KV, D): axis 1 is the host axis of the
+    pipelined prefill — shard h holds only the blocks hosts 0..h-1
+    handed it (parallel.collectives.pass_block_onehop), never the full
+    gathered tensor."""
+    return P(*((None, seq_axis) + (None,) * (ndim - 2)))
+
+
+def topk_state_spec(seq_axis: str, ndim: int) -> P:
+    """PartitionSpec of a per-shard running top-k leaf
+    (blocks, H, B, ...): shard h folds only its own local chunks into
+    its slice (core.compressor.running_topk_update_where masks the
+    rest), so the streaming selection state never leaves the shard."""
+    return P(*((None, seq_axis) + (None,) * (ndim - 2)))
+
+
+def shard_stream_state(state, mesh: Mesh, seq_axis: str):
+    """Place pipelined-prefill stream state (passing receive buffers or
+    running top-k pytrees, every leaf carrying the host axis at
+    position 1) onto the mesh; identity off-mesh."""
+    if mesh is None or seq_axis not in mesh.shape:
+        return state
+    return jax.tree.map(
+        lambda leaf: jax.device_put(
+            leaf, NamedSharding(mesh, topk_state_spec(seq_axis,
+                                                      leaf.ndim))),
+        state)
+
+
+# ---------------------------------------------------------------------------
 # Per-shape policies
 # ---------------------------------------------------------------------------
 

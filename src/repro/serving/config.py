@@ -1,0 +1,163 @@
+"""Serving configuration: one validated dataclass for every knob.
+
+Five PRs of serving growth left the same knobs threaded positionally
+through three layers — ``Engine(cache_layout=, page_size=, paged_impl=)``,
+``Scheduler(n_slots=, decode_chunk=, prefill_chunk=, decode_per_prefill=,
+num_pages=, doc_capacity=, tail_capacity=)`` and eight ``launch.serve``
+flags — each re-validating its own slice.  ``ServeConfig`` collects them
+with the validation in one place; ``Engine(config=...)`` and
+``Scheduler(config=...)`` consume the fields they own (legacy keyword
+arguments still work through a thin deprecation shim), and
+``launch.serve`` builds exactly one from its flags.
+
+``PrefillCapabilities`` is the redesigned chunked-prefill gate: instead
+of a bare boolean, the engine reports *why* a configuration can or
+cannot stream its prefill — a machine-readable reason the scheduler,
+launcher and regression tests all branch on.  Supported paths carry the
+path name as the reason (``"plain"``, ``"augmented-hostloop"``,
+``"mesh-augmented"`` — the pipelined wave schedule); unsupported ones
+the gate (``"encdec"``, ``"bidirectional"``, ``"augmented-mamba"``,
+``"augmented-moe"``, ``"compressor-<method>"``, ``"no-chunk-step"``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+def _is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillCapabilities:
+    """Chunked-prefill capability report for one engine configuration.
+
+    ``supported`` says whether ``Engine.start_prefill`` accepts a
+    ``chunk_size``; ``reason`` says which streaming path serves it (or
+    which gate closed it).  Tests assert on ``reason`` so a silently
+    swapped path (e.g. the mesh pipeline regressing to "unsupported")
+    fails loudly rather than flipping a boolean nobody reads.
+    """
+
+    supported: bool
+    reason: str
+
+    def __bool__(self) -> bool:          # drop-in for the old boolean gate
+        return self.supported
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Unified serving knobs (engine + scheduler + launcher).
+
+    Engine-owned fields:
+      * ``cache_layout`` — decode-format doc-cache storage, ``"dense"``
+        (per-slot buffers, the bit-exactness oracle) or ``"paged"``
+        (global page pool + per-slot page tables).
+      * ``page_size`` — rows per page for the paged layout.
+      * ``paged_impl`` — paged read path: ``"kernel"`` (fused Pallas
+        paged attention) or ``"gather"`` (dense-view oracle).
+
+    Scheduler-owned fields:
+      * ``n_slots`` — fixed decode-batch width.
+      * ``decode_chunk`` — tokens per jitted decode chunk.
+      * ``prefill_chunk`` — power-of-two document chunk size enabling
+        streamed admissions (None = monolithic, still served through the
+        same session API).
+      * ``decode_per_prefill`` — decode chunks interleaved after each
+        prefill tick while admissions stream in.
+      * ``num_pages`` — global page-pool size (paged engines; None =
+        dense-equivalent default, resolved at run() time).
+      * ``doc_capacity`` / ``tail_capacity`` — static per-slot bounds
+        (None = max over the submitted requests).
+
+    Launcher-owned field:
+      * ``max_new`` — default per-request token budget.
+    """
+
+    cache_layout: str = "dense"
+    page_size: int = 64
+    paged_impl: str = "kernel"
+    n_slots: int = 2
+    decode_chunk: int = 8
+    prefill_chunk: Optional[int] = None
+    decode_per_prefill: int = 1
+    num_pages: Optional[int] = None
+    doc_capacity: Optional[int] = None
+    tail_capacity: Optional[int] = None
+    max_new: int = 8
+
+    def __post_init__(self) -> None:
+        if self.cache_layout not in ("dense", "paged"):
+            raise ValueError(
+                f"cache_layout must be 'dense' or 'paged', got "
+                f"{self.cache_layout!r}")
+        if self.paged_impl not in ("kernel", "gather"):
+            raise ValueError(
+                f"paged_impl must be 'kernel' or 'gather', got "
+                f"{self.paged_impl!r}")
+        if self.page_size < 1:
+            raise ValueError(
+                f"page_size must be >= 1, got {self.page_size}")
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {self.n_slots}")
+        if self.decode_chunk < 1:
+            raise ValueError(
+                f"decode_chunk must be >= 1, got {self.decode_chunk}")
+        if self.prefill_chunk is not None and not _is_pow2(
+                self.prefill_chunk):
+            raise ValueError(
+                f"prefill_chunk must be a power of two >= 1, got "
+                f"{self.prefill_chunk}")
+        if self.decode_per_prefill < 0:
+            raise ValueError(
+                f"decode_per_prefill must be >= 0, got "
+                f"{self.decode_per_prefill}")
+        if self.num_pages is not None and self.num_pages < 1:
+            raise ValueError(
+                f"num_pages must be >= 1, got {self.num_pages}")
+        if self.num_pages is not None and self.cache_layout != "paged":
+            raise ValueError(
+                "num_pages sizes the paged pool; it requires "
+                "cache_layout='paged'")
+        if self.doc_capacity is not None and self.doc_capacity < 1:
+            raise ValueError(
+                f"doc_capacity must be >= 1, got {self.doc_capacity}")
+        if self.tail_capacity is not None and self.tail_capacity < 1:
+            raise ValueError(
+                f"tail_capacity must be >= 1, got {self.tail_capacity}")
+        if self.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {self.max_new}")
+
+    def replace(self, **kw) -> "ServeConfig":
+        """Functional update (re-runs validation)."""
+        return dataclasses.replace(self, **kw)
+
+
+def resolve_config(config: Optional[ServeConfig], legacy: dict,
+                   warn_context: str) -> ServeConfig:
+    """Merge a ``config=`` argument with legacy keyword arguments.
+
+    ``legacy`` maps field name -> explicitly passed value (None entries
+    mean "not passed").  Passing both a config and a legacy kwarg for
+    the same call is a conflict (which one wins would be silent);
+    legacy-only calls keep working but raise a ``DeprecationWarning``
+    pointing at ``ServeConfig``.
+    """
+    passed = {k: v for k, v in legacy.items() if v is not None}
+    if config is not None:
+        if passed:
+            raise ValueError(
+                f"{warn_context}: pass knobs through config=ServeConfig("
+                f"...) or as legacy keywords, not both (got config= and "
+                f"{sorted(passed)})")
+        return config
+    if passed:
+        import warnings
+        warnings.warn(
+            f"{warn_context}: keyword knobs ({sorted(passed)}) are "
+            f"deprecated; build a repro.serving.config.ServeConfig and "
+            f"pass config=",
+            DeprecationWarning, stacklevel=3)
+    return ServeConfig(**passed)

@@ -39,6 +39,8 @@ from repro.models import model as model_lib
 from repro.models.transformer import RunCtx
 from repro.serving import cache as cache_lib
 from repro.serving import sampling as sampling_lib
+from repro.serving.config import (PrefillCapabilities, ServeConfig,
+                                  resolve_config)
 from repro.serving.sampling import SamplingParams
 
 
@@ -48,6 +50,10 @@ class GenerationResult:
     first_token_logits: Any
     prefill_time_s: float
     decode_time_s: float
+    prefill_waves: int = 0      # session progress units the prefill
+                                # took: host waves on the pipelined mesh
+                                # path, chunk ticks elsewhere (0 =
+                                # monolithic)
 
     def tok_per_s(self, n_input: int) -> float:
         total = self.prefill_time_s + self.decode_time_s
@@ -77,19 +83,20 @@ class Engine:
 
     def __init__(self, cfg, params, rctx: RunCtx, jit: bool = True,
                  sampling: SamplingParams = sampling_lib.GREEDY,
-                 cache_layout: str = "dense", page_size: int = 64,
-                 paged_impl: str = "kernel"):
-        if cache_layout not in ("dense", "paged"):
-            raise ValueError(
-                f"cache_layout must be 'dense' or 'paged', got "
-                f"{cache_layout!r}")
-        if paged_impl not in ("kernel", "gather"):
-            raise ValueError(
-                f"paged_impl must be 'kernel' or 'gather', got "
-                f"{paged_impl!r}")
+                 config: Optional[ServeConfig] = None,
+                 cache_layout: Optional[str] = None,
+                 page_size: Optional[int] = None,
+                 paged_impl: Optional[str] = None):
+        # one validated knob bundle (serving.config); the keyword form
+        # survives as a deprecation shim that builds the same config
+        config = resolve_config(config, {"cache_layout": cache_layout,
+                                         "page_size": page_size,
+                                         "paged_impl": paged_impl},
+                                "Engine")
+        cache_layout = config.cache_layout
+        page_size = config.page_size
+        paged_impl = config.paged_impl
         if cache_layout == "paged":
-            if page_size < 1:
-                raise ValueError(f"page_size must be >= 1, got {page_size}")
             if cfg.is_encoder_decoder:
                 raise ValueError(
                     "the paged cache layout requires a decoder-only "
@@ -105,19 +112,33 @@ class Engine:
         self.params = params
         self.rctx = rctx
         self.sampling = sampling
+        self.config = config
         self.cache_layout = cache_layout
         self.page_size = page_size
         self.model = model_lib.build(cfg)
-        # augmented engines (star/apb with an emulated host-loop layout)
-        # serve two request populations: documents matching the layout
-        # geometry go through the approximate anchor/passing prefill,
-        # everything else through the exact plain path (APB targets the
-        # long-context regime; a short request has nothing to split)
+        # augmented engines (star/apb with a multi-host layout) serve two
+        # request populations: documents matching the layout geometry go
+        # through the approximate anchor/passing prefill, everything else
+        # through the exact plain path (APB targets the long-context
+        # regime; a short request has nothing to split).  The layout is
+        # realised either as the single-device host-loop emulation
+        # (``_aug``) or sharded over the mesh sequence axis
+        # (``_mesh_aug`` — chunked admissions stream through the
+        # pipelined wave schedule, MeshChunkedPrefill).
         lay = rctx.layout
-        self._aug = (rctx.strategy in ("star", "apb") and lay is not None
-                     and lay.n_hosts > 1 and not rctx.seq_sharded)
-        self._plain_rctx = (dataclasses.replace(rctx, layout=None)
-                           if self._aug else rctx)
+        self._aug_layout = (rctx.strategy in ("star", "apb")
+                            and lay is not None and lay.n_hosts > 1)
+        self._aug = self._aug_layout and not rctx.seq_sharded
+        self._mesh_aug = self._aug_layout and rctx.seq_sharded
+        if self._aug:
+            self._plain_rctx = dataclasses.replace(rctx, layout=None)
+        elif self._mesh_aug:
+            # no layout and no host emulation on the mesh: mismatched
+            # requests run the exact GSPMD full prefill
+            self._plain_rctx = dataclasses.replace(rctx, layout=None,
+                                                   strategy="full")
+        else:
+            self._plain_rctx = rctx
         if jit:
             self._prefill = jax.jit(
                 lambda p, d, q: self.model.prefill_step(p, d, q, rctx))
@@ -141,7 +162,7 @@ class Engine:
             self._prefill_plain = (jax.jit(
                 lambda p, d, q: self.model.prefill_step(
                     p, d, q, self._plain_rctx))
-                if self._aug else self._prefill)
+                if self._aug_layout else self._prefill)
             # caches and the running top-k state are dead after each
             # step (the caller rebinds both) — donate them; the anchor
             # and passing buffers are re-read every chunk and must not be
@@ -150,6 +171,13 @@ class Engine:
             self._aug_anchor = jax.jit(self._aug_anchor_impl)
             self._aug_finalize = jax.jit(self._aug_finalize_impl,
                                          donate_argnums=(0, 1))
+            # pipelined mesh path: per-shard passing/topk stream state;
+            # the passing receive buffers are re-read every chunk (not
+            # donated there) but are dead after each finalize hand-off
+            self._mesh_chunk = jax.jit(self._mesh_chunk_impl,
+                                       donate_argnums=(3, 7))
+            self._mesh_finalize = jax.jit(self._mesh_finalize_impl,
+                                          donate_argnums=(0, 1))
         else:
             self._prefill = lambda p, d, q: self.model.prefill_step(
                 p, d, q, rctx)
@@ -161,10 +189,12 @@ class Engine:
             self._prefill_plain = (
                 (lambda p, d, q: self.model.prefill_step(
                     p, d, q, self._plain_rctx))
-                if self._aug else self._prefill)
+                if self._aug_layout else self._prefill)
             self._aug_chunk = self._aug_chunk_impl
             self._aug_anchor = self._aug_anchor_impl
             self._aug_finalize = self._aug_finalize_impl
+            self._mesh_chunk = self._mesh_chunk_impl
+            self._mesh_finalize = self._mesh_finalize_impl
 
     # ------------------------------------------------------------------
     # Fused decode loop
@@ -200,7 +230,7 @@ class Engine:
         """True when a request's geometry does not match an augmented
         engine's layout — it is then served through the exact plain
         path (the augmented split is built for one (n_doc, lq))."""
-        if not self._aug:
+        if not self._aug_layout:
             return False
         lay = self.rctx.layout
         return (doc.shape[1] != lay.n_doc
@@ -294,6 +324,100 @@ class Engine:
                 new_topk.append(st)
         return tuple(new_pass), tuple(new_topk)
 
+    # ------------------------------------ pipelined mesh (star/apb) chunks
+    def _mesh_chunk_impl(self, params, chunk, positions, caches, doc_len,
+                         anchor, passing, topk, scal):
+        """One local-block chunk of the *pipelined mesh* prefill: the
+        same augmented chunk computation as ``_aug_chunk_impl``, but the
+        passing buffers and running top-k carry a leading host axis
+        sharded over the sequence axis.  The active host reads the
+        passing prefix it *received* (hand-offs from hosts 0..h-1 —
+        never a gathered global buffer), and the chunk's compressor
+        scores fold only into that host's shard-local selection
+        (``running_topk_update_where``)."""
+        h = scal["host"]
+        aug_pass = None
+        if passing is not None:
+            aug_pass = tuple(
+                ({k: jnp.take(pb[k], h, axis=1) for k in ("k", "v")}
+                 if pb else {}) for pb in passing)
+        aug = {"anchor": anchor, "passing": aug_pass,
+               **{k: v for k, v in scal.items() if k != "host"}}
+        _, updates = self.model.chunk_step(params, chunk, positions,
+                                           caches, self.rctx,
+                                           valid_len=doc_len,
+                                           use_window=True, aug=aug)
+        new_caches = cache_lib.append_doc_chunk(caches, updates, doc_len)
+        active = jnp.arange(self.rctx.layout.n_hosts) == h
+        new_topk = []
+        for st, u in zip(topk, updates):
+            if st and "score" in u:
+                upd = jax.vmap(                      # over stacked blocks
+                    jax.vmap(comp.running_topk_update_where,
+                             in_axes=(0, None, None, None, None, 0)),
+                    in_axes=(0, 0, 0, 0, None, None))  # over the host axis
+                new_topk.append(upd(st, u["score"], u["k"], u["v"],
+                                    scal["block_off"], active))
+            else:
+                new_topk.append(st)
+        return new_caches, tuple(new_topk)
+
+    def _mesh_finalize_impl(self, topk, passing, host):
+        """Host ``host``'s local block completed on the pipelined mesh:
+        inside a shard_map over the sequence axis every shard finalizes
+        its own running selection, but only shard ``host`` writes the
+        compressed block into its receive buffer and hands the result
+        one hop to shard ``host + 1``
+        (parallel.collectives.pass_block_onehop) — the block never
+        exists on any other shard, unlike the lockstep AllGather.  The
+        producing shard's top-k state resets.  Returns
+        (topk', passing')."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.parallel import collectives
+        pctx = self.rctx.pctx
+        seq = pctx.seq_axis
+
+        def full_spec(leaf):
+            return P(*((None, seq) + (None,) * (leaf.ndim - 2)))
+
+        def body(topk_loc, passing_loc, hh):
+            d = jax.lax.axis_index(seq)
+            write = jax.vmap(dec.write_tail_at, in_axes=(0, 0, None))
+            new_topk, new_pass = [], []
+            for st, pb in zip(topk_loc, passing_loc):
+                if st and "k" in pb:
+                    sq = {k: v[:, 0] for k, v in st.items()}  # drop host ax
+                    ksel, vsel, _ = jax.vmap(comp.running_topk_finalize)(sq)
+                    lp = sq["pos"].shape[-1]
+                    off = jnp.full((pb["k"].shape[2],), hh * lp, jnp.int32)
+                    out = {}
+                    for name, sel in (("k", ksel), ("v", vsel)):
+                        buf = pb[name][:, 0]         # (nb, B, W, KV, D)
+                        mine = write(buf, sel, off)
+                        send = jnp.where(d == hh, mine, buf)
+                        got = collectives.pass_block_onehop(send, seq)
+                        out[name] = jnp.where(d == hh + 1, got,
+                                              buf)[:, None]
+                    new_pass.append(out)
+                    reset = comp.running_topk_reset(sq)
+                    new_topk.append({k: jnp.where(d == hh, reset[k],
+                                                  sq[k])[:, None]
+                                     for k in sq})
+                else:
+                    new_pass.append(pb)
+                    new_topk.append(st)
+            return tuple(new_topk), tuple(new_pass)
+
+        fn = collectives.shard_map(
+            body, mesh=pctx.mesh,
+            in_specs=(jax.tree.map(full_spec, topk),
+                      jax.tree.map(full_spec, passing), P()),
+            out_specs=(jax.tree.map(full_spec, topk),
+                       jax.tree.map(full_spec, passing)),
+            check_rep=False)
+        return fn(topk, passing, host)
+
     @property
     def paged(self) -> bool:
         """True when decode-format doc caches use the paged layout."""
@@ -318,50 +442,108 @@ class Engine:
         return sharding_lib.shard_paged_caches(
             caches, self.rctx.pctx.mesh, self.rctx.cache_axes)
 
+    def _place_dense(self, caches):
+        """Pin freshly-allocated dense doc caches to the mesh layout
+        (length axis over the cache axes — the decode-time layout the
+        chunked mesh prefill writes in place); identity off-mesh."""
+        from repro.parallel import sharding as sharding_lib
+        return sharding_lib.shard_dense_caches(
+            caches, self.rctx.pctx.mesh, self.rctx.cache_axes)
+
+    def _place_stream(self, state):
+        """Pin pipelined-prefill stream state (per-shard passing receive
+        buffers / running top-k, host axis at position 1) to the mesh
+        sequence axis; identity off-mesh."""
+        from repro.parallel import sharding as sharding_lib
+        return sharding_lib.shard_stream_state(
+            state, self.rctx.pctx.mesh, self.rctx.pctx.seq_axis)
+
     @property
-    def supports_chunked_prefill(self) -> bool:
-        """Chunked prefill covers the plain-layout prefill paths
-        (including sliding-window layers, whose chunks go through the
-        windowed chunk-context attention) and the single-device augmented
-        star/apb layouts, whose local blocks stream through the same
-        machinery with incremental Locret compression.  Still excluded:
-        encoder-decoder models (growing self tails), bidirectional
-        contexts (the chunk step is strictly causal-prefix + self),
-        mesh-sharded augmented layouts (lockstep shards cannot stream the
-        sequentially-dependent passing blocks), augmented layouts with
-        mamba layers (augmented mamba itself needs the mesh) or MoE
-        layers (capacity dispatch couples every augmented token in the
-        monolithic pass), and the random/oracle compressors (their
+    def prefill_capabilities(self) -> PrefillCapabilities:
+        """Chunked-prefill capability report (serving.config).
+
+        Supported paths carry the path name as the reason: ``"plain"``
+        (any plain-layout prefill, including sliding-window layers),
+        ``"augmented-hostloop"`` (single-device star/apb — local blocks
+        stream with incremental Locret compression), and
+        ``"mesh-augmented"`` (mesh-sharded star/apb — the pipelined wave
+        schedule: host h's chunks trail host h-1's finalize by one wave,
+        compressed blocks hand off point-to-point).  Unsupported:
+        ``"encdec"`` (growing self tails), ``"no-chunk-step"``,
+        ``"bidirectional"`` (the chunk step is strictly causal-prefix +
+        self), ``"augmented-mamba"`` / ``"augmented-moe"`` (SSM carry /
+        capacity dispatch couple the whole augmented pass), and
+        ``"compressor-<method>"`` for random/oracle selection (their
         scores are not reproducible chunk-by-chunk)."""
-        if self.cfg.is_encoder_decoder or self.model.chunk_step is None:
-            return False
+        if self.cfg.is_encoder_decoder:
+            return PrefillCapabilities(False, "encdec")
+        if self.model.chunk_step is None:
+            return PrefillCapabilities(False, "no-chunk-step")
         if self.rctx.bidirectional:
-            return False
-        lay = self.rctx.layout
-        if (self.rctx.strategy in ("star", "apb") and lay is not None
-                and lay.n_hosts > 1):
-            if self.rctx.seq_sharded:
-                return False
-            if self.cfg.has_mamba or self.cfg.has_moe:
-                return False
+            return PrefillCapabilities(False, "bidirectional")
+        if self._aug_layout:
+            if self.cfg.has_mamba:
+                return PrefillCapabilities(False, "augmented-mamba")
+            if self.cfg.has_moe:
+                return PrefillCapabilities(False, "augmented-moe")
             if (self.rctx.strategy == "apb"
                     and self.rctx.compressor_method
                     not in ("retain", "recent")):
-                return False
-        return True
+                return PrefillCapabilities(
+                    False, f"compressor-{self.rctx.compressor_method}")
+            return PrefillCapabilities(
+                True, "mesh-augmented" if self._mesh_aug
+                else "augmented-hostloop")
+        return PrefillCapabilities(True, "plain")
 
-    def start_chunked_prefill(self, doc, query, chunk_size: int,
-                              doc_capacity: Optional[int] = None
-                              ) -> "ChunkedPrefill":
-        """Begin an incremental chunked prefill (one ``step()`` per chunk;
-        the scheduler interleaves decode chunks between steps).  On an
-        augmented engine, layout-matching requests stream through the
-        augmented state machine; everything else through the plain one."""
-        if self._aug and not self._plain_request(doc, query):
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Legacy boolean view of :attr:`prefill_capabilities` — kept
+        for callers that only need the gate; new code should branch on
+        (and assert on) the capability *reason*."""
+        return self.prefill_capabilities.supported
+
+    def start_prefill(self, doc, query, chunk_size: Optional[int] = None,
+                      doc_capacity: Optional[int] = None):
+        """The one prefill entry point: every path — monolithic, plain
+        chunked, augmented host-loop, pipelined mesh — comes back as a
+        session with the same contract (``chunks_left`` / ``step()`` /
+        ``finish()`` / ``waves_done`` / ``prefill_time_s``), so callers
+        like the Scheduler drive one loop instead of branch-switching
+        on layout.
+
+        ``chunk_size=None`` returns the single-step
+        :class:`MonolithicPrefill` session (``Engine.prefill`` behind
+        the session API).  With a chunk size, the capability report
+        gates and routes: layout-matching requests on an augmented
+        engine stream through the host-loop or pipelined-mesh state
+        machine, everything else through the plain chunk path."""
+        if chunk_size is None:
+            return MonolithicPrefill(self, doc, query,
+                                     doc_capacity=doc_capacity)
+        caps = self.prefill_capabilities
+        if not caps.supported:
+            raise ValueError(
+                f"this engine cannot chunk its prefill "
+                f"(prefill_capabilities.reason={caps.reason!r}); use "
+                f"chunk_size=None — the monolithic session — for this "
+                f"configuration")
+        if self._aug_layout and not self._plain_request(doc, query):
+            if self._mesh_aug:
+                return MeshChunkedPrefill(self, doc, query, chunk_size,
+                                          doc_capacity=doc_capacity)
             return AugmentedChunkedPrefill(self, doc, query, chunk_size,
                                            doc_capacity=doc_capacity)
         return ChunkedPrefill(self, doc, query, chunk_size,
                               doc_capacity=doc_capacity)
+
+    def start_chunked_prefill(self, doc, query, chunk_size: int,
+                              doc_capacity: Optional[int] = None
+                              ) -> "ChunkedPrefill":
+        """Legacy alias: :meth:`start_prefill` with a required chunk
+        size."""
+        return self.start_prefill(doc, query, chunk_size=chunk_size,
+                                  doc_capacity=doc_capacity)
 
     def prefill_chunked(self, doc, query, chunk_size: int,
                         doc_capacity: Optional[int] = None):
@@ -419,12 +601,16 @@ class Engine:
         n = doc.shape[1]
 
         t0 = time.perf_counter()
+        prefill_waves = 0
         if prefill_chunk is not None:
             # chunked paged prefill allocates the page pool up front and
             # scatters each chunk page-by-page (no dense intermediate);
             # the full document streamed in, so its cache length is n
-            logits0, caches, q_tails = self.prefill_chunked(
-                doc, query, prefill_chunk)
+            cp = self.start_prefill(doc, query, chunk_size=prefill_chunk)
+            while cp.chunks_left:
+                cp.step(sync=False)    # pipeline dispatches; finish blocks
+            logits0, caches, q_tails = cp.finish()
+            prefill_waves = cp.waves_done
             doc_len_val = n if cache_lib.has_attn_cache(caches) else 0
         else:
             logits0, caches, q_tails = self.prefill(doc, query)
@@ -480,7 +666,8 @@ class Engine:
         tokens = np.asarray(jax.block_until_ready(tokens))
         t_decode = time.perf_counter() - t0
 
-        return GenerationResult(tokens, logits0, t_prefill, t_decode)
+        return GenerationResult(tokens, logits0, t_prefill, t_decode,
+                                prefill_waves=prefill_waves)
 
     # ------------------------------------------------------------------
     def generate_stepwise(self, doc, query, max_new_tokens: int = 8,
@@ -544,6 +731,84 @@ class Engine:
                                 logits0, t_prefill, t_decode)
 
 
+def mesh_wave_schedule(n_hosts: int, lb: int, chunk_size: int):
+    """The pipelined mesh prefill's wave schedule.
+
+    Wave h is host h's power-of-two chunk ladder over its local block
+    (``cache_lib.chunk_plan``); it trails wave h-1 by exactly one wave
+    because host h's first chunk consumes the passing block host h-1
+    finalizes on its *last* chunk — the point-to-point hand-off
+    (parallel.collectives.pass_block_onehop).  Returns a list of waves,
+    each a list of ``(host, off, t, finalize)`` chunk entries where
+    ``finalize`` marks the running-top-k finalize + one-hop tick.  Both
+    augmented session state machines derive their plans from this
+    schedule, and tests/test_serve_config.py pins its invariants (no
+    host consumes a block its predecessor has not finalized; chunk
+    counts per wave match the pow2 ladder).
+    """
+    return [[(h, off, t, off + t == lb)
+             for off, t in cache_lib.chunk_plan(lb, chunk_size)]
+            for h in range(n_hosts)]
+
+
+class MonolithicPrefill:
+    """``Engine.prefill`` behind the chunked sessions' contract.
+
+    ``Engine.start_prefill(chunk_size=None)`` returns this single-step
+    session so callers (the Scheduler's admission loop) drive monolithic
+    and streamed admissions through one code path: ``chunks_left`` is 1
+    until the step runs, ``step()`` performs the whole prefill + query
+    pass, ``finish()`` returns the standard (logits0, decode-format
+    caches, query tails) triple.  On a dense engine the doc caches come
+    back padded to ``doc_capacity`` (the slot write expects the shared
+    width); paged engines take the dense rows and scatter them into
+    pool pages at install time, as the monolithic scheduler path always
+    has."""
+
+    def __init__(self, engine: Engine, doc, query,
+                 doc_capacity: Optional[int] = None):
+        self.engine = engine
+        self.doc = doc
+        self.query = query
+        self.batch = doc.shape[0]
+        self.n = doc.shape[1]
+        self.lq = query.shape[1]
+        self._doc_capacity = doc_capacity
+        self._result = None
+        self._next = 0
+        self.prefill_time_s = 0.0
+
+    @property
+    def chunks_left(self) -> int:
+        return 1 - self._next
+
+    @property
+    def waves_done(self) -> int:
+        return self._next
+
+    def step(self, sync: bool = True) -> int:
+        """Run the monolithic prefill (the session's only step)."""
+        if not self.chunks_left:
+            raise ValueError("monolithic prefill already ran")
+        t0 = time.perf_counter()
+        logits0, caches, q_tails = self.engine.prefill(self.doc,
+                                                       self.query)
+        if self._doc_capacity is not None and not self.engine.paged:
+            caches = cache_lib.pad_doc_caches(caches, self._doc_capacity)
+        logits0 = jax.block_until_ready(logits0)
+        self.prefill_time_s += time.perf_counter() - t0
+        self._result = (logits0, caches, q_tails)
+        self._next = 1
+        return self.chunks_left
+
+    def finish(self):
+        """Same contract as :meth:`Engine.prefill` (runs the step if the
+        caller never did)."""
+        if self.chunks_left:
+            self.step()
+        return self._result
+
+
 class ChunkedPrefill:
     """Incremental chunked prefill for one request (paper Alg. 1 lines
     1-12, streamed).
@@ -568,13 +833,13 @@ class ChunkedPrefill:
 
     def __init__(self, engine: Engine, doc, query, chunk_size: int,
                  doc_capacity: Optional[int] = None):
-        if not engine.supports_chunked_prefill:
+        caps = engine.prefill_capabilities
+        if not caps.supported:
             raise ValueError(
-                "this engine cannot chunk its prefill (see "
-                "Engine.supports_chunked_prefill: encoder-decoder, "
-                "bidirectional, mesh-sharded augmented layout, augmented "
-                "mamba/MoE, or a random/oracle compressor); use the "
-                "monolithic Engine.prefill for this configuration")
+                f"this engine cannot chunk its prefill "
+                f"(Engine.prefill_capabilities.reason={caps.reason!r}); "
+                f"use the monolithic Engine.prefill for this "
+                f"configuration")
         self.engine = engine
         self.doc = doc
         self.query = query
@@ -595,11 +860,20 @@ class ChunkedPrefill:
             n_shards=engine.cache_shards if engine.paged else 1)
         if engine.paged:
             self.caches = engine._place_paged(self.caches)
+        elif engine.cache_shards > 1:
+            self.caches = engine._place_dense(self.caches)
         self.prefill_time_s = 0.0
 
     @property
     def chunks_left(self) -> int:
         return len(self._plan) - self._next
+
+    @property
+    def waves_done(self) -> int:
+        """Prefill progress for RequestResult accounting: completed
+        chunk steps here; MeshChunkedPrefill overrides with completed
+        host *waves* (the unit the pipelined schedule advances by)."""
+        return self._next
 
     def step(self, sync: bool = True) -> int:
         """Process the next document chunk; returns chunks remaining.
@@ -672,8 +946,10 @@ class AugmentedChunkedPrefill(ChunkedPrefill):
     ``finish()`` is the ordinary exact query pass over the completed doc
     cache, unchanged from the plain path.  Hosts stream *sequentially*
     because host h's chunks consume hosts 0..h-1's finalized blocks —
-    the same dependency the mesh hides inside one lockstep layer pass,
-    which is why the mesh-sharded augmented prefill stays monolithic.
+    the wave dependency ``mesh_wave_schedule`` makes explicit; the
+    mesh-sharded twin (:class:`MeshChunkedPrefill`) runs the same
+    schedule with the state carried per shard and each finalized block
+    handed one hop instead of written into a shared buffer.
 
     Greedy outputs are bit-exact vs the monolithic augmented prefill
     (the host-loop oracle, itself pinned to the shard_map path by
@@ -730,13 +1006,15 @@ class AugmentedChunkedPrefill(ChunkedPrefill):
         else:
             self._passing = None
             self._topk = tuple({} for _ in cfg.block_pattern)
-        # host-major plan: one anchor tick, then each host's local block
-        # in power-of-two chunks; the last chunk of a block triggers the
-        # compression finalize ("communication")
+        # host-major plan: one anchor tick, then the wave schedule —
+        # each host's local block in power-of-two chunks; the last chunk
+        # of a block triggers the compression finalize ("communication").
+        # Derived from mesh_wave_schedule so the host-loop and pipelined
+        # mesh paths can never disagree on the order of operations.
         plan = [("anchor",)]
-        for h in range(lay.n_hosts):
-            for off, t in cache_lib.chunk_plan(lay.lb, chunk_size):
-                plan.append(("local", h, off, t, off + t == lay.lb))
+        for wave in mesh_wave_schedule(lay.n_hosts, lay.lb, chunk_size):
+            for h, off, t, last in wave:
+                plan.append(("local", h, off, t, last))
         self._plan = plan
         self._next = 0
 
@@ -775,6 +1053,123 @@ class AugmentedChunkedPrefill(ChunkedPrefill):
                                     jnp.int32)
                 self._passing, self._topk = eng._aug_finalize(
                     self._topk, self._passing, pass_off)
+            if sync:
+                jax.block_until_ready(self.caches)
+        self.prefill_time_s += time.perf_counter() - t0
+        self._next += 1
+        return self.chunks_left
+
+
+class MeshChunkedPrefill(AugmentedChunkedPrefill):
+    """Pipelined chunked augmented prefill on the mesh (the tentpole of
+    the APB claim: passing compressed blocks lets sequence-parallel
+    hosts *stream*, not lockstep).
+
+    Same wave schedule as the host-loop state machine
+    (``mesh_wave_schedule``: anchor tick, then host h's pow2 chunks one
+    wave behind host h-1's finalize), but the computation runs over the
+    mesh-sharded doc caches — dense caches shard their length axis over
+    the cache axes (shard h holds exactly host h's block rows), paged
+    caches stripe the shared pool — and the streaming state is carried
+    **per shard**:
+
+      * the running top-k grows a leading host axis sharded over the
+        sequence axis; each chunk's scores fold only into the active
+        host's slice (``compressor.running_topk_update_where``), so the
+        selection state never leaves its shard;
+      * the passing buffers become per-shard *receive* buffers.  When
+        host h's last chunk fires ``running_topk_finalize``, the
+        compressed block is written into shard h's buffer and handed
+        **one hop** to shard h+1 (``collectives.pass_block_onehop``
+        inside ``Engine._mesh_finalize_impl``'s shard_map) — point to
+        point, the moment it is ready, instead of the lockstep
+        AllGather that forces all hosts to finish together.
+
+    Greedy tokens are pinned bit-identical to both the lockstep mesh
+    monolithic pass and the single-host chunked oracle
+    (tests/distributed_checks.py), for dense and paged caches, star and
+    apb.  Because every ``step()`` is a bounded chunk, the Scheduler
+    interleaves decode ticks between mesh prefill waves exactly as it
+    does on the single-device path — a long document streams onto the
+    mesh without ever stalling decode.
+    """
+
+    def __init__(self, engine: Engine, doc, query, chunk_size: int,
+                 doc_capacity: Optional[int] = None):
+        super().__init__(engine, doc, query, chunk_size,
+                         doc_capacity=doc_capacity)
+        lay = self.lay
+        cfg = engine.cfg
+        dtype = engine.params["embed"].dtype
+        nb = cfg.num_blocks
+        if not engine.paged:
+            self.caches = engine._place_dense(self.caches)
+        if self.lp_eff > 0:
+            # re-shape the parent's replicated stream state into the
+            # per-shard layout: host axis at position 1, sharded over
+            # the mesh sequence axis.  Receive buffers keep the full
+            # n_hosts * lp width so pass_valid masking is identical to
+            # the host loop; shard h only ever holds blocks 0..h-1.
+            width = lay.n_hosts * self.lp_eff
+            self._passing = tuple(
+                ({} if kind.window else
+                 {"k": jnp.zeros((nb, lay.n_hosts, self.batch, width,
+                                  cfg.num_kv_heads, cfg.head_dim), dtype),
+                  "v": jnp.zeros((nb, lay.n_hosts, self.batch, width,
+                                  cfg.num_kv_heads, cfg.head_dim), dtype)})
+                for kind in cfg.block_pattern)
+            self._topk = tuple(
+                ({} if kind.window else comp.running_topk_init(
+                    self.lp_eff, cfg.num_kv_heads, cfg.head_dim,
+                    (nb, lay.n_hosts, self.batch), dtype))
+                for kind in cfg.block_pattern)
+            self._passing = engine._place_stream(self._passing)
+            self._topk = engine._place_stream(self._topk)
+        self._waves = 0
+
+    @property
+    def waves_done(self) -> int:
+        """Completed host waves (the pipelined schedule's progress
+        unit) — what RequestResult.prefill_waves reports on a mesh
+        engine."""
+        return self._waves
+
+    def step(self, sync: bool = True) -> int:
+        """Process the next plan entry (anchor tick or one local chunk
+        of the current wave); a wave's last chunk triggers the finalize
+        + one-hop hand-off.  Same sync contract as the plain path."""
+        entry = self._plan[self._next]
+        eng = self.engine
+        t0 = time.perf_counter()
+        if entry[0] == "anchor":
+            positions = jnp.arange(self.lay.la)[None]
+            self._anchor = eng._aug_anchor(
+                eng.params, self._anchor_inputs, positions, self.caches)
+            if sync:
+                jax.block_until_ready(self._anchor)
+        else:
+            _, h, off, t, last = entry
+            lay = self.lay
+            s = h * lay.lb + off
+            chunk = self.doc[:, s:s + t]
+            positions = (lay.lq + s + jnp.arange(t))[None]
+            doc_len = jnp.full((self.batch,), self.doc_len, jnp.int32)
+            scal = {
+                "anchor_valid": jnp.int32(lay.la if h else 0),
+                "pass_valid": jnp.int32(h * self.lp_eff),
+                "block_start": jnp.int32(h * lay.lb),
+                "block_off": jnp.int32(off),
+                "host": jnp.int32(h),
+            }
+            self.caches, self._topk = eng._mesh_chunk(
+                eng.params, chunk, positions, self.caches, doc_len,
+                self._anchor, self._passing, self._topk, scal)
+            self.doc_len += t
+            if last:
+                if self._passing is not None:
+                    self._topk, self._passing = eng._mesh_finalize(
+                        self._topk, self._passing, jnp.int32(h))
+                self._waves += 1
             if sync:
                 jax.block_until_ready(self.caches)
         self.prefill_time_s += time.perf_counter() - t0

@@ -13,22 +13,36 @@ long-context requests share one fixed-slot decode batch.  The scheduler
     slots as requests finish and immediately refills them, so a short
     request never waits for a long one and a long one is never evicted.
 
-With ``prefill_chunk`` set, admissions stream through the **chunked
-prefill** path (Engine.ChunkedPrefill) instead of one monolithic
-document pass: every scheduler tick processes one power-of-two document
-chunk of the in-flight admission with the fewest chunks remaining
+Every admission is a **prefill session** from ``Engine.start_prefill``
+— one loop drives them all, the session picks the path:
+
+  * ``MonolithicPrefill`` — ``prefill_chunk=None`` (default): the whole
+    document in a single session step, the bit-exactness oracle;
+  * ``ChunkedPrefill`` — plain layouts: power-of-two document chunks;
+  * ``AugmentedChunkedPrefill`` — single-device star/apb: anchor tick,
+    then each emulated host's local block with streaming compression;
+  * ``MeshChunkedPrefill`` — mesh-sharded star/apb: the same wave
+    schedule *pipelined* over the mesh, each compressed passing block
+    handed one hop to the next shard as its wave finalizes.  Mesh
+    admissions stream chunk-by-chunk like everything else — they no
+    longer fall back to a blocking monolithic pass.
+
+With ``prefill_chunk`` set, every scheduler tick processes one chunk of
+the in-flight admission with the fewest chunks remaining
 (shortest-remaining-first, so a short request's admission is never stuck
 behind a long document — the Medha head-of-line problem), then runs up to
 ``decode_per_prefill`` decode chunks so live slots keep generating while
 the long admission streams in.  A monolithic 100k-token prefill stall
-becomes a sequence of bounded per-chunk stalls.  ``prefill_chunk=None``
-(default) keeps the monolithic admission path — the bit-exactness oracle.
-Augmented (star/apb) admissions join the same queue: a layout-matching
-request streams through ``Engine.AugmentedChunkedPrefill`` (anchor tick,
-then each emulated host's local block with streaming compression), while
-requests whose geometry does not match the engine's layout are served
-through the exact plain path — both orderings fall out of the one SRPT
-tiebreak on chunks remaining.
+becomes a sequence of bounded per-chunk stalls.  Requests whose geometry
+does not match an augmented engine's layout are served through the exact
+plain path — both orderings fall out of the one SRPT tiebreak on chunks
+remaining.  ``Engine.prefill_capabilities`` (serving.config) reports
+which streaming path a configuration gets, or the machine-readable
+reason it cannot stream.
+
+Knobs arrive through one validated ``serving.config.ServeConfig``
+(``Scheduler(engine, config=ServeConfig(...))``); the individual keyword
+arguments still work behind a deprecation shim.
 
 Capacities are static: ``doc_capacity`` bounds the per-request document
 cache length, ``tail_capacity`` bounds query + generated tokens.  Both
@@ -92,6 +106,7 @@ import numpy as np
 from repro.core import decode as dec
 from repro.serving import cache as cache_lib
 from repro.serving import sampling as sampling_lib
+from repro.serving.config import ServeConfig, resolve_config
 from repro.serving.engine import Engine
 
 
@@ -133,12 +148,17 @@ class RequestResult:
     ttft_s: float = 0.0           # run() start -> first token available
     admitted_after_prefill_chunks: int = 0   # global prefill ticks before
                                              # this admission completed
+    prefill_waves: int = 0        # session progress units this admission
+                                  # took: host waves on the pipelined
+                                  # mesh path, chunk ticks elsewhere
+                                  # (1 for a monolithic admission)
 
 
 class _SlotInfo:
     def __init__(self, req: Request, first_token: int, prefill_s: float,
                  chunk: int, ttft_s: float = 0.0,
-                 prefill_chunks_before: int = 0):
+                 prefill_chunks_before: int = 0,
+                 prefill_waves: int = 0):
         self.req = req
         self.tokens: List[int] = [first_token]
         self.stopped = (req.stop_token is not None
@@ -147,6 +167,7 @@ class _SlotInfo:
         self.admitted_at_chunk = chunk
         self.ttft_s = ttft_s
         self.prefill_chunks_before = prefill_chunks_before
+        self.prefill_waves = prefill_waves
 
     @property
     def remaining(self) -> int:
@@ -167,23 +188,28 @@ class _Admission:
 
 
 class Scheduler:
-    def __init__(self, engine: Engine, n_slots: int = 2,
-                 decode_chunk: int = 8,
+    def __init__(self, engine: Engine, n_slots: Optional[int] = None,
+                 decode_chunk: Optional[int] = None,
                  doc_capacity: Optional[int] = None,
                  tail_capacity: Optional[int] = None,
                  sampling: Optional[sampling_lib.SamplingParams] = None,
                  rng: Optional[jax.Array] = None,
                  prefill_chunk: Optional[int] = None,
-                 decode_per_prefill: int = 1,
-                 num_pages: Optional[int] = None):
-        """``prefill_chunk``: power-of-two document chunk size enabling
-        streamed admissions (None = monolithic prefill, the oracle).
-        ``decode_per_prefill``: decode chunks run after each prefill
-        chunk while admissions are in flight — the decode:prefill
-        interleave ratio (0 = prefill greedily, decode only between
-        admissions).  ``num_pages`` sizes the paged engine's global page
-        pool (default: dense-equivalent n_slots * pages(doc_capacity));
-        ignored for a dense engine."""
+                 decode_per_prefill: Optional[int] = None,
+                 num_pages: Optional[int] = None,
+                 config: Optional[ServeConfig] = None):
+        """Knobs come in one validated ``ServeConfig`` (``config=``);
+        the individual keyword arguments still work behind a deprecation
+        shim (passing both is an error).  ``prefill_chunk``: power-of-two
+        document chunk size enabling streamed admissions (None =
+        monolithic prefill, the oracle — served through the same session
+        loop).  ``decode_per_prefill``: decode chunks run after each
+        prefill chunk while admissions are in flight — the
+        decode:prefill interleave ratio (0 = prefill greedily, decode
+        only between admissions).  ``num_pages`` sizes the paged
+        engine's global page pool (default: dense-equivalent
+        n_slots * pages(doc_capacity)); rejected for a dense engine.
+        ``sampling`` / ``rng`` are runtime objects, not config fields."""
         if engine.cfg.is_encoder_decoder:
             # encdec self-attention tails grow by concat inside
             # decode_tokens — not representable in the static-shape
@@ -192,39 +218,44 @@ class Scheduler:
             raise ValueError("Scheduler requires a decoder-only model; "
                              "serve encoder-decoder requests through "
                              "Engine.generate instead")
-        if n_slots < 1:
-            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
-        if decode_chunk < 1:
-            raise ValueError(
-                f"decode_chunk must be >= 1, got {decode_chunk}")
-        if prefill_chunk is not None:
-            if (prefill_chunk < 1 or
-                    cache_lib.pow2_bucket(prefill_chunk) != prefill_chunk):
+        legacy = {
+            "n_slots": n_slots,
+            "decode_chunk": decode_chunk,
+            "doc_capacity": doc_capacity,
+            "tail_capacity": tail_capacity,
+            "prefill_chunk": prefill_chunk,
+            "decode_per_prefill": decode_per_prefill,
+            "num_pages": num_pages,
+        }
+        if num_pages is not None and engine.paged:
+            # legacy callers pass num_pages alone; ServeConfig ties it
+            # to the paged layout, so carry the engine's over
+            legacy["cache_layout"] = "paged"
+        config = resolve_config(config, legacy, "Scheduler")
+        if config.prefill_chunk is not None:
+            caps = engine.prefill_capabilities
+            if not caps:
                 raise ValueError(
-                    f"prefill_chunk must be a power of two >= 1, got "
-                    f"{prefill_chunk}")
-            if not engine.supports_chunked_prefill:
-                raise ValueError(
-                    "this engine cannot chunk its prefill (encoder-"
-                    "decoder, bidirectional, a mesh-sharded augmented "
-                    "layout, augmented mamba/MoE, or a random/oracle "
-                    "compressor); use prefill_chunk=None")
-        if decode_per_prefill < 0:
-            raise ValueError(
-                f"decode_per_prefill must be >= 0, got "
-                f"{decode_per_prefill}")
-        if num_pages is not None and num_pages < 1:
-            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+                    f"this engine cannot chunk its prefill (Engine."
+                    f"prefill_capabilities.reason={caps.reason!r}); use "
+                    f"prefill_chunk=None")
         self.engine = engine
-        self.n_slots = n_slots
-        self.decode_chunk = decode_chunk
-        self.doc_capacity = doc_capacity
-        self.tail_capacity = tail_capacity
+        self.config = config
+        self.n_slots = config.n_slots
+        self.decode_chunk = config.decode_chunk
+        self.doc_capacity = config.doc_capacity
+        self.tail_capacity = config.tail_capacity
         self.sampling = sampling or engine.sampling
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
-        self.prefill_chunk = prefill_chunk
-        self.decode_per_prefill = decode_per_prefill
-        self.num_pages = num_pages
+        self.prefill_chunk = config.prefill_chunk
+        self.decode_per_prefill = config.decode_per_prefill
+        self.num_pages = config.num_pages
+        # decode ticks interleaved per prefill tick: monolithic sessions
+        # reproduce the historical admit-everything-then-decode ordering
+        # with an interleave of 0 (their one "chunk" is the whole doc —
+        # there is nothing bounded to interleave against)
+        self._interleave = (config.decode_per_prefill
+                            if config.prefill_chunk is not None else 0)
         self.pending: deque = deque()
         self.active: Dict[int, _SlotInfo] = {}
         self.admissions: Dict[int, _Admission] = {}
@@ -343,25 +374,6 @@ class Scheduler:
             self.admission_deferrals += 1
         return pages
 
-    def _prefill_request(self, req: Request):
-        self._validate_request(req)
-        doc = _doc_batched(req.doc)
-        query = req.query if req.query.ndim == 2 else req.query[None]
-        t0 = time.perf_counter()
-        logits0, caches, q_tails = self.engine.prefill(doc, query)
-        logits0 = jax.block_until_ready(logits0)
-        t_prefill = time.perf_counter() - t0
-        doc_len = cache_lib.attn_cache_len(caches)
-        if not self._paged:
-            # dense slots need the request padded to the shared capacity;
-            # the paged install scatters the exact-length rows into pages
-            caches = cache_lib.pad_doc_caches(caches, self.doc_capacity)
-        tails, tail_len = cache_lib.make_tail_buffers(
-            q_tails, self.tail_capacity)
-        # tail fill level == lq for attention models, 0 for pure-SSM
-        # (no attention tail) — distinct from the query length
-        return logits0, caches, tails, int(tail_len[0]), doc_len, t_prefill
-
     def _alloc_state(self, req_caches, req_tails) -> dec.DecodeState:
         """Zero slot buffers shaped after one padded request, widened to
         ``n_slots`` on the batch axis (axis 1 of the block-stacked
@@ -399,7 +411,8 @@ class Scheduler:
 
     def _install(self, req: Request, slot: int, logits0, caches, tails,
                  tail_fill: int, doc_len: int, t_prefill: float,
-                 pages: Optional[PageGrant] = None) -> None:
+                 pages: Optional[PageGrant] = None,
+                 waves: int = 0) -> None:
         """Paste one prefilled request (dense request caches + tail
         buffers) into ``slot`` and sample its first token — shared by the
         monolithic and chunked admission paths.  ``pages`` is the paged
@@ -420,7 +433,8 @@ class Scheduler:
                 if self._run_t0 is not None else 0.0)
         info = _SlotInfo(req, tok0, t_prefill, self.chunks_run,
                          ttft_s=ttft,
-                         prefill_chunks_before=self.prefill_chunks_done)
+                         prefill_chunks_before=self.prefill_chunks_done,
+                         prefill_waves=waves)
         pos0 = cache_lib.first_decode_position(_doc_seq_len(req.doc),
                                                req.query.shape[-1])
         done = info.remaining == 0
@@ -449,43 +463,14 @@ class Scheduler:
         if done:
             self._finish(slot)
 
-    def _admit(self, req: Request, slot: int,
-               pages: Optional[PageGrant] = None) -> None:
-        (logits0, caches, tails, tail_fill, doc_len,
-         t_prefill) = self._prefill_request(req)
-        self._install(req, slot, logits0, caches, tails, tail_fill,
-                      doc_len, t_prefill, pages=pages)
-
-    def _admit_all(self) -> None:
-        for slot in range(self.n_slots):
-            if not self.pending:
-                break
-            if slot in self.active:
-                continue
-            # pop only after a successful admit so a request that
-            # fails validation is not silently lost from the queue
-            req = self.pending[0]
-            pages = None
-            if self._paged:
-                self._validate_request(req)   # raises before the reserve
-                pages = self._reserve_pages(req)
-                if pages is None:
-                    break          # pool exhausted: wait for retirements
-            try:
-                self._admit(req, slot, pages=pages)
-            except Exception:
-                if pages is not None:
-                    self._allocator.release(pages)
-                raise
-            self.pending.popleft()
-
-    # ---------------------------------------------- chunked admissions
+    # ------------------------------------------------- admission sessions
     def _start_admissions(self) -> None:
-        """Bind pending requests to free slots as in-flight chunked
-        admissions (their doc caches stream in chunk by chunk).  On a
-        paged engine the pool pages are reserved here — before the first
-        chunk is computed — and the streaming buffer is exact-length
-        (O(doc len)), not doc_capacity."""
+        """Bind pending requests to free slots as in-flight prefill
+        sessions (``Engine.start_prefill`` — monolithic, plain chunked,
+        augmented host-loop or pipelined mesh; the engine picks).  On a
+        paged engine the pool pages are reserved here — before any
+        prefill compute is spent — and a streaming session's buffer is
+        exact-length (O(doc len)), not doc_capacity."""
         for slot in range(self.n_slots):
             if not self.pending:
                 break
@@ -500,10 +485,10 @@ class Scheduler:
                     break          # pool exhausted: wait for retirements
             self.pending.popleft()
             try:
-                cp = self.engine.start_chunked_prefill(
+                cp = self.engine.start_prefill(
                     _doc_batched(req.doc),
                     req.query if req.query.ndim == 2 else req.query[None],
-                    self.prefill_chunk,
+                    chunk_size=self.prefill_chunk,
                     doc_capacity=(None if self._paged
                                   else self.doc_capacity))
             except Exception:
@@ -515,10 +500,11 @@ class Scheduler:
             self._submitted += 1
 
     def _prefill_tick(self) -> bool:
-        """Advance the in-flight admission with the fewest chunks left
-        (shortest-remaining-first; FIFO tiebreak) by one document chunk;
+        """Advance the in-flight session with the fewest chunks left
+        (shortest-remaining-first; FIFO tiebreak) by one step — one
+        document chunk, or the whole document for a monolithic session;
         activate it when its document is fully streamed in.  Returns
-        False when no admission is in flight."""
+        False when no session is in flight."""
         if not self.admissions:
             return False
         slot = min(self.admissions,
@@ -526,28 +512,36 @@ class Scheduler:
                                   self.admissions[s].order))
         adm = self.admissions[slot]
         if adm.cp.chunks_left:
-            adm.cp.step()
+            try:
+                adm.cp.step()
+            except Exception:
+                # a failed session never retires through _finish — give
+                # its pages back so the pool is not leaked
+                self.admissions.pop(slot)
+                if adm.pages is not None:
+                    self._allocator.release(adm.pages)
+                raise
             self.prefill_chunks_done += 1
         if not adm.cp.chunks_left:
             self._activate(slot)
         return True
 
     def _activate(self, slot: int) -> None:
-        """Query pass + slot installation for a fully-prefilled chunked
-        admission."""
+        """Query pass + slot installation for a fully-prefilled
+        session."""
         adm = self.admissions.pop(slot)
         req, cp = adm.req, adm.cp
         logits0, caches, q_tails = cp.finish()
         doc_len = cp.n if cache_lib.has_attn_cache(caches) else 0
-        # paged: the exact-length mini-pool's pages copy straight into
-        # the shared pool (write_doc_pages, identity-table fast path);
-        # dense: the chunked path allocated the doc caches at
-        # doc_capacity already — only the tail buffers remain to build
+        # paged: a streaming session's exact-length mini-pool pages (or
+        # a monolithic session's dense rows) copy into the shared pool
+        # (write_doc_pages); dense: the session returned the doc caches
+        # at doc_capacity already — only the tail buffers remain
         tails, tail_len = cache_lib.make_tail_buffers(
             q_tails, self.tail_capacity)
         self._install(req, slot, logits0, caches, tails,
                       int(tail_len[0]), doc_len, cp.prefill_time_s,
-                      pages=adm.pages)
+                      pages=adm.pages, waves=cp.waves_done)
 
     # ------------------------------------------------------------------
     def _finish(self, slot: int) -> None:
@@ -565,7 +559,8 @@ class Scheduler:
             admitted_at_chunk=info.admitted_at_chunk,
             finished_at_chunk=self.chunks_run,
             ttft_s=info.ttft_s,
-            admitted_after_prefill_chunks=info.prefill_chunks_before)
+            admitted_after_prefill_chunks=info.prefill_chunks_before,
+            prefill_waves=info.prefill_waves)
 
     def _decode_chunk(self) -> None:
         # don't run wasted pad steps past the longest remaining budget —
@@ -604,26 +599,16 @@ class Scheduler:
         self._run_t0 = time.perf_counter()
         if self.pending:
             self._resolve_capacities()
-        if self.prefill_chunk is None:
-            while self.pending or self.active:
-                self._admit_all()
-                if self.active:
-                    self._decode_chunk()
-                elif self.pending:
-                    # unreachable by construction: with nothing active or
-                    # in flight every page is free, so the head either
-                    # admits or fails validation — guard against a silent
-                    # spin if that invariant ever breaks
-                    raise RuntimeError(
-                        "scheduler stalled: pending requests but nothing "
-                        "active or admissible")
-            return self.results
+        # one loop for every admission shape: monolithic sessions take a
+        # single tick with no decode interleave (self._interleave == 0),
+        # which reproduces the historical admit-then-decode ordering;
+        # streaming sessions interleave bounded decode progress per tick
         while self.pending or self.admissions or self.active:
             self._start_admissions()
             prefilling = self._prefill_tick()
             if prefilling:
                 # interleave: bounded decode progress per prefill chunk
-                for _ in range(self.decode_per_prefill):
+                for _ in range(self._interleave):
                     if not self.active:
                         break
                     self._decode_chunk()
@@ -631,7 +616,11 @@ class Scheduler:
                 # nothing streaming in (or all slots busy): pure decode
                 self._decode_chunk()
             elif self.pending:
-                raise RuntimeError(          # same invariant as above
+                # unreachable by construction: with nothing active or
+                # in flight every page is free, so the head either
+                # admits or fails validation — guard against a silent
+                # spin if that invariant ever breaks
+                raise RuntimeError(
                     "scheduler stalled: pending requests but nothing "
                     "active or admissible")
         return self.results

@@ -20,6 +20,11 @@ Checks:
      kernel + gather read paths), the paged scheduler over the sharded
      pool incl. per-shard allocator conservation, and an augmented (apb)
      mesh engine admitting paged requests
+ 11. pipelined mesh chunked prefill (per-shard running top-k, one-hop
+     passing-block hand-off) == lockstep mesh monolithic == single-host
+     chunked oracle (greedy tokens; dense + paged, star + apb), and the
+     mesh scheduler streams augmented admissions chunk-by-chunk with
+     per-request wave counts
 """
 import os
 
@@ -274,24 +279,28 @@ def main():
           and close(aux_loc_m, aux_ref_m))
 
     # ------------- 9: chunked augmented prefill == shard_map monolithic
-    # The serving engine chunks the star/apb prefill only on the
-    # single-device host loop (hosts stream sequentially; lockstep mesh
-    # shards cannot).  Its outputs must still match the *mesh*
-    # computation: chunked hostloop -> monolithic hostloop (tier-1) ->
-    # shard_map (check 3) closes the chain; this check takes the two
-    # ends directly.
+    # The host-loop engine streams the star/apb prefill chunk by chunk;
+    # its outputs must match the *mesh* computation: chunked hostloop ->
+    # monolithic hostloop (tier-1) -> shard_map (check 3) closes the
+    # chain; this check takes the two ends directly.
     from repro.serving.engine import Engine
     eng9 = Engine(cfg7, p7, RunCtx(strategy="apb", layout=lay7))
     check("single-device augmented engine can chunk",
           eng9.supports_chunked_prefill)
+    check("hostloop capability reason",
+          eng9.prefill_capabilities.reason == "augmented-hostloop",
+          eng9.prefill_capabilities.reason)
     lg9, caches9, _ = eng9.prefill_chunked(doc7, qry, 64)
     check("chunked apb logits == mesh prefill", close(lg9, lg7, 5e-4))
     k9 = caches9[0]["k"]
     check("chunked apb doc cache == mesh prefill",
           k9.shape == k_cache.shape and close(k9, k_cache, 5e-4))
     eng9m = Engine(cfg7, p7, r7, jit=False)
-    check("mesh augmented gate stays closed",
-          not eng9m.supports_chunked_prefill)
+    check("mesh augmented gate is open (pipelined wave schedule)",
+          eng9m.supports_chunked_prefill)
+    check("mesh capability reason",
+          eng9m.prefill_capabilities.reason == "mesh-augmented",
+          eng9m.prefill_capabilities.reason)
 
     # ------------- 10: mesh-sharded paged cache == dense mesh == single
     from repro.serving.scheduler import Request, Scheduler
@@ -350,6 +359,66 @@ def main():
     resp = schp.run()
     check("apb mesh engine admits paged requests == dense mesh apb",
           bool(np.array_equal(resp["apb"].tokens, np.asarray(ref_apb))))
+
+    # ---- 11: pipelined mesh chunked prefill == lockstep mesh == single
+    # The tentpole parity: the pipelined wave schedule (per-shard running
+    # top-k, one-hop passing-block hand-off the moment a wave finalizes)
+    # must reproduce the lockstep shard_map monolithic pass AND the
+    # single-host chunked oracle, greedy-token bit-identical.
+    from repro.serving.engine import MeshChunkedPrefill
+    ref_mesh = eng_apb_d.generate(doc7, qry, max_new_tokens=6).tokens
+    ref_host = eng9.generate(doc7, qry, max_new_tokens=6,
+                             prefill_chunk=64).tokens
+    check("lockstep mesh apb == hostloop chunked apb",
+          bool(np.array_equal(ref_mesh, np.asarray(ref_host))))
+    for pc in (64, 16):            # one chunk per wave / pow2 ladder
+        sess = eng_apb_d.start_prefill(doc7, qry, chunk_size=pc)
+        check(f"mesh apb start_prefill(chunk={pc}) is pipelined",
+              isinstance(sess, MeshChunkedPrefill))
+        out_pipe = eng_apb_d.generate(doc7, qry, max_new_tokens=6,
+                                      prefill_chunk=pc).tokens
+        check(f"pipelined mesh apb dense (chunk={pc}) == lockstep mesh",
+              bool(np.array_equal(out_pipe, ref_mesh)))
+    res_pipe = eng_apb_d.generate(doc7, qry, max_new_tokens=6,
+                                  prefill_chunk=64)
+    check("pipelined mesh prefill reports host waves",
+          res_pipe.prefill_waves == lay7.n_hosts,
+          f"waves={res_pipe.prefill_waves}")
+    out_pipe_p = eng_apb_p.generate(doc7, qry, max_new_tokens=6,
+                                    prefill_chunk=64).tokens
+    check("pipelined mesh apb paged == lockstep mesh",
+          bool(np.array_equal(out_pipe_p, ref_mesh)))
+    # star on the mesh: anchor-only, no passing blocks to hand off —
+    # the degenerate wave schedule must still match
+    r7s = dataclasses.replace(r7, strategy="star")
+    eng_star_d = Engine(cfg7, p7, r7s)
+    ref_star = eng_star_d.generate(doc7, qry, max_new_tokens=6).tokens
+    out_star = eng_star_d.generate(doc7, qry, max_new_tokens=6,
+                                   prefill_chunk=64).tokens
+    check("pipelined mesh star dense == lockstep mesh",
+          bool(np.array_equal(out_star, ref_star)))
+
+    # the mesh scheduler streams augmented admissions chunk-by-chunk
+    # (they no longer fall back to a blocking monolithic pass) and mixed
+    # plain traffic rides the same session loop
+    ref_short = Engine(cfg7, p7, RunCtx(strategy="full")).generate(
+        d2, q2, max_new_tokens=4).tokens[0]
+    sch11 = Scheduler(eng_apb_d, n_slots=2, decode_chunk=3,
+                      prefill_chunk=64)
+    sch11.submit(Request("apb", doc7[0:1], qry[0:1], max_new_tokens=6))
+    sch11.submit(Request("short", d2, q2, max_new_tokens=4))
+    res11 = sch11.run()
+    check("mesh scheduler streamed apb admission == lockstep mesh solo",
+          bool(np.array_equal(res11["apb"].tokens,
+                              np.asarray(ref_apb))))
+    check("mesh scheduler plain fallback == single-host full",
+          bool(np.array_equal(res11["short"].tokens,
+                              np.asarray(ref_short))))
+    check("mesh streamed admission reports waves",
+          res11["apb"].prefill_waves == lay7.n_hosts
+          and res11["short"].prefill_waves > 0,
+          f"apb={res11['apb'].prefill_waves} "
+          f"short={res11['short'].prefill_waves}")
 
     n_fail = OK.count(False)
     print(f"\n{len(OK) - n_fail}/{len(OK)} distributed checks passed")

@@ -1,0 +1,308 @@
+"""ServeConfig / PrefillCapabilities / prefill-session API.
+
+The unified serving config is the one place knobs are validated; the
+capability report is the one gate the scheduler and launcher read; the
+session factory (``Engine.start_prefill``) is the one prefill entry
+point.  These tests pin all three: validation messages, the legacy
+keyword shim (deprecation + conflict), per-configuration capability
+reasons, the wave-schedule invariants of the pipelined mesh prefill,
+and monolithic-session parity with ``Engine.prefill``.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.splitting import make_layout
+from repro.models import model as model_lib
+from repro.models.transformer import RunCtx
+from repro.serving import cache as cache_lib
+from repro.serving.config import (PrefillCapabilities, ServeConfig,
+                                  resolve_config)
+from repro.serving.engine import (AugmentedChunkedPrefill, ChunkedPrefill,
+                                  Engine, MonolithicPrefill,
+                                  mesh_wave_schedule)
+from repro.serving.scheduler import Request, Scheduler
+
+
+def _mk_engine(key, arch="granite-3-2b", strategy="full", layout=None,
+               **kw):
+    cfg = get_config(arch).reduced()
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    return cfg, Engine(cfg, params,
+                       RunCtx(strategy=strategy, layout=layout), **kw)
+
+
+def _mk_req(cfg, n, lq, seed):
+    r = np.random.default_rng(seed)
+    return (jnp.asarray(r.integers(0, cfg.vocab_size, (1, n)), jnp.int32),
+            jnp.asarray(r.integers(0, cfg.vocab_size, (1, lq)), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig validation
+# ---------------------------------------------------------------------------
+
+def test_serve_config_defaults_valid():
+    cfg = ServeConfig()
+    assert cfg.cache_layout == "dense"
+    assert cfg.prefill_chunk is None
+    assert cfg.num_pages is None
+
+
+@pytest.mark.parametrize("kw,match", [
+    ({"cache_layout": "sparse"}, "cache_layout"),
+    ({"paged_impl": "magic"}, "paged_impl"),
+    ({"page_size": 0}, "page_size"),
+    ({"n_slots": 0}, "n_slots"),
+    ({"decode_chunk": 0}, "decode_chunk"),
+    ({"prefill_chunk": 12}, "power of two"),
+    ({"prefill_chunk": 0}, "power of two"),
+    ({"decode_per_prefill": -1}, "decode_per_prefill"),
+    ({"num_pages": 0}, "num_pages"),
+    ({"num_pages": 4}, "cache_layout='paged'"),   # pool without layout
+    ({"doc_capacity": 0}, "doc_capacity"),
+    ({"tail_capacity": 0}, "tail_capacity"),
+    ({"max_new": 0}, "max_new"),
+])
+def test_serve_config_rejects_bad_knobs(kw, match):
+    with pytest.raises(ValueError, match=match):
+        ServeConfig(**kw)
+
+
+def test_serve_config_replace_revalidates():
+    cfg = ServeConfig(cache_layout="paged", num_pages=8)
+    assert cfg.replace(num_pages=16).num_pages == 16
+    with pytest.raises(ValueError, match="power of two"):
+        cfg.replace(prefill_chunk=3)
+
+
+def test_resolve_config_conflict_and_deprecation():
+    # config= plus a legacy knob for the same call is ambiguous
+    with pytest.raises(ValueError, match="not both"):
+        resolve_config(ServeConfig(), {"page_size": 8}, "Engine")
+    # legacy-only keeps working, but warns toward ServeConfig
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        out = resolve_config(None, {"page_size": 8}, "Engine")
+    assert out.page_size == 8
+    # nothing passed: clean defaults, no warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve_config(None, {"page_size": None}, "Engine") \
+            == ServeConfig()
+
+
+# ---------------------------------------------------------------------------
+# Engine / Scheduler adopt the config (legacy kwargs shimmed)
+# ---------------------------------------------------------------------------
+
+def test_engine_accepts_config_and_legacy_kwargs(key):
+    cfg, eng = _mk_engine(
+        key, config=ServeConfig(cache_layout="paged", page_size=8))
+    assert eng.paged and eng.page_size == 8
+    model = model_lib.build(cfg)
+    params = model.init(jax.random.fold_in(key, 1))
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        eng2 = Engine(cfg, params, RunCtx(strategy="full"),
+                      cache_layout="paged", page_size=8)
+    assert eng2.paged and eng2.page_size == 8
+    with pytest.raises(ValueError, match="not both"):
+        Engine(cfg, params, RunCtx(strategy="full"),
+               config=ServeConfig(), cache_layout="paged")
+
+
+def test_scheduler_accepts_config_and_legacy_kwargs(key):
+    cfg, eng = _mk_engine(key)
+    doc, query = _mk_req(cfg, 24, 4, 0)
+    ref = eng.generate(doc, query, max_new_tokens=4).tokens[0]
+    sch = Scheduler(eng, config=ServeConfig(n_slots=2, decode_chunk=3,
+                                            prefill_chunk=8))
+    sch.submit(Request("a", doc, query, max_new_tokens=4))
+    np.testing.assert_array_equal(sch.run()["a"].tokens, np.asarray(ref))
+    # the legacy spelling serves the same tokens, with a warning
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        sch2 = Scheduler(eng, n_slots=2, decode_chunk=3, prefill_chunk=8)
+    sch2.submit(Request("a", doc, query, max_new_tokens=4))
+    np.testing.assert_array_equal(sch2.run()["a"].tokens, np.asarray(ref))
+    with pytest.raises(ValueError, match="not both"):
+        Scheduler(eng, config=ServeConfig(), n_slots=2)
+
+
+# ---------------------------------------------------------------------------
+# PrefillCapabilities: machine-readable reasons
+# ---------------------------------------------------------------------------
+
+def test_capabilities_report_reasons(key):
+    cfg, eng = _mk_engine(key)
+    caps = eng.prefill_capabilities
+    assert isinstance(caps, PrefillCapabilities)
+    assert caps and caps.supported and caps.reason == "plain"
+    # augmented host loop
+    lay = make_layout(64, 8, 4, anchor_frac=cfg.anchor_frac,
+                      passing_frac=cfg.passing_frac)
+    _, eng_aug = _mk_engine(key, strategy="apb", layout=lay)
+    assert eng_aug.prefill_capabilities.reason == "augmented-hostloop"
+    # bidirectional contexts stay gated
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    eng_bd = Engine(cfg, params,
+                    RunCtx(strategy="full", bidirectional=True))
+    assert not eng_bd.prefill_capabilities
+    assert eng_bd.prefill_capabilities.reason == "bidirectional"
+    # whole-block compressors stay gated, named by method
+    eng_rand = Engine(cfg, params,
+                      RunCtx(strategy="apb", layout=lay,
+                             compressor_method="random"))
+    assert eng_rand.prefill_capabilities.reason == "compressor-random"
+    # encoder-decoder stays gated
+    cfg_e = get_config("whisper-tiny").reduced()
+    model_e = model_lib.build(cfg_e)
+    eng_e = Engine(cfg_e, model_e.init(key), RunCtx(strategy="full"))
+    assert eng_e.prefill_capabilities.reason == "encdec"
+    # augmented mamba stays gated on the host loop
+    cfg_m = get_config("jamba-1.5-large-398b").reduced()
+    model_m = model_lib.build(cfg_m)
+    lay_m = make_layout(64, 8, 4, anchor_frac=cfg_m.anchor_frac,
+                        passing_frac=cfg_m.passing_frac)
+    eng_m = Engine(cfg_m, model_m.init(key),
+                   RunCtx(strategy="apb", layout=lay_m))
+    assert eng_m.prefill_capabilities.reason == "augmented-mamba"
+    # the boolean alias still answers
+    assert eng.supports_chunked_prefill
+    assert not eng_m.supports_chunked_prefill
+
+
+def test_scheduler_gate_error_names_the_reason(key):
+    cfg = get_config("granite-3-2b").reduced()
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    lay = make_layout(64, 8, 4, anchor_frac=cfg.anchor_frac,
+                      passing_frac=cfg.passing_frac)
+    eng_rand = Engine(cfg, params,
+                      RunCtx(strategy="apb", layout=lay,
+                             compressor_method="random"))
+    with pytest.raises(ValueError, match="compressor-random"):
+        Scheduler(eng_rand, config=ServeConfig(prefill_chunk=16))
+    doc, query = _mk_req(cfg, 64, 8, 2)
+    with pytest.raises(ValueError, match="compressor-random"):
+        eng_rand.start_prefill(doc, query, chunk_size=16)
+
+
+# ---------------------------------------------------------------------------
+# Wave schedule invariants (pipelined mesh prefill)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hosts,lb,chunk", [(4, 64, 16), (8, 64, 64),
+                                            (2, 24, 16), (3, 50, 8)])
+def test_mesh_wave_schedule_invariants(hosts, lb, chunk):
+    """Host h's chunks form one contiguous wave over its block, the
+    finalize fires exactly once per host (on its last chunk), and the
+    per-wave chunk counts match the pow2 ladder — so host h+1 can never
+    consume a passing block before host h finalized it."""
+    sched = mesh_wave_schedule(hosts, lb, chunk)
+    assert len(sched) == hosts
+    ladder = list(cache_lib.chunk_plan(lb, chunk))
+    for h, wave in enumerate(sched):
+        assert [(off, t) for _, off, t, _ in wave] == ladder
+        assert all(hh == h for hh, _, _, _ in wave)
+        # exactly one finalize per wave, and it is the last entry
+        assert [last for _, _, _, last in wave].index(True) \
+            == len(wave) - 1
+        assert sum(last for _, _, _, last in wave) == 1
+    # flattened order: every one of host h's entries precedes every one
+    # of host h+1's (the one-hop hand-off has always happened by the
+    # time the consumer's first chunk runs)
+    flat = [e for wave in sched for e in wave]
+    hosts_seen = [h for h, _, _, _ in flat]
+    assert hosts_seen == sorted(hosts_seen)
+
+
+def test_aug_plan_follows_wave_schedule(key):
+    """The host-loop augmented session executes the same wave schedule
+    the pipelined mesh path does: anchor tick first, then the flattened
+    waves."""
+    cfg = get_config("granite-3-2b").reduced()
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    lay = make_layout(64, 8, 4, anchor_frac=cfg.anchor_frac,
+                      passing_frac=cfg.passing_frac)
+    eng = Engine(cfg, params, RunCtx(strategy="apb", layout=lay))
+    doc, query = _mk_req(cfg, 64, 8, 3)
+    sess = eng.start_prefill(doc, query, chunk_size=8)
+    assert isinstance(sess, AugmentedChunkedPrefill)
+    waves = mesh_wave_schedule(lay.n_hosts, lay.lb, 8)
+    expect = [("anchor",)] + [("local",) + e for w in waves for e in w]
+    assert sess._plan == expect
+
+
+# ---------------------------------------------------------------------------
+# start_prefill session factory
+# ---------------------------------------------------------------------------
+
+def test_start_prefill_monolithic_session_parity(key):
+    """chunk_size=None returns a single-step session whose results are
+    exactly Engine.prefill's."""
+    cfg, eng = _mk_engine(key)
+    doc, query = _mk_req(cfg, 24, 4, 4)
+    sess = eng.start_prefill(doc, query)
+    assert isinstance(sess, MonolithicPrefill)
+    assert sess.chunks_left == 1 and sess.waves_done == 0
+    lg_s, caches_s, tails_s = sess.finish()
+    assert sess.chunks_left == 0 and sess.waves_done == 1
+    assert sess.prefill_time_s > 0
+    lg_m, caches_m, _ = eng.prefill(doc, query)
+    np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_m))
+    for cs, cm in zip(caches_s, caches_m):
+        if "k" in cm:
+            np.testing.assert_array_equal(np.asarray(cs["k"]),
+                                          np.asarray(cm["k"]))
+    with pytest.raises(ValueError, match="already ran"):
+        sess.step()
+
+
+def test_start_prefill_monolithic_pads_to_capacity(key):
+    cfg, eng = _mk_engine(key)
+    doc, query = _mk_req(cfg, 24, 4, 5)
+    _, caches, _ = eng.start_prefill(doc, query,
+                                     doc_capacity=40).finish()
+    for c in caches:
+        if "k" in c:
+            assert c["k"].shape[2] == 40
+            assert not np.asarray(c["k"][:, :, 24:]).any()
+
+
+def test_start_prefill_dispatches_by_layout(key):
+    cfg, eng = _mk_engine(key)
+    doc, query = _mk_req(cfg, 24, 4, 6)
+    assert isinstance(eng.start_prefill(doc, query, chunk_size=8),
+                      ChunkedPrefill)
+    # legacy alias still routes through the factory
+    assert isinstance(eng.start_chunked_prefill(doc, query, 8),
+                      ChunkedPrefill)
+    lay = make_layout(64, 8, 4, anchor_frac=cfg.anchor_frac,
+                      passing_frac=cfg.passing_frac)
+    _, eng_aug = _mk_engine(key, strategy="apb", layout=lay)
+    d_aug, q_aug = _mk_req(cfg, 64, 8, 7)
+    sess = eng_aug.start_prefill(d_aug, q_aug, chunk_size=8)
+    assert isinstance(sess, AugmentedChunkedPrefill)
+    # geometry that misses the layout falls back to the exact plain path
+    assert not isinstance(eng_aug.start_prefill(doc, query, chunk_size=8),
+                          AugmentedChunkedPrefill)
+
+
+def test_scheduler_results_report_waves(key):
+    cfg, eng = _mk_engine(key)
+    doc, query = _mk_req(cfg, 24, 4, 8)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=1, decode_chunk=2,
+                                            prefill_chunk=8))
+    sch.submit(Request("a", doc, query, max_new_tokens=4))
+    res = sch.run()["a"]
+    # 24 tokens at chunk 8 -> 3 ticks; the plain session counts ticks
+    assert res.prefill_waves == 3
+    sch_m = Scheduler(eng, config=ServeConfig(n_slots=1, decode_chunk=2))
+    sch_m.submit(Request("a", doc, query, max_new_tokens=4))
+    assert sch_m.run()["a"].prefill_waves == 1    # monolithic: one step
