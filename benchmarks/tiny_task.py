@@ -11,6 +11,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -170,7 +171,8 @@ TABLE3 = [
 
 
 def evaluate(params, setting: Setting, hosts: int = 4, n_eval: int = 48,
-             n_doc: int = None, seed: int = 123, kind: str = "passkey"):
+             n_doc: Optional[int] = None, seed: int = 123,
+             kind: str = "passkey"):
     """Exact-match retrieval accuracy under one APB configuration."""
     if n_doc is None:
         n_doc = N_DOC

@@ -1,0 +1,2 @@
+# Analysis layer: performance models (flops, roofline) and the static-
+# analysis suite (analysis.static, driven by tools/repro_lint.py).

@@ -1,0 +1,31 @@
+"""Static-analysis suite over the repo (driven by ``tools/repro_lint.py``).
+
+Four analyzers, each emitting structured :class:`~repro.analysis.static
+.findings.Finding` records (file:line, rule id, message, fix hint):
+
+* ``bounds``    — Pallas kernel bounds checker (rules ``PB``): proves
+  every registered kernel's BlockSpec index maps stay inside their
+  operands over the full concrete grid of a config matrix.
+* ``shardspec`` — sharding-spec verifier (rules ``SHD``): walks the
+  PartitionSpec builders in ``parallel.sharding`` against
+  ``jax.eval_shape`` trees from the real cache/state constructors, and
+  flags ``shard_map(check_rep=False)`` regions.
+* ``tracelint`` — AST tracing-hazard linter (rules ``TRC``): repo-
+  specific jit/tracing hygiene over ``src/``.
+* ``oracle``    — oracle-coverage enforcer (rules ``ORA``): every
+  dispatch seam's fast-path arm must have registered bit-exactness
+  oracle evidence in the test suite.
+
+Suppressions are in-source comments (``# repro-lint: disable=RULE --
+rationale``); ``findings`` owns parsing, matching and staleness (rules
+``SUP``).  See docs/static_analysis.md for the rule catalog.
+"""
+from repro.analysis.static import (bounds, findings, oracle,  # noqa: F401
+                                   shardspec, tracelint)
+
+ANALYZERS = {
+    "bounds": bounds,
+    "sharding": shardspec,
+    "trace": tracelint,
+    "oracle": oracle,
+}

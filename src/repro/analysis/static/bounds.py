@@ -1,0 +1,150 @@
+"""Pallas kernel bounds checker (rules PB001-PB003).
+
+Abstractly evaluates every registered kernel's BlockSpec index maps
+over the *full concrete grid* of each config-matrix case
+(``repro.kernels.kernel_analyses``), proving each DMA window stays
+inside its operand.  On TPU an out-of-bounds window is silent memory
+corruption — interpret mode on CPU masks it, which is exactly why this
+is a static proof and not a runtime assert.
+
+Scalar-prefetch handling: every scalar operand is pinned at its
+declared ``lo`` and then its declared ``hi`` (the wrapper-guaranteed
+range, e.g. the page table after ``jnp.clip``), and the maps are
+evaluated at every grid point under both fills.  Because the repo's
+index maps use scalar values only *directly* as block indices (never
+negated or offset downward), the window-start extremes are attained at
+the range endpoints, so the two fills cover the guarded range.  A map
+that reads a scalar with no declared guard is flagged regardless
+(PB002) — range-guard the wrapper, then declare the guard.
+
+Rules:
+  PB001  an index map produced a block window outside its operand
+  PB002  an index map reads a scalar-prefetch operand with no declared
+         range guard
+  PB003  block shape rank differs from operand rank (malformed spec)
+"""
+from __future__ import annotations
+
+import itertools
+from typing import List
+
+from repro.analysis.static.findings import Finding
+
+RULES = ("PB001", "PB002", "PB003")
+
+# enumeration safety valve: a matrix case is supposed to be a *small*
+# representative shape; a huge grid is a registry bug, not a reason to
+# spin for minutes
+MAX_GRID_POINTS = 200_000
+
+
+class _Recording:
+    """Array wrapper recording whether an index map ever read it."""
+
+    def __init__(self, arr):
+        self.arr = arr
+        self.touched = False
+
+    def __getitem__(self, idx):
+        self.touched = True
+        return self.arr[idx]
+
+
+def _anchor_line(root, source: str) -> int:
+    """Line of the kernel module's ``pallas_call`` site (best effort)."""
+    try:
+        text = (root / source).read_text(encoding="utf-8")
+    except OSError:
+        return 0
+    for i, line in enumerate(text.splitlines(), start=1):
+        if "pl.pallas_call(" in line:
+            return i
+    return 0
+
+
+def check_analysis(analysis, line: int = 0) -> List[Finding]:
+    """Findings for one KernelGridAnalysis (pure python/numpy; the
+    kernel never runs)."""
+    import numpy as np
+
+    a = analysis
+    findings: List[Finding] = []
+    where = f"kernel {a.kernel!r} case [{a.case}]"
+
+    for op in a.operands:
+        if len(op.block) != len(op.shape):
+            findings.append(Finding(
+                "PB003", a.source, line,
+                f"{where} operand {op.name!r}: block rank "
+                f"{len(op.block)} != operand rank {len(op.shape)}",
+                hint="BlockSpec block_shape must index every operand "
+                     "dim"))
+    if findings:
+        return findings
+
+    npoints = 1
+    for g in a.grid:
+        npoints *= g
+    if npoints > MAX_GRID_POINTS:
+        return [Finding(
+            "PB003", a.source, line,
+            f"{where}: grid has {npoints} points — config-matrix cases "
+            f"must stay small enough to enumerate "
+            f"(max {MAX_GRID_POINTS})",
+            hint="shrink the registered case; it only needs to be "
+                 "shape-representative")]
+
+    for fill in ("lo", "hi"):
+        scalars = [
+            _Recording(np.full(s.shape, getattr(s, fill), dtype=np.int64))
+            for s in a.scalars]
+        for point in itertools.product(*(range(g) for g in a.grid)):
+            for op in a.operands:
+                idx = op.index_map(*point, *scalars)
+                for d, (i, bsz, dim) in enumerate(
+                        zip(idx, op.block, op.shape)):
+                    i = int(i)
+                    if i < 0 or (i + 1) * bsz > dim:
+                        findings.append(Finding(
+                            "PB001", a.source, line,
+                            f"{where} operand {op.name!r}: index map at "
+                            f"grid point {point} (scalars at {fill}) "
+                            f"selects block {i} on dim {d} — window "
+                            f"[{i * bsz}, {(i + 1) * bsz}) outside "
+                            f"[0, {dim})",
+                            hint="clamp the scalar feeding this map in "
+                                 "the wrapper (and declare the guard), "
+                                 "or fix the map/grid"))
+                        break        # one finding per (point, operand)
+        for s, rec in zip(a.scalars, scalars):
+            if fill == "lo" and rec.touched and not s.guard:
+                findings.append(Finding(
+                    "PB002", a.source, line,
+                    f"{where}: index map reads scalar operand "
+                    f"{s.name!r} which declares no range guard",
+                    hint="range-guard the value in the wrapper (e.g. "
+                         "jnp.clip before the call) and record it in "
+                         "the ScalarSpec guard field"))
+    # collapse duplicate findings across grid points — one per
+    # (rule, operand-message-prefix) is enough to act on
+    seen, out = set(), []
+    for f in findings:
+        key = (f.rule, f.message.split(" at grid point")[0])
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
+
+
+def run(root) -> List[Finding]:
+    """Check every registered kernel over its whole config matrix."""
+    import pathlib
+
+    from repro.kernels import kernel_analyses
+
+    root = pathlib.Path(root)
+    findings: List[Finding] = []
+    for _, analyses in kernel_analyses().items():
+        for a in analyses:
+            findings += check_analysis(a, line=_anchor_line(root, a.source))
+    return findings

@@ -1,0 +1,172 @@
+"""Structured findings + in-source suppressions for the static suite.
+
+A finding is ``path:line: RULE message [hint]``.  A suppression is a
+source comment on the finding's line (or the line directly above):
+
+    # repro-lint: disable=TRC001 -- host-side stop check, loop is eager
+
+The rationale after ``--`` is mandatory: a suppression without one does
+not suppress (rule SUP002), so every silenced finding carries its
+justification next to the code.  A suppression that no longer matches
+any finding is *stale* (rule SUP001) — fixes must retire their
+suppressions (``repro_lint --check-suppressions``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import pathlib
+import re
+import tokenize
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=([A-Z]{2,3}\d{3}(?:\s*,\s*[A-Z]{2,3}\d{3})*)"
+    r"\s*(?:--\s*(\S.*?))?\s*$")
+
+# rule-id prefix -> analyzer flag that owns it (repro_lint uses this to
+# decide which suppressions a partial run is allowed to judge stale)
+RULE_OWNERS = {"PB": "bounds", "SHD": "sharding", "TRC": "trace",
+               "ORA": "oracle", "SUP": "suppressions"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer hit, anchored to a repo-relative file and line."""
+
+    rule: str
+    path: str            # repo-relative, posix separators
+    line: int            # 1-indexed; 0 = file-level
+    message: str
+    hint: str = ""
+
+    def format(self) -> str:
+        s = f"{self.path}:{self.line}: {self.rule} {self.message}"
+        if self.hint:
+            s += f"  [hint: {self.hint}]"
+        return s
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    path: str
+    line: int
+    rules: Tuple[str, ...]
+    rationale: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: disable={','.join(self.rules)}"
+
+
+def parse_suppressions(text: str, path: str) -> List[Suppression]:
+    """Suppressions from real COMMENT tokens only — a ``# repro-lint:``
+    example quoted inside a docstring must not register (tokenizing, not
+    line-matching, is what tells them apart)."""
+    out = []
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    except (tokenize.TokenizeError, SyntaxError, IndentationError):
+        return out
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = SUPPRESS_RE.search(tok.string)
+        if m:
+            rules = tuple(r.strip() for r in m.group(1).split(","))
+            out.append(Suppression(path, tok.start[0], rules,
+                                   m.group(2) or ""))
+    return out
+
+
+def collect_suppressions(root, rel_paths: Iterable[str]) -> List[Suppression]:
+    """Parse suppression comments from the given repo-relative files."""
+    root = pathlib.Path(root)
+    out: List[Suppression] = []
+    for rel in rel_paths:
+        p = root / rel
+        if p.is_file():
+            out += parse_suppressions(p.read_text(encoding="utf-8"), rel)
+    return out
+
+
+def source_files(root, subdirs: Sequence[str] = ("src",)) -> List[str]:
+    """Repo-relative python files under ``subdirs``, sorted."""
+    root = pathlib.Path(root)
+    out = []
+    for sub in subdirs:
+        base = root / sub
+        if base.is_dir():
+            out += [p.relative_to(root).as_posix()
+                    for p in base.rglob("*.py")]
+    return sorted(out)
+
+
+def apply_suppressions(findings: Sequence[Finding],
+                       suppressions: Sequence[Suppression]):
+    """Split findings into (unsuppressed, suppressed) and report usage.
+
+    A suppression matches a finding when it names the finding's rule in
+    the same file on the finding's line or the line directly above.
+    Suppressions with an empty rationale never match — they surface as
+    SUP002 findings instead (only when they would otherwise fire, so a
+    half-written suppression cannot silently rot).
+
+    Returns (unsuppressed, suppressed, used) where ``used`` is the set
+    of (path, line) suppression sites that matched at least once.
+    """
+    by_site: Dict[Tuple[str, int], List[Suppression]] = {}
+    for s in suppressions:
+        by_site.setdefault((s.path, s.line), []).append(s)
+
+    unsup: List[Finding] = []
+    sup: List[Finding] = []
+    used: Set[Tuple[str, int]] = set()
+    for f in findings:
+        hit = None
+        bad_rationale = None
+        for line in (f.line, f.line - 1):
+            for s in by_site.get((f.path, line), []):
+                if f.rule in s.rules:
+                    if s.rationale:
+                        hit = s
+                    else:
+                        bad_rationale = s
+            if hit:
+                break
+        if hit:
+            used.add((hit.path, hit.line))
+            sup.append(f)
+        else:
+            if bad_rationale is not None:
+                unsup.append(Finding(
+                    "SUP002", bad_rationale.path, bad_rationale.line,
+                    f"suppression for {f.rule} lacks a rationale",
+                    hint="append '-- <why this finding is a false "
+                         "positive>' to the suppression comment"))
+            unsup.append(f)
+    return unsup, sup, used
+
+
+def stale_suppressions(suppressions: Sequence[Suppression],
+                       used: Set[Tuple[str, int]],
+                       checkable_prefixes: Set[str]) -> List[Finding]:
+    """SUP001 findings for suppressions that matched nothing.
+
+    Only judges suppressions whose every rule belongs to an analyzer
+    that actually ran (``checkable_prefixes`` of rule-id prefixes), so a
+    partial run cannot mislabel live suppressions as stale.
+    """
+    out = []
+    for s in suppressions:
+        if (s.path, s.line) in used:
+            continue
+        if not all(re.match(r"[A-Z]+", r).group(0) in checkable_prefixes
+                   for r in s.rules):
+            continue
+        out.append(Finding(
+            "SUP001", s.path, s.line,
+            f"stale suppression: disable={','.join(s.rules)} matches no "
+            f"finding",
+            hint="the underlying finding was fixed — delete the "
+                 "suppression comment"))
+    return out

@@ -1,0 +1,196 @@
+"""Oracle-coverage enforcer (rules ORA001-ORA003).
+
+The repo's testing discipline is the *oracle chain* (docs/architecture
+.md): every fast path is pinned greedy-bit-exact to a slower reference
+— fused==stepwise, chunked==monolithic, paged==dense, kernel==gather,
+mesh==single-host, pipelined==lockstep.  This enforcer turns that
+convention into a machine-checked invariant: each dispatch *seam* (a
+place where the code picks between a fast arm and its oracle arm)
+registers (a) a source pattern proving the seam still exists and (b)
+test-suite patterns proving its oracle evidence still exists.  Remove
+an oracle test and CI fails here; refactor a seam away and the registry
+entry goes stale loudly (ORA002) instead of enforcing nothing.
+
+Rules:
+  ORA001  a seam's oracle evidence pattern no longer matches its test
+  ORA002  a seam's dispatch anchor no longer matches the source (stale
+          registry entry — update or delete the seam)
+  ORA003  a file named by the registry does not exist
+
+Registering a new seam: add a ``Seam`` to ``SEAMS`` with the dispatch
+anchor (file + regex over the arm-picking code) and one evidence entry
+per oracle test that pins the fast arm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import re
+from typing import List, Tuple
+
+from repro.analysis.static.findings import Finding
+
+RULES = ("ORA001", "ORA002", "ORA003")
+
+
+@dataclasses.dataclass(frozen=True)
+class Evidence:
+    """One oracle test the seam requires: file + pattern + what it pins."""
+
+    path: str
+    pattern: str
+    pins: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Seam:
+    """One dispatch seam between a fast path and its oracle."""
+
+    name: str
+    arms: str                     # human-readable "fast vs oracle"
+    dispatch_path: str
+    dispatch_pattern: str
+    evidence: Tuple[Evidence, ...]
+
+
+SEAMS: Tuple[Seam, ...] = (
+    Seam(
+        name="paged_impl",
+        arms='impl="kernel" (fused Pallas paged attention) vs '
+             'impl="gather" (dense-view oracle)',
+        dispatch_path="src/repro/core/decode.py",
+        dispatch_pattern=r'if impl == "kernel":',
+        evidence=(
+            Evidence("tests/test_paged_cache.py",
+                     r'IMPLS = \["kernel", "gather"\]',
+                     "paged==dense parity parametrized over both read "
+                     "impls"),
+            Evidence("tests/distributed_checks.py",
+                     r'for impl in \("kernel", "gather"\)',
+                     "mesh-paged parity runs both impls"),
+        )),
+    Seam(
+        name="cache_layout",
+        arms='cache_layout="paged" (page pool + tables) vs "dense"',
+        dispatch_path="src/repro/serving/engine.py",
+        dispatch_pattern=r'cache_layout == "paged"',
+        evidence=(
+            Evidence("tests/test_paged_cache.py",
+                     r"def test_paged_matches_dense",
+                     "paged greedy tokens == dense greedy tokens"),
+        )),
+    Seam(
+        name="use_kernel",
+        arms="fused APB flash kernel vs ref.apb_mask reference",
+        dispatch_path="src/repro/models/transformer.py",
+        dispatch_pattern=r"use_kernel=rctx\.use_kernel",
+        evidence=(
+            Evidence("tests/test_kernels_apb.py",
+                     r"def test_kernel_matches_oracle",
+                     "kernel output == reference mask attention"),
+        )),
+    Seam(
+        name="chunked_prefill",
+        arms="chunked prefill sessions vs monolithic prefill",
+        dispatch_path="src/repro/serving/engine.py",
+        dispatch_pattern=r"if chunk_size is None:",
+        evidence=(
+            Evidence("tests/test_chunked_prefill.py",
+                     r"def test_chunked_matches_monolithic",
+                     "plain chunked == monolithic, greedy-bit-exact"),
+            Evidence("tests/test_chunked_prefill.py",
+                     r"def test_aug_chunked_matches_monolithic",
+                     "augmented (star/apb) chunked == monolithic"),
+        )),
+    Seam(
+        name="mesh_decode",
+        arms="mesh shard_map decode (LSE psum merge) vs single-host",
+        dispatch_path="src/repro/core/decode.py",
+        dispatch_pattern=r"if mesh is None or not cache_axes:",
+        evidence=(
+            Evidence("tests/distributed_checks.py",
+                     r'"mesh dense greedy == single-host"',
+                     "mesh dense decode == single-host oracle"),
+            Evidence("tests/distributed_checks.py",
+                     r"== single-host oracle",
+                     "mesh paged decode == single-host oracle"),
+        )),
+    Seam(
+        name="pipelined_prefill",
+        arms="pipelined mesh wave schedule vs lockstep mesh monolithic",
+        dispatch_path="src/repro/serving/engine.py",
+        dispatch_pattern=r"class MeshChunkedPrefill",
+        evidence=(
+            Evidence("tests/distributed_checks.py",
+                     r"pipelined mesh apb dense \(chunk=\{pc\}\) == "
+                     r"lockstep mesh",
+                     "pipelined == lockstep, per chunk ladder"),
+            Evidence("tests/distributed_checks.py",
+                     r"lockstep mesh apb == hostloop chunked apb",
+                     "lockstep mesh == single-host chunked oracle"),
+        )),
+    Seam(
+        name="fused_decode_loop",
+        arms="jitted lax.scan decode loop vs stepwise host loop",
+        dispatch_path="src/repro/core/decode.py",
+        dispatch_pattern=r"def decode_loop",
+        evidence=(
+            Evidence("tests/test_serving.py",
+                     r"def test_fused_loop_matches_seed_loop",
+                     "fused scan tokens == stepwise seed-loop tokens"),
+        )),
+)
+
+
+def _find(root: pathlib.Path, rel: str, pattern: str):
+    """(found, line) of the first regex match in a repo-relative file;
+    (None, 0) when the file is missing."""
+    p = root / rel
+    if not p.is_file():
+        return None, 0
+    text = p.read_text(encoding="utf-8")
+    m = re.search(pattern, text)
+    if not m:
+        return False, 0
+    return True, text.count("\n", 0, m.start()) + 1
+
+
+def run(root, seams: Tuple[Seam, ...] = SEAMS) -> List[Finding]:
+    root = pathlib.Path(root)
+    findings: List[Finding] = []
+    for seam in seams:
+        ok, line = _find(root, seam.dispatch_path, seam.dispatch_pattern)
+        if ok is None:
+            findings.append(Finding(
+                "ORA003", seam.dispatch_path, 0,
+                f"seam {seam.name!r}: dispatch file missing",
+                hint="update the SEAMS registry in "
+                     "analysis/static/oracle.py"))
+            continue
+        if not ok:
+            findings.append(Finding(
+                "ORA002", seam.dispatch_path, 0,
+                f"seam {seam.name!r}: dispatch anchor "
+                f"/{seam.dispatch_pattern}/ no longer matches",
+                hint="the seam moved or was refactored away — update "
+                     "(or delete) its SEAMS entry so enforcement "
+                     "follows the code"))
+            continue
+        for ev in seam.evidence:
+            ev_ok, _ = _find(root, ev.path, ev.pattern)
+            if ev_ok is None:
+                findings.append(Finding(
+                    "ORA003", ev.path, 0,
+                    f"seam {seam.name!r}: evidence file missing",
+                    hint="restore the oracle test or update the "
+                         "registry"))
+            elif not ev_ok:
+                findings.append(Finding(
+                    "ORA001", ev.path, 0,
+                    f"seam {seam.name!r} ({seam.arms}) lost its oracle "
+                    f"evidence: /{ev.pattern}/ — pins: {ev.pins}",
+                    hint="a fast-path arm without a bit-exactness "
+                         "oracle is unshippable here — restore the "
+                         "test (or re-anchor the pattern if it only "
+                         "moved)"))
+    return findings

@@ -1,0 +1,262 @@
+"""Sharding-spec verifier (rules SHD001-SHD003, SHD010).
+
+Walks every PartitionSpec builder in ``parallel.sharding`` against
+``jax.eval_shape`` trees from the *real* cache/state constructors
+(``serving.cache.alloc_doc_caches``, ``core.compressor
+.running_topk_init``, ``models.transformer.init_params``, and — when
+enough devices exist to build the reference mesh — ``parallel.sharding
+.input_specs``).  Nothing is allocated; eval_shape gives the exact
+shapes the builders will be asked to place, so a builder that drifts
+from its constructor (rank change, renamed mesh axis, un-divisible dim)
+fails here instead of at first mesh run.
+
+Rules:
+  SHD001  spec rank exceeds the leaf rank it is applied to
+  SHD002  spec names a mesh axis the mesh does not have
+  SHD003  sharded dim not divisible by the product of its axis sizes
+  SHD010  ``shard_map(check_rep=False)`` region — output replication is
+          unchecked; prove it (psum-merged outputs / sharded out_specs
+          that match) and suppress with a rationale, or re-enable
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.static.findings import Finding
+
+RULES = ("SHD001", "SHD002", "SHD003", "SHD010")
+
+# the reference mesh every builder is verified against: both cache axes
+# in play, sizes chosen so the smoke shapes divide
+DEFAULT_MESH: Dict[str, int] = {"data": 2, "model": 4}
+
+_SHARDING_REL = "src/repro/parallel/sharding.py"
+
+
+def _entries(spec) -> Tuple:
+    return tuple(spec)
+
+
+def check_spec(builder: str, spec, shape: Tuple[int, ...],
+               mesh_shape: Dict[str, int], path: str,
+               line: int) -> List[Finding]:
+    """The three structural rules for one (spec, leaf-shape) pair."""
+    findings: List[Finding] = []
+    entries = _entries(spec)
+    where = f"{builder}: spec {tuple(entries)!r} vs leaf {tuple(shape)!r}"
+    if len(entries) > len(shape):
+        findings.append(Finding(
+            "SHD001", path, line,
+            f"{where} — spec rank {len(entries)} exceeds leaf rank "
+            f"{len(shape)}",
+            hint="build the spec from the leaf's ndim (trailing dims "
+                 "may be omitted, never added)"))
+        return findings
+    for dim, entry in enumerate(entries):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for ax in axes:
+            if ax not in mesh_shape:
+                findings.append(Finding(
+                    "SHD002", path, line,
+                    f"{where} — dim {dim} names mesh axis {ax!r}, mesh "
+                    f"has {sorted(mesh_shape)}",
+                    hint="mesh axes are 'data'/'model'/'pod' "
+                         "(parallel.sharding module docstring)"))
+                size = 0
+                break
+            size *= mesh_shape[ax]
+        if size > 1 and shape[dim] % size != 0:
+            findings.append(Finding(
+                "SHD003", path, line,
+                f"{where} — dim {dim} of size {shape[dim]} not "
+                f"divisible by axis product {size}",
+                hint="pad the constructor's dim to the shard count or "
+                     "skip the placement hint (shard_dense_caches "
+                     "shows the pattern)"))
+    return findings
+
+
+def _builder_lines(root: pathlib.Path) -> Dict[str, int]:
+    """def-line of each builder in parallel/sharding.py (for anchors)."""
+    out: Dict[str, int] = {}
+    p = root / _SHARDING_REL
+    if not p.is_file():
+        return out
+    for i, line in enumerate(p.read_text(encoding="utf-8").splitlines(),
+                             start=1):
+        if line.startswith("def "):
+            out[line[4:].split("(")[0]] = i
+    return out
+
+
+def _attn_leaf_cases(caches, pool_spec, table_spec, dense_spec):
+    """(builder-name, spec, leaf-shape) triples for a stacked doc-cache
+    tree, matching leaves the way shard_paged_caches/shard_dense_caches
+    match them."""
+    cases = []
+    for c in caches:
+        if "pt" in c and c["pt"].ndim == 4:
+            cases.append(("paged_pool_spec", pool_spec, c["k"].shape))
+            cases.append(("paged_pool_spec", pool_spec, c["v"].shape))
+            cases.append(("page_table_spec", table_spec, c["pt"].shape))
+        elif "k" in c and c["k"].ndim == 5:
+            cases.append(("dense_cache_spec", dense_spec, c["k"].shape))
+            cases.append(("dense_cache_spec", dense_spec, c["v"].shape))
+    return cases
+
+
+def spec_cases(mesh_shape: Dict[str, int],
+               arch: str = "granite-3-2b"):
+    """All (builder-name, spec, leaf-shape) pairs to verify, built from
+    real constructors under ``jax.eval_shape``."""
+    import jax
+    import jax.numpy as jnp
+    import types
+
+    from repro.configs import get_config
+    from repro.core import compressor as comp
+    from repro.parallel import sharding
+    from repro.serving import cache as cache_lib
+
+    cfg = get_config(arch).reduced()
+    n_shards = mesh_shape.get("model", 1)
+    batch, capacity, page_size = 2, 64 * n_shards * 2, 64
+    cases = []
+
+    paged = jax.eval_shape(
+        lambda: cache_lib.alloc_doc_caches(
+            cfg, batch, capacity, jnp.float32, page_size=page_size,
+            n_shards=n_shards))
+    dense = jax.eval_shape(
+        lambda: cache_lib.alloc_doc_caches(cfg, batch, capacity))
+    pool_spec = sharding.paged_pool_spec(("model",))
+    table_spec = sharding.page_table_spec(("model",))
+    dense_spec = sharding.dense_cache_spec(("model",))
+    cases += _attn_leaf_cases(paged, pool_spec, table_spec, dense_spec)
+    cases += _attn_leaf_cases(dense, pool_spec, table_spec, dense_spec)
+
+    # pipelined-prefill stream state: the running top-k constructor is
+    # real; the passing receive buffer mirrors MeshChunkedPrefill's
+    # allocation ((nb, n_hosts, B, width, KV, D), host axis at 1)
+    nb, kvh, dh, lp = cfg.num_blocks, cfg.num_kv_heads, cfg.head_dim, 8
+    topk = jax.eval_shape(
+        lambda: comp.running_topk_init(lp, kvh, dh,
+                                       (nb, n_shards, batch)))
+    for leaf in jax.tree.leaves(topk):
+        cases.append(("topk_state_spec",
+                      sharding.topk_state_spec("model", leaf.ndim),
+                      leaf.shape))
+    pass_shape = (nb, n_shards, batch, n_shards * lp, kvh, dh)
+    cases.append(("pass_recv_spec", sharding.pass_recv_spec("model"),
+                  pass_shape))
+
+    # parameter rule: every leaf of a real init tree through param_spec
+    # (param_spec only reads mesh.shape, so a stand-in mesh suffices)
+    from repro.models import transformer
+    fake_mesh = types.SimpleNamespace(shape=dict(mesh_shape))
+    params = jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        spec = sharding.param_spec(path, leaf, fake_mesh)
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        cases.append((f"param_spec[{name}]", spec, leaf.shape))
+    return cases
+
+
+def input_spec_cases(mesh_shape: Dict[str, int],
+                     arch: str = "granite-3-2b"):
+    """(builder, spec, shape) pairs from ``sharding.input_specs`` — only
+    when the host has enough devices to build the reference mesh (the
+    builder returns NamedShardings, which need a real Mesh).  Returns
+    None when skipped."""
+    import numpy as np
+
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.configs import ShapeConfig, get_config
+    from repro.parallel import sharding
+
+    ndev = 1
+    for s in mesh_shape.values():
+        ndev *= s
+    if len(jax.devices()) < ndev:
+        return None
+    axes = tuple(mesh_shape)
+    devs = np.asarray(jax.devices()[:ndev]).reshape(
+        tuple(mesh_shape[a] for a in axes))
+    mesh = Mesh(devs, axes)
+    cfg = get_config(arch).reduced()
+    cases = []
+    for kind in ("prefill", "decode"):
+        shape = ShapeConfig(f"lint_{kind}", 256, 8, kind)
+        args, shardings = sharding.input_specs(cfg, shape, mesh)
+        flat_a = jax.tree_util.tree_flatten_with_path(args)[0]
+        flat_s = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec"))
+        for (path, leaf), ns in zip(flat_a, flat_s):
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            cases.append((f"input_specs[{kind}:{name}]", ns.spec,
+                          leaf.shape))
+    return cases
+
+
+def _check_rep_findings(root: pathlib.Path,
+                        rel_paths: Sequence[str]) -> List[Finding]:
+    """SHD010: every ``shard_map(..., check_rep=False)`` call site."""
+    findings = []
+    for rel in rel_paths:
+        try:
+            tree = ast.parse((root / rel).read_text(encoding="utf-8"))
+        except (OSError, SyntaxError):
+            continue
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = (node.func.attr if isinstance(node.func, ast.Attribute)
+                     else node.func.id if isinstance(node.func, ast.Name)
+                     else "")
+            if fname != "shard_map":
+                continue
+            for kw in node.keywords:
+                if (kw.arg == "check_rep"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is False):
+                    findings.append(Finding(
+                        "SHD010", rel, kw.value.lineno,
+                        "shard_map(check_rep=False): output replication "
+                        "is unchecked — a non-replicated output fed to "
+                        "a later psum double-counts silently",
+                        hint="prove replication (outputs merged via "
+                             "psum, or out_specs sharded to match) and "
+                             "suppress with that rationale, or drop "
+                             "check_rep=False"))
+    return findings
+
+
+def run(root, mesh_shape: Optional[Dict[str, int]] = None) -> List[Finding]:
+    from repro.analysis.static.findings import source_files
+
+    root = pathlib.Path(root)
+    mesh_shape = dict(mesh_shape or DEFAULT_MESH)
+    lines = _builder_lines(root)
+
+    findings: List[Finding] = []
+    cases = spec_cases(mesh_shape)
+    extra = input_spec_cases(mesh_shape)
+    if extra is not None:
+        cases += extra
+    for builder, spec, shape in cases:
+        anchor = lines.get(builder.split("[")[0], 0)
+        findings += check_spec(builder, spec, shape, mesh_shape,
+                               _SHARDING_REL, anchor)
+    findings += _check_rep_findings(root, source_files(root))
+    return findings

@@ -1,0 +1,274 @@
+"""AST tracing-hazard linter (rules TRC001-TRC006) over ``src/``.
+
+Repo-specific jit/tracing hygiene.  These are the hazard classes that
+have actually bitten (or nearly bitten) this codebase: host-side casts
+that silently synchronise, Python control flow on traced values,
+import-time backend initialisation, unhashable static args, donated
+buffers whose call sites forget to rebind, and ``pl.pallas_call`` sites
+that drop the ``interpret=`` plumbing tier-1 depends on.
+
+Rules:
+  TRC001  ``bool()``/``int()``/``float()`` over a jnp/jax expression —
+          a device sync (and a TracerBoolConversionError inside jit)
+  TRC002  ``if``/``while`` testing a jnp/jax expression — same hazard
+          via implicit bool()
+  TRC003  jnp/jax array computation at module import time — initialises
+          the backend before flags/env are set and bakes constants
+  TRC004  ``jax.jit(..., static_argnames=...)`` whose named param
+          defaults to an unhashable literal (list/dict/set)
+  TRC005  call to a wrapper jitted with ``donate_argnums`` whose
+          donated argument is not rebound by the call's assignment —
+          the caller keeps a reference to a donated (invalidated) buffer
+  TRC006  ``pl.pallas_call(...)`` without an ``interpret=`` kwarg —
+          breaks the CPU tier-1 path for every new kernel
+
+The linter is deliberately shallow (no data-flow): it flags syntactic
+patterns and relies on in-source suppressions (with rationale) for the
+rare intentional site, e.g. an eager host loop's stop check.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.static.findings import Finding
+
+RULES = ("TRC001", "TRC002", "TRC003", "TRC004", "TRC005", "TRC006")
+
+_CASTS = {"bool", "int", "float"}
+# attribute roots that mean "this expression builds/runs traced array
+# computation"
+_TRACED_ROOTS = {"jnp"}
+_TRACED_JAX_SUBMODULES = {"numpy", "lax", "random", "nn"}
+# jnp.* functions that are host-side metadata predicates, not traced
+# computation: calling them never builds a tracer, so bool()/if over
+# them is fine
+_STATIC_JNP_FNS = {"issubdtype", "iinfo", "finfo", "result_type",
+                   "promote_types", "can_cast", "isdtype"}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_traced_call(node: ast.AST) -> bool:
+    """A Call whose func is rooted at jnp.* / jax.{numpy,lax,random,nn}.*"""
+    if not isinstance(node, ast.Call):
+        return False
+    dotted = _dotted(node.func)
+    if not dotted:
+        return False
+    parts = dotted.split(".")
+    if parts[-1] in _STATIC_JNP_FNS:
+        return False
+    if parts[0] in _TRACED_ROOTS:
+        return True
+    return (len(parts) >= 2 and parts[0] == "jax"
+            and parts[1] in _TRACED_JAX_SUBMODULES)
+
+
+def _contains_traced_call(node: ast.AST) -> bool:
+    return any(_is_traced_call(n) for n in ast.walk(node))
+
+
+def _jit_donations(tree: ast.Module) -> Dict[str, Tuple[int, ...]]:
+    """wrapper name -> donated positional indices, from assignments of
+    the form ``<self.>name = jax.jit(fn, donate_argnums=(...))``."""
+    out: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+            continue
+        target = node.targets[0]
+        tname = (target.attr if isinstance(target, ast.Attribute)
+                 else target.id if isinstance(target, ast.Name) else None)
+        call = node.value
+        if tname is None or not isinstance(call, ast.Call):
+            continue
+        if _dotted(call.func) != "jax.jit":
+            continue
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                try:
+                    idxs = ast.literal_eval(kw.value)
+                except ValueError:
+                    continue
+                if isinstance(idxs, int):
+                    idxs = (idxs,)
+                out[tname] = tuple(idxs)
+    return out
+
+
+def _donation_findings(tree: ast.Module, rel: str) -> List[Finding]:
+    """TRC005: donated args must be rebound by the calling statement."""
+    donations = _jit_donations(tree)
+    if not donations:
+        return []
+    findings = []
+    for node in ast.walk(tree):
+        targets: List[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            call = node.value
+            for t in node.targets:
+                targets += list(t.elts) if isinstance(t, ast.Tuple) else [t]
+        elif isinstance(node, ast.Expr):
+            call = node.value
+        else:
+            continue
+        if not isinstance(call, ast.Call):
+            continue
+        fname = (call.func.attr if isinstance(call.func, ast.Attribute)
+                 else call.func.id if isinstance(call.func, ast.Name)
+                 else None)
+        if fname not in donations:
+            continue
+        # compare by unparse, not ast.dump: the arg carries Load ctx and
+        # the assignment target Store ctx, which dump() would never match
+        target_srcs = {ast.unparse(t) for t in targets}
+        for idx in donations[fname]:
+            if idx >= len(call.args):
+                continue                      # passed by kw / partial call
+            arg = call.args[idx]
+            if not isinstance(arg, (ast.Attribute, ast.Name)):
+                continue                      # temporary — donation safe
+            if ast.unparse(arg) not in target_srcs:
+                findings.append(Finding(
+                    "TRC005", rel, call.lineno,
+                    f"call to {fname!r} donates argument "
+                    f"{ast.unparse(arg)} (donate_argnums index {idx}) "
+                    f"but the call does not rebind it",
+                    hint="assign the result back over the donated "
+                         "reference (x, ... = f(..., x, ...)) so no "
+                         "live name points at an invalidated buffer"))
+    return findings
+
+
+def _static_arg_findings(tree: ast.Module, rel: str) -> List[Finding]:
+    """TRC004: static_argnames over params with unhashable defaults."""
+    local_defs = {n.name: n for n in ast.walk(tree)
+                  if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    findings = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _dotted(node.func) == "jax.jit"):
+            continue
+        names: List[str] = []
+        for kw in node.keywords:
+            if kw.arg == "static_argnames":
+                try:
+                    val = ast.literal_eval(kw.value)
+                except ValueError:
+                    continue
+                names = [val] if isinstance(val, str) else list(val)
+        if not names or not node.args:
+            continue
+        fn_name = (node.args[0].attr
+                   if isinstance(node.args[0], ast.Attribute)
+                   else node.args[0].id
+                   if isinstance(node.args[0], ast.Name) else None)
+        fn = local_defs.get(fn_name.lstrip("_") if fn_name else "",
+                            local_defs.get(fn_name or ""))
+        if fn is None:
+            continue
+        args = fn.args
+        params = args.posonlyargs + args.args + args.kwonlyargs
+        defaults = ([None] * (len(args.posonlyargs + args.args)
+                              - len(args.defaults))
+                    + list(args.defaults) + list(args.kw_defaults))
+        for param, default in zip(params, defaults):
+            if param.arg in names and isinstance(
+                    default, (ast.List, ast.Dict, ast.Set)):
+                findings.append(Finding(
+                    "TRC004", rel, node.lineno,
+                    f"static arg {param.arg!r} of {fn.name!r} defaults "
+                    f"to an unhashable "
+                    f"{type(default).__name__.lower()} literal",
+                    hint="static args key the jit cache — use a tuple "
+                         "or None"))
+    return findings
+
+
+def lint_source(text: str, rel: str) -> List[Finding]:
+    """All TRC findings for one module's source text."""
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Finding("TRC001", rel, e.lineno or 0,
+                        f"unparseable module: {e.msg}")]
+    findings: List[Finding] = []
+
+    # module-scope statements (incl. class bodies — also import time)
+    toplevel = list(tree.body)
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef):
+            toplevel += node.body
+    for node in toplevel:
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.Expr)):
+            value = node.value
+            if value is not None and _contains_traced_call(value):
+                findings.append(Finding(
+                    "TRC003", rel, node.lineno,
+                    "jnp/jax computation at module import time",
+                    hint="import must not initialise the backend or "
+                         "bake device constants — move it into a "
+                         "function (lazy; cache it if hot)"))
+
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id in _CASTS and node.args
+                and _contains_traced_call(node.args[0])):
+            findings.append(Finding(
+                "TRC001", rel, node.lineno,
+                f"{node.func.id}() over a traced jnp/jax expression — "
+                f"device sync on host paths, TracerBoolConversionError "
+                f"inside jit",
+                hint="keep the value on device (jnp.where / lax.cond / "
+                     "lax.scan carries), or suppress if this is an "
+                     "intentional eager host sync"))
+        if isinstance(node, (ast.If, ast.While)) and _contains_traced_call(
+                node.test):
+            findings.append(Finding(
+                "TRC002", rel, node.lineno,
+                f"Python {'if' if isinstance(node, ast.If) else 'while'} "
+                f"on a traced jnp/jax expression",
+                hint="use jnp.where / jax.lax.cond (or hoist the value "
+                     "to static config)"))
+        if isinstance(node, ast.Call):
+            fname = (node.func.attr
+                     if isinstance(node.func, ast.Attribute)
+                     else node.func.id
+                     if isinstance(node.func, ast.Name) else "")
+            if fname == "pallas_call" and not any(
+                    kw.arg == "interpret" for kw in node.keywords):
+                findings.append(Finding(
+                    "TRC006", rel, node.lineno,
+                    "pl.pallas_call without interpret= plumbing",
+                    hint="thread an interpret flag (default _on_cpu()) "
+                         "like kernels/ops.py so tier-1 runs the "
+                         "kernel on CPU"))
+
+    findings += _static_arg_findings(tree, rel)
+    findings += _donation_findings(tree, rel)
+    findings.sort(key=lambda f: (f.line, f.rule))
+    return findings
+
+
+def run(root, rel_paths: Optional[Sequence[str]] = None) -> List[Finding]:
+    from repro.analysis.static.findings import source_files
+
+    root = pathlib.Path(root)
+    findings: List[Finding] = []
+    for rel in (rel_paths if rel_paths is not None
+                else source_files(root)):
+        p = root / rel
+        if p.is_file():
+            findings += lint_source(p.read_text(encoding="utf-8"), rel)
+    return findings

@@ -458,7 +458,7 @@ def paged_attention_distributed(q, pool_k, pool_v, page_table, *,
         body, mesh=mesh,
         in_specs=(qspec, poolspec, poolspec, ptspec,
                   P(bspec), P(bspec), P(bspec)),
-        out_specs=(qspec, lspec), check_rep=False)
+        out_specs=(qspec, lspec), check_rep=False)  # repro-lint: disable=SHD010 -- pallas_call has no replication rule on old jax; outputs are per-shard by construction (lse-merged inside body), pinned by the mesh==single-host oracle
     return fn(q, pool_k, pool_v, page_table, vl_arg, rb_arg, st_arg)
 
 
@@ -481,8 +481,13 @@ def paged_scatter(pool, new, page_table, start):
     phys = jnp.take_along_axis(page_table, logical, axis=1)      # (B, t)
     flat = phys * ps + rows % ps
     pool_flat = pool.reshape((-1,) + pool.shape[2:])
+    # mode="drop": phys comes from the table unclamped — a done slot's
+    # sentinel (or stale) page id must become a no-op write, never a
+    # clamped write into a live page.  Spelling the mode out makes the
+    # out-of-range contract explicit instead of leaning on the scatter
+    # default.
     pool_flat = pool_flat.at[flat.reshape(-1)].set(
-        new.reshape((b * t,) + new.shape[2:]))
+        new.reshape((b * t,) + new.shape[2:]), mode="drop")
     return pool_flat.reshape(pool.shape)
 
 
@@ -509,8 +514,9 @@ def paged_scatter_sharded(pool, new, page_table, start):
                                axis=1)                        # (B, t)
     flat = phys * ps + rows % ps
     pool_flat = pool.reshape((-1,) + pool.shape[2:])
+    # mode="drop": same out-of-range contract as paged_scatter above.
     pool_flat = pool_flat.at[flat.reshape(-1)].set(
-        new.reshape((b * t,) + new.shape[2:]))
+        new.reshape((b * t,) + new.shape[2:]), mode="drop")
     return pool_flat.reshape(pool.shape)
 
 

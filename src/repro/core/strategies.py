@@ -190,6 +190,6 @@ def prefill_attention(cfg, strategy: str, q, k, v, *,
     fn = collectives.shard_map(
         inner, mesh=mesh,
         in_specs=(qspec, qspec, qspec, rp_specs, P()),
-        out_specs=(qspec, cache_spec, cache_spec), check_rep=False)
+        out_specs=(qspec, cache_spec, cache_spec), check_rep=False)  # repro-lint: disable=SHD010 -- old-jax checker lacks a top_k replication rule; parity vs the host-loop reference is tested directly (test_strategies)
     out, k_cache, v_cache = fn(q, k, v, rp, rng)
     return out, k_cache, v_cache

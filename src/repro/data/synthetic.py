@@ -18,7 +18,7 @@ exact-match retrieval accuracy — the relative orderings of paper Tables
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Tuple
+from typing import Iterator, Optional, Tuple
 
 import numpy as np
 
@@ -41,7 +41,7 @@ def _filler(rng, n, vocab):
 
 def passkey_sample(rng, n: int, lq: int, vocab: int,
                    key_len: int = 4, val_len: int = 4,
-                   depth: float = None) -> RetrievalSample:
+                   depth: Optional[float] = None) -> RetrievalSample:
     """One needle: [filler ... KEY_MARK key val KEY_MARK ... filler]."""
     if depth is None:
         depth = float(rng.uniform(0.05, 0.95))

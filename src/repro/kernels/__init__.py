@@ -1,3 +1,89 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Custom-kernel layer (the paper's customised FLASHATTN kernel and the
+# paged-attention twin the serving stack grew) plus the kernel
+# self-description registry the static bounds checker drives.
+"""Kernel registry: each Pallas kernel module registers a *grid
+analysis* — its grid, every operand's BlockSpec block shape, and the
+very index-map callables its ``pallas_call`` is built from, plus the
+guaranteed value range of every scalar-prefetch operand — so
+``repro.analysis.static.bounds`` can prove, over the full concrete grid
+of a config matrix, that every DMA window stays inside its operand
+without running the kernel.
+
+The contract that keeps this honest: kernel modules build their
+``pl.BlockSpec``s from a module-level ``_block_layout`` helper and
+register analyses built from the *same* helper, so the checker evaluates
+exactly the index maps the kernel runs (no parallel re-implementation to
+drift).  Scalar operands appear in prefetch order — the order the index
+maps receive their refs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalarSpec:
+    """One scalar-prefetch operand and its guaranteed value range.
+
+    ``guard`` names the wrapper-side mechanism that enforces
+    ``[lo, hi]`` (e.g. a ``jnp.clip`` before the call).  A scalar whose
+    values are *read inside an index map* must carry a non-empty guard —
+    the bounds checker flags unguarded index-map reads (rule PB002) and
+    additionally evaluates every map with the whole array pinned at
+    ``lo`` and at ``hi`` (rule PB001 catches any window the guarded
+    range can still push out of bounds).
+    """
+
+    name: str
+    shape: Tuple[int, ...]
+    lo: int
+    hi: int
+    guard: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockOperand:
+    """One blocked operand: full shape, block shape, and the index map
+    (``(*grid_ids, *scalar_refs) -> block indices``) its BlockSpec
+    carries."""
+
+    name: str
+    shape: Tuple[int, ...]
+    block: Tuple[int, ...]
+    index_map: Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelGridAnalysis:
+    """Everything the bounds checker needs for one kernel × one config."""
+
+    kernel: str
+    case: str                        # human-readable config-matrix label
+    source: str                      # repo-relative kernel module path
+    grid: Tuple[int, ...]
+    scalars: Tuple[ScalarSpec, ...]  # in scalar-prefetch order
+    operands: Tuple[BlockOperand, ...]
+
+
+_KERNEL_SPECS: Dict[str, Callable] = {}
+
+
+def register_kernel_spec(name: str):
+    """Decorator: register a zero-arg callable returning the kernel's
+    ``KernelGridAnalysis`` cases (one per config-matrix entry)."""
+    def deco(fn):
+        _KERNEL_SPECS[name] = fn
+        return fn
+    return deco
+
+
+def kernel_analyses() -> Dict[str, Tuple[KernelGridAnalysis, ...]]:
+    """name -> grid analyses over that kernel's config matrix.
+
+    Importing the kernel modules populates the registry; a new kernel
+    only needs the ``@register_kernel_spec`` decorator on its case
+    builder to come under bounds checking.
+    """
+    from repro.kernels import apb_attention, paged_attention  # noqa: F401
+    return {name: tuple(fn()) for name, fn in sorted(_KERNEL_SPECS.items())}

@@ -35,6 +35,7 @@ reused for all non-APB attention paths in the framework.
 from __future__ import annotations
 
 import functools
+import itertools
 from typing import Optional
 
 import jax
@@ -42,8 +43,63 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import (BlockOperand, KernelGridAnalysis, ScalarSpec,
+                           register_kernel_spec)
+
 NEG_INF = -1e30
 LANES = 128
+
+
+def _block_layout(block_q: int, block_kv: int, d: int, q_per_kv: int):
+    """Block shapes + index maps of every blocked operand — the single
+    source for both ``pallas_call`` below and the registered grid
+    analysis.  The one scalar-prefetch operand ([anchor_valid,
+    pass_valid]) is mask-only: no index map reads it."""
+
+    def q_index(bi, hi, qi, ki, *refs):
+        del ki, refs
+        return (bi, qi, hi, 0)
+
+    def kv_index(bi, hi, qi, ki, *refs):
+        del qi, refs
+        return (bi, ki, hi // q_per_kv, 0)
+
+    return {"q": ((1, block_q, 1, d), q_index),
+            "kv": ((1, block_kv, 1, d), kv_index)}
+
+
+@register_kernel_spec("apb_attention")
+def _grid_analyses():
+    """Bounds-checker config matrix: anchor/passing/local extents (in
+    block units, including the degenerate plain-causal la=pcap=0 case)
+    × GQA head combos."""
+    cases = []
+    bq = bkv = 8
+    d = 16
+    for (la, pcap, lb), (h, kvh) in itertools.product(
+            ((0, 0, 16), (8, 16, 8), (8, 0, 16), (16, 8, 8)),
+            ((4, 4), (4, 2), (8, 1))):
+        for b in (1, 2):
+            lq = la + lb
+            lkv = la + pcap + lb
+            lay = _block_layout(bq, bkv, d, h // kvh)
+            q_bs, q_im = lay["q"]
+            kv_bs, kv_im = lay["kv"]
+            cases.append(KernelGridAnalysis(
+                kernel="apb_attention",
+                case=f"la={la} pcap={pcap} lb={lb} h={h}/{kvh} b={b}",
+                source="src/repro/kernels/apb_attention.py",
+                grid=(b, h, lq // bq, lkv // bkv),
+                scalars=(
+                    ScalarSpec("valids", (2,), 0, 2 ** 31 - 1),
+                ),
+                operands=(
+                    BlockOperand("q", (b, lq, h, d), q_bs, q_im),
+                    BlockOperand("k", (b, lkv, kvh, d), kv_bs, kv_im),
+                    BlockOperand("v", (b, lkv, kvh, d), kv_bs, kv_im),
+                    BlockOperand("out", (b, lq, h, d), q_bs, q_im),
+                )))
+    return cases
 
 
 def _kernel(scalar_ref,                    # (2,) int32: [anchor_valid, pass_valid]
@@ -176,18 +232,7 @@ def apb_flash_attention(q, k, v, *, la: int, pcap: int, anchor_valid,
                          jnp.asarray(pass_valid, jnp.int32)])
 
     grid = (b, h, nq, nkv)
-
-    def q_index(bi, hi, qi, ki, sref):
-        del ki, sref
-        return (bi, qi, hi, 0)
-
-    def kv_index(bi, hi, qi, ki, sref):
-        del qi, sref
-        return (bi, ki, hi // q_per_kv, 0)
-
-    def o_index(bi, hi, qi, ki, sref):
-        del ki, sref
-        return (bi, qi, hi, 0)
+    lay = _block_layout(block_q, block_kv, d, q_per_kv)
 
     kernel = functools.partial(
         _kernel, la=la, pcap=pcap, bq=block_q, bkv=block_kv, nkv=nkv,
@@ -197,11 +242,11 @@ def apb_flash_attention(q, k, v, *, la: int, pcap: int, anchor_valid,
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, block_q, 1, d), q_index),
-            pl.BlockSpec((1, block_kv, 1, d), kv_index),
-            pl.BlockSpec((1, block_kv, 1, d), kv_index),
+            pl.BlockSpec(*lay["q"]),
+            pl.BlockSpec(*lay["kv"]),
+            pl.BlockSpec(*lay["kv"]),
         ],
-        out_specs=pl.BlockSpec((1, block_q, 1, d), o_index),
+        out_specs=pl.BlockSpec(*lay["q"]),
         scratch_shapes=[
             pltpu.VMEM((block_q, d), jnp.float32),
             pltpu.VMEM((block_q, LANES), jnp.float32),

@@ -46,6 +46,7 @@ to the usual (8, 128) f32 tiles.
 from __future__ import annotations
 
 import functools
+import itertools
 from typing import Optional
 
 import jax
@@ -53,8 +54,74 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import (BlockOperand, KernelGridAnalysis, ScalarSpec,
+                           register_kernel_spec)
+
 NEG_INF = -1e30
 LANES = 128
+
+
+def _block_layout(t: int, d: int, ps: int, q_per_kv: int):
+    """Block shapes + index maps of every blocked operand — the single
+    source for both ``pallas_call`` below and the registered grid
+    analysis, so the static bounds checker proves exactly the maps the
+    kernel runs.  Index maps see scalar refs in prefetch order
+    (pt, vl, rb, st, meta); only the page table is read."""
+
+    def q_index(bi, hi, ji, *refs):
+        del ji, refs
+        return (bi, 0, hi, 0)
+
+    def kv_index(bi, hi, ji, pt_ref, *refs):
+        del refs
+        return (pt_ref[bi, ji], 0, hi // q_per_kv, 0)
+
+    def lse_index(bi, hi, ji, *refs):
+        del ji, refs
+        return (bi, hi, 0)
+
+    return {"q": ((1, t, 1, d), q_index),
+            "kv": ((1, ps, 1, d), kv_index),
+            "lse": ((1, 1, t), lse_index)}
+
+
+@register_kernel_spec("paged_attention")
+def _grid_analyses():
+    """Bounds-checker config matrix: page size × pool size × GQA heads,
+    with table widths both narrower and wider than the pool (stale
+    entries past a short document rely on the wrapper's clip)."""
+    cases = []
+    for ps, npool, (h, kvh) in itertools.product(
+            (8, 16), (6, 16), ((4, 4), (4, 2), (8, 1))):
+        for b, t, p in ((1, 1, 4), (2, 4, 18)):
+            d = 16
+            lay = _block_layout(t, d, ps, h // kvh)
+            q_bs, q_im = lay["q"]
+            kv_bs, kv_im = lay["kv"]
+            lse_bs, lse_im = lay["lse"]
+            imax = 2 ** 31 - 1
+            cases.append(KernelGridAnalysis(
+                kernel="paged_attention",
+                case=f"ps={ps} npool={npool} h={h}/{kvh} b={b} t={t} p={p}",
+                source="src/repro/kernels/paged_attention.py",
+                grid=(b, h, p),
+                scalars=(
+                    ScalarSpec("page_table", (b, p), 0, npool - 1,
+                               guard="jnp.clip(page_table, 0, npool-1) "
+                                     "in paged_flash_attention"),
+                    ScalarSpec("valid_len", (b,), 0, imax),
+                    ScalarSpec("row_base", (b,), 0, imax),
+                    ScalarSpec("start", (b,), 0, imax),
+                    ScalarSpec("meta", (2,), 0, imax),
+                ),
+                operands=(
+                    BlockOperand("q", (b, t, h, d), q_bs, q_im),
+                    BlockOperand("pool_k", (npool, ps, kvh, d), kv_bs, kv_im),
+                    BlockOperand("pool_v", (npool, ps, kvh, d), kv_bs, kv_im),
+                    BlockOperand("out", (b, t, h, d), q_bs, q_im),
+                    BlockOperand("lse", (b, h, t), lse_bs, lse_im),
+                )))
+    return cases
 
 
 def _kernel(pt_ref, vl_ref, rb_ref, st_ref, meta_ref,   # scalar prefetch
@@ -167,18 +234,7 @@ def paged_flash_attention(q, pool_k, pool_v, page_table, *,
                       jnp.asarray(page_offset, jnp.int32)])
 
     grid = (b, h, p)
-
-    def q_index(bi, hi, ji, *refs):
-        del ji, refs
-        return (bi, 0, hi, 0)
-
-    def kv_index(bi, hi, ji, pt_ref, *refs):
-        del refs
-        return (pt_ref[bi, ji], 0, hi // q_per_kv, 0)
-
-    def lse_index(bi, hi, ji, *refs):
-        del ji, refs
-        return (bi, hi, 0)
+    lay = _block_layout(t, d, ps, q_per_kv)
 
     kernel = functools.partial(
         _kernel, t=t, ps=ps, npages=p, window=window, softcap=softcap,
@@ -188,13 +244,13 @@ def paged_flash_attention(q, pool_k, pool_v, page_table, *,
         num_scalar_prefetch=5,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, t, 1, d), q_index),
-            pl.BlockSpec((1, ps, 1, d), kv_index),
-            pl.BlockSpec((1, ps, 1, d), kv_index),
+            pl.BlockSpec(*lay["q"]),
+            pl.BlockSpec(*lay["kv"]),
+            pl.BlockSpec(*lay["kv"]),
         ],
         out_specs=[
-            pl.BlockSpec((1, t, 1, d), q_index),
-            pl.BlockSpec((1, 1, t), lse_index),
+            pl.BlockSpec(*lay["q"]),
+            pl.BlockSpec(*lay["lse"]),
         ],
         scratch_shapes=[
             pltpu.VMEM((t, d), jnp.float32),

@@ -115,7 +115,7 @@ def main() -> None:
                                 num_pages=args.num_pages,
                                 max_new=args.new_tokens)
     except ValueError as e:
-        raise SystemExit(str(e))
+        raise SystemExit(str(e)) from e
     engine = Engine(cfg, params, rctx, config=serve_cfg)
 
     rng = np.random.default_rng(0)

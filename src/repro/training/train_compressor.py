@@ -10,7 +10,7 @@ clip 0.5 — all per the paper.
 """
 from __future__ import annotations
 
-from typing import Any, List, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -123,7 +123,7 @@ def insert_retain(params, cfg, retain_stacks):
 
 
 def train_compressor(params, cfg, data_iter, steps: int, lq: int,
-                     opt_cfg: opt.AdamWConfig = None,
+                     opt_cfg: Optional[opt.AdamWConfig] = None,
                      log_every: int = 20, log_fn=print):
     """Train the retaining heads on (tokens with the query as the final
     ``lq`` tokens).  Returns params with trained heads."""

@@ -7,7 +7,7 @@ the SSD scan for mamba layers, with AdamW + clipping + schedule.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +34,8 @@ def make_train_step(model: Model, opt_cfg: opt.AdamWConfig, rctx: RunCtx
 
 
 def train(model: Model, params, data_iter, steps: int,
-          opt_cfg: opt.AdamWConfig = None, rctx: RunCtx = None,
+          opt_cfg: Optional[opt.AdamWConfig] = None,
+          rctx: Optional[RunCtx] = None,
           jit: bool = True, log_every: int = 10,
           log_fn: Callable = print) -> Tuple[Any, Dict]:
     """Run ``steps`` optimizer steps; returns (params, last_metrics)."""

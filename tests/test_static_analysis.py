@@ -1,0 +1,374 @@
+"""Static-analysis suite (repro.analysis.static + tools/repro_lint).
+
+Two obligations, tested separately:
+
+* each analyzer *catches its seeded-bad fixture* — a deliberately
+  out-of-bounds BlockSpec, a spec/shape mismatch, each tracing hazard,
+  an oracle seam whose evidence was stripped — so the rules cannot
+  silently stop firing; and
+* the *real tree runs clean* — every remaining finding is covered by an
+  in-source suppression with a rationale — which is the invariant the
+  CI static-analysis job enforces.
+
+Suppression mechanics (comment parsing, rationale requirement SUP002,
+staleness SUP001 and its partial-run restriction) are unit-tested here
+too, since the whole gate leans on them.
+"""
+import shutil
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.static import bounds, oracle, shardspec, tracelint
+from repro.analysis.static import findings as fnd
+from repro.kernels import (BlockOperand, KernelGridAnalysis, ScalarSpec,
+                           kernel_analyses)
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# findings + suppressions
+# ---------------------------------------------------------------------------
+
+def test_parse_suppressions_comment_only():
+    text = textwrap.dedent('''
+        """Docs may quote the syntax:
+
+            # repro-lint: disable=TRC001 -- quoted example, not live
+        """
+        x = 1  # repro-lint: disable=SHD010 -- real comment
+        # repro-lint: disable=PB001,PB002 -- standalone, two rules
+        y = 2
+    ''')
+    sups = fnd.parse_suppressions(text, "m.py")
+    # the docstring example must NOT register — only real COMMENT tokens
+    assert [(s.rules, s.rationale) for s in sups] == [
+        (("SHD010",), "real comment"),
+        (("PB001", "PB002"), "standalone, two rules"),
+    ]
+
+
+def test_apply_suppressions_line_and_line_above():
+    f_same = fnd.Finding("TRC001", "m.py", 5, "x")
+    f_above = fnd.Finding("TRC002", "m.py", 9, "y")
+    f_miss = fnd.Finding("TRC001", "m.py", 20, "z")
+    sups = [fnd.Suppression("m.py", 5, ("TRC001",), "why"),
+            fnd.Suppression("m.py", 8, ("TRC002",), "why")]
+    unsup, sup, used = fnd.apply_suppressions(
+        [f_same, f_above, f_miss], sups)
+    assert sup == [f_same, f_above]
+    assert unsup == [f_miss]
+    assert used == {("m.py", 5), ("m.py", 8)}
+
+
+def test_suppression_without_rationale_is_sup002():
+    f = fnd.Finding("TRC001", "m.py", 3, "x")
+    sups = [fnd.Suppression("m.py", 3, ("TRC001",), "")]
+    unsup, sup, used = fnd.apply_suppressions([f], sups)
+    assert sup == [] and used == set()
+    assert _rules(unsup) == ["SUP002", "TRC001"]
+
+
+def test_stale_suppression_flagged_only_for_ran_analyzers():
+    sups = [fnd.Suppression("m.py", 3, ("TRC001",), "why"),
+            fnd.Suppression("m.py", 7, ("SHD010",), "why")]
+    # nothing matched either; only the TRC analyzer "ran"
+    stale = fnd.stale_suppressions(sups, set(), {"TRC"})
+    assert _rules(stale) == ["SUP001"]
+    assert stale[0].line == 3
+    # both analyzers ran -> both stale
+    stale = fnd.stale_suppressions(sups, set(), {"TRC", "SHD"})
+    assert _rules(stale) == ["SUP001", "SUP001"]
+    # a used site is never stale
+    stale = fnd.stale_suppressions(sups, {("m.py", 3)}, {"TRC", "SHD"})
+    assert [s.line for s in stale] == [7]
+
+
+# ---------------------------------------------------------------------------
+# bounds checker (PB)
+# ---------------------------------------------------------------------------
+
+def _toy(index_map, shape=(4, 8), block=(2, 4), grid=(2, 2), scalars=()):
+    return KernelGridAnalysis(
+        kernel="toy", case="fixture", source="x.py", grid=grid,
+        scalars=scalars,
+        operands=(BlockOperand("q", shape, block, index_map),))
+
+
+def test_bounds_in_bounds_map_is_clean():
+    assert bounds.check_analysis(_toy(lambda i, j: (i, j))) == []
+
+
+def test_bounds_rejects_oob_blockspec():
+    out = bounds.check_analysis(_toy(lambda i, j: (i + 1, j)))
+    assert _rules(out) == ["PB001"]
+    assert "outside" in out[0].message
+
+
+def test_bounds_scalar_at_hi_pushes_window_out():
+    # guarded scalar, but the declared hi (3) * block exceeds the dim:
+    # the lo/hi double fill must catch it even though lo (0) is fine
+    pt = ScalarSpec("pt", (4,), lo=0, hi=3, guard="clip")
+    out = bounds.check_analysis(
+        _toy(lambda i, j, pt: (pt[i], j), scalars=(pt,)))
+    assert "PB001" in _rules(out)
+
+
+def test_bounds_unguarded_scalar_read_is_pb002():
+    pt = ScalarSpec("pt", (4,), lo=0, hi=1, guard="")
+    out = bounds.check_analysis(
+        _toy(lambda i, j, pt: (pt[i], j), scalars=(pt,)))
+    assert _rules(out) == ["PB002"]
+    # same map with a declared guard is clean
+    pt_g = ScalarSpec("pt", (4,), lo=0, hi=1, guard="jnp.clip in wrapper")
+    assert bounds.check_analysis(
+        _toy(lambda i, j, pt: (pt[i], j), scalars=(pt_g,))) == []
+
+
+def test_bounds_rank_mismatch_is_pb003():
+    out = bounds.check_analysis(_toy(lambda i, j: (i,), block=(2,)))
+    assert _rules(out) == ["PB003"]
+
+
+def test_bounds_huge_grid_is_rejected_not_enumerated():
+    out = bounds.check_analysis(_toy(lambda i, j: (i, j),
+                                     grid=(500, 500)))
+    assert _rules(out) == ["PB003"]
+    assert str(bounds.MAX_GRID_POINTS) in out[0].message
+
+
+def test_registry_populated_and_real_kernels_prove_clean():
+    analyses = kernel_analyses()
+    assert set(analyses) == {"apb_attention", "paged_attention"}
+    for name, cases in analyses.items():
+        assert len(cases) >= 8, name          # a real config matrix
+    assert bounds.run(ROOT) == []
+
+
+# ---------------------------------------------------------------------------
+# sharding-spec verifier (SHD)
+# ---------------------------------------------------------------------------
+
+MESH = {"data": 2, "model": 4}
+
+
+def test_spec_rank_exceeds_leaf_rank():
+    out = shardspec.check_spec("b", P("data", None, "model"), (8, 4),
+                               MESH, "s.py", 1)
+    assert _rules(out) == ["SHD001"]
+
+
+def test_spec_unknown_mesh_axis():
+    out = shardspec.check_spec("b", P("pod2"), (8,), MESH, "s.py", 1)
+    assert _rules(out) == ["SHD002"]
+
+
+def test_spec_indivisible_dim():
+    out = shardspec.check_spec("b", P("model"), (6,), MESH, "s.py", 1)
+    assert _rules(out) == ["SHD003"]
+
+
+def test_spec_tuple_axes_divisible_is_clean():
+    assert shardspec.check_spec("b", P(("data", "model"), None),
+                                (8, 3), MESH, "s.py", 1) == []
+
+
+def test_check_rep_false_fixture_flagged(tmp_path):
+    (tmp_path / "m.py").write_text(textwrap.dedent("""
+        from repro.parallel import collectives
+        fn = collectives.shard_map(f, mesh=m, in_specs=a,
+                                   out_specs=b, check_rep=False)
+    """))
+    out = shardspec._check_rep_findings(tmp_path, ["m.py"])
+    assert _rules(out) == ["SHD010"]
+
+
+def test_real_builders_match_real_constructors():
+    """Every PartitionSpec builder vs eval_shape of the constructor it
+    places — the drift this analyzer exists to catch."""
+    cases = shardspec.spec_cases(MESH)
+    assert len(cases) > 20                    # caches + topk + params
+    for builder, spec, shape in cases:
+        assert shardspec.check_spec(builder, spec, shape, MESH,
+                                    "s.py", 0) == []
+
+
+def test_real_tree_shd_findings_all_suppressed():
+    out = shardspec.run(ROOT)
+    assert _rules(out).count("SHD010") == len(out)   # only audited sites
+    sups = fnd.collect_suppressions(
+        ROOT, fnd.source_files(ROOT, ("src", "tools", "tests")))
+    unsup, sup, _ = fnd.apply_suppressions(out, sups)
+    assert unsup == []
+    assert len(sup) == 3                      # decode/strategies/engine
+
+
+# ---------------------------------------------------------------------------
+# tracing-hazard linter (TRC)
+# ---------------------------------------------------------------------------
+
+def _lint(src):
+    return tracelint.lint_source(textwrap.dedent(src), "m.py")
+
+
+@pytest.mark.parametrize("rule,src", [
+    ("TRC001", "def f(x):\n    return int(jnp.sum(x))\n"),
+    ("TRC002", "def f(x):\n    if jnp.any(x > 0):\n        return 1\n"),
+    ("TRC002", "def f(x):\n    while jnp.max(x) < 9:\n        x = x + 1\n"),
+    ("TRC003", "import jax.numpy as jnp\nSCALE = jnp.ones((4,))\n"),
+    ("TRC003", "class C:\n    TAB = jax.numpy.arange(8)\n"),
+    ("TRC004", "import jax\n"
+               "def _f(x, opts=[1]):\n    return x\n"
+               "f = jax.jit(_f, static_argnames=('opts',))\n"),
+    ("TRC005", "import jax\n"
+               "class E:\n"
+               "    def __init__(self):\n"
+               "        self.step = jax.jit(self._step,\n"
+               "                            donate_argnums=(1,))\n"
+               "    def go(self):\n"
+               "        y = self.step(self.p, self.caches)\n"
+               "        return y\n"),
+    ("TRC006", "def f(k, o):\n"
+               "    return pl.pallas_call(k, out_shape=o)(1)\n"),
+])
+def test_tracelint_catches_seeded_hazard(rule, src):
+    assert rule in _rules(_lint(src))
+
+
+def test_tracelint_clean_counterparts():
+    # rebinding the donated arg satisfies TRC005
+    assert _lint("""
+        import jax
+        class E:
+            def __init__(self):
+                self.step = jax.jit(self._step, donate_argnums=(1,))
+            def go(self):
+                self.p, self.caches = self.step(self.p, self.caches)
+    """) == []
+    # interpret= plumbing satisfies TRC006
+    assert _lint("def f(k, o, flag):\n"
+                 "    return pl.pallas_call(k, out_shape=o,"
+                 " interpret=flag)(1)\n") == []
+    # jnp inside a function is not import-time (no TRC003)
+    assert _lint("import jax.numpy as jnp\n"
+                 "def f():\n    return jnp.ones((4,))\n") == []
+
+
+def test_tracelint_static_dtype_predicates_not_traced():
+    # jnp.issubdtype is host-side metadata, not traced computation —
+    # regression for a transformer.embed false positive
+    assert _lint("""
+        def f(x):
+            if jnp.issubdtype(x.dtype, jnp.integer):
+                return x
+            return x + 1
+    """) == []
+
+
+def test_tracelint_donation_matches_attribute_rebind():
+    # Load-vs-Store ctx on self.X must not defeat the rebind match —
+    # regression for 10 engine.py false positives
+    out = _lint("""
+        import jax
+        class E:
+            def __init__(self):
+                self.step = jax.jit(self._step, donate_argnums=(1, 2))
+            def go(self):
+                self.a, self.b = self.step(self.p, self.a, self.b)
+    """)
+    assert out == []
+
+
+def test_real_tree_trc_findings_all_suppressed():
+    out = tracelint.run(ROOT)
+    sups = fnd.collect_suppressions(
+        ROOT, fnd.source_files(ROOT, ("src", "tools", "tests")))
+    unsup, sup, _ = fnd.apply_suppressions(out, sups)
+    assert unsup == []
+    assert {f.rule for f in sup} == {"TRC001", "TRC002"}   # engine stop check
+
+
+# ---------------------------------------------------------------------------
+# oracle-coverage enforcer (ORA)
+# ---------------------------------------------------------------------------
+
+def test_real_tree_oracle_chain_intact():
+    assert oracle.run(ROOT) == []
+
+
+def _seam_tree(tmp_path):
+    """Copy exactly the files the SEAMS registry references."""
+    paths = {s.dispatch_path for s in oracle.SEAMS}
+    paths |= {e.path for s in oracle.SEAMS for e in s.evidence}
+    for rel in paths:
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(ROOT / rel, dst)
+    return tmp_path
+
+
+def test_removing_an_oracle_test_fails_enforcement(tmp_path):
+    tree = _seam_tree(tmp_path)
+    assert oracle.run(tree) == []             # copy is self-consistent
+    t = tree / "tests/test_paged_cache.py"
+    t.write_text(t.read_text().replace(
+        'IMPLS = ["kernel", "gather"]', 'IMPLS = ["kernel"]'))
+    out = oracle.run(tree)
+    assert _rules(out) == ["ORA001"]
+    assert "paged_impl" in out[0].message
+
+
+def test_refactored_seam_goes_stale_loudly(tmp_path):
+    tree = _seam_tree(tmp_path)
+    d = tree / "src/repro/core/decode.py"
+    d.write_text(d.read_text().replace('if impl == "kernel":',
+                                       'if impl == "fused":'))
+    out = oracle.run(tree)
+    assert "ORA002" in _rules(out)
+    assert any("paged_impl" in f.message for f in out
+               if f.rule == "ORA002")
+
+
+def test_missing_evidence_file_is_ora003(tmp_path):
+    tree = _seam_tree(tmp_path)
+    (tree / "tests/test_serving.py").unlink()
+    out = oracle.run(tree)
+    assert "ORA003" in _rules(out)
+
+
+# ---------------------------------------------------------------------------
+# driver CLI (subprocess; --oracle only, so no jax import in the child)
+# ---------------------------------------------------------------------------
+
+def _run_lint(*argv, cwd=ROOT):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", *argv],
+        cwd=cwd, capture_output=True, text=True, timeout=120)
+
+
+def test_cli_oracle_ok_on_repo():
+    r = _run_lint("--oracle")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "repro_lint: ok" in r.stdout
+
+
+def test_cli_fails_with_findings_on_broken_root(tmp_path):
+    tree = _seam_tree(tmp_path)
+    (tmp_path / "tests/test_serving.py").unlink()
+    r = _run_lint("--oracle", "--root", str(tree))
+    assert r.returncode == 1
+    assert "FAIL" in r.stdout and "ORA003" in r.stdout
+
+
+def test_cli_requires_analyzer_selection():
+    r = _run_lint()
+    assert r.returncode == 2                  # argparse error

@@ -1,0 +1,114 @@
+"""tools/ gate scripts as importable modules (satellite of the static-
+analysis PR): check_links and check_bench_results must be drivable from
+tests without subprocesses, and all gate tools share tools/reporting.py
+conventions — ``FAIL <detail>`` lines, one summary line, exit 0 iff
+clean."""
+import json
+from pathlib import Path
+
+from tools import check_bench_results, check_links, reporting
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# reporting conventions
+# ---------------------------------------------------------------------------
+
+def test_report_ok_exit_code_and_summary(capsys):
+    assert reporting.report("mytool", [], "2 file(s)") == 0
+    out = capsys.readouterr().out
+    assert out == "mytool: ok (0 finding(s); 2 file(s))\n"
+
+
+def test_report_failures_one_line_each(capsys):
+    assert reporting.report("mytool", ["a: broken", "b: broken"],
+                            "scope") == 1
+    lines = capsys.readouterr().out.splitlines()
+    assert lines == ["FAIL a: broken", "FAIL b: broken",
+                     "mytool: FAIL (2 finding(s); scope)"]
+
+
+# ---------------------------------------------------------------------------
+# check_links
+# ---------------------------------------------------------------------------
+
+def _md_tree(tmp_path, readme):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "a.md").write_text("# a\n")
+    (tmp_path / "README.md").write_text(readme)
+    return tmp_path
+
+
+def test_check_links_clean_tree(tmp_path):
+    root = _md_tree(tmp_path, "[a](docs/a.md) [ext](https://x.y) [top](#h)\n")
+    assert check_links.check(check_links.default_files(root), root) == []
+
+
+def test_check_links_reports_broken_relative_link(tmp_path):
+    root = _md_tree(tmp_path, "[gone](docs/missing.md)\n")
+    broken = check_links.check(check_links.default_files(root), root)
+    assert broken == ["README.md: broken link -> docs/missing.md"]
+
+
+def test_check_links_anchor_suffix_checks_path_only(tmp_path):
+    root = _md_tree(tmp_path, "[a](docs/a.md#section)\n")
+    assert check_links.check(check_links.default_files(root), root) == []
+
+
+def test_check_links_ignores_fenced_code_examples(tmp_path):
+    root = _md_tree(tmp_path,
+                    "```\n[ex](not/a/real/file.md)\n```\n[a](docs/a.md)\n")
+    assert check_links.check(check_links.default_files(root), root) == []
+
+
+def test_repo_docs_have_no_broken_links():
+    files = check_links.default_files(ROOT)
+    assert check_links.check(files, ROOT) == []
+
+
+# ---------------------------------------------------------------------------
+# check_bench_results
+# ---------------------------------------------------------------------------
+
+def _artifact(tmp_path, name, doc):
+    p = tmp_path / f"{name}.json"
+    p.write_text(json.dumps(doc))
+    return p
+
+
+GOOD = {"benchmark": "x",
+        "records": [{"name": "r", "us_per_call": 1.0, "derived": {}}]}
+
+
+def test_bench_valid_artifact_passes(tmp_path):
+    _artifact(tmp_path, "bench_x", GOOD)
+    assert check_bench_results.check(str(tmp_path), ["bench_x"]) == []
+
+
+def test_bench_missing_artifact_fails(tmp_path):
+    errs = check_bench_results.check(str(tmp_path), ["bench_x"])
+    assert len(errs) == 1 and "missing" in errs[0]
+
+
+def test_bench_unparseable_and_empty_records_fail(tmp_path):
+    (tmp_path / "bench_a.json").write_text("{not json")
+    _artifact(tmp_path, "bench_b", {"benchmark": "b", "records": []})
+    errs = check_bench_results.check(str(tmp_path), ["bench_a", "bench_b"])
+    assert any("unreadable JSON" in e for e in errs)
+    assert any("no records" in e for e in errs)
+
+
+def test_bench_schema_drift_fails(tmp_path):
+    doc = {"benchmark": "x", "records": [{"name": "r"}]}   # lost columns
+    _artifact(tmp_path, "bench_x", doc)
+    errs = check_bench_results.check(str(tmp_path), ["bench_x"])
+    assert sorted(errs) == [
+        f"{tmp_path}/bench_x.json: records[0] lacks 'derived'",
+        f"{tmp_path}/bench_x.json: records[0] lacks 'us_per_call'",
+    ]
+
+
+def test_bench_default_names_track_tiny_sweep():
+    names = check_bench_results.default_names()
+    assert names and all(n.startswith("bench_") for n in names)

@@ -1,0 +1,4 @@
+# CI gate scripts, importable as a package (tests/test_tools.py) and
+# runnable directly (python tools/<name>.py) or as modules
+# (python -m tools.repro_lint).  All share tools/reporting.py's
+# finding-report / exit-code conventions.

@@ -2,6 +2,7 @@
 """Validate the benchmark JSON artifacts (stdlib only, like check_links).
 
     python tools/check_bench_results.py [--dir results] [NAME ...]
+    python -m tools.check_bench_results
 
 The CI ``bench-smoke`` job runs ``benchmarks.run --tiny`` and then this
 script: every expected ``results/<name>.json`` must exist, parse, and
@@ -13,7 +14,8 @@ check exists to catch.
 
 Default NAMEs derive from ``benchmarks.run.TINY_MODULES`` (each module
 writes ``results/bench_<module>.json``), so adding a benchmark to the
-tiny sweep automatically puts its artifact under validation.
+tiny sweep automatically puts its artifact under validation.  Reports
+through the shared tools/reporting.py conventions.
 """
 from __future__ import annotations
 
@@ -22,15 +24,24 @@ import json
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-from benchmarks.run import TINY_MODULES  # noqa: E402  (stdlib-only module)
-
-DEFAULT_EXPECTED = [f"bench_{name}" for name in TINY_MODULES]
+try:
+    from tools import reporting
+except ImportError:                          # run as a bare script
+    import reporting
 
 REQUIRED_RECORD_KEYS = ("name", "us_per_call", "derived")
 
 
+def default_names() -> list:
+    """bench_<module> for every tiny-sweep module (imported lazily so
+    the validator itself stays importable without the repo on path)."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.run import TINY_MODULES  # stdlib-only module
+    return [f"bench_{name}" for name in TINY_MODULES]
+
+
 def check_one(path: str) -> list:
+    """Failure strings for one artifact."""
     errors = []
     if not os.path.exists(path):
         return [f"{path}: missing"]
@@ -55,25 +66,24 @@ def check_one(path: str) -> list:
     return errors
 
 
-def main() -> int:
+def check(results_dir: str, names) -> list:
+    errors = []
+    for name in names:
+        errors += check_one(os.path.join(results_dir, f"{name}.json"))
+    return errors
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results")
     ap.add_argument("names", nargs="*", default=None,
-                    help=f"artifact basenames (default: "
-                         f"{' '.join(DEFAULT_EXPECTED)})")
-    args = ap.parse_args()
-    names = args.names or DEFAULT_EXPECTED
-
-    errors = []
-    for name in names:
-        errors += check_one(os.path.join(args.dir, f"{name}.json"))
-    if errors:
-        for e in errors:
-            print(f"FAIL {e}")
-        return 1
-    print(f"OK: {len(names)} benchmark artifacts valid "
-          f"({', '.join(names)})")
-    return 0
+                    help="artifact basenames (default: bench_<module> "
+                         "for every benchmarks.run.TINY_MODULES entry)")
+    args = ap.parse_args(argv)
+    names = args.names or default_names()
+    return reporting.report(
+        "check_bench_results", check(args.dir, names),
+        f"{len(names)} artifact(s): {', '.join(names)}")
 
 
 if __name__ == "__main__":

@@ -1,18 +1,26 @@
-"""Fail CI on broken intra-repo markdown links.
+#!/usr/bin/env python3
+"""Fail CI on broken intra-repo markdown links (stdlib only).
 
     python tools/check_links.py [files/dirs...]
+    python -m tools.check_links
 
 Default scan set: README.md and docs/**/*.md.  Checks every inline
 markdown link ``[text](target)`` whose target is a relative path
 (external http(s)/mailto links and pure #anchors are skipped; a
-``path#anchor`` target is checked for the path only).  Exit 1 with one
-line per broken link.
+``path#anchor`` target is checked for the path only).  Reports through
+the shared tools/reporting.py conventions: one ``FAIL`` line per broken
+link, summary line, exit 1 on any finding.
 """
 from __future__ import annotations
 
 import pathlib
 import re
 import sys
+
+try:
+    from tools import reporting
+except ImportError:                          # run as a bare script
+    import reporting
 
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP = ("http://", "https://", "mailto:", "#")
@@ -28,20 +36,30 @@ def targets(md: pathlib.Path):
             yield t.split("#", 1)[0]
 
 
-def main(argv) -> int:
-    root = pathlib.Path(__file__).resolve().parent.parent
-    files = ([pathlib.Path(a) for a in argv] if argv
-             else [root / "README.md", *sorted((root / "docs").glob("**/*.md"))])
+def default_files(root: pathlib.Path):
+    return [root / "README.md", *sorted((root / "docs").glob("**/*.md"))]
+
+
+def check(files, root: pathlib.Path):
+    """Failure strings for every broken relative link in ``files``."""
     broken = []
     for md in files:
         for t in targets(md):
             if t and not (md.parent / t).exists():
-                broken.append(f"{md.relative_to(root)}: broken link -> {t}")
-    for line in broken:
-        print(line, file=sys.stderr)
-    print(f"checked {len(files)} file(s): "
-          f"{'FAIL' if broken else 'ok'} ({len(broken)} broken)")
-    return 1 if broken else 0
+                try:
+                    rel = md.relative_to(root)
+                except ValueError:
+                    rel = md
+                broken.append(f"{rel}: broken link -> {t}")
+    return broken
+
+
+def main(argv) -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    files = ([pathlib.Path(a) for a in argv] if argv
+             else default_files(root))
+    return reporting.report("check_links", check(files, root),
+                            f"{len(files)} file(s)")
 
 
 if __name__ == "__main__":

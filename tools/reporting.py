@@ -1,0 +1,22 @@
+"""Shared finding-report conventions for the CI gate scripts (stdlib).
+
+Every gate tool (repro_lint, check_links, check_bench_results) reports
+the same way so CI logs read uniformly and tests can assert on one
+contract:
+
+* each finding prints as one line: ``FAIL <detail>``
+* a one-line summary ends the run: ``<tool>: ok|FAIL (<n> finding(s); <scope>)``
+* exit code 0 iff there were no findings
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+
+def report(tool: str, failures: Sequence[str], scope: str) -> int:
+    """Print findings + summary; return the process exit code."""
+    for f in failures:
+        print(f"FAIL {f}")
+    status = "FAIL" if failures else "ok"
+    print(f"{tool}: {status} ({len(failures)} finding(s); {scope})")
+    return 1 if failures else 0

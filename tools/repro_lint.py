@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Driver for the static-analysis suite (repro.analysis.static).
+
+    python -m tools.repro_lint --all [--check-suppressions]
+    python -m tools.repro_lint --bounds --sharding --trace --oracle
+
+Runs the selected analyzers over the repo, applies in-source
+suppressions (``# repro-lint: disable=RULE -- rationale``), prints each
+unsuppressed finding as ``FAIL path:line: RULE message [hint]`` and
+exits non-zero if any remain.  ``--check-suppressions`` additionally
+fails on *stale* suppressions — comments whose finding was fixed — so
+fixes retire their suppressions (only suppressions whose rules belong
+to analyzers that actually ran are judged).
+
+Rule catalog and analyzer architecture: docs/static_analysis.md.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _ensure_import_path() -> None:
+    try:
+        import repro  # noqa: F401
+    except ImportError:
+        sys.path.insert(0, os.path.join(ROOT, "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_lint",
+        description="static-analysis gate over the repo")
+    ap.add_argument("--all", action="store_true",
+                    help="run every analyzer")
+    ap.add_argument("--bounds", action="store_true",
+                    help="Pallas kernel bounds checker (PB rules)")
+    ap.add_argument("--sharding", action="store_true",
+                    help="sharding-spec verifier (SHD rules)")
+    ap.add_argument("--trace", action="store_true",
+                    help="AST tracing-hazard linter (TRC rules)")
+    ap.add_argument("--oracle", action="store_true",
+                    help="oracle-coverage enforcer (ORA rules)")
+    ap.add_argument("--check-suppressions", action="store_true",
+                    help="also fail on stale suppressions (SUP001)")
+    ap.add_argument("--root", default=ROOT,
+                    help="repo root to analyze (default: this checkout)")
+    args = ap.parse_args(argv)
+
+    selected = [n for n in ("bounds", "sharding", "trace", "oracle")
+                if getattr(args, n)]
+    if args.all or (not selected and args.check_suppressions):
+        selected = ["bounds", "sharding", "trace", "oracle"]
+    if not selected:
+        ap.error("select analyzers (--all, or any of --bounds "
+                 "--sharding --trace --oracle)")
+
+    _ensure_import_path()
+    from repro.analysis.static import ANALYZERS
+    from repro.analysis.static import findings as fnd
+
+    try:
+        from tools import reporting
+    except ImportError:                      # run as a bare script
+        import reporting
+
+    all_findings = []
+    for name in selected:
+        all_findings += ANALYZERS[name].run(args.root)
+
+    sup_paths = fnd.source_files(args.root, ("src", "tools", "tests"))
+    suppressions = fnd.collect_suppressions(args.root, sup_paths)
+    unsup, suppressed, used = fnd.apply_suppressions(all_findings,
+                                                     suppressions)
+    if args.check_suppressions:
+        prefixes = {p for p, owner in fnd.RULE_OWNERS.items()
+                    if owner in selected}
+        unsup += fnd.stale_suppressions(suppressions, used, prefixes)
+
+    scope = (f"analyzers: {', '.join(selected)}; "
+             f"{len(suppressed)} suppressed")
+    return reporting.report("repro_lint",
+                            [f.format() for f in unsup], scope)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
