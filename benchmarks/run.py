@@ -29,6 +29,7 @@ MODULES = [
     ("serving", "benchmarks.bench_serving"),             # decode/serving perf
     ("prefill_chunking", "benchmarks.bench_prefill_chunking"),  # HOL / TTFT
     ("paged_cache", "benchmarks.bench_paged_cache"),     # paged vs dense HBM
+    ("prefix_cache", "benchmarks.bench_prefix_cache"),   # prefix reuse/TTFT
     ("apb_chunked", "benchmarks.bench_apb_chunked"),     # HOL, augmented
     ("mesh_pipeline", "benchmarks.bench_mesh_pipeline"), # pipelined mesh
 ]
@@ -36,7 +37,7 @@ MODULES = [
 # the --tiny (CI bench-smoke) sweep: every module that writes a
 # results/*.json artifact — kept in sync with tools/check_bench_results.py
 TINY_MODULES = ["serving", "prefill_chunking", "paged_cache",
-                "apb_chunked", "mesh_pipeline"]
+                "prefix_cache", "apb_chunked", "mesh_pipeline"]
 
 
 def main() -> None:

@@ -130,6 +130,32 @@ SEAMS: Tuple[Seam, ...] = (
                      "lockstep mesh == single-host chunked oracle"),
         )),
     Seam(
+        name="prefix_cache",
+        arms='prefix_cache="on" (hash-indexed COW page sharing, warm '
+             'admissions resume past shared pages) vs "off" (no-sharing '
+             'oracle)',
+        dispatch_path="src/repro/serving/scheduler.py",
+        dispatch_pattern=r"if self\._prefix\b",
+        evidence=(
+            Evidence("tests/test_prefix_cache.py",
+                     r"def test_warm_plain_matches_cold_and_dense",
+                     "warm plain admission == cold == dense, greedy-"
+                     "bit-exact, with prefill chunks skipped"),
+            Evidence("tests/test_prefix_cache.py",
+                     r"def test_warm_apb_matches_cold",
+                     "warm augmented admission (incl. passing-block "
+                     "cache hits) == cold, greedy-bit-exact"),
+            Evidence("tests/test_prefix_cache.py",
+                     r"def test_fuzz_sharing_on_off_bit_identical",
+                     "randomized overlapping-prefix traces: sharing-on "
+                     "== sharing-off tokens, conserved pages, fewer "
+                     "chunks on hits"),
+            Evidence("tests/distributed_checks.py",
+                     r"mesh prefix-cache plain cold\+warm == "
+                     r"sharing-off oracle",
+                     "mesh-sharded pool: warm == sharing-off oracle"),
+        )),
+    Seam(
         name="fused_decode_loop",
         arms="jitted lax.scan decode loop vs stepwise host loop",
         dispatch_path="src/repro/core/decode.py",

@@ -462,7 +462,21 @@ def paged_attention_distributed(q, pool_k, pool_v, page_table, *,
     return fn(q, pool_k, pool_v, page_table, vl_arg, rb_arg, st_arg)
 
 
-def paged_scatter(pool, new, page_table, start):
+def _mask_unwritable(flat, phys, pool, writable):
+    """COW-aware guard for the paged scatters: force rows whose physical
+    page is marked non-writable out of range, so the ``mode="drop"``
+    scatter discards them.  ``writable`` is a (num_pages,) bool mask
+    (None = everything writable); a prefix-resumed session marks its
+    cache-seeded warm pages False, making "a write never lands on a
+    shared/warm page" a property of the indexing math rather than a
+    scheduling convention."""
+    if writable is None:
+        return flat
+    ok = jnp.take(writable, jnp.clip(phys, 0, pool.shape[0] - 1), axis=0)
+    return jnp.where(ok, flat, pool.shape[0] * pool.shape[1])
+
+
+def paged_scatter(pool, new, page_table, start, writable=None):
     """Write ``new`` (B, t, KV, D) into the page pool at logical row
     offsets ``start`` (B,) through ``page_table`` (B, P).
 
@@ -473,6 +487,8 @@ def paged_scatter(pool, new, page_table, start):
     logical page indices are clipped into the table like
     ``write_tail_at`` clips — admission-time capacity checks are the real
     guard, the clip only keeps done-slot no-op writes in range.
+    ``writable`` (num_pages,) bool drops rows that resolve to protected
+    physical pages — the copy-on-write guard for shared prefix pages.
     """
     ps = pool.shape[1]
     b, t = new.shape[:2]
@@ -480,6 +496,7 @@ def paged_scatter(pool, new, page_table, start):
     logical = jnp.clip(rows // ps, 0, page_table.shape[1] - 1)
     phys = jnp.take_along_axis(page_table, logical, axis=1)      # (B, t)
     flat = phys * ps + rows % ps
+    flat = _mask_unwritable(flat, phys, pool, writable)
     pool_flat = pool.reshape((-1,) + pool.shape[2:])
     # mode="drop": phys comes from the table unclamped — a done slot's
     # sentinel (or stale) page id must become a no-op write, never a
@@ -491,7 +508,7 @@ def paged_scatter(pool, new, page_table, start):
     return pool_flat.reshape(pool.shape)
 
 
-def paged_scatter_sharded(pool, new, page_table, start):
+def paged_scatter_sharded(pool, new, page_table, start, writable=None):
     """Strided twin of ``paged_scatter`` for the mesh-sharded pool.
 
     pool: (num_pages_global, page_size, KV, D); page_table: (S, B, P)
@@ -500,8 +517,8 @@ def paged_scatter_sharded(pool, new, page_table, start):
     rows at logical offsets ``start`` (B,) route through the right
     shard's table row: global row r -> logical page j = r // page_size
     -> physical ``page_table[j % S, b, j // S]``.  Same clip-for-done-
-    slots contract as ``paged_scatter``; with S = 1 the two are
-    identical.
+    slots contract (and the same ``writable`` copy-on-write guard) as
+    ``paged_scatter``; with S = 1 the two are identical.
     """
     s_shards, _, p = page_table.shape
     ps = pool.shape[1]
@@ -513,6 +530,7 @@ def paged_scatter_sharded(pool, new, page_table, start):
     phys = jnp.take_along_axis(flat_pt, (j % s_shards) * p + j // s_shards,
                                axis=1)                        # (B, t)
     flat = phys * ps + rows % ps
+    flat = _mask_unwritable(flat, phys, pool, writable)
     pool_flat = pool.reshape((-1,) + pool.shape[2:])
     # mode="drop": same out-of-range contract as paged_scatter above.
     pool_flat = pool_flat.at[flat.reshape(-1)].set(

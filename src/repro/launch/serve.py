@@ -18,6 +18,13 @@ def main() -> None:
     ap.add_argument("--n-doc", type=int, default=2048)
     ap.add_argument("--lq", type=int, default=16)
     ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=None,
+                    help="decode-slot width for the Scheduler path "
+                         "(default: --batch, i.e. every request admits "
+                         "at once); set it lower to serialize admissions "
+                         "— required for --prefix-reuse traffic to hit "
+                         "the prefix cache, since warm rows only find "
+                         "row 0's pages after row 0 has installed them")
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -54,6 +61,27 @@ def main() -> None:
                          "batching Scheduler — one Request per batch "
                          "row; default: Engine.generate with the "
                          "implicit dense-equivalent pool")
+    ap.add_argument("--prefix-cache", default="off",
+                    choices=["on", "off"],
+                    help="hash-addressed prefix page sharing on the "
+                         "paged pool: admissions whose leading document "
+                         "pages are already resident map them zero-copy "
+                         "(copy-on-write) and skip the matching prefill "
+                         "chunks; requires --cache-layout paged and "
+                         "--num-pages (the Scheduler path); 'off' keeps "
+                         "the no-sharing bit-exactness oracle")
+    ap.add_argument("--prefix-cache-pages", type=int, default=None,
+                    help="LRU retention budget for --prefix-cache on: "
+                         "how many refcount-0 pages stay addressable in "
+                         "the prefix index instead of returning to the "
+                         "free list (default: the whole pool)")
+    ap.add_argument("--prefix-reuse", type=float, default=0.0,
+                    help="fraction of batch rows (beyond the first) that "
+                         "repeat row 0's generated document and query, "
+                         "so a --prefix-cache on run has warm traffic "
+                         "to hit (default 0.0: every row unique; the "
+                         "query repeats too because augmented layouts "
+                         "compress query-aware)")
     args = ap.parse_args()
 
     if args.devices > 1:
@@ -104,25 +132,41 @@ def main() -> None:
     if args.num_pages is not None and args.cache_layout != "paged":
         raise SystemExit("--num-pages sizes the paged pool; add "
                          "--cache-layout paged")
+    if args.prefix_cache == "on" and args.num_pages is None:
+        raise SystemExit("--prefix-cache on shares pool pages across "
+                         "scheduled admissions; add --num-pages (and "
+                         "--cache-layout paged) to serve through the "
+                         "Scheduler")
     # one validated config from the flags; Engine and Scheduler each
     # consume the fields they own
     try:
         serve_cfg = ServeConfig(cache_layout=args.cache_layout,
                                 page_size=args.page_size,
                                 paged_impl=args.paged_impl,
-                                n_slots=args.batch,
+                                n_slots=(args.slots if args.slots
+                                         is not None else args.batch),
                                 prefill_chunk=args.prefill_chunk,
                                 num_pages=args.num_pages,
+                                prefix_cache=args.prefix_cache,
+                                prefix_cache_pages=args.prefix_cache_pages,
                                 max_new=args.new_tokens)
     except ValueError as e:
         raise SystemExit(str(e)) from e
     engine = Engine(cfg, params, rctx, config=serve_cfg)
 
+    if not 0.0 <= args.prefix_reuse <= 1.0:
+        raise SystemExit("--prefix-reuse must be in [0, 1]")
     rng = np.random.default_rng(0)
-    doc = jnp.asarray(rng.integers(10, cfg.vocab_size,
-                                   (args.batch, args.n_doc)), jnp.int32)
-    query = jnp.asarray(rng.integers(10, cfg.vocab_size,
-                                     (args.batch, args.lq)), jnp.int32)
+    doc_np = rng.integers(10, cfg.vocab_size, (args.batch, args.n_doc))
+    qry_np = rng.integers(10, cfg.vocab_size, (args.batch, args.lq))
+    # warm rows repeat the whole request (doc AND query): augmented
+    # layouts compress query-aware — the anchor slot embeds the query —
+    # so cached pages/passing blocks only apply to identical queries
+    n_warm = int(round(args.prefix_reuse * (args.batch - 1)))
+    doc_np[1:1 + n_warm] = doc_np[0]
+    qry_np[1:1 + n_warm] = qry_np[0]
+    doc = jnp.asarray(doc_np, jnp.int32)
+    query = jnp.asarray(qry_np, jnp.int32)
     caps = engine.prefill_capabilities
     if args.prefill_chunk and not caps:
         raise SystemExit(
@@ -159,6 +203,13 @@ def main() -> None:
               f"speed={(args.batch * n_in + toks) / max(wall, 1e-9):.0f} "
               f"tok/s admission_deferrals={sch.admission_deferrals} "
               f"peak_active={sch.peak_active} prefill_waves={waves}")
+        if args.prefix_cache == "on":
+            print(f"prefix_cache: queries={sch.prefix_queries} "
+                  f"hits={sch.prefix_hits} "
+                  f"hit_pages={sch.prefix_hit_pages} "
+                  f"chunks_skipped={sch.prefill_chunks_skipped} "
+                  f"passing_hits={engine.passing_cache_hits} "
+                  f"peak_pages={sch._allocator.peak_used_pages}")
         for rid in sorted(results):
             r = results[rid]
             print(f"{rid}: waves={r.prefill_waves} "

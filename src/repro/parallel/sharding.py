@@ -163,6 +163,32 @@ def shard_paged_caches(caches, mesh: Mesh,
     return tuple(out)
 
 
+def check_page_stripe(phys, n_shards: int, pages_per_shard: int) -> None:
+    """Validate that a logical-order list of global physical page ids
+    respects the round-robin stripe: logical page ``j`` must live on
+    shard ``j % S`` (global ids ``[s*pps, (s+1)*pps)`` belong to shard
+    ``s`` — paged_pool_spec).  Freshly reserved pages satisfy this by
+    construction (per-shard free lists); *shared* pages must be checked,
+    because a prefix-index hit maps a page some earlier admission
+    reserved — a cross-shard mapping would silently read another
+    device's pool slice through a table entry that looks local.  Raises
+    ``ValueError`` on the first violation."""
+    if n_shards <= 1:
+        return
+    for j, p in enumerate(phys):
+        p = int(p)
+        if p < 0 or p >= n_shards * pages_per_shard:
+            raise ValueError(
+                f"logical page {j}: physical id {p} is outside the pool "
+                f"({n_shards} shards x {pages_per_shard} pages)")
+        if p // pages_per_shard != j % n_shards:
+            raise ValueError(
+                f"logical page {j} must stripe onto shard "
+                f"{j % n_shards} but physical page {p} lives on shard "
+                f"{p // pages_per_shard} — a shared mapping broke the "
+                f"round-robin stripe")
+
+
 # ---------------------------------------------------------------------------
 # Dense doc-cache + pipelined-prefill stream-state placement
 # ---------------------------------------------------------------------------

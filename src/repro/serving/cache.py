@@ -52,10 +52,14 @@ Fill-level vocabulary used throughout the serving stack:
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import decode as dec
 
@@ -282,8 +286,90 @@ def table_width(capacity: int, page_size: int, n_shards: int = 1) -> int:
     return -(-pages_for(capacity, page_size) // n_shards)
 
 
+# ---------------------------------------------------------------------------
+# Prefix hashing — content addresses for full pages and passing blocks
+# ---------------------------------------------------------------------------
+#
+# A page's KV content is a deterministic function of (a) the token prefix
+# up to the page's end and (b) everything else the prefill math folds in:
+# the path taken (plain chunked vs augmented), the RoPE offset (the
+# serving convention places ``lq`` query rows before the document), the
+# block layout geometry, and — on the augmented path — the query tokens
+# themselves (the anchor block is [query | doc head] and every host >= 1
+# attends to it).  The *seed* of a hash chain encodes (b); the chain then
+# folds in token bytes up to each cut point, so two admissions collide on
+# a page hash iff their page KV is bit-identical.  Embedding documents
+# are never hashed (no canonical token bytes to address them by).
+
+
+def prefix_hash_seed(*parts) -> bytes:
+    """Digest the non-token inputs of a prefix hash chain: path marker,
+    geometry ints, query token arrays.  Length-prefixed so distinct part
+    tuples can never collide by concatenation."""
+    h = hashlib.blake2b(digest_size=16)
+    for part in parts:
+        if isinstance(part, bytes):
+            b = part
+        elif isinstance(part, str):
+            b = part.encode()
+        elif isinstance(part, (bool, int, np.integer)):
+            b = int(part).to_bytes(8, "little", signed=True)
+        elif isinstance(part, np.ndarray):
+            b = np.ascontiguousarray(part.astype(np.int64)).tobytes()
+        else:
+            raise TypeError(
+                f"unhashable seed part {type(part).__name__} — pass "
+                f"bytes, str, int or an integer ndarray")
+        h.update(len(b).to_bytes(4, "little"))
+        h.update(b)
+    return h.digest()
+
+
+def token_hash_cuts(tokens, seed: bytes, cuts: List[int]) -> List[bytes]:
+    """Rolling content-hash chain over a token prefix.
+
+    Returns one digest per cut point: ``d_i = H(d_{i-1} ||
+    tokens[cuts[i-1]:cuts[i]])`` with ``d_{-1} = seed`` — so the digest
+    at cut ``c`` addresses the *entire* prefix ``tokens[:c]`` plus the
+    seed, and extending a chain to further cuts never rehashes earlier
+    bytes.  ``cuts`` must be ascending and within the token length."""
+    toks = np.ascontiguousarray(
+        np.asarray(tokens).reshape(-1).astype(np.int64))
+    out: List[bytes] = []
+    prev, d = 0, seed
+    for cut in cuts:
+        if cut < prev or cut > toks.shape[0]:
+            raise ValueError(
+                f"hash cuts must be ascending and <= {toks.shape[0]}, "
+                f"got {list(cuts)}")
+        d = hashlib.blake2b(d + toks[prev:cut].tobytes(),
+                            digest_size=16).digest()
+        prev = cut
+        out.append(d)
+    return out
+
+
+@dataclasses.dataclass
+class PrefixHints:
+    """Warm-start plan for one admission, computed by the scheduler and
+    consumed by ``Engine.start_prefill`` sessions.
+
+    ``rows`` document rows at the head are already cached (page-aligned;
+    block-aligned too on the augmented path): the session seeds its
+    mini-pool from ``page_kv`` (the shared pages gathered out of the
+    global pool), pre-writes any cached compressed ``passing`` blocks
+    (host -> per-layer {"k","v"} slices), and resumes its chunk plan at
+    the first cold row.  ``block_keys`` (augmented only) are the
+    passing-block cache keys per host — also used by *cold* runs to
+    capture freshly finalized blocks for the next admission."""
+    rows: int = 0
+    page_kv: Optional[Tuple] = None
+    passing: Dict[int, Tuple] = dataclasses.field(default_factory=dict)
+    block_keys: Optional[List[bytes]] = None
+
+
 class PageAllocator:
-    """Host-side free-list allocator over a fixed pool of pages.
+    """Host-side refcounting allocator over a fixed pool of pages.
 
     The serving pool is ``num_pages`` fixed-size pages; a request
     reserves ``pages_for(doc_len)`` of them at admission time and
@@ -291,15 +377,38 @@ class PageAllocator:
     budget exhaustion).  Any free page satisfies any reservation — page
     granularity means churned mixed-length traffic cannot fragment the
     pool below its free count.
+
+    With ``prefix_cache_pages > 0`` the allocator additionally keeps a
+    hash-addressed index of *full* pages (``register``/``lookup``, keyed
+    by a rolling content hash of the token prefix — ``token_hash_cuts``)
+    and a capacity-bounded LRU pool: releasing the last reference to a
+    hashed page parks it in the LRU (still addressable through the
+    index) instead of freeing it, and reservations that outrun the free
+    list evict LRU pages oldest-first.  ``share`` takes an extra
+    reference on an indexed page — the zero-copy prefix hit — and
+    ``ensure_private`` is the copy-on-write primitive: the page-table
+    owner of a refcount>1 page gets a fresh private page before any
+    write may land.  Every page is in exactly one of three states —
+    free, evictable (refcount 0, indexed, in LRU) or live (refcount >=
+    1) — and ``free + evictable + live == num_pages`` always holds (the
+    property suite churns this invariant).
     """
 
-    def __init__(self, num_pages: int):
+    def __init__(self, num_pages: int, prefix_cache_pages: int = 0):
         if num_pages < 1:
             raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        if prefix_cache_pages < 0:
+            raise ValueError(
+                f"prefix_cache_pages must be >= 0, got {prefix_cache_pages}")
         self.num_pages = num_pages
+        self.prefix_cache_pages = min(prefix_cache_pages, num_pages)
         # pop() from the tail -> ascending physical order for fresh pools
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
-        self._reserved = set()
+        self._ref: Dict[int, int] = {}              # page -> refcount >= 1
+        self._lru: "OrderedDict[int, None]" = OrderedDict()  # evictable
+        self._index: Dict[bytes, int] = {}          # content hash -> page
+        self._page_hash: Dict[int, bytes] = {}      # inverse of _index
+        self.peak_used_pages = 0
 
     @property
     def free_pages(self) -> int:
@@ -307,30 +416,180 @@ class PageAllocator:
 
     @property
     def used_pages(self) -> int:
-        return len(self._reserved)
+        return len(self._ref)
+
+    @property
+    def evictable_pages(self) -> int:
+        """Refcount-0 pages parked in the LRU pool — reclaimable on
+        demand, but still serving prefix hits until evicted."""
+        return len(self._lru)
+
+    @property
+    def available_pages(self) -> int:
+        """Pages a reservation can draw on: free list + evictable LRU."""
+        return len(self._free) + len(self._lru)
+
+    def _check_id(self, p) -> int:
+        p = int(p)
+        if p < 0 or p >= self.num_pages:
+            raise ValueError(
+                f"page {p} is outside this pool (num_pages="
+                f"{self.num_pages})")
+        return p
+
+    def _note_peak(self) -> None:
+        if len(self._ref) > self.peak_used_pages:
+            self.peak_used_pages = len(self._ref)
+
+    def refcount(self, page: int) -> int:
+        """Live references to ``page`` (0 for free/evictable pages)."""
+        return self._ref.get(self._check_id(page), 0)
+
+    def _evict_one(self) -> int:
+        """Drop the LRU-oldest evictable page: forget its index entry
+        and hand the physical page back (only refcount-0 pages ever sit
+        in the LRU, so no live table can still map it)."""
+        p, _ = self._lru.popitem(last=False)
+        h = self._page_hash.pop(p)
+        del self._index[h]
+        return p
 
     def reserve(self, n: int) -> Optional[List[int]]:
-        """Take ``n`` pages off the free list; None (reserve nothing) if
-        fewer than ``n`` are free — the caller queues the admission."""
+        """Take ``n`` pages off the free list, evicting LRU pages
+        oldest-first to top it up; None (reserve nothing) if fewer than
+        ``n`` are available — the caller queues the admission."""
         if n < 1:
             raise ValueError(f"reservation must be >= 1 pages, got {n}")
-        if n > len(self._free):
+        if n > self.available_pages:
             return None
+        while len(self._free) < n:
+            self._free.append(self._evict_one())
         pages = [self._free.pop() for _ in range(n)]
-        self._reserved.update(pages)
+        for p in pages:
+            self._ref[p] = 1
+        self._note_peak()
         return pages
 
-    def release(self, pages: List[int]) -> None:
-        """Return a reservation to the free list.  Double release (or a
-        page this allocator never issued) raises — silently recycling a
-        live page would hand one request's KV to another."""
-        for p in pages:
-            if p not in self._reserved:
+    def reserve_tail(self, logical_pages: int, warm_pages: int
+                     ) -> Optional[List[int]]:
+        """Reserve only the cold tail of a reservation whose first
+        ``warm_pages`` logical pages are already mapped through shared
+        pages (pin them with ``share`` first — this call may evict).
+        Returns ``[]`` when the request is fully warm."""
+        if not 0 <= warm_pages <= logical_pages:
+            raise ValueError(
+                f"warm pages {warm_pages} must lie in [0, "
+                f"{logical_pages}]")
+        if warm_pages == logical_pages:
+            return []
+        return self.reserve(logical_pages - warm_pages)
+
+    def lookup(self, h: bytes) -> Optional[int]:
+        """Physical page currently holding content hash ``h`` (live or
+        evictable), or None — a hit must be pinned with ``share`` before
+        any reservation could evict it."""
+        return self._index.get(h)
+
+    def share(self, pages: List[int]) -> None:
+        """Take one extra reference on each page — the zero-copy prefix
+        hit.  Evictable pages resurrect out of the LRU; free pages (or
+        foreign ids) raise, since their content is gone."""
+        checked = [self._check_id(p) for p in pages]
+        counts: Dict[int, int] = {}
+        for p in checked:
+            counts[p] = counts.get(p, 0) + 1
+        for p in counts:
+            if p not in self._ref and p not in self._lru:
                 raise ValueError(
-                    f"page {p} is not currently reserved (double release "
-                    f"or foreign page)")
-        for p in pages:
-            self._reserved.discard(p)
+                    f"page {p} is free — cannot share a page whose "
+                    f"content has been released to the free list")
+        for p in checked:
+            if p in self._lru:
+                del self._lru[p]
+                self._ref[p] = 1
+            else:
+                self._ref[p] += 1
+        self._note_peak()
+
+    def register(self, page: int, h: bytes) -> int:
+        """Index a live page under content hash ``h``; returns the
+        *canonical* page for ``h`` — the already-indexed one if the hash
+        raced in first (the caller then shares that page and releases
+        its duplicate), else ``page`` itself.  No-op passthrough when
+        prefix caching is off (``prefix_cache_pages == 0``)."""
+        page = self._check_id(page)
+        if self._ref.get(page, 0) < 1:
+            raise ValueError(
+                f"page {page} is not live — only reserved/shared pages "
+                f"can be registered in the prefix index")
+        cur = self._index.get(h)
+        if cur is not None:
+            return cur
+        if self.prefix_cache_pages == 0:
+            return page
+        old = self._page_hash.get(page)
+        if old is not None and old != h:
+            raise ValueError(
+                f"page {page} is already indexed under a different hash "
+                f"— a physical page holds one content prefix at a time")
+        self._index[h] = page
+        self._page_hash[page] = h
+        return page
+
+    def ensure_private(self, page: int) -> Optional[Tuple[int, bool]]:
+        """Copy-on-write primitive: if ``page`` is shared (refcount >
+        1), reserve a fresh private page and drop one reference on the
+        original, returning ``(new_page, True)`` — the caller copies the
+        pool rows and repoints its page table *before* writing.  A
+        refcount-1 page is already private: ``(page, False)``.  None if
+        the pool cannot supply the copy (caller defers or fails the
+        write)."""
+        page = self._check_id(page)
+        if self._ref.get(page, 0) < 1:
+            raise ValueError(
+                f"page {page} is not live — copy-on-write applies to "
+                f"mapped pages only")
+        if self._ref[page] == 1:
+            return page, False
+        got = self.reserve(1)
+        if got is None:
+            return None
+        self._ref[page] -= 1
+        return got[0], True
+
+    def release(self, pages: List[int]) -> None:
+        """Drop one reference per listed page.  A page reaching
+        refcount 0 retires: hashed pages park in the bounded LRU pool
+        (evicting oldest on overflow), unhashed pages return to the free
+        list.  Unknown/out-of-range ids, already-free pages, and more
+        releases than held references (including duplicates *within one
+        call*) raise ``ValueError`` before any state changes — silently
+        recycling a live page would hand one request's KV to another."""
+        checked = [self._check_id(p) for p in pages]
+        counts: Dict[int, int] = {}
+        for p in checked:
+            counts[p] = counts.get(p, 0) + 1
+        for p, k in counts.items():
+            held = self._ref.get(p, 0)
+            if held < k:
+                raise ValueError(
+                    f"page {p} holds {held} reference(s) but {k} "
+                    f"release(s) were requested (double release or "
+                    f"foreign page)")
+        for p in checked:
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._retire(p)
+
+    def _retire(self, p: int) -> None:
+        h = self._page_hash.get(p)
+        if h is not None and self.prefix_cache_pages > 0:
+            self._lru[p] = None
+            while len(self._lru) > self.prefix_cache_pages:
+                self._free.append(self._evict_one())
+        else:
+            self._page_hash.pop(p, None)
             self._free.append(p)
 
 
@@ -347,7 +606,8 @@ class ShardedPageAllocator:
     ``[s*pps, (s+1)*pps)``), the id space the sharded page tables store.
     """
 
-    def __init__(self, num_pages: int, n_shards: int = 1):
+    def __init__(self, num_pages: int, n_shards: int = 1,
+                 prefix_cache_pages: int = 0):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         if num_pages < n_shards or num_pages % n_shards:
@@ -358,8 +618,14 @@ class ShardedPageAllocator:
         self.num_pages = num_pages
         self.n_shards = n_shards
         self.pages_per_shard = num_pages // n_shards
-        self._shards = [PageAllocator(self.pages_per_shard)
+        # per-shard LRU budget: ceil split, so any positive global budget
+        # keeps caching alive on every shard
+        self.prefix_cache_pages = min(prefix_cache_pages, num_pages)
+        per_cap = -(-self.prefix_cache_pages // n_shards)
+        self._shards = [PageAllocator(self.pages_per_shard,
+                                      prefix_cache_pages=per_cap)
                         for _ in range(n_shards)]
+        self.peak_used_pages = 0
 
     @property
     def free_pages(self) -> int:
@@ -369,6 +635,14 @@ class ShardedPageAllocator:
     def used_pages(self) -> int:
         return sum(a.used_pages for a in self._shards)
 
+    @property
+    def evictable_pages(self) -> int:
+        return sum(a.evictable_pages for a in self._shards)
+
+    @property
+    def available_pages(self) -> int:
+        return sum(a.available_pages for a in self._shards)
+
     def shard_free(self, shard: int) -> int:
         return self._shards[shard].free_pages
 
@@ -377,14 +651,43 @@ class ShardedPageAllocator:
         return max(split_pages(logical_pages, self.n_shards)) \
             <= self.pages_per_shard
 
+    def _shard_of(self, gid: int) -> Tuple[int, int]:
+        gid = int(gid)
+        if gid < 0 or gid >= self.num_pages:
+            raise ValueError(
+                f"page {gid} is outside this pool (num_pages="
+                f"{self.num_pages})")
+        return gid // self.pages_per_shard, gid % self.pages_per_shard
+
+    def _note_peak(self) -> None:
+        used = self.used_pages
+        if used > self.peak_used_pages:
+            self.peak_used_pages = used
+
     def reserve(self, logical_pages: int) -> Optional[List[List[int]]]:
         """Reserve ``logical_pages`` round-robin pages; returns per-shard
         lists of global physical ids (ordered by shard-local logical
-        index), or None — taking nothing — if any shard is exhausted."""
+        index), or None — taking nothing — if any shard is exhausted
+        (each shard tops up its free list from its own LRU first)."""
         if logical_pages < 1:
             raise ValueError(
                 f"reservation must be >= 1 pages, got {logical_pages}")
-        per = split_pages(logical_pages, self.n_shards)
+        return self.reserve_tail(logical_pages, 0)
+
+    def reserve_tail(self, logical_pages: int, warm_pages: int
+                     ) -> Optional[List[List[int]]]:
+        """Reserve only the *cold tail* of a striped reservation: the
+        logical pages ``[warm_pages, logical_pages)`` — the warm prefix
+        is already mapped through shared pages (pinned by ``share``
+        first, so this reservation's LRU evictions cannot reclaim it).
+        Per-shard needs follow the round-robin rule (logical ``j`` on
+        shard ``j % S``); all-or-nothing across shards."""
+        if not 0 <= warm_pages <= logical_pages:
+            raise ValueError(
+                f"warm pages {warm_pages} must lie in [0, "
+                f"{logical_pages}]")
+        per = [sum(1 for j in range(warm_pages, logical_pages)
+                   if j % self.n_shards == s) for s in range(self.n_shards)]
         grants: List[List[int]] = []
         for s, n in enumerate(per):
             if n == 0:
@@ -398,12 +701,58 @@ class ShardedPageAllocator:
                             [p - s2 * self.pages_per_shard for p in g2])
                 return None
             grants.append([p + s * self.pages_per_shard for p in g])
+        self._note_peak()
         return grants
 
+    def lookup(self, h: bytes, logical_page: int) -> Optional[int]:
+        """Global physical id holding content hash ``h`` — looked up on
+        shard ``logical_page % S``, the only shard the round-robin
+        stripe allows that logical page to live on (so a hit always
+        respects the stripe by construction)."""
+        s = logical_page % self.n_shards
+        local = self._shards[s].lookup(h)
+        return None if local is None else local + s * self.pages_per_shard
+
+    def share(self, grants: List[List[int]]) -> None:
+        """Extra reference on each page of a per-shard global-id grant
+        (same shape as ``reserve`` returns); free/foreign pages raise."""
+        for s, g in enumerate(grants):
+            if not g:
+                continue
+            local = [p - s * self.pages_per_shard for p in g]
+            if any(lp < 0 or lp >= self.pages_per_shard for lp in local):
+                raise ValueError(
+                    f"pages {g} do not belong to shard {s} "
+                    f"(pages_per_shard={self.pages_per_shard})")
+            self._shards[s].share(local)
+        self._note_peak()
+
+    def register(self, gid: int, h: bytes) -> int:
+        """Index a live page (global id) under ``h``; returns the
+        canonical global id for ``h`` on that page's shard."""
+        s, local = self._shard_of(gid)
+        return self._shards[s].register(local, h) + s * self.pages_per_shard
+
+    def refcount(self, gid: int) -> int:
+        s, local = self._shard_of(gid)
+        return self._shards[s].refcount(local)
+
+    def ensure_private(self, gid: int) -> Optional[Tuple[int, bool]]:
+        """Copy-on-write on a sharded pool: the private copy is drawn
+        from the *same shard* as the shared page, so the replacement
+        automatically respects the round-robin stripe."""
+        s, local = self._shard_of(gid)
+        got = self._shards[s].ensure_private(local)
+        if got is None:
+            return None
+        new, copied = got
+        return new + s * self.pages_per_shard, copied
+
     def release(self, grants: List[List[int]]) -> None:
-        """Return a reservation (per-shard global-id lists).  The same
-        double-release/foreign-page guard as ``PageAllocator`` — applied
-        per shard, after checking each id belongs to its shard's range."""
+        """Drop one reference per page of a per-shard global-id grant.
+        The same double-release/foreign-page guard as ``PageAllocator``
+        — applied per shard, after checking each id belongs to its
+        shard's range."""
         for s, g in enumerate(grants):
             if not g:
                 continue
@@ -656,6 +1005,183 @@ def write_doc_pages(caches, req_caches, slot: int, pages,
     return tuple(out)
 
 
+def mini_page_index(j: int, n_shards: int, per_shard_width: int) -> int:
+    """Physical index of logical page ``j`` inside a request mini-pool
+    (identity tables, batch 1): ``j`` itself single-host, else the
+    round-robin stripe position ``(j % S) * P + j // S``."""
+    if n_shards == 1:
+        return j
+    return (j % n_shards) * per_shard_width + j // n_shards
+
+
+def gather_pool_pages(caches, phys: List[int]) -> Tuple:
+    """Gather whole physical pages out of the shared pool: per attention
+    layer {"k","v"} (blocks, len(phys), page_size, KV, D) in the given
+    (logical) order; None for layers without a page table.  The warm
+    half of a prefix-hit admission — the gathered KV seeds the session's
+    private mini-pool so chunked prefill can resume past it."""
+    arr = jnp.asarray(phys, jnp.int32)
+    return tuple({"k": c["k"][:, arr], "v": c["v"][:, arr]}
+                 if "pt" in c else None for c in caches)
+
+
+def seed_warm_pages(caches, warm_kv, n_shards: int = 1) -> Tuple:
+    """Write gathered warm pages (``gather_pool_pages`` output) into a
+    request mini-pool at logical pages ``0..h-1`` — the inverse of the
+    admission paste, run once at session start."""
+    out = []
+    for c, w in zip(caches, warm_kv):
+        if "pt" in c and w is not None:
+            h = w["k"].shape[1]
+            if w["k"].shape[2] != c["k"].shape[2]:
+                raise ValueError(
+                    f"warm pages hold {w['k'].shape[2]} rows but the "
+                    f"mini-pool page size is {c['k'].shape[2]}")
+            pm = c["pt"].shape[-1]
+            idx = jnp.asarray(
+                [mini_page_index(j, n_shards, pm) for j in range(h)],
+                jnp.int32)
+            out.append({"k": c["k"].at[:, idx].set(w["k"]),
+                        "v": c["v"].at[:, idx].set(w["v"]),
+                        "pt": c["pt"]})
+        else:
+            out.append(c)
+    return tuple(out)
+
+
+def warm_writable_mask(caches, warm_pages: int, n_shards: int = 1):
+    """(mini_num_pages,) bool mask for the COW-aware chunk scatter:
+    False at the physical mini-pool pages seeded from the prefix cache,
+    so no resumed chunk can ever overwrite warm rows (they are bit-
+    identical to the shared pool pages the slot will map zero-copy).
+    None when the caches carry no page table or nothing is warm."""
+    if warm_pages == 0:
+        return None
+    for c in caches:
+        if "pt" in c:
+            mask = np.ones((c["k"].shape[1],), bool)
+            pm = c["pt"].shape[-1]
+            for j in range(warm_pages):
+                mask[mini_page_index(j, n_shards, pm)] = False
+            return jnp.asarray(mask)
+    return None
+
+
+def install_doc_pages(caches, req_caches, slot: int, phys: List[int],
+                      copy: List[bool], page_size: int) -> Tuple:
+    """Prefix-sharing admission paste: map logical page ``j`` of
+    ``slot`` to physical page ``phys[j]`` (logical order, global ids on
+    a sharded pool) and copy the request's content into the pool only
+    where ``copy[j]`` — cold pages.  Warm pages (``copy[j]`` False)
+    already hold bit-identical content in the shared pool, so mapping
+    them through the table is the zero-copy half of a prefix hit.  The
+    sharing-off admission keeps going through ``write_doc_pages`` — the
+    oracle paste this generalises."""
+    npg = len(phys)
+    if len(copy) != npg:
+        raise ValueError(
+            f"copy mask covers {len(copy)} pages but {npg} are mapped")
+    out = []
+    for c, rc in zip(caches, req_caches):
+        if "pt" not in c:
+            out.append({k: c[k].at[:, slot].set(rc[k][:, 0]) for k in c})
+            continue
+        sharded = c["pt"].ndim == 4
+        n_shards = c["pt"].shape[1] if sharded else 1
+        width = c["pt"].shape[-1]
+        if -(-npg // n_shards) > width:
+            raise ValueError(
+                f"{npg} logical pages exceed the table width {width} "
+                f"(x{n_shards} shards)")
+        if sharded:
+            pt = c["pt"].at[:, :, slot, :].set(0)
+            for s in range(n_shards):
+                js = list(range(s, npg, n_shards))
+                if js:
+                    pt = pt.at[:, s, slot, :len(js)].set(
+                        jnp.asarray([phys[j] for j in js], jnp.int32))
+        else:
+            pt = c["pt"].at[:, slot, :].set(0)
+            pt = pt.at[:, slot, :npg].set(jnp.asarray(phys, jnp.int32))
+        cold = [j for j in range(npg) if copy[j]]
+        k, v = c["k"], c["v"]
+        if cold:
+            dst = jnp.asarray([phys[j] for j in cold], jnp.int32)
+            if "pt" in rc:
+                pm = rc["pt"].shape[-1]
+                src = jnp.asarray(
+                    [mini_page_index(j, n_shards, pm) for j in cold],
+                    jnp.int32)
+                k = k.at[:, dst].set(rc["k"][:, src])
+                v = v.at[:, dst].set(rc["v"][:, src])
+            else:
+                blocks, _, m = rc["k"].shape[:3]
+                if m > npg * page_size:
+                    raise ValueError(
+                        f"request cache has {m} rows but only {npg} "
+                        f"pages ({npg * page_size} rows) were mapped")
+                pad = [(0, 0)] * rc["k"].ndim
+                pad[2] = (0, npg * page_size - m)
+                tail_shape = rc["k"].shape[3:]
+                src = jnp.asarray(cold, jnp.int32)
+                rows_k = jnp.pad(rc["k"], pad).reshape(
+                    (blocks, npg, page_size) + tail_shape)
+                rows_v = jnp.pad(rc["v"], pad).reshape(
+                    (blocks, npg, page_size) + tail_shape)
+                k = k.at[:, dst].set(jnp.take(rows_k, src, axis=1))
+                v = v.at[:, dst].set(jnp.take(rows_v, src, axis=1))
+        out.append({"k": k, "v": v, "pt": pt})
+    return tuple(out)
+
+
+def cow_unshare_pages(caches, slot: int, logical_pages: List[int],
+                      allocator) -> Tuple[Tuple, List[int]]:
+    """Page-table-level copy-on-write: before a write may land on slot
+    ``slot``'s logical pages, give the slot a *private* copy of any that
+    are shared (refcount > 1) — reserve a fresh page on the same shard,
+    copy the pool rows, repoint the slot's table entry, drop one
+    reference on the original.  Pages the slot already owns privately
+    are untouched, and the shared original is never mutated (the
+    property suite pins this).  Returns ``(caches, copied_logical)``;
+    raises ``RuntimeError`` if the pool cannot supply a copy."""
+    first = next((c for c in caches if "pt" in c), None)
+    if first is None:
+        return caches, []
+    sharded = first["pt"].ndim == 4
+    n_shards = first["pt"].shape[1] if sharded else 1
+    pt_host = np.asarray(first["pt"][0])      # (B, P) or (S, B, P)
+    remaps: List[Tuple[int, int, int]] = []
+    for j in logical_pages:
+        old = int(pt_host[j % n_shards, slot, j // n_shards]
+                  if sharded else pt_host[slot, j])
+        got = allocator.ensure_private(old)
+        if got is None:
+            raise RuntimeError(
+                f"pool exhausted during copy-on-write of logical page "
+                f"{j} (slot {slot}) — no free or evictable page for the "
+                f"private copy")
+        new, copied = got
+        if copied:
+            remaps.append((j, old, new))
+    if not remaps:
+        return caches, []
+    out = []
+    for c in caches:
+        if "pt" not in c:
+            out.append(c)
+            continue
+        k, v, pt = c["k"], c["v"], c["pt"]
+        for j, old, new in remaps:
+            k = k.at[:, new].set(k[:, old])
+            v = v.at[:, new].set(v[:, old])
+            if sharded:
+                pt = pt.at[:, j % n_shards, slot, j // n_shards].set(new)
+            else:
+                pt = pt.at[:, slot, j].set(new)
+        out.append({"k": k, "v": v, "pt": pt})
+    return tuple(out), [r[0] for r in remaps]
+
+
 def alloc_doc_caches(cfg, batch: int, capacity: int, dtype=jnp.float32,
                      page_size: Optional[int] = None,
                      n_shards: int = 1) -> Tuple:
@@ -701,7 +1227,7 @@ def alloc_doc_caches(cfg, batch: int, capacity: int, dtype=jnp.float32,
     return tuple(out)
 
 
-def append_doc_chunk(caches, updates, doc_len) -> Tuple:
+def append_doc_chunk(caches, updates, doc_len, writable=None) -> Tuple:
     """Fold one prefill chunk into decode-format doc caches.
 
     Attention updates {"k","v"} (blocks, B, t, KV, D) are written at
@@ -712,17 +1238,23 @@ def append_doc_chunk(caches, updates, doc_len) -> Tuple:
     straddle page boundaries; ``page_size`` need not divide the chunk;
     mesh-sharded tables route each row through its shard's table,
     ``core.decode.paged_scatter_sharded``).
-    Mamba updates replace the carried {"state","conv"}."""
+    Mamba updates replace the carried {"state","conv"}.
+
+    ``writable`` — optional (num_pages,) bool mask for the paged arm:
+    rows whose table entry resolves to a non-writable physical page are
+    dropped instead of written (the COW-aware scatter).  Prefix-resumed
+    sessions pass ``warm_writable_mask`` so cache-seeded pages stay
+    immutable by construction."""
     write = jax.vmap(dec.write_tail_at, in_axes=(0, 0, None))
-    scatter = jax.vmap(dec.paged_scatter, in_axes=(0, 0, 0, None))
+    scatter = jax.vmap(dec.paged_scatter, in_axes=(0, 0, 0, None, None))
     scatter_sh = jax.vmap(dec.paged_scatter_sharded,
-                          in_axes=(0, 0, 0, None))
+                          in_axes=(0, 0, 0, None, None))
     out = []
     for c, u in zip(caches, updates):
         if "k" in u and "pt" in c:
             sc = scatter_sh if c["pt"].ndim == 4 else scatter
-            out.append({"k": sc(c["k"], u["k"], c["pt"], doc_len),
-                        "v": sc(c["v"], u["v"], c["pt"], doc_len),
+            out.append({"k": sc(c["k"], u["k"], c["pt"], doc_len, writable),
+                        "v": sc(c["v"], u["v"], c["pt"], doc_len, writable),
                         "pt": c["pt"]})
         elif "k" in u and "k" in c:
             out.append({"k": write(c["k"], u["k"], doc_len),

@@ -71,6 +71,13 @@ class ServeConfig:
         dense-equivalent default, resolved at run() time).
       * ``doc_capacity`` / ``tail_capacity`` — static per-slot bounds
         (None = max over the submitted requests).
+      * ``prefix_cache`` — ``"on"`` enables hash-addressed prefix page
+        sharing on the paged pool (copy-on-write, retired pages parked
+        in a bounded LRU); ``"off"`` (default) keeps the no-sharing
+        path, which stays the bit-exactness oracle.
+      * ``prefix_cache_pages`` — LRU retention budget in pages (how many
+        refcount-0 pages may stay addressable instead of freeing); None
+        = the whole pool may be retained.
 
     Launcher-owned field:
       * ``max_new`` — default per-request token budget.
@@ -86,6 +93,8 @@ class ServeConfig:
     num_pages: Optional[int] = None
     doc_capacity: Optional[int] = None
     tail_capacity: Optional[int] = None
+    prefix_cache: str = "off"
+    prefix_cache_pages: Optional[int] = None
     max_new: int = 8
 
     def __post_init__(self) -> None:
@@ -127,6 +136,23 @@ class ServeConfig:
         if self.tail_capacity is not None and self.tail_capacity < 1:
             raise ValueError(
                 f"tail_capacity must be >= 1, got {self.tail_capacity}")
+        if self.prefix_cache not in ("on", "off"):
+            raise ValueError(
+                f"prefix_cache must be 'on' or 'off', got "
+                f"{self.prefix_cache!r}")
+        if self.prefix_cache == "on" and self.cache_layout != "paged":
+            raise ValueError(
+                "prefix_cache='on' shares pages of the paged pool; it "
+                "requires cache_layout='paged'")
+        if self.prefix_cache_pages is not None:
+            if self.prefix_cache != "on":
+                raise ValueError(
+                    "prefix_cache_pages bounds the prefix-cache LRU; it "
+                    "requires prefix_cache='on'")
+            if self.prefix_cache_pages < 0:
+                raise ValueError(
+                    f"prefix_cache_pages must be >= 0, got "
+                    f"{self.prefix_cache_pages}")
         if self.max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {self.max_new}")
 

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Any, Optional
 
 import jax
@@ -42,6 +43,12 @@ from repro.serving import sampling as sampling_lib
 from repro.serving.config import (PrefillCapabilities, ServeConfig,
                                   resolve_config)
 from repro.serving.sampling import SamplingParams
+
+
+# Passing-block cache retention: finalized compressed blocks are small
+# ((nb, 1, lp, KV, D) per non-window layer) but device-resident, so the
+# per-engine cache is bounded LRU rather than unbounded.
+_PASSING_CACHE_CAP = 64
 
 
 @dataclasses.dataclass
@@ -139,6 +146,15 @@ class Engine:
                                                    strategy="full")
         else:
             self._plain_rctx = rctx
+        # prefix caching (scheduler-driven): finalized compressed passing
+        # blocks keyed by (doc-prefix hash chain, layout geometry, query)
+        # — cache_lib.token_hash_cuts with the augmented seed — so a warm
+        # APB admission skips the Locret top-k recompute and the ppermute
+        # hand-offs for cached blocks.  Bounded LRU; counters feed the
+        # scheduler stats and benchmarks/bench_prefix_cache.py.
+        self._passing_cache: "OrderedDict[bytes, tuple]" = OrderedDict()
+        self.passing_cache_hits = 0
+        self.passing_cache_stores = 0
         if jit:
             self._prefill = jax.jit(
                 lambda p, d, q: self.model.prefill_step(p, d, q, rctx))
@@ -252,14 +268,16 @@ class Engine:
     # Chunked prefill
     # ------------------------------------------------------------------
     def _prefill_chunk_impl(self, params, chunk, positions, caches,
-                            doc_len):
+                            doc_len, writable=None):
         """One doc chunk: attend (cache prefix + causal self, sliding
         windows applied per layer), append the chunk's KV into the doc
-        cache at ``doc_len``."""
+        cache at ``doc_len``.  ``writable`` is the optional COW guard
+        mask for prefix-resumed sessions (cache.append_doc_chunk)."""
         _, updates = self.model.chunk_step(params, chunk, positions, caches,
                                            self.rctx, valid_len=doc_len,
                                            use_window=True)
-        return cache_lib.append_doc_chunk(caches, updates, doc_len)
+        return cache_lib.append_doc_chunk(caches, updates, doc_len,
+                                          writable)
 
     def _chunk_query_impl(self, params, query, positions, caches, doc_len):
         """The query pass as the final chunk: same step, but the KV
@@ -283,7 +301,7 @@ class Engine:
         return updates
 
     def _aug_chunk_impl(self, params, chunk, positions, caches, doc_len,
-                        anchor, passing, topk, scal):
+                        anchor, passing, topk, scal, writable=None):
         """One local-block chunk of the augmented prefill: attend to the
         anchor (valid for hosts > 0), earlier hosts' compressed passing
         blocks, this host's local prefix and causally to itself; append
@@ -293,7 +311,8 @@ class Engine:
         _, updates = self.model.chunk_step(params, chunk, positions, caches,
                                            self.rctx, valid_len=doc_len,
                                            use_window=True, aug=aug)
-        new_caches = cache_lib.append_doc_chunk(caches, updates, doc_len)
+        new_caches = cache_lib.append_doc_chunk(caches, updates, doc_len,
+                                                writable)
         new_topk = []
         for st, u in zip(topk, updates):
             if st and "score" in u:
@@ -326,7 +345,7 @@ class Engine:
 
     # ------------------------------------ pipelined mesh (star/apb) chunks
     def _mesh_chunk_impl(self, params, chunk, positions, caches, doc_len,
-                         anchor, passing, topk, scal):
+                         anchor, passing, topk, scal, writable=None):
         """One local-block chunk of the *pipelined mesh* prefill: the
         same augmented chunk computation as ``_aug_chunk_impl``, but the
         passing buffers and running top-k carry a leading host axis
@@ -347,7 +366,8 @@ class Engine:
                                            caches, self.rctx,
                                            valid_len=doc_len,
                                            use_window=True, aug=aug)
-        new_caches = cache_lib.append_doc_chunk(caches, updates, doc_len)
+        new_caches = cache_lib.append_doc_chunk(caches, updates, doc_len,
+                                                writable)
         active = jnp.arange(self.rctx.layout.n_hosts) == h
         new_topk = []
         for st, u in zip(topk, updates):
@@ -417,6 +437,36 @@ class Engine:
                        jax.tree.map(full_spec, passing)),
             check_rep=False)  # repro-lint: disable=SHD010 -- finalize outputs are deliberately per-shard (sharded out_specs); cross-host equivalence pinned by distributed check 11
         return fn(topk, passing, host)
+
+    # -------------------------------------------- passing-block cache
+    def passing_cache_has(self, key: bytes) -> bool:
+        """Planning probe: is a finalized compressed block cached under
+        ``key``?  No counter bump — the scheduler probes several blocks
+        while sizing the warm prefix; only injections count as hits."""
+        return key in self._passing_cache
+
+    def passing_cache_get(self, key: bytes):
+        """Fetch a cached finalized block (per-layer tuple of {} or
+        {"k","v"} (nb, 1, lp, KV, D)) for injection into a warm
+        augmented session; bumps the LRU position and the hit counter."""
+        entry = self._passing_cache.get(key)
+        if entry is not None:
+            self._passing_cache.move_to_end(key)
+            self.passing_cache_hits += 1
+        return entry
+
+    def passing_cache_store(self, key: bytes, entry) -> None:
+        """Capture a freshly finalized block (cold run with prefix
+        hints): keyed by the rolling hash of the doc prefix through the
+        block's end — seeded with the layout geometry and query tokens,
+        so a hit implies the cached block is bit-identical to what this
+        admission would recompute."""
+        if key not in self._passing_cache:
+            self.passing_cache_stores += 1
+        self._passing_cache[key] = entry
+        self._passing_cache.move_to_end(key)
+        while len(self._passing_cache) > _PASSING_CACHE_CAP:
+            self._passing_cache.popitem(last=False)
 
     @property
     def paged(self) -> bool:
@@ -504,7 +554,8 @@ class Engine:
         return self.prefill_capabilities.supported
 
     def start_prefill(self, doc, query, chunk_size: Optional[int] = None,
-                      doc_capacity: Optional[int] = None):
+                      doc_capacity: Optional[int] = None,
+                      prefix: Optional[cache_lib.PrefixHints] = None):
         """The one prefill entry point: every path — monolithic, plain
         chunked, augmented host-loop, pipelined mesh — comes back as a
         session with the same contract (``chunks_left`` / ``step()`` /
@@ -517,7 +568,14 @@ class Engine:
         the session API).  With a chunk size, the capability report
         gates and routes: layout-matching requests on an augmented
         engine stream through the host-loop or pipelined-mesh state
-        machine, everything else through the plain chunk path."""
+        machine, everything else through the plain chunk path.
+
+        ``prefix`` (scheduler-computed ``cache_lib.PrefixHints``) warm-
+        starts a chunked session: its mini-pool is seeded with the
+        shared prefix pages and the chunk plan resumes at the first cold
+        row — the prefix-cache hit's compute savings.  Cold augmented
+        sessions also use the hints' ``block_keys`` to capture their
+        finalized passing blocks for later admissions."""
         if chunk_size is None:
             return MonolithicPrefill(self, doc, query,
                                      doc_capacity=doc_capacity)
@@ -531,11 +589,13 @@ class Engine:
         if self._aug_layout and not self._plain_request(doc, query):
             if self._mesh_aug:
                 return MeshChunkedPrefill(self, doc, query, chunk_size,
-                                          doc_capacity=doc_capacity)
+                                          doc_capacity=doc_capacity,
+                                          prefix=prefix)
             return AugmentedChunkedPrefill(self, doc, query, chunk_size,
-                                           doc_capacity=doc_capacity)
+                                           doc_capacity=doc_capacity,
+                                           prefix=prefix)
         return ChunkedPrefill(self, doc, query, chunk_size,
-                              doc_capacity=doc_capacity)
+                              doc_capacity=doc_capacity, prefix=prefix)
 
     def start_chunked_prefill(self, doc, query, chunk_size: int,
                               doc_capacity: Optional[int] = None
@@ -777,6 +837,7 @@ class MonolithicPrefill:
         self._doc_capacity = doc_capacity
         self._result = None
         self._next = 0
+        self.chunks_skipped = 0
         self.prefill_time_s = 0.0
 
     @property
@@ -833,7 +894,8 @@ class ChunkedPrefill:
     """
 
     def __init__(self, engine: Engine, doc, query, chunk_size: int,
-                 doc_capacity: Optional[int] = None):
+                 doc_capacity: Optional[int] = None,
+                 prefix: Optional[cache_lib.PrefixHints] = None):
         caps = engine.prefill_capabilities
         if not caps.supported:
             raise ValueError(
@@ -851,9 +913,39 @@ class ChunkedPrefill:
         if cap < self.n:
             raise ValueError(
                 f"doc capacity {cap} < document length {self.n}")
-        self._plan = list(cache_lib.chunk_plan(self.n, chunk_size))
+        self._prefix = prefix
+        self.resumed_rows = prefix.rows if prefix is not None else 0
+        if self.resumed_rows:
+            if not engine.paged:
+                raise ValueError(
+                    "prefix warm-start needs a paged engine — the warm "
+                    "rows are shared pool pages")
+            if (self.resumed_rows % engine.page_size
+                    or self.resumed_rows > self.n):
+                raise ValueError(
+                    f"warm rows {self.resumed_rows} must be page-aligned "
+                    f"(page_size={engine.page_size}) and <= the document "
+                    f"length {self.n}")
+        # resume mid-plan at the first cold chunk: the warm prefix never
+        # re-runs.  Prefer the *suffix of the cold plan* over a fresh
+        # ladder of the remainder — identical chunk boundaries mean the
+        # tail's LSE-merge decomposition (and so its KV bits) match a
+        # cold run exactly; the scheduler aligns its warm rows to a cold
+        # boundary so the suffix always covers.  A caller-supplied
+        # off-boundary resume falls back to a ladder of the remainder.
+        full = cache_lib.chunk_plan(self.n, chunk_size)
+        suffix = [(off, t) for off, t in full
+                  if off >= self.resumed_rows]
+        if sum(t for _, t in suffix) == self.n - self.resumed_rows:
+            self._plan = suffix
+        else:
+            rem = self.n - self.resumed_rows
+            self._plan = [(self.resumed_rows + off, t)
+                          for off, t in cache_lib.chunk_plan(rem,
+                                                             chunk_size)]
+        self.chunks_skipped = len(full) - len(self._plan)
         self._next = 0
-        self.doc_len = 0
+        self.doc_len = self.resumed_rows
         self.caches = cache_lib.alloc_doc_caches(
             engine.cfg, self.batch, cap,
             dtype=engine.params["embed"].dtype,
@@ -863,6 +955,17 @@ class ChunkedPrefill:
             self.caches = engine._place_paged(self.caches)
         elif engine.cache_shards > 1:
             self.caches = engine._place_dense(self.caches)
+        self._writable = None
+        if self.resumed_rows:
+            warm_pages = self.resumed_rows // engine.page_size
+            if prefix.page_kv is not None:
+                self.caches = cache_lib.seed_warm_pages(
+                    self.caches, prefix.page_kv,
+                    n_shards=engine.cache_shards)
+            # COW-aware scatter guard: the seeded pages are copies of
+            # shared pool pages — no resumed chunk may overwrite them
+            self._writable = cache_lib.warm_writable_mask(
+                self.caches, warm_pages, n_shards=engine.cache_shards)
         self.prefill_time_s = 0.0
 
     @property
@@ -890,7 +993,8 @@ class ChunkedPrefill:
         positions = (self.lq + off + jnp.arange(t))[None]
         doc_len = jnp.full((self.batch,), self.doc_len, jnp.int32)
         self.caches = self.engine._prefill_chunk(
-            self.engine.params, chunk, positions, self.caches, doc_len)
+            self.engine.params, chunk, positions, self.caches, doc_len,
+            self._writable)
         if sync:
             jax.block_until_ready(self.caches)
         self.prefill_time_s += time.perf_counter() - t0
@@ -958,7 +1062,8 @@ class AugmentedChunkedPrefill(ChunkedPrefill):
     """
 
     def __init__(self, engine: Engine, doc, query, chunk_size: int,
-                 doc_capacity: Optional[int] = None):
+                 doc_capacity: Optional[int] = None,
+                 prefix: Optional[cache_lib.PrefixHints] = None):
         lay = engine.rctx.layout
         if doc.shape[1] != lay.n_doc or query.shape[1] != lay.lq:
             raise ValueError(
@@ -967,8 +1072,13 @@ class AugmentedChunkedPrefill(ChunkedPrefill):
                 f"{doc.shape[1]} / query length {query.shape[1]} — "
                 f"mismatching requests are served through the plain path "
                 f"(Engine.start_chunked_prefill dispatches)")
+        if prefix is not None and prefix.rows % lay.lb:
+            raise ValueError(
+                f"augmented warm-start resumes at block boundaries: warm "
+                f"rows {prefix.rows} must be a multiple of the local "
+                f"block length {lay.lb} (the scheduler aligns)")
         super().__init__(engine, doc, query, chunk_size,
-                         doc_capacity=doc_capacity)
+                         doc_capacity=doc_capacity, prefix=prefix)
         self.lay = lay
         self.lp_eff = (min(lay.lp, lay.lb)
                        if engine.rctx.strategy == "apb" else 0)
@@ -1011,13 +1121,72 @@ class AugmentedChunkedPrefill(ChunkedPrefill):
         # each host's local block in power-of-two chunks; the last chunk
         # of a block triggers the compression finalize ("communication").
         # Derived from mesh_wave_schedule so the host-loop and pipelined
-        # mesh paths can never disagree on the order of operations.
-        plan = [("anchor",)]
-        for wave in mesh_wave_schedule(lay.n_hosts, lay.lb, chunk_size):
+        # mesh paths can never disagree on the order of operations.  A
+        # warm-started session drops the first ``rows // lb`` waves (the
+        # cached blocks — their pages and passing blocks are injected,
+        # not recomputed); a fully warm session skips the anchor too
+        # (nothing left consumes it).
+        self._warm_hosts = self.resumed_rows // lay.lb
+        plan = ([("anchor",)] if self._warm_hosts < lay.n_hosts else [])
+        waves = mesh_wave_schedule(lay.n_hosts, lay.lb, chunk_size)
+        for wave in waves[self._warm_hosts:]:
             for h, off, t, last in wave:
                 plan.append(("local", h, off, t, last))
         self._plan = plan
         self._next = 0
+        self.chunks_skipped = (1 + sum(len(w) for w in waves)) - len(plan)
+        self._block_keys = (prefix.block_keys if prefix is not None
+                            else None)
+        self._seed_cached_passing()
+
+    def _seed_cached_passing(self) -> None:
+        """Inject cached compressed passing blocks (hints from a prior
+        identical-prefix run): write block h's rows [h*lp, (h+1)*lp)
+        into the passing buffers up front, so the skipped waves'
+        hand-offs never run yet every cold host sees exactly what it
+        would have received.  ``pass_valid`` masking governs visibility
+        exactly as it does for live blocks — on the mesh layout (host
+        axis at position 1) the rows broadcast into every shard's
+        receive buffer."""
+        if (self._prefix is None or not self._prefix.passing
+                or self._passing is None):
+            return
+        lp = self.lp_eff
+        new = []
+        for i, pb in enumerate(self._passing):
+            if not pb or "k" not in pb:
+                new.append(pb)
+                continue
+            cur = dict(pb)
+            for h, entry in sorted(self._prefix.passing.items()):
+                e = entry[i]
+                if not e:
+                    continue
+                lo = h * lp
+                for kk in ("k", "v"):
+                    if cur[kk].ndim == 6:        # mesh: (nb, H, B, W, ...)
+                        cur[kk] = cur[kk].at[:, :, :, lo:lo + lp].set(
+                            e[kk].astype(cur[kk].dtype)[:, None])
+                    else:                        # host loop: (nb, B, W, ...)
+                        cur[kk] = cur[kk].at[:, :, lo:lo + lp].set(
+                            e[kk].astype(cur[kk].dtype))
+            new.append(cur)
+        self._passing = tuple(new)
+
+    def _capture_passing(self, h: int) -> None:
+        """Cold block ``h`` just finalized: capture its compressed rows
+        into the engine's passing-block cache under the scheduler's key
+        (batch-1 sessions only — the scheduler's admission unit).  Block
+        ``n_hosts - 1`` is never captured: no later host consumes it, and
+        the one-hop mesh hand-off never stores it anywhere."""
+        if (self._block_keys is None or self._passing is None
+                or self.batch != 1 or h + 1 >= self.lay.n_hosts):
+            return
+        lo, hi = h * self.lp_eff, (h + 1) * self.lp_eff
+        entry = tuple(
+            ({k: pb[k][:, :, lo:hi] for k in ("k", "v")}
+             if pb and "k" in pb else {}) for pb in self._passing)
+        self.engine.passing_cache_store(self._block_keys[h], entry)
 
     def step(self, sync: bool = True) -> int:
         """Process the next plan entry (anchor tick or one local chunk);
@@ -1047,13 +1216,15 @@ class AugmentedChunkedPrefill(ChunkedPrefill):
             }
             self.caches, self._topk = eng._aug_chunk(
                 eng.params, chunk, positions, self.caches, doc_len,
-                self._anchor, self._passing, self._topk, scal)
+                self._anchor, self._passing, self._topk, scal,
+                self._writable)
             self.doc_len += t
             if last and self._passing is not None:
                 pass_off = jnp.full((self.batch,), h * self.lp_eff,
                                     jnp.int32)
                 self._passing, self._topk = eng._aug_finalize(
                     self._topk, self._passing, pass_off)
+                self._capture_passing(h)
             if sync:
                 jax.block_until_ready(self.caches)
         self.prefill_time_s += time.perf_counter() - t0
@@ -1096,9 +1267,10 @@ class MeshChunkedPrefill(AugmentedChunkedPrefill):
     """
 
     def __init__(self, engine: Engine, doc, query, chunk_size: int,
-                 doc_capacity: Optional[int] = None):
+                 doc_capacity: Optional[int] = None,
+                 prefix: Optional[cache_lib.PrefixHints] = None):
         super().__init__(engine, doc, query, chunk_size,
-                         doc_capacity=doc_capacity)
+                         doc_capacity=doc_capacity, prefix=prefix)
         lay = self.lay
         cfg = engine.cfg
         dtype = engine.params["embed"].dtype
@@ -1126,6 +1298,9 @@ class MeshChunkedPrefill(AugmentedChunkedPrefill):
                 for kind in cfg.block_pattern)
             self._passing = engine._place_stream(self._passing)
             self._topk = engine._place_stream(self._topk)
+            # the parent seeded the host-loop buffers we just replaced:
+            # re-inject the cached blocks into the per-shard layout
+            self._seed_cached_passing()
         self._waves = 0
 
     @property
@@ -1134,6 +1309,20 @@ class MeshChunkedPrefill(AugmentedChunkedPrefill):
         unit) — what RequestResult.prefill_waves reports on a mesh
         engine."""
         return self._waves
+
+    def _capture_passing(self, h: int) -> None:
+        """Mesh twin of the host-loop capture: after the one-hop
+        hand-off only shard ``h + 1`` holds block ``h`` (the producing
+        shard's buffer reverts — nobody else consumes the block), so
+        the capture slices that shard's receive buffer."""
+        if (self._block_keys is None or self._passing is None
+                or self.batch != 1 or h + 1 >= self.lay.n_hosts):
+            return
+        lo, hi = h * self.lp_eff, (h + 1) * self.lp_eff
+        entry = tuple(
+            ({k: pb[k][:, h + 1, :, lo:hi] for k in ("k", "v")}
+             if pb and "k" in pb else {}) for pb in self._passing)
+        self.engine.passing_cache_store(self._block_keys[h], entry)
 
     def step(self, sync: bool = True) -> int:
         """Process the next plan entry (anchor tick or one local chunk
@@ -1164,12 +1353,14 @@ class MeshChunkedPrefill(AugmentedChunkedPrefill):
             }
             self.caches, self._topk = eng._mesh_chunk(
                 eng.params, chunk, positions, self.caches, doc_len,
-                self._anchor, self._passing, self._topk, scal)
+                self._anchor, self._passing, self._topk, scal,
+                self._writable)
             self.doc_len += t
             if last:
                 if self._passing is not None:
                     self._topk, self._passing = eng._mesh_finalize(
                         self._topk, self._passing, jnp.int32(h))
+                    self._capture_passing(h)
                 self._waves += 1
             if sync:
                 jax.block_until_ready(self.caches)

@@ -73,6 +73,24 @@ so a half-granted admission can never deadlock another).  Admission
 memory is O(doc length / shards) per device; the dense mesh layout
 stays the bit-exactness oracle (tests/distributed_checks.py).
 
+With ``prefix_cache="on"`` (paged layout only) the pool is
+content-addressed: full pages are keyed by a rolling hash chain over the
+document tokens as admissions install them, a warm admission maps the
+already-resident prefix pages zero-copy (refcount bump, no KV recompute
+— on a mesh the round-robin stripe is preserved because the logical
+index picks the shard) and resumes its chunked prefill at the first
+page-aligned chunk boundary past the warm rows.  Retiring refcount-0
+pages linger in a ``prefix_cache_pages``-bounded LRU instead of being
+scrubbed; decode writes copy-on-write out of shared pages
+(serving.cache.ensure_private / cow_unshare_pages), so shared history
+is immutable.  Augmented engines gate sharing on anchor coverage and
+additionally cache finalized compressed passing blocks per (prefix
+digest, layout geometry) — see docs/architecture.md.  The counters
+``prefix_queries`` / ``prefix_hits`` / ``prefix_hit_pages`` /
+``prefill_chunks_skipped`` report what sharing did;
+``prefix_cache="off"`` (default) is the no-sharing bit-exactness oracle
+(tests/test_prefix_cache.py).
+
 Caveat — MoE architectures: capacity-based expert dispatch couples all
 batch rows (any token competes for per-expert capacity with every other
 row, including empty slots' pad tokens), so scheduled output is only
@@ -93,7 +111,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 # one admission's page reservation: flat ids (single-host pool) or
 # per-shard global-id lists (mesh-sharded pool)
@@ -180,11 +198,13 @@ class _Admission:
     """One in-flight chunked admission bound to a reserved slot (and, on
     a paged engine, to its reserved pool pages)."""
 
-    def __init__(self, req: Request, cp, order: int, pages=None):
+    def __init__(self, req: Request, cp, order: int, pages=None,
+                 prefix=None):
         self.req = req
         self.cp = cp                   # engine.ChunkedPrefill
         self.order = order             # FIFO tiebreak for SRPT
         self.pages = pages             # reserved pool pages (paged only)
+        self.prefix = prefix           # prefix-sharing plan (dict) or None
 
 
 class Scheduler:
@@ -270,6 +290,15 @@ class Scheduler:
         # bench_paged_cache measures)
         self._paged = engine.paged
         self._shards = engine.cache_shards if engine.paged else 1
+        # prefix-cache dispatch gate: hash-addressed page sharing on the
+        # paged pool (config.prefix_cache).  The sharing-off path below
+        # stays byte-for-byte the oracle — every `if self._prefix`
+        # branch adds behind it, never replaces it.
+        if config.prefix_cache == "on" and not engine.paged:
+            raise ValueError(
+                "prefix_cache='on' shares pages of the paged pool; this "
+                "engine uses the dense cache layout")
+        self._prefix = config.prefix_cache == "on"
         self._allocator = None
         # a grant is a flat List[int] of page ids (single-host pool) or
         # per-shard List[List[int]] of global ids (sharded pool) — the
@@ -277,6 +306,14 @@ class Scheduler:
         self._slot_pages: Dict[int, PageGrant] = {}
         self.peak_active = 0
         self.admission_deferrals = 0
+        # prefix-cache stats (bench_prefix_cache reports these):
+        # queries = planned admissions, hits = admissions whose head
+        # pages were already resident, hit_pages = pages mapped
+        # zero-copy, chunks_skipped = prefill session steps never run
+        self.prefix_queries = 0
+        self.prefix_hits = 0
+        self.prefix_hit_pages = 0
+        self.prefill_chunks_skipped = 0
         self._submitted = 0
         self._run_t0: Optional[float] = None
 
@@ -321,11 +358,20 @@ class Scheduler:
                     f"num_pages ({self.num_pages}) must be a multiple of "
                     f"the cache shard count ({self._shards}) — the pool "
                     f"shards evenly over the mesh cache axes")
+            # sharing off -> LRU budget 0: released pages go straight to
+            # the free list and the allocator behaves exactly as before
+            lru = 0
+            if self._prefix:
+                lru = (self.config.prefix_cache_pages
+                       if self.config.prefix_cache_pages is not None
+                       else self.num_pages)
             if self._shards == 1:
-                self._allocator = cache_lib.PageAllocator(self.num_pages)
+                self._allocator = cache_lib.PageAllocator(
+                    self.num_pages, prefix_cache_pages=lru)
             else:
                 self._allocator = cache_lib.ShardedPageAllocator(
-                    self.num_pages, self._shards)
+                    self.num_pages, self._shards,
+                    prefix_cache_pages=lru)
 
     def _pages_needed(self, req: Request) -> int:
         return cache_lib.pages_for(_doc_seq_len(req.doc),
@@ -374,6 +420,239 @@ class Scheduler:
             self.admission_deferrals += 1
         return pages
 
+    # ------------------------------------------------- prefix sharing
+    def _prefix_seed(self, req: Request) -> Tuple[bytes, bool]:
+        """Hash-chain seed for a request's page content.  The KV bits a
+        page holds are a function of more than the doc tokens: the plain
+        path folds in the query length (positions start at lq) and the
+        augmented path the whole layout geometry *and* query tokens (the
+        anchor embeds them, every host's hidden states attend it), so
+        those inputs are digested into the seed — two admissions share a
+        page only when everything that shaped its bits matches.  The
+        chunk size rides along too: one scheduler's plans all use one
+        ladder, and cross-decomposition reuse is never assumed exact."""
+        eng = self.engine
+        lq = int(req.query.shape[-1])
+        cs = -1 if self.prefill_chunk is None else self.prefill_chunk
+        doc_b = _doc_batched(req.doc)
+        query_b = req.query if req.query.ndim == 2 else req.query[None]
+        aug = (eng._aug_layout
+               and not eng._plain_request(doc_b, query_b))
+        if not aug:
+            return cache_lib.prefix_hash_seed(b"plain", lq, cs), False
+        lay = eng.rctx.layout
+        lp_eff = (min(lay.lp, lay.lb)
+                  if eng.rctx.strategy == "apb" else 0)
+        seed = cache_lib.prefix_hash_seed(
+            b"aug", eng.rctx.strategy, lay.n_doc, lay.lq, lay.n_hosts,
+            lay.la, lay.lb, lp_eff, cs, np.asarray(query_b).reshape(-1))
+        return seed, True
+
+    def _prefix_plan(self, req: Request) -> Optional[dict]:
+        """Plan one admission against the prefix index: hash the doc's
+        full pages (rolling chain), walk consecutive index hits from
+        logical page 0, and decide how many rows the prefill session may
+        skip.  Returns None for unhashable docs (embeds); otherwise a
+        dict with the warm physical pages, per-page hashes (None for the
+        partial tail page), the aligned ``skip`` row count and — on the
+        augmented path — the per-host passing-block cache keys."""
+        if not _doc_is_tokens(req.doc):
+            return None
+        eng = self.engine
+        ps = eng.page_size
+        doc = np.asarray(_doc_batched(req.doc)).reshape(-1)
+        n = doc.shape[0]
+        logical = cache_lib.pages_for(n, ps)
+        seed, aug = self._prefix_seed(req)
+        full = n // ps
+        hashes: List[Optional[bytes]] = list(cache_lib.token_hash_cuts(
+            doc, seed, [(j + 1) * ps for j in range(full)]))
+        hashes += [None] * (logical - full)
+        warm_phys: List[int] = []
+        for j in range(full):
+            p = (self._allocator.lookup(hashes[j])
+                 if self._shards == 1
+                 else self._allocator.lookup(hashes[j], j))
+            if p is None:
+                break
+            warm_phys.append(p)
+        block_keys = None
+        if aug:
+            lay = eng.rctx.layout
+            # a local block's KV rows — and the compressed passing entry
+            # distilled from them — depend on the anchor tokens
+            # doc[:la_doc] (the query half of the anchor slot is pinned
+            # by the hash seed), so each block key must cover at least
+            # that prefix, and warm pages are only shareable once the
+            # matched prefix pins the anchor content: hash equality over
+            # fewer rows would not distinguish docs that diverge inside
+            # the anchor
+            block_keys = cache_lib.token_hash_cuts(
+                doc, seed, [max(lay.la_doc, (h + 1) * lay.lb)
+                            for h in range(lay.n_hosts)])
+            if warm_phys and len(warm_phys) * ps < lay.la_doc:
+                warm_phys = []
+        skip = self._prefix_skip_rows(req, len(warm_phys), aug,
+                                      block_keys, n)
+        return {"phys": warm_phys, "hashes": hashes, "skip": skip,
+                "pages": logical, "block_keys": block_keys}
+
+    def _prefix_skip_rows(self, req: Request, warm_pages: int, aug: bool,
+                          block_keys, n: int) -> int:
+        """Rows the prefill session may resume past, given ``warm_pages``
+        consecutive index hits.  Monolithic sessions and Mamba stacks
+        never skip (the whole pass / the SSM carry is indivisible —
+        their hits still dedup pages at install).  The plain chunked
+        path aligns down to a cold-plan chunk boundary so the resumed
+        suffix decomposes identically to a cold run; the augmented path
+        aligns to local-block boundaries and additionally requires every
+        skipped block's compressed passing entry to be cached (a cold
+        host attends all earlier hosts' blocks)."""
+        eng = self.engine
+        ps = eng.page_size
+        if self.prefill_chunk is None or eng.cfg.has_mamba:
+            return 0
+        warm_rows = warm_pages * ps
+        if not aug:
+            bounds = [0] + [off + t for off, t in cache_lib.chunk_plan(
+                n, self.prefill_chunk)]
+            return max(b for b in bounds
+                       if b <= warm_rows and b % ps == 0)
+        lay = eng.rctx.layout
+        lb, n_hosts = lay.lb, lay.n_hosts
+        lp_eff = (min(lay.lp, lay.lb)
+                  if eng.rctx.strategy == "apb" else 0)
+        j = min(warm_rows // lb, n_hosts)
+        while j > 0 and (j * lb) % ps:
+            j -= 1
+        if lp_eff > 0 and 0 < j < n_hosts:
+            m = 0
+            while m < j and eng.passing_cache_has(block_keys[m]):
+                m += 1
+            j = min(j, m)
+            while j > 0 and (j * lb) % ps:
+                j -= 1
+        return j * lb
+
+    def _one_page_grant(self, gid: int) -> PageGrant:
+        """A single page in the matching grant shape (flat list or
+        per-shard global-id lists)."""
+        if self._shards == 1:
+            return [gid]
+        pps = self.num_pages // self._shards
+        grant: List[List[int]] = [[] for _ in range(self._shards)]
+        grant[gid // pps].append(gid)
+        return grant
+
+    def _grant_of(self, phys: List[int]) -> PageGrant:
+        """Logical-order physical ids -> the allocator's grant shape
+        (shard ``s`` holds logical pages ``j % S == s`` in order)."""
+        if self._shards == 1:
+            return list(phys)
+        return [[phys[j] for j in range(len(phys))
+                 if j % self._shards == s]
+                for s in range(self._shards)]
+
+    def _reserve_prefix(self, req: Request):
+        """Prefix-sharing admission reservation: pin the warm pages with
+        an extra reference *first* (``share``), then reserve only the
+        cold tail — ``reserve_tail`` may evict LRU pages to top up its
+        free list, and the pin is what stops it from reclaiming this
+        very admission's warm prefix.  Returns ``(grant, plan, hints)``;
+        an exhausted pool un-shares the pins and defers as usual."""
+        rec = self._prefix_plan(req)
+        if rec is None:              # embed doc: nothing to hash
+            return self._reserve_pages(req), None, None
+        warm_phys = rec["phys"]
+        warm = len(warm_phys)
+        warm_grant = self._grant_of(warm_phys)
+        if warm:
+            self._allocator.share(warm_grant)
+        cold = self._allocator.reserve_tail(rec["pages"], warm)
+        if cold is None:
+            if warm:
+                self._allocator.release(warm_grant)
+            self.admission_deferrals += 1
+            return None, None, None
+        if self._shards == 1:
+            phys = warm_phys + cold
+        else:
+            tails = [list(g) for g in cold]
+            phys = list(warm_phys) + [
+                tails[j % self._shards].pop(0)
+                for j in range(warm, rec["pages"])]
+        rec["phys"] = phys
+        rec["copy"] = [j >= warm for j in range(rec["pages"])]
+        self.prefix_queries += 1
+        if warm:
+            self.prefix_hits += 1
+            self.prefix_hit_pages += warm
+        return self._grant_of(phys), rec, self._prefix_hints(rec)
+
+    def _prefix_hints(self, rec: dict) -> Optional[cache_lib.PrefixHints]:
+        """Session warm-start hints for a planned admission: the warm
+        pages' KV gathered out of the shared pool, plus any cached
+        compressed passing blocks for the skipped hosts.  Cold augmented
+        admissions still get their ``block_keys`` — that is how their
+        freshly finalized blocks are captured for the next admission."""
+        if self.prefill_chunk is None:
+            return None              # monolithic sessions take no hints
+        skip = rec["skip"]
+        if not skip:
+            if rec["block_keys"] is None:
+                return None
+            return cache_lib.PrefixHints(block_keys=rec["block_keys"])
+        eng = self.engine
+        warm_n = skip // eng.page_size
+        page_kv = cache_lib.gather_pool_pages(self.state.caches,
+                                              rec["phys"][:warm_n])
+        passing = {}
+        if rec["block_keys"] is not None:
+            lay = eng.rctx.layout
+            warm_hosts = skip // lay.lb
+            if warm_hosts < lay.n_hosts:
+                # every cold host attends all skipped blocks; a fully
+                # warm admission has no cold host left to consume any
+                for h in range(warm_hosts):
+                    entry = eng.passing_cache_get(rec["block_keys"][h])
+                    if entry is not None:
+                        passing[h] = entry
+        return cache_lib.PrefixHints(rows=skip, page_kv=page_kv,
+                                     passing=passing,
+                                     block_keys=rec["block_keys"])
+
+    def _install_shared(self, st, req_caches, slot: int, rec: dict):
+        """Sharing-aware admission paste: register the admission's cold
+        full pages in the prefix index (content already verified by the
+        rolling hash), dedup against any page that registered the same
+        hash first (share the canonical, release the duplicate, skip the
+        copy), check sharded physical ids still respect the round-robin
+        stripe, then map + copy through ``install_doc_pages``.  Returns
+        the pasted caches and the final (post-dedup) grant."""
+        phys = list(rec["phys"])
+        copy = list(rec["copy"])
+        for j in range(len(phys)):
+            if not copy[j] or rec["hashes"][j] is None:
+                continue
+            canonical = self._allocator.register(phys[j],
+                                                 rec["hashes"][j])
+            if canonical != phys[j]:
+                # a concurrent admission registered identical content
+                # first: map the canonical page zero-copy, hand the
+                # duplicate back
+                self._allocator.share(self._one_page_grant(canonical))
+                self._allocator.release(self._one_page_grant(phys[j]))
+                phys[j] = canonical
+                copy[j] = False
+        if self._shards > 1:
+            from repro.parallel import sharding as sharding_lib
+            sharding_lib.check_page_stripe(
+                phys, self._shards, self.num_pages // self._shards)
+        caches = cache_lib.install_doc_pages(
+            st.caches, req_caches, slot, phys, copy,
+            self.engine.page_size)
+        return caches, self._grant_of(phys)
+
     def _alloc_state(self, req_caches, req_tails) -> dec.DecodeState:
         """Zero slot buffers shaped after one padded request, widened to
         ``n_slots`` on the batch axis (axis 1 of the block-stacked
@@ -412,7 +691,7 @@ class Scheduler:
     def _install(self, req: Request, slot: int, logits0, caches, tails,
                  tail_fill: int, doc_len: int, t_prefill: float,
                  pages: Optional[PageGrant] = None,
-                 waves: int = 0) -> None:
+                 waves: int = 0, prefix: Optional[dict] = None) -> None:
         """Paste one prefilled request (dense request caches + tail
         buffers) into ``slot`` and sample its first token — shared by the
         monolithic and chunked admission paths.  ``pages`` is the paged
@@ -439,8 +718,12 @@ class Scheduler:
                                                req.query.shape[-1])
         done = info.remaining == 0
         if self._paged:
-            new_caches = cache_lib.write_doc_pages(
-                st.caches, caches, slot, pages, self.engine.page_size)
+            if self._prefix and prefix is not None:
+                new_caches, pages = self._install_shared(
+                    st, caches, slot, prefix)
+            else:
+                new_caches = cache_lib.write_doc_pages(
+                    st.caches, caches, slot, pages, self.engine.page_size)
             new_tails = cache_lib.write_slot(st.tails, tails, slot)
             self._slot_pages[slot] = pages
         else:
@@ -479,8 +762,13 @@ class Scheduler:
             req = self.pending[0]
             self._validate_request(req)       # raises before the pop
             pages = None
+            prefix_rec = None
+            hints = None
             if self._paged:
-                pages = self._reserve_pages(req)
+                if self._prefix:
+                    pages, prefix_rec, hints = self._reserve_prefix(req)
+                else:
+                    pages = self._reserve_pages(req)
                 if pages is None:
                     break          # pool exhausted: wait for retirements
             self.pending.popleft()
@@ -490,13 +778,17 @@ class Scheduler:
                     req.query if req.query.ndim == 2 else req.query[None],
                     chunk_size=self.prefill_chunk,
                     doc_capacity=(None if self._paged
-                                  else self.doc_capacity))
+                                  else self.doc_capacity),
+                    prefix=hints)
             except Exception:
                 if pages is not None:
                     self._allocator.release(pages)
                 raise
+            self.prefill_chunks_skipped += getattr(cp, "chunks_skipped",
+                                                   0)
             self.admissions[slot] = _Admission(req, cp, self._submitted,
-                                               pages=pages)
+                                               pages=pages,
+                                               prefix=prefix_rec)
             self._submitted += 1
 
     def _prefill_tick(self) -> bool:
@@ -541,7 +833,8 @@ class Scheduler:
             q_tails, self.tail_capacity)
         self._install(req, slot, logits0, caches, tails,
                       int(tail_len[0]), doc_len, cp.prefill_time_s,
-                      pages=adm.pages, waves=cp.waves_done)
+                      pages=adm.pages, waves=cp.waves_done,
+                      prefix=adm.prefix)
 
     # ------------------------------------------------------------------
     def _finish(self, slot: int) -> None:

@@ -25,6 +25,11 @@ Checks:
      chunked oracle (greedy tokens; dense + paged, star + apb), and the
      mesh scheduler streams augmented admissions chunk-by-chunk with
      per-request wave counts
+ 12. prefix-cache page sharing over the mesh-sharded pool: warm
+     admissions (plain and apb, including passing-block cache hits) map
+     shared pages zero-copy, skip prefill waves, stay greedy-token
+     bit-identical to the sharing-off scheduler, respect the round-robin
+     stripe and conserve per-shard page accounting
 """
 import os
 
@@ -419,6 +424,82 @@ def main():
           and res11["short"].prefill_waves > 0,
           f"apb={res11['apb'].prefill_waves} "
           f"short={res11['short'].prefill_waves}")
+
+    # --------- 12: prefix-cache page sharing over the mesh-sharded pool
+    # Warm admissions map already-resident pages zero-copy across the
+    # round-robin stripe and resume the prefill session past them; the
+    # sharing-off scheduler (checks 10/11) is the bit-exactness oracle.
+    from repro.serving.config import ServeConfig
+
+    # plain chunked path: a repeat of the same doc is fully warm — every
+    # page maps shared, zero prefill chunks run, tokens bit-identical
+    scfg12 = ServeConfig(cache_layout="paged", page_size=16, n_slots=1,
+                         prefill_chunk=16, num_pages=32,
+                         prefix_cache="on", max_new=8)
+    eng12 = Engine(cfg10, params, rctx10, config=scfg12)
+    sch12 = Scheduler(eng12, config=scfg12)
+    sch12.submit(Request("c0", d1, q1, max_new_tokens=8))
+    sch12.submit(Request("c1", d1, q1, max_new_tokens=8))
+    res12 = sch12.run()
+    check("mesh prefix-cache plain cold+warm == sharing-off oracle",
+          bool(np.array_equal(res12["c0"].tokens, np.asarray(ref_a))
+               and np.array_equal(res12["c1"].tokens, np.asarray(ref_a))))
+    check("mesh warm plain admission skips every prefill chunk",
+          res12["c1"].prefill_waves == 0
+          and res12["c0"].prefill_waves > 0
+          and sch12.prefix_hits == 1 and sch12.prefix_hit_pages == 4,
+          f"waves={res12['c0'].prefill_waves}/"
+          f"{res12['c1'].prefill_waves} hits={sch12.prefix_hits} "
+          f"hit_pages={sch12.prefix_hit_pages}")
+    a12 = sch12._allocator
+    check("mesh prefix pool conserved (plain)",
+          a12.free_pages + a12.evictable_pages + a12.used_pages
+          == sch12.num_pages and a12.used_pages == 0,
+          f"free={a12.free_pages} evict={a12.evictable_pages} "
+          f"used={a12.used_pages}")
+
+    # augmented (apb) path on the mesh: a repeat admission is fully warm
+    # (no waves at all); a doc sharing only the first two local blocks
+    # reuses their pages *and* their cached compressed passing blocks,
+    # skipping those waves while the anchor and cold waves re-run
+    scfg12a = ServeConfig(cache_layout="paged", page_size=32, n_slots=1,
+                          prefill_chunk=64, num_pages=24,
+                          prefix_cache="on", max_new=6)
+    eng12a = Engine(cfg7, p7, r7, config=scfg12a)
+    sch12a = Scheduler(eng12a, config=scfg12a)
+    d3 = np.asarray(doc7[0:1]).copy()
+    d3[:, 2 * lay7.lb:] = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 40), (1, 64 * 8 - 2 * lay7.lb), 0,
+        cfg7.vocab_size))
+    d3 = jnp.asarray(d3)
+    ref_d3 = eng_apb_d.generate(d3, qry[0:1], max_new_tokens=6).tokens[0]
+    sch12a.submit(Request("a0", doc7[0:1], qry[0:1], max_new_tokens=6))
+    sch12a.submit(Request("a1", doc7[0:1], qry[0:1], max_new_tokens=6))
+    sch12a.submit(Request("a2", d3, qry[0:1], max_new_tokens=6))
+    res12a = sch12a.run()
+    check("mesh prefix-cache apb cold+warm == sharing-off oracle",
+          bool(np.array_equal(res12a["a0"].tokens, np.asarray(ref_apb))
+               and np.array_equal(res12a["a1"].tokens,
+                                  np.asarray(ref_apb))
+               and np.array_equal(res12a["a2"].tokens,
+                                  np.asarray(ref_d3))))
+    check("mesh warm apb admissions skip waves",
+          res12a["a1"].prefill_waves == 0
+          and 0 < res12a["a2"].prefill_waves
+          < res12a["a0"].prefill_waves,
+          f"waves={res12a['a0'].prefill_waves}/"
+          f"{res12a['a1'].prefill_waves}/{res12a['a2'].prefill_waves}")
+    check("mesh apb passing-block cache hits on partial warm",
+          eng12a.passing_cache_hits >= 2
+          and eng12a.passing_cache_stores > 0,
+          f"hits={eng12a.passing_cache_hits} "
+          f"stores={eng12a.passing_cache_stores}")
+    a12a = sch12a._allocator
+    check("mesh prefix pool conserved (apb)",
+          a12a.free_pages + a12a.evictable_pages + a12a.used_pages
+          == sch12a.num_pages and a12a.used_pages == 0,
+          f"free={a12a.free_pages} evict={a12a.evictable_pages} "
+          f"used={a12a.used_pages}")
 
     n_fail = OK.count(False)
     print(f"\n{len(OK) - n_fail}/{len(OK)} distributed checks passed")

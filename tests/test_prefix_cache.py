@@ -1,0 +1,402 @@
+"""Copy-on-write prefix page sharing: the sharing-invariant battery.
+
+``prefix_cache="on"`` turns the paged pool's allocator into a
+refcounting, hash-indexed store: admissions whose leading document
+pages are already resident map them zero-copy, resume their prefill
+session past the warm rows (augmented admissions additionally reuse
+cached compressed passing blocks), and retired pages park in a bounded
+LRU instead of the free list.  The ``prefix_cache="off"`` scheduler is
+the bit-exactness oracle for every test here — sharing may only change
+*work*, never tokens.  The mesh-sharded twin of this battery runs under
+8 fake devices in tests/distributed_checks.py (check 12); the allocator
+invariants are additionally churned by hypothesis in
+tests/test_properties_serving.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.splitting import make_layout
+from repro.models import model as model_lib
+from repro.models.transformer import RunCtx
+from repro.serving import cache as cache_lib
+from repro.serving.cache import PageAllocator, ShardedPageAllocator
+from repro.serving.config import ServeConfig
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Request, Scheduler
+
+
+def _build(key, arch="granite-3-2b"):
+    cfg = get_config(arch).reduced()
+    if cfg.has_moe:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    model = model_lib.build(cfg)
+    return cfg, model.init(key)
+
+
+def _scfg(**kw):
+    kw.setdefault("cache_layout", "paged")
+    kw.setdefault("page_size", 16)
+    kw.setdefault("n_slots", 1)
+    kw.setdefault("decode_chunk", 4)
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("max_new", 6)
+    return ServeConfig(**kw)
+
+
+def _off(scfg):
+    return dataclasses.replace(scfg, prefix_cache="off",
+                               prefix_cache_pages=None)
+
+
+def _run(cfg, params, rctx, scfg, reqs):
+    """One engine + scheduler over a request trace; returns
+    (scheduler, engine, rid -> RequestResult)."""
+    eng = Engine(cfg, params, rctx, config=scfg)
+    sch = Scheduler(eng, config=scfg)
+    for rid, d, q, mnt in reqs:
+        sch.submit(Request(rid, d, q, max_new_tokens=mnt))
+    return sch, eng, sch.run()
+
+
+def _conserved(sch):
+    a = sch._allocator
+    return (a.used_pages == 0
+            and a.free_pages + a.evictable_pages + a.used_pages
+            == sch.num_pages)
+
+
+def _docs(cfg, rng, n):
+    return jnp.asarray(rng.integers(0, cfg.vocab_size, (1, n)), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Parity: warm == cold == dense, plain chunked path
+# ---------------------------------------------------------------------------
+
+def test_warm_plain_matches_cold_and_dense(key):
+    """Cold, fully-warm (identical doc) and partially-warm (shared
+    32-token prefix) admissions produce greedy tokens bit-identical to
+    the sharing-off scheduler AND the dense engine; warm admissions run
+    strictly fewer prefill chunks; the pool conserves."""
+    cfg, params = _build(key)
+    rng = np.random.default_rng(0)
+    d0 = _docs(cfg, rng, 64)
+    d2 = jnp.concatenate([d0[:, :32], _docs(cfg, rng, 32)], axis=1)
+    q = _docs(cfg, rng, 8)
+    reqs = [("r0", d0, q, 6), ("r1", d0, q, 6), ("r2", d2, q, 6)]
+    scfg = _scfg(prefix_cache="on", prefill_chunk=16, num_pages=32)
+    rctx = RunCtx(strategy="full")
+    dense = Engine(cfg, params, RunCtx(strategy="full"))
+    sch_on, _, on = _run(cfg, params, rctx, scfg, reqs)
+    sch_off, _, off = _run(cfg, params, rctx, _off(scfg), reqs)
+    for rid, d, qq, mnt in reqs:
+        ref = dense.generate(d, qq, max_new_tokens=mnt).tokens[0]
+        np.testing.assert_array_equal(on[rid].tokens, np.asarray(ref))
+        np.testing.assert_array_equal(on[rid].tokens, off[rid].tokens)
+    # fully warm: zero chunks; partial warm (32 rows = 2 chunks): half
+    assert on["r0"].prefill_waves == off["r0"].prefill_waves == 4
+    assert on["r1"].prefill_waves == 0
+    assert on["r2"].prefill_waves == 2
+    assert sch_on.prefix_queries == 3 and sch_on.prefix_hits == 2
+    assert sch_on.prefill_chunks_skipped == 6
+    assert sch_off.prefix_hits == 0
+    assert _conserved(sch_on) and _conserved(sch_off)
+
+
+def test_monolithic_admissions_dedup_without_skipping(key):
+    """Monolithic prefill (prefill_chunk=None) is indivisible: a repeat
+    admission skips nothing, but install-time dedup still collapses its
+    pages onto the resident copies — one physical set survives."""
+    cfg, params = _build(key)
+    rng = np.random.default_rng(1)
+    d0, q = _docs(cfg, rng, 50), _docs(cfg, rng, 8)
+    reqs = [("m0", d0, q, 5), ("m1", d0, q, 5)]
+    scfg = _scfg(prefix_cache="on", num_pages=16)
+    rctx = RunCtx(strategy="full")
+    sch_on, _, on = _run(cfg, params, rctx, scfg, reqs)
+    _, _, off = _run(cfg, params, rctx, _off(scfg), reqs)
+    np.testing.assert_array_equal(on["m0"].tokens, off["m0"].tokens)
+    np.testing.assert_array_equal(on["m1"].tokens, off["m1"].tokens)
+    assert sch_on.prefill_chunks_skipped == 0
+    assert _conserved(sch_on)
+    # 50 rows -> 4 pages (3 full + 1 partial); partial tail pages are
+    # never hashed so both retire straight to the free list, and the
+    # repeat's 3 full pages collapsed onto the canonical copies at
+    # install — exactly one full-page set survives in the LRU
+    assert sch_on._allocator.evictable_pages == 3
+
+
+def test_mamba_stack_never_skips_but_still_dedups(key):
+    """A hybrid (mamba-mix) stack cannot resume mid-document — the SSM
+    carry is indivisible — so warm hits skip nothing; attention-layer
+    pages still dedup and tokens stay bit-identical to sharing-off."""
+    cfg, params = _build(key, "jamba-1.5-large-398b")
+    rng = np.random.default_rng(2)
+    d0, q = _docs(cfg, rng, 64), _docs(cfg, rng, 8)
+    reqs = [("j0", d0, q, 4), ("j1", d0, q, 4)]
+    scfg = _scfg(prefix_cache="on", prefill_chunk=16, num_pages=32)
+    rctx = RunCtx(strategy="full")
+    sch_on, _, on = _run(cfg, params, rctx, scfg, reqs)
+    _, _, off = _run(cfg, params, rctx, _off(scfg), reqs)
+    np.testing.assert_array_equal(on["j0"].tokens, off["j0"].tokens)
+    np.testing.assert_array_equal(on["j1"].tokens, off["j1"].tokens)
+    assert on["j1"].prefill_waves == off["j1"].prefill_waves
+    assert sch_on.prefill_chunks_skipped == 0
+    assert _conserved(sch_on)
+
+
+# ---------------------------------------------------------------------------
+# Parity: augmented (star/apb) host-loop path, incl. passing-block cache
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["apb", "star"])
+def test_warm_apb_matches_cold(key, strategy):
+    """Fully-warm and block-partial-warm augmented admissions match the
+    sharing-off scheduler bit-exactly while skipping whole local-block
+    waves; on apb a partial hit also reuses the cached compressed
+    passing blocks of its warm hosts (the Locret top-k and hand-off are
+    not recomputed)."""
+    cfg, params = _build(key)
+    lay = make_layout(256, 8, 4, anchor_frac=0.375, passing_frac=0.125)
+    assert lay.lb == 64 and lay.la_doc == 24 and lay.lp == 8
+    rng = np.random.default_rng(3)
+    a0 = _docs(cfg, rng, 256)
+    # shares exactly the first two local blocks (128 tokens), then
+    # diverges -> skip two waves, reuse two passing entries
+    a2 = jnp.concatenate([a0[:, :128], _docs(cfg, rng, 128)], axis=1)
+    q = _docs(cfg, rng, 8)
+    reqs = [("a0", a0, q, 5), ("a1", a0, q, 5), ("a2", a2, q, 5)]
+    scfg = _scfg(prefix_cache="on", prefill_chunk=32, num_pages=48)
+    rctx = RunCtx(strategy=strategy, layout=lay)
+    sch_on, eng_on, on = _run(cfg, params, rctx, scfg, reqs)
+    _, _, off = _run(cfg, params, rctx, _off(scfg), reqs)
+    for rid in ("a0", "a1", "a2"):
+        np.testing.assert_array_equal(on[rid].tokens, off[rid].tokens)
+    assert on["a1"].prefill_waves == 0
+    assert 0 < on["a2"].prefill_waves < on["a0"].prefill_waves
+    assert sch_on.prefix_hits == 2
+    assert _conserved(sch_on)
+    if strategy == "apb":
+        # warm hosts 0 and 1 of a2 came out of the passing cache
+        assert eng_on.passing_cache_hits >= 2
+        assert eng_on.passing_cache_stores > 0
+
+
+# ---------------------------------------------------------------------------
+# Differential fuzz: randomized traces, sharing-on vs sharing-off
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fuzz_sharing_on_off_bit_identical(key, seed):
+    """Randomized admission traces with overlapping prefixes: greedy
+    tokens bit-identical between sharing-on and sharing-off, page
+    accounting conserved on both, and an admission whose first page is
+    already resident runs strictly fewer prefill chunks."""
+    cfg, params = _build(key)
+    rng = np.random.default_rng(seed)
+    fam = rng.integers(0, cfg.vocab_size, (2, 64))
+    docs, reqs = [], []
+    for i in range(5):
+        f = int(rng.integers(2))
+        tot = int(rng.choice([32, 48, 64]))
+        pl = min(int(rng.choice([0, 16, 32, 64])), tot)
+        d = np.concatenate([fam[f][:pl],
+                            rng.integers(0, cfg.vocab_size, tot - pl)])
+        q = _docs(cfg, rng, 4)
+        docs.append(d)
+        reqs.append((f"f{i}", jnp.asarray(d[None], jnp.int32), q,
+                     int(rng.integers(2, 5))))
+    scfg = _scfg(prefix_cache="on", prefill_chunk=16, num_pages=64)
+    rctx = RunCtx(strategy="full")
+    sch_on, _, on = _run(cfg, params, rctx, scfg, reqs)
+    sch_off, _, off = _run(cfg, params, rctx, _off(scfg), reqs)
+    for i, (rid, _, _, _) in enumerate(reqs):
+        np.testing.assert_array_equal(on[rid].tokens, off[rid].tokens)
+        # with a 64-page pool and <= 5 x 4 pages of traffic nothing is
+        # ever evicted, so an admission hits iff any earlier doc shares
+        # its first full page (16 tokens) — and a hit must save work
+        hit = any(np.array_equal(docs[i][:16], docs[j][:16])
+                  for j in range(i))
+        assert (on[rid].prefill_waves < off[rid].prefill_waves) == hit, \
+            f"{rid}: hit={hit} waves on/off = " \
+            f"{on[rid].prefill_waves}/{off[rid].prefill_waves}"
+    assert _conserved(sch_on) and _conserved(sch_off)
+    if sch_on.prefix_hits:
+        assert sch_on.prefill_chunks_skipped > 0
+
+
+# ---------------------------------------------------------------------------
+# Allocator hardening: release misuse corrupts nothing, loudly
+# ---------------------------------------------------------------------------
+
+def test_release_double_free_raises():
+    a = PageAllocator(8)
+    g = a.reserve(3)
+    a.release(g)
+    with pytest.raises(ValueError, match="double release|foreign"):
+        a.release(g)
+    assert a.free_pages == 8 and a.used_pages == 0
+
+
+def test_release_duplicate_within_one_call_raises():
+    a = PageAllocator(8)
+    g = a.reserve(2)
+    with pytest.raises(ValueError, match="release"):
+        a.release([g[0], g[0]])
+    # the failed release changed nothing: both pages still held
+    assert a.used_pages == 2 and a.refcount(g[0]) == 1
+    a.release(g)
+    assert a.free_pages == 8
+
+
+def test_release_unknown_and_out_of_range_raise():
+    a = PageAllocator(4)
+    a.reserve(2)
+    with pytest.raises(ValueError, match="outside this pool"):
+        a.release([7])
+    with pytest.raises(ValueError, match="outside this pool"):
+        a.release([-1])
+    with pytest.raises(ValueError):
+        a.release([3])                    # valid id, never reserved
+    assert a.used_pages == 2 and a.free_pages == 2
+
+
+def test_release_shared_page_decrements_not_frees():
+    a = PageAllocator(4, prefix_cache_pages=4)
+    g = a.reserve(1)
+    a.register(g[0], b"x")
+    a.share([g[0]])
+    a.release([g[0]])
+    assert a.refcount(g[0]) == 1          # still held by the sharer
+    a.release([g[0]])
+    assert a.refcount(g[0]) == 0 and a.evictable_pages == 1
+    with pytest.raises(ValueError):
+        a.release([g[0]])                 # evictable, not held
+
+
+def test_sharded_release_hardening():
+    a = ShardedPageAllocator(8, n_shards=4)
+    g = a.reserve(4)                      # one logical page per shard
+    with pytest.raises(ValueError, match="do not belong|outside"):
+        a.release([[99], [], [], []])
+    with pytest.raises(ValueError):
+        a.release([[g[0][0], g[0][0]], [], [], []])
+    a.release(g)
+    with pytest.raises(ValueError):
+        a.release(g)                      # double free across shards
+    assert a.free_pages == 8 and a.used_pages == 0
+
+
+def test_share_free_page_raises():
+    a = PageAllocator(4, prefix_cache_pages=4)
+    with pytest.raises(ValueError, match="free"):
+        a.share([2])
+    g = a.reserve(1)
+    a.share([g[0]])                       # live page: fine
+    assert a.refcount(g[0]) == 2
+    a.release([g[0], g[0]])
+
+
+def test_register_requires_live_page_and_stable_hash():
+    a = PageAllocator(4, prefix_cache_pages=4)
+    with pytest.raises(ValueError, match="not live"):
+        a.register(0, b"h")
+    g = a.reserve(2)
+    assert a.register(g[0], b"h") == g[0]
+    # a raced duplicate resolves to the canonical page
+    assert a.register(g[1], b"h") == g[0]
+    with pytest.raises(ValueError, match="different hash"):
+        a.register(g[0], b"other")
+
+
+# ---------------------------------------------------------------------------
+# Copy-on-write units
+# ---------------------------------------------------------------------------
+
+def test_ensure_private_copy_semantics():
+    a = PageAllocator(4, prefix_cache_pages=4)
+    g = a.reserve(1)
+    assert a.ensure_private(g[0]) == (g[0], False)     # already private
+    a.share([g[0]])
+    new, copied = a.ensure_private(g[0])
+    assert copied and new != g[0]
+    assert a.refcount(g[0]) == 1 and a.refcount(new) == 1
+    with pytest.raises(ValueError, match="not live"):
+        a.ensure_private(3)
+    # exhaustion: refuse with None, never a partial decrement
+    b = PageAllocator(1, prefix_cache_pages=1)
+    h = b.reserve(1)
+    b.share([h[0]])
+    assert b.ensure_private(h[0]) is None
+    assert b.refcount(h[0]) == 2
+
+
+def test_cow_unshare_repoints_without_mutating_original():
+    """cow_unshare_pages gives the writing slot a private copy of every
+    shared page it maps — the pool rows are duplicated, the slot's
+    table entry repointed, and the shared original is left bit-exact
+    (the reader slot keeps its mapping)."""
+    num_pages, ps = 4, 2
+    rng = np.random.default_rng(7)
+    pool = rng.normal(size=(1, num_pages, ps, 1, 3)).astype(np.float32)
+    # slot 0 owns [0, 1]; slot 1 shares page 0 and owns page 2
+    pt = jnp.asarray(np.array([[[0, 1], [0, 2]]], np.int32))
+    caches = ({"k": jnp.asarray(pool), "v": jnp.asarray(pool * 2),
+               "pt": pt},)
+    a = PageAllocator(num_pages, prefix_cache_pages=num_pages)
+    assert a.reserve(3) == [0, 1, 2]
+    a.register(0, b"p0")
+    a.share([0])
+    out, copied = cache_lib.cow_unshare_pages(caches, 1, [0, 1], a)
+    assert copied == [0]                  # logical 1 (phys 2) private
+    new = int(np.asarray(out[0]["pt"])[0, 1, 0])
+    assert new == 3                       # the only free page
+    np.testing.assert_array_equal(np.asarray(out[0]["k"])[0, new],
+                                  pool[0, 0])
+    np.testing.assert_array_equal(np.asarray(out[0]["k"])[0, 0],
+                                  pool[0, 0])          # original intact
+    assert int(np.asarray(out[0]["pt"])[0, 0, 0]) == 0  # reader keeps it
+    assert a.refcount(0) == 1 and a.refcount(new) == 1
+    # a second pass over the same slot is now a no-op
+    out2, copied2 = cache_lib.cow_unshare_pages(out, 1, [0, 1], a)
+    assert copied2 == [] and out2 is out
+
+
+# ---------------------------------------------------------------------------
+# Config / scheduler validation
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_config_validation(key):
+    with pytest.raises(ValueError, match="paged"):
+        ServeConfig(prefix_cache="on")          # dense layout
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServeConfig(cache_layout="paged", prefix_cache="sometimes")
+    with pytest.raises(ValueError, match="prefix_cache_pages"):
+        ServeConfig(cache_layout="paged", prefix_cache_pages=4)
+    with pytest.raises(ValueError, match="prefix_cache_pages"):
+        ServeConfig(cache_layout="paged", prefix_cache="on",
+                    prefix_cache_pages=-1)
+    # a dense engine cannot serve a prefix-sharing scheduler
+    cfg, params = _build(key)
+    eng = Engine(cfg, params, RunCtx(strategy="full"))
+    with pytest.raises(ValueError, match="prefix"):
+        Scheduler(eng, config=ServeConfig(
+            cache_layout="paged", prefix_cache="on"))
+
+
+def test_lru_budget_bounds_retention(key):
+    """prefix_cache_pages caps the evictable set: with a 2-page budget
+    only the two most recently retired pages stay addressable."""
+    a = PageAllocator(8, prefix_cache_pages=2)
+    g = a.reserve(4)
+    for i, p in enumerate(g):
+        a.register(p, b"lru-%d" % i)
+    a.release(g)
+    assert a.evictable_pages == 2 and a.free_pages == 6
+    assert a.lookup(b"lru-0") is None and a.lookup(b"lru-1") is None
+    assert a.lookup(b"lru-2") == g[2] and a.lookup(b"lru-3") == g[3]

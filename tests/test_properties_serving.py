@@ -161,6 +161,160 @@ def test_pages_for_covers_and_is_tight(n, page_size):
 
 
 # ---------------------------------------------------------------------------
+# Prefix-cache sharing: refcount conservation, LRU discipline, COW
+# ---------------------------------------------------------------------------
+
+def _h(i: int) -> bytes:
+    return b"prefix-%08d" % i
+
+
+@given(st.integers(2, 24), st.integers(0, 24),
+       st.lists(st.tuples(st.integers(0, 3), st.integers(1, 6)),
+                min_size=1, max_size=60),
+       st.integers(0, 2**31 - 1))
+def test_prefix_sharing_churn_invariants(num_pages, cap, ops, seed):
+    """Random admit/register/share/COW/release churn with the prefix
+    index on: every page is in exactly one of {free, evictable, live}
+    and ``free + evictable + live == num_pages`` (conservation); a
+    page's refcount equals its multiplicity across live grants (no page
+    is both free and referenced); evictable pages always have refcount
+    0; ``ensure_private`` on a refcount>1 page always redirects to a
+    fresh page (copy-on-write never writes through a shared mapping)
+    and on a refcount-1 page is the identity."""
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(num_pages, prefix_cache_pages=cap)
+    live = []                                    # grants (page lists)
+    hashes = []                                  # every hash registered
+    for op, n in ops:
+        if op == 0:                              # cold admission
+            pages = alloc.reserve(n)
+            if pages is None:
+                assert n > alloc.available_pages
+            else:
+                for p in pages:
+                    i = len(hashes)
+                    assert alloc.register(p, _h(i)) == p
+                    hashes.append(i)
+                live.append(pages)
+        elif op == 1 and hashes:                 # warm prefix hit
+            i = hashes[int(rng.integers(len(hashes)))]
+            p = alloc.lookup(_h(i))
+            if p is not None:                    # may have been evicted
+                alloc.share([p])
+                live.append([p])
+        elif op == 2 and live:                   # slot retires
+            alloc.release(live.pop(int(rng.integers(len(live)))))
+        elif op == 3 and live:                   # write wants the page
+            g = live[int(rng.integers(len(live)))]
+            pi = int(rng.integers(len(g)))
+            before = alloc.refcount(g[pi])
+            got = alloc.ensure_private(g[pi])
+            if got is None:
+                assert alloc.available_pages == 0
+            else:
+                new_p, copied = got
+                if before > 1:
+                    assert copied and new_p != g[pi]
+                    g[pi] = new_p
+                else:
+                    assert not copied and new_p == g[pi]
+        held = {}
+        for g in live:
+            for p in g:
+                held[p] = held.get(p, 0) + 1
+        assert alloc.used_pages == len(held)
+        assert (alloc.free_pages + alloc.evictable_pages
+                + alloc.used_pages == num_pages)
+        for p, k in held.items():
+            assert alloc.refcount(p) == k
+        free, lru, ref = (set(alloc._free), set(alloc._lru),
+                          set(alloc._ref))
+        assert not (free & lru) and not (free & ref) and not (lru & ref)
+        assert len(free | lru | ref) == num_pages
+        assert all(alloc.refcount(p) == 0 for p in lru)
+        assert alloc.evictable_pages <= max(cap, 0)
+    for g in live:
+        alloc.release(g)
+    assert alloc.used_pages == 0
+    assert (alloc.free_pages + alloc.evictable_pages == num_pages)
+
+
+@given(st.integers(1, 16), st.integers(1, 16))
+def test_prefix_exhaustion_with_evictables_recovers(num_pages, n):
+    """A pool whose every page is parked evictable in the LRU is not
+    exhausted: a reservation evicts oldest-first and succeeds; evicted
+    hashes stop resolving while survivors still hit."""
+    alloc = PageAllocator(num_pages, prefix_cache_pages=num_pages)
+    pages = alloc.reserve(num_pages)
+    for i, p in enumerate(pages):
+        alloc.register(p, _h(i))
+    alloc.release(pages)
+    assert alloc.free_pages == 0
+    assert alloc.evictable_pages == num_pages
+    n_eff = min(n, num_pages)
+    got = alloc.reserve(n_eff)
+    assert got is not None and len(got) == n_eff
+    survivors = [i for i in range(num_pages)
+                 if alloc.lookup(_h(i)) is not None]
+    assert len(survivors) == num_pages - n_eff
+    assert (alloc.free_pages + alloc.evictable_pages
+            + alloc.used_pages == num_pages)
+
+
+@given(st.integers(2, 16), st.integers(0, 2**31 - 1))
+def test_lru_evicts_only_refcount_zero(num_pages, seed):
+    """Pool pressure may only reclaim refcount-0 (evictable) pages:
+    with half the registered pages still live, an exhausting
+    reservation is satisfied exactly from the released half, the live
+    half keeps its refcounts and stays addressable through the index,
+    and once no evictables remain the allocator defers honestly."""
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(num_pages, prefix_cache_pages=num_pages)
+    pages = alloc.reserve(num_pages)
+    for i, p in enumerate(pages):
+        alloc.register(p, _h(i))
+    keep = set(int(i) for i in rng.choice(
+        num_pages, size=num_pages // 2, replace=False))
+    released = [p for i, p in enumerate(pages) if i not in keep]
+    alloc.release(released)
+    got = alloc.reserve(len(released))
+    assert got is not None and set(got) == set(released)
+    for i in keep:
+        assert alloc.refcount(pages[i]) == 1
+        assert alloc.lookup(_h(i)) == pages[i]
+    assert alloc.reserve(1) is None
+
+
+@given(st.integers(1, 4), st.integers(2, 6), st.integers(0, 12),
+       st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_cow_scatter_never_mutates_protected_pages(ps, npages, start, t,
+                                                   seed):
+    """The COW-aware paged scatter drops every row that resolves to a
+    non-writable physical page bit-exactly (protected pages keep their
+    pool content) while writable rows land exactly where the page table
+    points."""
+    from repro.core import decode as dec
+    rng = np.random.default_rng(seed)
+    kv, d = 2, 3
+    cap = npages * ps
+    start = min(start, cap - 1)
+    t = min(t, cap - start)
+    pool = rng.normal(size=(npages, ps, kv, d)).astype(np.float32)
+    new = rng.normal(size=(1, t, kv, d)).astype(np.float32)
+    perm = rng.permutation(npages).astype(np.int32)
+    writable = rng.integers(0, 2, npages).astype(bool)
+    out = np.asarray(dec.paged_scatter(
+        jnp.asarray(pool), jnp.asarray(new), jnp.asarray(perm[None, :]),
+        jnp.asarray([start], jnp.int32), jnp.asarray(writable)))
+    exp = pool.copy()
+    for r in range(t):
+        phys = int(perm[(start + r) // ps])
+        if writable[phys]:
+            exp[phys, (start + r) % ps] = new[0, r]
+    np.testing.assert_array_equal(out, exp)
+
+
+# ---------------------------------------------------------------------------
 # select_topk: the lp > L clamp across random shapes
 # ---------------------------------------------------------------------------
 
