@@ -1,0 +1,172 @@
+"""Quantized paged KV: capacity at fixed HBM, decode speed, error.
+
+``kv_dtype="int8"/"fp8"`` shrinks every pool page ~4x (1-byte payload +
+one fp32 scale per (page, kv head) against fp32's 4-byte rows), so a
+fixed byte budget holds ~4x the pages and admits correspondingly more
+mixed traffic.  Three measurements:
+
+  1. **Capacity accounting** at a fixed pool budget in *bytes* (no
+     model — page-size arithmetic on the reduced granite geometry):
+     pages per budget and max concurrent residents of the mixed
+     128 / 2k / 16k request distribution per format; the quantized
+     formats must admit >= 2x the fp32 residents.
+  2. **Decode throughput** per format through the real (reduced,
+     CPU-sized) paged engine — the fused-dequant kernel on CPU runs
+     interpret-mode Pallas, so the number is overhead-dominated and
+     recorded honestly as such; the point is the schema and that
+     quantized decode *works*, not CPU timings.
+  3. **Quantization error**: max |out - out_fp32| of paged attention
+     over a standard-normal pool per format — the logit-level half of
+     the accuracy contract tests/test_kv_quant.py enforces.
+
+Emits the standard CSV rows and ``results/bench_kv_quant.json``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, emit_json, tiny
+from repro.configs import get_config
+from repro.core import decode as dec
+from repro.core import quant
+from repro.models import model as model_lib
+from repro.models.transformer import RunCtx
+from repro.serving.cache import PageAllocator, pages_for
+from repro.serving.config import ServeConfig
+from repro.serving.engine import Engine
+
+ARCH = "granite-3-2b"
+KV_DTYPES = ("fp32", "int8", "fp8")
+
+# -- capacity study: mixed distribution at a fixed byte budget -------------
+CAP_LENGTHS = [16_384, 2_048, 128]
+CAP_WEIGHTS = [1, 3, 8]
+CAP_PAGE = 128
+# the budget dense fp32 paging would spend on 4 max-doc residents
+CAP_BUDGET_PAGES_FP32 = 4 * (16_384 // CAP_PAGE)
+
+# -- decode study ----------------------------------------------------------
+DEC_N_DOC = tiny(256, 128)
+DEC_MAX_NEW = tiny(16, 8)
+LQ = 4
+
+# -- error study -----------------------------------------------------------
+ERR_POOL, ERR_PS = 12, 8
+
+
+def _mixed_stream(lengths, weights, n):
+    out = []
+    while len(out) < n:
+        for ln, w in zip(lengths, weights):
+            out.extend([ln] * w)
+    return out[:n]
+
+
+def _page_bytes(kv_dtype, page_size, kv_heads, head_dim):
+    """Bytes one pool page costs (K and V payload + scale rows)."""
+    item = jnp.dtype(quant.pool_dtype(kv_dtype)).itemsize
+    payload = 2 * page_size * kv_heads * head_dim * item
+    scales = 2 * kv_heads * 4 if quant.is_quantized(kv_dtype) else 0
+    return payload + scales
+
+
+def _capacity_records(cfg):
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    budget_bytes = CAP_BUDGET_PAGES_FP32 * _page_bytes("fp32", CAP_PAGE,
+                                                       kvh, hd)
+    stream = _mixed_stream(CAP_LENGTHS, CAP_WEIGHTS, 600)
+    records, residents = [], {}
+    for kv_dtype in KV_DTYPES:
+        num_pages = budget_bytes // _page_bytes(kv_dtype, CAP_PAGE, kvh, hd)
+        alloc = PageAllocator(int(num_pages))
+        n = 0
+        for ln in stream:
+            if alloc.reserve(pages_for(ln, CAP_PAGE)) is None:
+                break
+            n += 1
+        residents[kv_dtype] = n
+        gain = n / max(residents["fp32"], 1)
+        records.append(
+            {"name": f"capacity_{kv_dtype}_max_resident",
+             "us_per_call": 0.0, "num_pages": int(num_pages),
+             "max_resident": n, "gain_vs_fp32": gain,
+             "derived": f"residents={n};x{gain:.1f}"})
+    return records, residents
+
+
+def _decode_records(cfg, params):
+    r = np.random.default_rng(7)
+    doc = jnp.asarray(r.integers(10, cfg.vocab_size, (2, DEC_N_DOC)),
+                      jnp.int32)
+    qry = jnp.asarray(r.integers(10, cfg.vocab_size, (2, LQ)), jnp.int32)
+    records = []
+    for kv_dtype in KV_DTYPES:
+        eng = Engine(cfg, params, RunCtx(strategy="full"),
+                     config=ServeConfig(cache_layout="paged",
+                                        page_size=32,
+                                        kv_dtype=kv_dtype))
+        eng.generate(doc, qry, max_new_tokens=DEC_MAX_NEW)       # warm
+        res = eng.generate(doc, qry, max_new_tokens=DEC_MAX_NEW)
+        tok_s = (doc.shape[0] * (DEC_MAX_NEW - 1)
+                 / max(res.decode_time_s, 1e-9))
+        records.append(
+            {"name": f"decode_{kv_dtype}",
+             "us_per_call": res.decode_time_s * 1e6,
+             "decode_tok_per_s": tok_s, "derived": f"{tok_s:.0f}tok/s"})
+    return records
+
+
+def _error_records():
+    rng = np.random.default_rng(3)
+    b, t, h, kv, d = 2, 1, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, t, h, d)), jnp.float32)
+    fk = jnp.asarray(rng.standard_normal((ERR_POOL, ERR_PS, kv, d)),
+                     jnp.float32)
+    fv = jnp.asarray(rng.standard_normal((ERR_POOL, ERR_PS, kv, d)),
+                     jnp.float32)
+    pt = jnp.asarray(rng.integers(0, ERR_POOL, (b, 3)), jnp.int32)
+    vl = jnp.asarray([10, 24], jnp.int32)
+    ref, _ = dec.paged_partial_lse(q, fk, fv, pt, valid_len=vl,
+                                   row_base=vl, impl="gather")
+    records = []
+    for kv_dtype in ("int8", "fp8"):
+        dt = quant.pool_dtype(kv_dtype)
+        pk, ks = quant.quantize_pages(fk, dt)
+        pv, vs = quant.quantize_pages(fv, dt)
+        out, _ = dec.paged_partial_lse(q, pk, pv, pt, valid_len=vl,
+                                       row_base=vl, impl="gather",
+                                       k_scale=ks, v_scale=vs)
+        err = float(np.max(np.abs(np.asarray(out) - np.asarray(ref))))
+        records.append(
+            {"name": f"quant_error_{kv_dtype}", "us_per_call": 0.0,
+             "max_abs_err": err, "derived": f"err={err:.4f}"})
+    return records
+
+
+def run():
+    cfg = get_config(ARCH).reduced()
+    records, residents = _capacity_records(cfg)
+    params = model_lib.build(cfg).init(jax.random.PRNGKey(0))
+    records += _decode_records(cfg, params)
+    records += _error_records()
+    for rec in records:
+        emit(rec["name"], rec["us_per_call"], rec["derived"])
+    emit_json("bench_kv_quant", records, meta={
+        "arch": ARCH,
+        "capacity": {"lengths": CAP_LENGTHS, "weights": CAP_WEIGHTS,
+                     "page_size": CAP_PAGE,
+                     "budget_pages_fp32": CAP_BUDGET_PAGES_FP32,
+                     "residents": residents,
+                     "note": "fixed byte budget; quantized formats must "
+                             "admit >= 2x the fp32 residents"},
+        "decode": {"n_doc": DEC_N_DOC, "max_new": DEC_MAX_NEW,
+                   "note": "CPU numbers run the fused-dequant kernel in "
+                           "Pallas interpret mode (overhead-dominated); "
+                           "the bandwidth story is a TPU one"},
+        "device": jax.devices()[0].platform})
+
+
+if __name__ == "__main__":
+    run()

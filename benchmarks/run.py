@@ -29,6 +29,7 @@ MODULES = [
     ("serving", "benchmarks.bench_serving"),             # decode/serving perf
     ("prefill_chunking", "benchmarks.bench_prefill_chunking"),  # HOL / TTFT
     ("paged_cache", "benchmarks.bench_paged_cache"),     # paged vs dense HBM
+    ("kv_quant", "benchmarks.bench_kv_quant"),           # int8/fp8 paged KV
     ("prefix_cache", "benchmarks.bench_prefix_cache"),   # prefix reuse/TTFT
     ("apb_chunked", "benchmarks.bench_apb_chunked"),     # HOL, augmented
     ("mesh_pipeline", "benchmarks.bench_mesh_pipeline"), # pipelined mesh
@@ -37,7 +38,8 @@ MODULES = [
 # the --tiny (CI bench-smoke) sweep: every module that writes a
 # results/*.json artifact — kept in sync with tools/check_bench_results.py
 TINY_MODULES = ["serving", "prefill_chunking", "paged_cache",
-                "prefix_cache", "apb_chunked", "mesh_pipeline"]
+                "kv_quant", "prefix_cache", "apb_chunked",
+                "mesh_pipeline"]
 
 
 def main() -> None:

@@ -156,6 +156,29 @@ SEAMS: Tuple[Seam, ...] = (
                      "mesh-sharded pool: warm == sharing-off oracle"),
         )),
     Seam(
+        name="kv_dtype",
+        arms='kv_dtype="int8"/"fp8" (quantized pool, kernel-fused '
+             'dequant) vs "fp32" (exact-greedy oracle); quantized '
+             'kernel vs dequantized-gather parity oracle',
+        dispatch_path="src/repro/kernels/paged_attention.py",
+        dispatch_pattern=r"quantized = k_scale is not None",
+        evidence=(
+            Evidence("tests/test_kv_quant.py",
+                     r"def test_quant_kernel_matches_dequant_gather",
+                     "quantized kernel == dequantized gather, float-"
+                     "tolerance parity at every kv_dtype"),
+            Evidence("tests/test_kv_quant.py",
+                     r"def test_quant_engine_error_bound_vs_fp32",
+                     "int8/fp8 engine logits within a documented error "
+                     "bound of the fp32-format oracle on real tiny "
+                     "models"),
+            Evidence("tests/test_kv_quant.py",
+                     r"def test_fp32_format_stays_exact_oracle",
+                     'kv_dtype="fp32" stays greedy-bit-exact vs the '
+                     "dense engine — the exactness anchor of the "
+                     "quantized chain"),
+        )),
+    Seam(
         name="fused_decode_loop",
         arms="jitted lax.scan decode loop vs stepwise host loop",
         dispatch_path="src/repro/core/decode.py",

@@ -94,16 +94,23 @@ def _builder_lines(root: pathlib.Path) -> Dict[str, int]:
     return out
 
 
-def _attn_leaf_cases(caches, pool_spec, table_spec, dense_spec):
+def _attn_leaf_cases(caches, pool_spec, table_spec, dense_spec,
+                     scale_spec=None):
     """(builder-name, spec, leaf-shape) triples for a stacked doc-cache
     tree, matching leaves the way shard_paged_caches/shard_dense_caches
-    match them."""
+    match them (quantized pools carry scale leaves "ks"/"vs" placed by
+    ``paged_scale_spec``)."""
     cases = []
     for c in caches:
         if "pt" in c and c["pt"].ndim == 4:
             cases.append(("paged_pool_spec", pool_spec, c["k"].shape))
             cases.append(("paged_pool_spec", pool_spec, c["v"].shape))
             cases.append(("page_table_spec", table_spec, c["pt"].shape))
+            if "ks" in c and scale_spec is not None:
+                cases.append(("paged_scale_spec", scale_spec,
+                              c["ks"].shape))
+                cases.append(("paged_scale_spec", scale_spec,
+                              c["vs"].shape))
         elif "k" in c and c["k"].ndim == 5:
             cases.append(("dense_cache_spec", dense_spec, c["k"].shape))
             cases.append(("dense_cache_spec", dense_spec, c["v"].shape))
@@ -132,12 +139,19 @@ def spec_cases(mesh_shape: Dict[str, int],
         lambda: cache_lib.alloc_doc_caches(
             cfg, batch, capacity, jnp.float32, page_size=page_size,
             n_shards=n_shards))
+    quant = jax.eval_shape(
+        lambda: cache_lib.alloc_doc_caches(
+            cfg, batch, capacity, jnp.float32, page_size=page_size,
+            n_shards=n_shards, kv_dtype="int8"))
     dense = jax.eval_shape(
         lambda: cache_lib.alloc_doc_caches(cfg, batch, capacity))
     pool_spec = sharding.paged_pool_spec(("model",))
     table_spec = sharding.page_table_spec(("model",))
     dense_spec = sharding.dense_cache_spec(("model",))
+    scale_spec = sharding.paged_scale_spec(("model",))
     cases += _attn_leaf_cases(paged, pool_spec, table_spec, dense_spec)
+    cases += _attn_leaf_cases(quant, pool_spec, table_spec, dense_spec,
+                              scale_spec)
     cases += _attn_leaf_cases(dense, pool_spec, table_spec, dense_spec)
 
     # pipelined-prefill stream state: the running top-k constructor is

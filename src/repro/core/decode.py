@@ -154,7 +154,8 @@ def chunk_context_attention(q, k_cache, v_cache, k_self, v_self, *,
                             window: int = 0,
                             softcap: Optional[float] = None,
                             k_extra=None, v_extra=None, extra_mask=None,
-                            page_table=None, paged_impl: str = "kernel"):
+                            page_table=None, paged_impl: str = "kernel",
+                            k_scale=None, v_scale=None):
     """Chunked-prefill attention: ``t`` chunk rows appended at the end of
     a doc-cache prefix attend to
 
@@ -176,7 +177,8 @@ def chunk_context_attention(q, k_cache, v_cache, k_self, v_self, *,
     *pool* (num_pages, page_size, KV, D) and the cache-context part runs
     through the fused paged kernel (``paged_attention_distributed``,
     row_base = valid_len — the chunk mask convention) instead of a dense
-    view; ``paged_impl="gather"`` keeps the dense-view oracle.
+    view; ``paged_impl="gather"`` keeps the dense-view oracle, and
+    ``k_scale``/``v_scale`` carry a quantized pool's dequant scales.
     """
     t = q.shape[1]
     mesh = pctx.mesh
@@ -188,7 +190,8 @@ def chunk_context_attention(q, k_cache, v_cache, k_self, v_self, *,
             q, k_cache, v_cache, page_table, pctx=pctx,
             cache_axes=cache_axes, valid_len=vl,
             row_base=jnp.asarray(vl, jnp.int32), start=start,
-            window=window, softcap=softcap, impl=paged_impl)
+            window=window, softcap=softcap, k_scale=k_scale,
+            v_scale=v_scale, impl=paged_impl)
         return _chunk_self_extra_merge(
             q, k_self, v_self, ctx_out, ctx_lse, t, window=window,
             softcap=softcap, k_extra=k_extra, v_extra=v_extra,
@@ -344,6 +347,7 @@ def paged_partial_lse(q, pool_k, pool_v, page_table, *,
                       valid_len, row_base, start=None, window: int = 0,
                       softcap: Optional[float] = None,
                       page_stride: int = 1, page_offset=0,
+                      k_scale=None, v_scale=None,
                       impl: str = "kernel"):
     """(out, lse) of q (B, t, H, D) against one layer's paged doc KV —
     the single-shard body of the paged read path.
@@ -356,6 +360,13 @@ def paged_partial_lse(q, pool_k, pool_v, page_table, *,
     ``g >= row_base + i - window + 1``; ``row_base = valid_len`` is the
     chunk convention, ``valid_len - 1`` (with t=1) the decode one.
 
+    ``k_scale``/``v_scale`` (num_pool_pages, KV) fp32 mark a quantized
+    pool (``core.quant``): the kernel dequantizes each tile off the
+    scalar-prefetch path, and the gather arm applies the *identical*
+    per-row product to its dense view — so kernel==gather bit-parity is
+    preserved per quantized format, making the dequantized gather the
+    parity oracle (fp32 ``kv_dtype`` stays the exact-greedy oracle).
+
     ``impl="kernel"`` runs the fused Pallas kernel (block-sparse over the
     table, no dense intermediate; interpret-mode on CPU);
     ``impl="gather"`` materialises the dense view via ``jnp.take`` and
@@ -367,7 +378,7 @@ def paged_partial_lse(q, pool_k, pool_v, page_table, *,
             q, pool_k, pool_v, page_table, valid_len=valid_len,
             row_base=row_base, start=start, window=window,
             softcap=softcap, page_stride=page_stride,
-            page_offset=page_offset)
+            page_offset=page_offset, k_scale=k_scale, v_scale=v_scale)
     if impl != "gather":
         raise ValueError(f"paged impl must be 'kernel' or 'gather', "
                          f"got {impl!r}")
@@ -375,6 +386,13 @@ def paged_partial_lse(q, pool_k, pool_v, page_table, *,
     t = q.shape[1]
     ps = pool_k.shape[1]
     s = k.shape[1]
+    if k_scale is not None:
+        # same clip-to-pool table semantics as the kernel (jnp.take
+        # clips), same per-(page, kv head) product per gathered row
+        ks = jnp.repeat(jnp.take(k_scale, page_table, axis=0), ps, axis=1)
+        vs = jnp.repeat(jnp.take(v_scale, page_table, axis=0), ps, axis=1)
+        k = k.astype(jnp.float32) * ks[..., None]
+        v = v.astype(jnp.float32) * vs[..., None]
     jl = jnp.arange(s) // ps
     g = ((jl * page_stride + page_offset) * ps + jnp.arange(s) % ps)
     vl = jnp.reshape(jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32),
@@ -399,6 +417,7 @@ def paged_attention_distributed(q, pool_k, pool_v, page_table, *,
                                 valid_len, row_base, start=None,
                                 window: int = 0,
                                 softcap: Optional[float] = None,
+                                k_scale=None, v_scale=None,
                                 impl: str = "kernel"):
     """Paged-cache attention over a (possibly mesh-sharded) page pool.
 
@@ -412,6 +431,11 @@ def paged_attention_distributed(q, pool_k, pool_v, page_table, *,
     (paper Alg. 3 over pages instead of contiguous slices).  Table
     entries hold *global* physical ids; each shard subtracts its base.
 
+    ``k_scale``/``v_scale``: quantized-pool dequant scales,
+    (num_pages_global, KV) fp32, sharded over ``cache_axes`` on dim 0
+    exactly like the pool's pages axis — each shard's slice lines up
+    with its pool-local page ids.
+
     Returns (out (B, t, H, D), lse (B, H, t)) replicated over the cache
     axes.
     """
@@ -424,17 +448,19 @@ def paged_attention_distributed(q, pool_k, pool_v, page_table, *,
         return paged_partial_lse(
             q, pool_k, pool_v, page_table, valid_len=valid_len,
             row_base=row_base, start=start, window=window,
-            softcap=softcap, impl=impl)
+            softcap=softcap, k_scale=k_scale, v_scale=v_scale, impl=impl)
 
     n_shards = page_table.shape[0]
     pps = pool_k.shape[0] // n_shards          # pool pages per shard
+    quantized = k_scale is not None
     bspec = pctx.batch_spec()
     qspec = P(bspec, None, None, None)
     poolspec = P(cache_axes, None, None, None)
     ptspec = P(cache_axes, bspec, None)
+    sspec = P(cache_axes, None)
     lspec = P(bspec, None, None)
 
-    def body(qq, kk, vv, tt, vl, rb, st):
+    def body(qq, kk, vv, tt, vl, rb, st, *sc):
         off = jnp.asarray(0, jnp.int32)
         stride = 1
         for ax in reversed(cache_axes):
@@ -444,7 +470,8 @@ def paged_attention_distributed(q, pool_k, pool_v, page_table, *,
         out, lse = paged_partial_lse(
             qq, kk, vv, local, valid_len=vl, row_base=rb, start=st,
             window=window, softcap=softcap, page_stride=n_shards,
-            page_offset=off, impl=impl)
+            page_offset=off, k_scale=sc[0] if sc else None,
+            v_scale=sc[1] if sc else None, impl=impl)
         return collectives.lse_merge_psum(out, lse, cache_axes)
 
     b = q.shape[0]
@@ -457,9 +484,13 @@ def paged_attention_distributed(q, pool_k, pool_v, page_table, *,
     fn = collectives.shard_map(
         body, mesh=mesh,
         in_specs=(qspec, poolspec, poolspec, ptspec,
-                  P(bspec), P(bspec), P(bspec)),
+                  P(bspec), P(bspec), P(bspec))
+                 + ((sspec, sspec) if quantized else ()),
         out_specs=(qspec, lspec), check_rep=False)  # repro-lint: disable=SHD010 -- pallas_call has no replication rule on old jax; outputs are per-shard by construction (lse-merged inside body), pinned by the mesh==single-host oracle
-    return fn(q, pool_k, pool_v, page_table, vl_arg, rb_arg, st_arg)
+    args = (q, pool_k, pool_v, page_table, vl_arg, rb_arg, st_arg)
+    if quantized:
+        args += (k_scale, v_scale)
+    return fn(*args)
 
 
 def _mask_unwritable(flat, phys, pool, writable):
@@ -536,6 +567,97 @@ def paged_scatter_sharded(pool, new, page_table, start, writable=None):
     pool_flat = pool_flat.at[flat.reshape(-1)].set(
         new.reshape((b * t,) + new.shape[2:]), mode="drop")
     return pool_flat.reshape(pool.shape)
+
+
+def _requant_window(pool, scales, new, start, jl, jl_c, phys, dtype,
+                    writable):
+    """Shared body of the quantized scatters: dequant-merge-requant of
+    the logical-page window a chunk write touches.
+
+    ``jl`` (B, npt) are the consecutive logical pages around the write,
+    ``jl_c`` their clip into the table, ``phys`` the (unclamped) physical
+    ids the table resolves them to.  Only pages that actually intersect
+    ``[start, start + t)`` *and* sit inside the table *and* pass the
+    copy-on-write ``writable`` mask are written back — a requantized
+    untouched page is NOT a bit-level no-op (its scale would recompute),
+    so dropping them is a correctness condition, and dropping the scale
+    write together with the payload write is the COW invariant: a
+    protected page's scale must not mutate while its payload doesn't.
+    Writes use the unclamped ``phys`` with ``mode="drop"`` — the same
+    stale-id contract as ``paged_scatter``.
+    """
+    from repro.core import quant
+    ps = pool.shape[1]
+    b, t = new.shape[:2]
+    npool = pool.shape[0]
+    npt = jl.shape[1]
+    phys_c = jnp.clip(phys, 0, npool - 1)
+    st = start[:, None].astype(jnp.int32)
+    touched = ((jl * ps < st + t) & ((jl + 1) * ps > st) & (jl == jl_c))
+    fp = quant.dequantize(jnp.take(pool, phys_c, axis=0),
+                          jnp.take(scales, phys_c, axis=0))
+    loc = (start % ps)[:, None].astype(jnp.int32) + jnp.arange(
+        t, dtype=jnp.int32)
+    flat = fp.reshape((b, npt * ps) + fp.shape[3:])
+    flat = jax.vmap(lambda f, l, n: f.at[l].set(n))(
+        flat, loc, new.astype(jnp.float32))
+    fp = flat.reshape((b, npt, ps) + fp.shape[3:])
+    new_sc = quant.amax_scales(fp, quant.dtype_qmax(dtype))
+    ok = touched
+    if writable is not None:
+        ok = ok & jnp.take(writable, phys_c, axis=0)
+    dst = jnp.where(ok, phys, npool)
+    pool = pool.at[dst].set(quant.quantize(fp, new_sc, dtype), mode="drop")
+    scales = scales.at[dst].set(new_sc, mode="drop")
+    return pool, scales
+
+
+def paged_scatter_quant(pool, scales, new, page_table, start,
+                        writable=None):
+    """Quantized twin of ``paged_scatter``: write fp32 rows ``new``
+    (B, t, KV, D) into a quantized pool (num_pages, page_size, KV, D)
+    with per-page scales (num_pages, KV).
+
+    Row-level scatter cannot express per-page requantization, so the
+    write works on whole pages: gather the ≤ ``(t-1)//ps + 2`` logical
+    pages the chunk straddles, dequantize, splice the new rows in,
+    recompute each page's scale and write payload + scale back —
+    pages outside the write (or failing the ``writable`` COW mask)
+    are dropped (see ``_requant_window``).  Earlier rows of a straddled
+    page are re-quantized under the merged page's new scale, so chunked
+    writes are *not* bitwise identical to a monolithic quantized write —
+    the quantized path's accuracy contract is the error bound vs the
+    fp32 oracle, while kernel==gather stays a float-tolerance parity.
+    """
+    ps = pool.shape[1]
+    t = new.shape[1]
+    npt = (t - 1) // ps + 2
+    j0 = (start // ps).astype(jnp.int32)
+    jl = j0[:, None] + jnp.arange(npt, dtype=jnp.int32)        # (B, npt)
+    jl_c = jnp.clip(jl, 0, page_table.shape[1] - 1)
+    phys = jnp.take_along_axis(page_table, jl_c, axis=1)
+    return _requant_window(pool, scales, new, start, jl, jl_c, phys,
+                           pool.dtype, writable)
+
+
+def paged_scatter_sharded_quant(pool, scales, new, page_table, start,
+                                writable=None):
+    """Strided twin of ``paged_scatter_quant`` for the mesh-sharded pool
+    (page_table (S, B, P) of global physical ids; logical page ``j``
+    lives at ``page_table[j % S, b, j // S]``, exactly
+    ``paged_scatter_sharded``'s routing)."""
+    b, t = new.shape[:2]
+    ps = pool.shape[1]
+    s_shards, _, p = page_table.shape
+    npt = (t - 1) // ps + 2
+    j0 = (start // ps).astype(jnp.int32)
+    jl = j0[:, None] + jnp.arange(npt, dtype=jnp.int32)        # (B, npt)
+    jl_c = jnp.clip(jl, 0, s_shards * p - 1)
+    flat_pt = jnp.moveaxis(page_table, 1, 0).reshape(b, s_shards * p)
+    phys = jnp.take_along_axis(
+        flat_pt, (jl_c % s_shards) * p + jl_c // s_shards, axis=1)
+    return _requant_window(pool, scales, new, start, jl, jl_c, phys,
+                           pool.dtype, writable)
 
 
 def write_tail_at(buf, new, index):

@@ -1,0 +1,93 @@
+"""Per-page symmetric KV quantization for the paged pool.
+
+The serving stack's ``kv_dtype`` knob (``serving.config.ServeConfig``)
+stores paged K/V payloads as int8 or float8_e4m3fn with one fp32 scale
+per (page, kv head); this module is the single home of the format
+arithmetic so ``serving.cache`` (quantize on write) and ``core.decode``
+(dequantized-gather oracle, scatter requantization) cannot drift.
+
+Shapes: a *page stack* is ``(..., page_size, KV, D)`` — any number of
+leading axes (pool pages, logical pages, (blocks, P) tables) — and its
+scale stack is the matching ``(..., KV)`` fp32 array.  Quantization is
+symmetric max-abs per (page, kv head):
+
+    scale = max(max_abs(page rows), tiny) / qmax
+    q     = round(x / scale)  clipped to [-qmax, qmax]   (int8)
+    q     = clip(x / scale, -qmax, qmax)                 (fp8: cast rounds)
+
+so dequant is a single broadcast multiply — exactly the product the
+fused kernel applies per tile off the scalar-prefetch path
+(``kernels/paged_attention.py``) and the gather oracle applies per row
+(``core.decode.paged_partial_lse``); bit-parity between those two is a
+tested invariant.  An all-zero (never-written) page quantizes to zeros
+with the floor scale, so freshly allocated pools stay exact.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+KV_DTYPES = ("fp32", "int8", "fp8")
+
+# floor on the max-abs so an all-zero page gets a finite scale
+_TINY = 1e-12
+
+
+def is_quantized(kv_dtype: str) -> bool:
+    """True for the pool formats that carry scale arrays."""
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                         f"got {kv_dtype!r}")
+    return kv_dtype != "fp32"
+
+
+def pool_dtype(kv_dtype: str, ref_dtype=jnp.float32):
+    """Storage dtype of the pool payload for ``kv_dtype`` (``ref_dtype``
+    is what an fp32-format pool actually stores — the model's compute
+    dtype)."""
+    if kv_dtype == "int8":
+        return jnp.int8
+    if kv_dtype == "fp8":
+        return jnp.float8_e4m3fn
+    if kv_dtype == "fp32":
+        return ref_dtype
+    raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}")
+
+
+def dtype_qmax(dtype) -> float:
+    """Symmetric clip range of a storage dtype (int8: full signed range;
+    fp8 e4m3fn: largest finite value)."""
+    dtype = jnp.dtype(dtype)
+    # dtype objects are static metadata, not traced values
+    if dtype == jnp.dtype(jnp.int8):  # repro-lint: disable=TRC002 -- np.dtype equality, no tracer involved
+        return 127.0
+    if dtype == jnp.dtype(jnp.float8_e4m3fn):  # repro-lint: disable=TRC002 -- np.dtype equality, no tracer involved
+        return 448.0
+    raise ValueError(f"no qmax for storage dtype {dtype}")
+
+
+def amax_scales(pages, qmax: float):
+    """Per-(page, kv head) symmetric scales of a fp32 page stack
+    ``(..., page_size, KV, D)`` -> ``(..., KV)`` fp32."""
+    amax = jnp.max(jnp.abs(pages.astype(jnp.float32)), axis=(-3, -1))
+    return jnp.maximum(amax, _TINY) / qmax
+
+
+def quantize(pages, scales, dtype):
+    """Quantize an fp32 page stack against precomputed ``scales``."""
+    qmax = dtype_qmax(dtype)
+    x = pages.astype(jnp.float32) / scales[..., None, :, None]
+    if jnp.dtype(dtype) == jnp.dtype(jnp.int8):  # repro-lint: disable=TRC002 -- np.dtype equality, no tracer involved
+        x = jnp.round(x)
+    return jnp.clip(x, -qmax, qmax).astype(dtype)
+
+
+def dequantize(q, scales):
+    """Inverse broadcast product: ``(..., page_size, KV, D)`` quantized
+    payload × ``(..., KV)`` scales -> fp32."""
+    return q.astype(jnp.float32) * scales[..., None, :, None]
+
+
+def quantize_pages(pages, dtype):
+    """One-shot (payload, scales) quantization of an fp32 page stack."""
+    scales = amax_scales(pages, dtype_qmax(dtype))
+    return quantize(pages, scales, dtype), scales

@@ -66,6 +66,21 @@ class KernelGridAnalysis:
     operands: Tuple[BlockOperand, ...]
 
 
+def resolve_interpret(interpret=None) -> bool:
+    """Single source of the Pallas ``interpret`` default shared by every
+    kernel wrapper (``apb_attention``, ``paged_attention``, ``ops``):
+    ``None`` resolves to interpret-mode on the CPU backend (tier-1
+    validates the kernel bodies there — compiled Mosaic needs a TPU) and
+    compiled execution elsewhere; an explicit bool passes through.  The
+    kernel entry points themselves default to ``None`` and resolve here,
+    so calling them directly on CPU cannot crash on a missing Mosaic
+    backend — the contract their docstrings promise."""
+    if interpret is not None:
+        return bool(interpret)
+    import jax
+    return jax.default_backend() == "cpu"
+
+
 _KERNEL_SPECS: Dict[str, Callable] = {}
 
 

@@ -44,7 +44,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import (BlockOperand, KernelGridAnalysis, ScalarSpec,
-                           register_kernel_spec)
+                           register_kernel_spec, resolve_interpret)
 
 NEG_INF = -1e30
 LANES = 128
@@ -209,14 +209,17 @@ def apb_flash_attention(q, k, v, *, la: int, pcap: int, anchor_valid,
                         softcap: Optional[float] = None,
                         causal: bool = True,
                         block_q: int = 128, block_kv: int = 128,
-                        interpret: bool = False):
+                        interpret: Optional[bool] = None):
     """Fused APB flash attention (pre-padded inputs; see ops.apb_attention).
 
     q: (B, Lq, H, D), k/v: (B, Lkv, KV, D).  ``la``/``pcap`` are the padded
     anchor / passing capacities; Lq - la and Lkv - la - pcap must be equal
     (the local block).  All three regions must be multiples of the block
     sizes.  ``anchor_valid``/``pass_valid`` are dynamic int32 scalars.
+    ``interpret=None`` resolves to interpret-mode on CPU via
+    ``repro.kernels.resolve_interpret``.
     """
+    interpret = resolve_interpret(interpret)
     b, lq, h, d = q.shape
     _, lkv, kvh, _ = k.shape
     assert lq - la == lkv - la - pcap, "local-block length mismatch"

@@ -13,7 +13,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ref, resolve_interpret
 from repro.kernels.apb_attention import apb_flash_attention
 from repro.kernels.paged_attention import paged_flash_attention
 
@@ -101,7 +101,9 @@ def apb_attention_decomposed(q_anchor, q_local, k_anchor, k_pass, k_local,
 
 
 def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+    # kept as a local alias: the platform choice itself lives in
+    # repro.kernels.resolve_interpret, shared with the kernel wrappers
+    return resolve_interpret(None)
 
 
 def _pad_to(x, length: int, axis: int):
@@ -231,6 +233,7 @@ def paged_attention_lse(q, pool_k, pool_v, page_table, *,
                         valid_len, row_base, start=None, window: int = 0,
                         softcap: Optional[float] = None,
                         page_stride: int = 1, page_offset=0,
+                        k_scale=None, v_scale=None,
                         interpret: Optional[bool] = None):
     """Fused paged attention (kernels.paged_attention) with the standard
     backend selection: interpret-mode Pallas on CPU (tier-1 validates the
@@ -239,15 +242,15 @@ def paged_attention_lse(q, pool_k, pool_v, page_table, *,
     Returns (out (B, t, H, D), lse (B, H, t)) of q against the paged
     document KV — the per-shard body of the paged decode/chunk read
     path; ``core.decode.paged_partial_lse`` holds the gather oracle with
-    the identical mask semantics.
+    the identical mask semantics.  ``k_scale``/``v_scale`` are the
+    per-page per-kv-head dequant scales of a quantized pool (None for
+    fp32), passed through to the kernel's scalar-prefetch path.
     """
-    if interpret is None:
-        interpret = _on_cpu()
     return paged_flash_attention(
         q, pool_k, pool_v, page_table, valid_len=valid_len,
         row_base=row_base, start=start, window=window, softcap=softcap,
         page_stride=page_stride, page_offset=page_offset,
-        interpret=interpret)
+        k_scale=k_scale, v_scale=v_scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "softcap"))

@@ -37,11 +37,22 @@ query row ``i`` of a ``t``-row chunk sees global cache row ``g`` iff
 lives at cache row valid_len + i); ``row_base = valid_len - 1`` with
 ``t = 1`` reproduces the decode mask (last ``window`` valid rows).
 
+**Quantized pools** (``kv_dtype="int8"``/``"fp8"``): the pool holds
+int8 / float8_e4m3fn pages plus per-page per-kv-head fp32 scales
+(``serving.cache`` quantizes on write).  The scales ride the scalar
+prefetch path next to the page table — ``k_scale``/``v_scale``
+(num_pool_pages, KV) — so each grid step still DMAs exactly one
+(now quarter/half-sized) physical page and dequantizes its tile in
+registers: ``k_tile.astype(f32) * k_scale[page, kv_head]`` before the
+MXU dot.  The dequantized-gather arm of ``core.decode.paged_partial_lse``
+applies the identical per-row product and stays the bit-parity oracle.
+
 Returns (out, lse) so callers merge with tail/self attention through the
-existing LSE machinery.  ``interpret=True`` (default on CPU) runs the
-same kernel body through the Pallas interpreter so tier-1 stays green
-without a TPU; compiled Mosaic requires ``page_size`` and ``D`` aligned
-to the usual (8, 128) f32 tiles.
+existing LSE machinery.  ``interpret=None`` (the default) resolves
+through ``repro.kernels.resolve_interpret`` — interpret-mode Pallas on
+the CPU backend so tier-1 stays green without a TPU, compiled Mosaic
+elsewhere; compiled Mosaic requires ``page_size`` and ``D`` aligned to
+the usual (8, 128) f32 tiles.
 """
 from __future__ import annotations
 
@@ -55,7 +66,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import (BlockOperand, KernelGridAnalysis, ScalarSpec,
-                           register_kernel_spec)
+                           register_kernel_spec, resolve_interpret)
 
 NEG_INF = -1e30
 LANES = 128
@@ -66,7 +77,9 @@ def _block_layout(t: int, d: int, ps: int, q_per_kv: int):
     source for both ``pallas_call`` below and the registered grid
     analysis, so the static bounds checker proves exactly the maps the
     kernel runs.  Index maps see scalar refs in prefetch order
-    (pt, vl, rb, st, meta); only the page table is read."""
+    (pt, vl, rb, st, meta[, k_scale, v_scale]); only the page table is
+    read — the quantized pool's scale arrays trail behind and are only
+    consumed inside the kernel body."""
 
     def q_index(bi, hi, ji, *refs):
         del ji, refs
@@ -87,9 +100,14 @@ def _block_layout(t: int, d: int, ps: int, q_per_kv: int):
 
 @register_kernel_spec("paged_attention")
 def _grid_analyses():
-    """Bounds-checker config matrix: page size × pool size × GQA heads,
-    with table widths both narrower and wider than the pool (stale
-    entries past a short document rely on the wrapper's clip)."""
+    """Bounds-checker config matrix: page size × pool size × GQA heads
+    × {fp32, quantized} prefetch layouts, with table widths both
+    narrower and wider than the pool (stale entries past a short
+    document rely on the wrapper's clip).  The quantized twin appends
+    the per-page scale arrays to the scalar-prefetch order — the index
+    maps must stay oblivious to them (the page table stays the first
+    ref), which is exactly what evaluating the same maps under the
+    longer scalar tuple proves."""
     cases = []
     for ps, npool, (h, kvh) in itertools.product(
             (8, 16), (6, 16), ((4, 4), (4, 2), (8, 1))):
@@ -100,37 +118,51 @@ def _grid_analyses():
             kv_bs, kv_im = lay["kv"]
             lse_bs, lse_im = lay["lse"]
             imax = 2 ** 31 - 1
-            cases.append(KernelGridAnalysis(
-                kernel="paged_attention",
-                case=f"ps={ps} npool={npool} h={h}/{kvh} b={b} t={t} p={p}",
-                source="src/repro/kernels/paged_attention.py",
-                grid=(b, h, p),
-                scalars=(
-                    ScalarSpec("page_table", (b, p), 0, npool - 1,
-                               guard="jnp.clip(page_table, 0, npool-1) "
-                                     "in paged_flash_attention"),
-                    ScalarSpec("valid_len", (b,), 0, imax),
-                    ScalarSpec("row_base", (b,), 0, imax),
-                    ScalarSpec("start", (b,), 0, imax),
-                    ScalarSpec("meta", (2,), 0, imax),
-                ),
-                operands=(
-                    BlockOperand("q", (b, t, h, d), q_bs, q_im),
-                    BlockOperand("pool_k", (npool, ps, kvh, d), kv_bs, kv_im),
-                    BlockOperand("pool_v", (npool, ps, kvh, d), kv_bs, kv_im),
-                    BlockOperand("out", (b, t, h, d), q_bs, q_im),
-                    BlockOperand("lse", (b, h, t), lse_bs, lse_im),
-                )))
+            scalars = (
+                ScalarSpec("page_table", (b, p), 0, npool - 1,
+                           guard="jnp.clip(page_table, 0, npool-1) "
+                                 "in paged_flash_attention"),
+                ScalarSpec("valid_len", (b,), 0, imax),
+                ScalarSpec("row_base", (b,), 0, imax),
+                ScalarSpec("start", (b,), 0, imax),
+                ScalarSpec("meta", (2,), 0, imax),
+            )
+            quant_scalars = scalars + (
+                ScalarSpec("k_scale", (npool, kvh), 0, 1),
+                ScalarSpec("v_scale", (npool, kvh), 0, 1),
+            )
+            operands = (
+                BlockOperand("q", (b, t, h, d), q_bs, q_im),
+                BlockOperand("pool_k", (npool, ps, kvh, d), kv_bs, kv_im),
+                BlockOperand("pool_v", (npool, ps, kvh, d), kv_bs, kv_im),
+                BlockOperand("out", (b, t, h, d), q_bs, q_im),
+                BlockOperand("lse", (b, h, t), lse_bs, lse_im),
+            )
+            for tag, sc in (("fp32", scalars), ("quant", quant_scalars)):
+                cases.append(KernelGridAnalysis(
+                    kernel="paged_attention",
+                    case=f"ps={ps} npool={npool} h={h}/{kvh} b={b} t={t} "
+                         f"p={p} {tag}",
+                    source="src/repro/kernels/paged_attention.py",
+                    grid=(b, h, p),
+                    scalars=sc,
+                    operands=operands))
     return cases
 
 
 def _kernel(pt_ref, vl_ref, rb_ref, st_ref, meta_ref,   # scalar prefetch
-            q_ref, k_ref, v_ref,                        # VMEM tiles
-            o_ref, lse_ref,
-            acc_ref, m_ref, l_ref,                      # scratch
-            *, t: int, ps: int, npages: int, window: int,
-            softcap: Optional[float], scale: float):
+            *rest,                                      # [ks, vs,] tiles, ...
+            t: int, ps: int, npages: int, window: int,
+            softcap: Optional[float], scale: float,
+            q_per_kv: int = 1, quantized: bool = False):
+    if quantized:
+        (ks_ref, vs_ref, q_ref, k_ref, v_ref,
+         o_ref, lse_ref, acc_ref, m_ref, l_ref) = rest
+    else:
+        (q_ref, k_ref, v_ref,
+         o_ref, lse_ref, acc_ref, m_ref, l_ref) = rest
     bi = pl.program_id(0)
+    hi = pl.program_id(1)
     ji = pl.program_id(2)
 
     @pl.when(ji == 0)
@@ -157,6 +189,14 @@ def _kernel(pt_ref, vl_ref, rb_ref, st_ref, meta_ref,   # scalar prefetch
         q = q_ref[0, :, 0, :].astype(jnp.float32)       # (t, d)
         k = k_ref[0, :, 0, :].astype(jnp.float32)       # (ps, d)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            # dequantize the tile in registers: one fp32 scale per
+            # (physical page, kv head), fetched off the scalar path —
+            # the MXU below still sees fp32 operands
+            page = pt_ref[bi, ji]
+            hk = hi // q_per_kv
+            k = k * ks_ref[page, hk]
+            v = v * vs_ref[page, hk]
 
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         if softcap is not None:
@@ -196,7 +236,8 @@ def paged_flash_attention(q, pool_k, pool_v, page_table, *,
                           window: int = 0,
                           softcap: Optional[float] = None,
                           page_stride: int = 1, page_offset=0,
-                          interpret: bool = False):
+                          k_scale=None, v_scale=None,
+                          interpret: Optional[bool] = None):
     """Fused paged attention of q against one layer's page pool.
 
     q: (B, t, H, D); pool_k/pool_v: (num_pool_pages, page_size, KV, D);
@@ -211,9 +252,20 @@ def paged_flash_attention(q, pool_k, pool_v, page_table, *,
     rows ``(j*stride + offset) * page_size`` — (1, 0) for a single-host
     pool, (n_shards, shard_index) for a mesh-strided one.
 
+    ``k_scale``/``v_scale``: per-page per-kv-head fp32 dequant scales,
+    (num_pool_pages, KV), for a quantized pool (both or neither); the
+    pool payload is then int8 / float8_e4m3fn and each tile is
+    dequantized in the kernel body (module docstring).  ``interpret``
+    defaults to ``None`` = platform choice via
+    ``repro.kernels.resolve_interpret``.
+
     Returns (out (B, t, H, D) in q.dtype, lse (B, H, t) float32) —
     LSE-merge compatible with ``core.decode.partial_attention_lse``.
     """
+    interpret = resolve_interpret(interpret)
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be given together")
+    quantized = k_scale is not None
     b, t, h, d = q.shape
     npool, ps = pool_k.shape[:2]
     kvh = pool_k.shape[2]
@@ -238,10 +290,10 @@ def paged_flash_attention(q, pool_k, pool_v, page_table, *,
 
     kernel = functools.partial(
         _kernel, t=t, ps=ps, npages=p, window=window, softcap=softcap,
-        scale=scale)
+        scale=scale, q_per_kv=q_per_kv, quantized=quantized)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=5,
+        num_scalar_prefetch=7 if quantized else 5,
         grid=grid,
         in_specs=[
             pl.BlockSpec(*lay["q"]),
@@ -259,11 +311,15 @@ def paged_flash_attention(q, pool_k, pool_v, page_table, *,
         ],
     )
 
+    scalars = (pt, vl, rb, st, meta)
+    if quantized:
+        scalars += (jnp.asarray(k_scale, jnp.float32),
+                    jnp.asarray(v_scale, jnp.float32))
     out, lse = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct(q.shape, q.dtype),
                    jax.ShapeDtypeStruct((b, h, t), jnp.float32)],
         interpret=interpret,
-    )(pt, vl, rb, st, meta, q, pool_k, pool_v)
+    )(*scalars, q, pool_k, pool_v)
     return out, lse

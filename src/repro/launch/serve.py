@@ -54,6 +54,14 @@ def main() -> None:
                     help="paged read path: fused Pallas paged-attention "
                          "kernel (interpret-mode on CPU) or the dense-"
                          "view gather oracle")
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=["fp32", "int8", "fp8"],
+                    help="paged-pool storage format: fp32 (exact), or "
+                         "int8 / fp8 per-page per-kv-head symmetric "
+                         "quantization — ~4x / ~4x smaller pages, "
+                         "dequant fused into the paged kernel; requires "
+                         "--cache-layout paged (see docs/serving.md for "
+                         "the accuracy contract)")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="size the paged pool explicitly (global pages; "
                          "must divide by the cache shard count on a "
@@ -143,6 +151,7 @@ def main() -> None:
         serve_cfg = ServeConfig(cache_layout=args.cache_layout,
                                 page_size=args.page_size,
                                 paged_impl=args.paged_impl,
+                                kv_dtype=args.kv_dtype,
                                 n_slots=(args.slots if args.slots
                                          is not None else args.batch),
                                 prefill_chunk=args.prefill_chunk,

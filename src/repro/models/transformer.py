@@ -311,7 +311,8 @@ def apply_layer_decode(p, cfg, kind, x, positions, cache, tail,
                 q, cache["k"], cache["v"], pt, pctx=rctx.pctx,
                 cache_axes=rctx.cache_axes, valid_len=vl,
                 row_base=jnp.asarray(vl, jnp.int32) - 1, window=window,
-                softcap=cfg.attn_logit_softcap, impl=rctx.paged_impl)
+                softcap=cfg.attn_logit_softcap, impl=rctx.paged_impl,
+                k_scale=cache.get("ks"), v_scale=cache.get("vs"))
         else:
             ctx_out, ctx_lse = dec.decode_attention_distributed(
                 q, cache["k"], cache["v"], pctx=rctx.pctx,
@@ -512,7 +513,9 @@ def forward_chunk(params, cfg, chunk, positions, caches, rctx: RunCtx,
                     softcap=cfg.attn_logit_softcap,
                     k_extra=k_extra, v_extra=v_extra,
                     extra_mask=extra_mask, page_table=ptab,
-                    paged_impl=rctx.paged_impl)
+                    paged_impl=rctx.paged_impl,
+                    k_scale=block_caches[i].get("ks"),
+                    v_scale=block_caches[i].get("vs"))
                 x = x + attn.attn_out(p["attn"], cfg, out)
                 upd = {"k": k_new, "v": v_new}
                 if use_pass:

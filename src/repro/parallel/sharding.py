@@ -142,22 +142,37 @@ def page_table_spec(cache_axes: Tuple[str, ...]) -> P:
     return P(None, cache_axes, None, None)
 
 
+def paged_scale_spec(cache_axes: Tuple[str, ...]) -> P:
+    """PartitionSpec of a quantized pool's scale leaves "ks"/"vs"
+    (blocks, num_pages, KV): the pages axis shards exactly like the
+    payload (``paged_pool_spec``) — a page and its scale row must land
+    on the same shard, or dequantization would read a remote scale for
+    a local page."""
+    return P(None, cache_axes, None)
+
+
 def shard_paged_caches(caches, mesh: Mesh,
                        cache_axes: Tuple[str, ...]):
     """Place stacked paged doc caches onto the mesh: pool leaves shard
-    on the pages axis, tables on the shard axis, everything else (mamba
+    on the pages axis (quantized scale leaves "ks"/"vs" alongside, same
+    pages-axis split), tables on the shard axis, everything else (mamba
     state, dense leaves) replicated over the cache axes.  A no-op
     (identity) off-mesh so call sites stay unconditional."""
     if mesh is None or not cache_axes:
         return caches
     pool_sh = NamedSharding(mesh, paged_pool_spec(cache_axes))
     table_sh = NamedSharding(mesh, page_table_spec(cache_axes))
+    scale_sh = NamedSharding(mesh, paged_scale_spec(cache_axes))
     out = []
     for c in caches:
         if "pt" in c and c["pt"].ndim == 4:
-            out.append({"k": jax.device_put(c["k"], pool_sh),
-                        "v": jax.device_put(c["v"], pool_sh),
-                        "pt": jax.device_put(c["pt"], table_sh)})
+            entry = {"k": jax.device_put(c["k"], pool_sh),
+                     "v": jax.device_put(c["v"], pool_sh),
+                     "pt": jax.device_put(c["pt"], table_sh)}
+            if "ks" in c:
+                entry["ks"] = jax.device_put(c["ks"], scale_sh)
+                entry["vs"] = jax.device_put(c["vs"], scale_sh)
+            out.append(entry)
         else:
             out.append(c)
     return tuple(out)

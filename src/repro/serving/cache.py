@@ -43,6 +43,20 @@ docs/architecture.md for the full picture):
     free lists (``ShardedPageAllocator``) reserve all-or-nothing across
     shards at admission time.
 
+  * **paged, quantized** (``kv_dtype="int8"``/``"fp8"``, ``core.quant``)
+    — the pool payload {"k","v"} is stored int8 / float8_e4m3fn and each
+    layer dict grows per-page per-kv-head fp32 scale leaves
+    "ks"/"vs" (blocks, num_pages, KV), written together with their
+    pages: whole-page quantize on paste (``write_doc_pages``/
+    ``install_doc_pages``/``dense_to_paged``), dequant-merge-requant on
+    the chunk scatter (``core.decode.paged_scatter_quant``).  Presence
+    of "ks" *is* the format marker everywhere.  Reads dequantize in the
+    fused kernel (scales on the scalar-prefetch path) or per row in the
+    gather oracle; format parity of warm prefix pages is enforced by
+    binding ``kv_dtype`` into every ``prefix_hash_seed``
+    (scheduler._prefix_seed) so pages can never be shared across pools
+    with different quantization formats.
+
 Fill-level vocabulary used throughout the serving stack:
   * ``doc_len`` / ``valid_len`` — valid rows in a slot's *document*
     cache (dense prefix length, or logical length through the page
@@ -62,6 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import decode as dec
+from repro.core import quant
 
 
 def pow2_bucket(n: int) -> int:
@@ -304,8 +319,11 @@ def table_width(capacity: int, page_size: int, n_shards: int = 1) -> int:
 
 def prefix_hash_seed(*parts) -> bytes:
     """Digest the non-token inputs of a prefix hash chain: path marker,
-    geometry ints, query token arrays.  Length-prefixed so distinct part
-    tuples can never collide by concatenation."""
+    pool KV storage format (``kv_dtype`` — a page's *bytes* depend on
+    the quantization format, so an int8-warmed page must never answer
+    an fp32 key or vice versa; every seed call site binds it), geometry
+    ints, query token arrays.  Length-prefixed so distinct part tuples
+    can never collide by concatenation."""
     h = hashlib.blake2b(digest_size=16)
     for part in parts:
         if isinstance(part, bytes):
@@ -792,7 +810,8 @@ def _identity_tables(blocks: int, b: int, p: int, n_shards: int):
     return jnp.broadcast_to(base, (blocks,) + base.shape)
 
 
-def dense_to_paged(caches, page_size: int, n_shards: int = 1) -> Tuple:
+def dense_to_paged(caches, page_size: int, n_shards: int = 1,
+                   kv_dtype: str = "fp32") -> Tuple:
     """Dense stacked doc caches -> paged, with identity page tables.
 
     Attention {"k","v"} (blocks, B, n, KV, D) becomes a pool
@@ -807,7 +826,13 @@ def dense_to_paged(caches, page_size: int, n_shards: int = 1) -> Tuple:
     page ``j`` strides to shard ``j % S`` at local index ``j // S``
     (every shard's table padded to the same width P = ceil(pages/S)),
     pool (blocks, S*B*P, page_size, KV, D) ordered (shard, slot, local
-    page), tables (blocks, S, B, P) of global ids."""
+    page), tables (blocks, S, B, P) of global ids.
+
+    A quantized ``kv_dtype`` additionally quantizes every page
+    (``core.quant``, symmetric per-page per-kv-head) and adds the
+    "ks"/"vs" scale leaves — the same per-page math the scheduler's
+    admission paste applies, so the two pool-building paths agree
+    bitwise."""
     out = []
     for c in caches:
         if "k" in c:
@@ -824,6 +849,11 @@ def dense_to_paged(caches, page_size: int, n_shards: int = 1) -> Tuple:
                 # logical page j = jl*S + s -> physical order (s, b, jl)
                 entry[key] = jnp.moveaxis(rows, 3, 1).reshape(
                     (blocks, n_shards * b * p, page_size) + c[key].shape[3:])
+            if quant.is_quantized(kv_dtype):
+                dt = quant.pool_dtype(kv_dtype)
+                for key, skey in (("k", "ks"), ("v", "vs")):
+                    entry[key], entry[skey] = quant.quantize_pages(
+                        entry[key], dt)
             out.append(entry)
         else:
             out.append(c)
@@ -851,7 +881,11 @@ def paged_to_dense(caches) -> Tuple:
         if "pt" in c:
             pt = (c["pt"] if c["pt"].ndim == 3
                   else _logical_order_tables(c["pt"]))
-            k, v = read(c["k"], c["v"], pt)
+            pk, pv = c["k"], c["v"]
+            if "ks" in c:                        # quantized pool: dequant
+                pk = quant.dequantize(pk, c["ks"])
+                pv = quant.dequantize(pv, c["vs"])
+            k, v = read(pk, pv, pt)
             out.append({"k": k, "v": v})
         else:
             out.append(c)
@@ -860,7 +894,7 @@ def paged_to_dense(caches) -> Tuple:
 
 def alloc_paged_slots(req_caches, n_slots: int, num_pages: int,
                       page_size: int, table_width: int, widen,
-                      n_shards: int = 1) -> Tuple:
+                      n_shards: int = 1, kv_dtype: str = "fp32") -> Tuple:
     """Shared slot caches for the paged scheduler, shaped after one
     prefilled request: attention layers get a zero global pool
     {"k","v"} (blocks, num_pages, page_size, KV, D) + zero page tables
@@ -868,7 +902,11 @@ def alloc_paged_slots(req_caches, n_slots: int, num_pages: int,
     n_shards, n_slots, table_width) with ``table_width`` already the
     *per-shard* width; mamba layers are widened to ``n_slots`` on the
     batch axis by ``widen`` (they stay per-slot dense — their state is
-    length-free, paging buys nothing)."""
+    length-free, paging buys nothing).  A quantized ``kv_dtype`` stores
+    the payload in the quantized dtype and adds all-ones fp32 scale
+    leaves "ks"/"vs" (blocks, num_pages, KV) — zero payload × any scale
+    is still zero, so fresh pools stay exact."""
+    quantized = quant.is_quantized(kv_dtype)
     out = []
     for c in req_caches:
         if "k" in c:
@@ -877,10 +915,17 @@ def alloc_paged_slots(req_caches, n_slots: int, num_pages: int,
             pool_shape = (blocks, num_pages, page_size) + tail_shape
             pt_shape = ((blocks, n_slots, table_width) if n_shards == 1
                         else (blocks, n_shards, n_slots, table_width))
-            out.append({
-                "k": jnp.zeros(pool_shape, c["k"].dtype),
-                "v": jnp.zeros(pool_shape, c["v"].dtype),
-                "pt": jnp.zeros(pt_shape, jnp.int32)})
+            pdt = (quant.pool_dtype(kv_dtype) if quantized
+                   else c["k"].dtype)
+            entry = {
+                "k": jnp.zeros(pool_shape, pdt),
+                "v": jnp.zeros(pool_shape, pdt),
+                "pt": jnp.zeros(pt_shape, jnp.int32)}
+            if quantized:
+                sshape = (blocks, num_pages) + tail_shape[:-1]
+                entry["ks"] = jnp.ones(sshape, jnp.float32)
+                entry["vs"] = jnp.ones(sshape, jnp.float32)
+            out.append(entry)
         else:
             out.append({k: widen(v) for k, v in c.items()})
     return tuple(out)
@@ -898,6 +943,7 @@ def _write_doc_pages_sharded(c, rc, slot: int, pages: List[List[int]],
             f"reservation covers {len(pages)} shards but the pool has "
             f"{n_shards}")
     k, v, pt = c["k"], c["v"], c["pt"]
+    ks, vs = c.get("ks"), c.get("vs")
     pt = pt.at[:, :, slot, :].set(0)
     if "pt" in rc:
         # chunked admission: exact-length sharded mini-pool, identity
@@ -912,10 +958,22 @@ def _write_doc_pages_sharded(c, rc, slot: int, pages: List[List[int]],
                     f"request mini-pool holds {p_mini} per shard")
             arr = jnp.asarray(grant, jnp.int32)
             src = slice(s * p_mini, s * p_mini + len(grant))
-            k = k.at[:, arr].set(rc["k"][:, src])
-            v = v.at[:, arr].set(rc["v"][:, src])
+            pk, pv = rc["k"][:, src], rc["v"][:, src]
+            if ks is not None:
+                if "ks" in rc:      # same format: pages copy verbatim
+                    sk, sv = rc["ks"][:, src], rc["vs"][:, src]
+                else:               # fp32 request into a quantized pool
+                    pk, sk = quant.quantize_pages(pk, k.dtype)
+                    pv, sv = quant.quantize_pages(pv, v.dtype)
+                ks = ks.at[:, arr].set(sk)
+                vs = vs.at[:, arr].set(sv)
+            k = k.at[:, arr].set(pk)
+            v = v.at[:, arr].set(pv)
             pt = pt.at[:, s, slot, :len(grant)].set(arr)
-        return {"k": k, "v": v, "pt": pt}
+        entry = {"k": k, "v": v, "pt": pt}
+        if ks is not None:
+            entry["ks"], entry["vs"] = ks, vs
+        return entry
     blocks, _, m = rc["k"].shape[:3]
     p = pages_for(m, page_size)
     need = shard_pages_for(m, page_size, n_shards)
@@ -928,6 +986,9 @@ def _write_doc_pages_sharded(c, rc, slot: int, pages: List[List[int]],
     tail_shape = rc["k"].shape[3:]
     rows = {key: jnp.pad(rc[key], pad).reshape(
         (blocks, p, page_size) + tail_shape) for key in ("k", "v")}
+    if ks is not None:
+        rows["k"], rows["ks"] = quant.quantize_pages(rows["k"], k.dtype)
+        rows["v"], rows["vs"] = quant.quantize_pages(rows["v"], v.dtype)
     for s, grant in enumerate(pages):
         if not grant:
             continue
@@ -935,8 +996,14 @@ def _write_doc_pages_sharded(c, rc, slot: int, pages: List[List[int]],
         js = jnp.arange(s, p, n_shards, dtype=jnp.int32)
         k = k.at[:, arr].set(jnp.take(rows["k"], js, axis=1))
         v = v.at[:, arr].set(jnp.take(rows["v"], js, axis=1))
+        if ks is not None:
+            ks = ks.at[:, arr].set(jnp.take(rows["ks"], js, axis=1))
+            vs = vs.at[:, arr].set(jnp.take(rows["vs"], js, axis=1))
         pt = pt.at[:, s, slot, :len(grant)].set(arr)
-    return {"k": k, "v": v, "pt": pt}
+    entry = {"k": k, "v": v, "pt": pt}
+    if ks is not None:
+        entry["ks"], entry["vs"] = ks, vs
+    return entry
 
 
 def write_doc_pages(caches, req_caches, slot: int, pages,
@@ -979,9 +1046,19 @@ def write_doc_pages(caches, req_caches, slot: int, pages,
                     f"{page_size} were reserved")
             pt = c["pt"].at[:, slot, :].set(0)
             pt = pt.at[:, slot, :npg].set(pages_arr)
-            out.append({"k": c["k"].at[:, pages_arr].set(rc["k"]),
-                        "v": c["v"].at[:, pages_arr].set(rc["v"]),
-                        "pt": pt})
+            pk, pv = rc["k"], rc["v"]
+            entry = {"pt": pt}
+            if "ks" in c:
+                if "ks" in rc:     # same format: pages copy verbatim
+                    sk, sv = rc["ks"], rc["vs"]
+                else:              # fp32 request into a quantized pool
+                    pk, sk = quant.quantize_pages(pk, c["k"].dtype)
+                    pv, sv = quant.quantize_pages(pv, c["v"].dtype)
+                entry["ks"] = c["ks"].at[:, pages_arr].set(sk)
+                entry["vs"] = c["vs"].at[:, pages_arr].set(sv)
+            entry["k"] = c["k"].at[:, pages_arr].set(pk)
+            entry["v"] = c["v"].at[:, pages_arr].set(pv)
+            out.append(entry)
         elif "pt" in c:
             blocks, _, m = rc["k"].shape[:3]
             if m > npg * page_size:
@@ -997,9 +1074,17 @@ def write_doc_pages(caches, req_caches, slot: int, pages,
                 for k in ("k", "v")}
             pt = c["pt"].at[:, slot, :].set(0)
             pt = pt.at[:, slot, :npg].set(pages_arr)
-            out.append({"k": c["k"].at[:, pages_arr].set(paged_rows["k"]),
-                        "v": c["v"].at[:, pages_arr].set(paged_rows["v"]),
-                        "pt": pt})
+            entry = {"pt": pt}
+            if "ks" in c:
+                paged_rows["k"], sk = quant.quantize_pages(
+                    paged_rows["k"], c["k"].dtype)
+                paged_rows["v"], sv = quant.quantize_pages(
+                    paged_rows["v"], c["v"].dtype)
+                entry["ks"] = c["ks"].at[:, pages_arr].set(sk)
+                entry["vs"] = c["vs"].at[:, pages_arr].set(sv)
+            entry["k"] = c["k"].at[:, pages_arr].set(paged_rows["k"])
+            entry["v"] = c["v"].at[:, pages_arr].set(paged_rows["v"])
+            out.append(entry)
         else:
             out.append({k: c[k].at[:, slot].set(rc[k][:, 0]) for k in c})
     return tuple(out)
@@ -1019,10 +1104,21 @@ def gather_pool_pages(caches, phys: List[int]) -> Tuple:
     layer {"k","v"} (blocks, len(phys), page_size, KV, D) in the given
     (logical) order; None for layers without a page table.  The warm
     half of a prefix-hit admission — the gathered KV seeds the session's
-    private mini-pool so chunked prefill can resume past it."""
+    private mini-pool so chunked prefill can resume past it.  Quantized
+    pools gather the scale rows alongside the payload (format never
+    changes across a gather — the mini-pool shares the pool's
+    ``kv_dtype``)."""
     arr = jnp.asarray(phys, jnp.int32)
-    return tuple({"k": c["k"][:, arr], "v": c["v"][:, arr]}
-                 if "pt" in c else None for c in caches)
+    out = []
+    for c in caches:
+        if "pt" not in c:
+            out.append(None)
+            continue
+        w = {"k": c["k"][:, arr], "v": c["v"][:, arr]}
+        if "ks" in c:
+            w["ks"], w["vs"] = c["ks"][:, arr], c["vs"][:, arr]
+        out.append(w)
+    return tuple(out)
 
 
 def seed_warm_pages(caches, warm_kv, n_shards: int = 1) -> Tuple:
@@ -1041,9 +1137,13 @@ def seed_warm_pages(caches, warm_kv, n_shards: int = 1) -> Tuple:
             idx = jnp.asarray(
                 [mini_page_index(j, n_shards, pm) for j in range(h)],
                 jnp.int32)
-            out.append({"k": c["k"].at[:, idx].set(w["k"]),
-                        "v": c["v"].at[:, idx].set(w["v"]),
-                        "pt": c["pt"]})
+            entry = {"k": c["k"].at[:, idx].set(w["k"]),
+                     "v": c["v"].at[:, idx].set(w["v"]),
+                     "pt": c["pt"]}
+            if "ks" in c:
+                entry["ks"] = c["ks"].at[:, idx].set(w["ks"])
+                entry["vs"] = c["vs"].at[:, idx].set(w["vs"])
+            out.append(entry)
         else:
             out.append(c)
     return tuple(out)
@@ -1105,6 +1205,7 @@ def install_doc_pages(caches, req_caches, slot: int, phys: List[int],
             pt = pt.at[:, slot, :npg].set(jnp.asarray(phys, jnp.int32))
         cold = [j for j in range(npg) if copy[j]]
         k, v = c["k"], c["v"]
+        ks, vs = c.get("ks"), c.get("vs")
         if cold:
             dst = jnp.asarray([phys[j] for j in cold], jnp.int32)
             if "pt" in rc:
@@ -1112,8 +1213,17 @@ def install_doc_pages(caches, req_caches, slot: int, phys: List[int],
                 src = jnp.asarray(
                     [mini_page_index(j, n_shards, pm) for j in cold],
                     jnp.int32)
-                k = k.at[:, dst].set(rc["k"][:, src])
-                v = v.at[:, dst].set(rc["v"][:, src])
+                pk, pv = rc["k"][:, src], rc["v"][:, src]
+                if ks is not None:
+                    if "ks" in rc:   # same format: pages copy verbatim
+                        sk, sv = rc["ks"][:, src], rc["vs"][:, src]
+                    else:            # fp32 request into a quantized pool
+                        pk, sk = quant.quantize_pages(pk, k.dtype)
+                        pv, sv = quant.quantize_pages(pv, v.dtype)
+                    ks = ks.at[:, dst].set(sk)
+                    vs = vs.at[:, dst].set(sv)
+                k = k.at[:, dst].set(pk)
+                v = v.at[:, dst].set(pv)
             else:
                 blocks, _, m = rc["k"].shape[:3]
                 if m > npg * page_size:
@@ -1128,9 +1238,17 @@ def install_doc_pages(caches, req_caches, slot: int, phys: List[int],
                     (blocks, npg, page_size) + tail_shape)
                 rows_v = jnp.pad(rc["v"], pad).reshape(
                     (blocks, npg, page_size) + tail_shape)
+                if ks is not None:
+                    rows_k, sk = quant.quantize_pages(rows_k, k.dtype)
+                    rows_v, sv = quant.quantize_pages(rows_v, v.dtype)
+                    ks = ks.at[:, dst].set(jnp.take(sk, src, axis=1))
+                    vs = vs.at[:, dst].set(jnp.take(sv, src, axis=1))
                 k = k.at[:, dst].set(jnp.take(rows_k, src, axis=1))
                 v = v.at[:, dst].set(jnp.take(rows_v, src, axis=1))
-        out.append({"k": k, "v": v, "pt": pt})
+        entry = {"k": k, "v": v, "pt": pt}
+        if ks is not None:
+            entry["ks"], entry["vs"] = ks, vs
+        out.append(entry)
     return tuple(out)
 
 
@@ -1171,20 +1289,29 @@ def cow_unshare_pages(caches, slot: int, logical_pages: List[int],
             out.append(c)
             continue
         k, v, pt = c["k"], c["v"], c["pt"]
+        ks, vs = c.get("ks"), c.get("vs")
         for j, old, new in remaps:
             k = k.at[:, new].set(k[:, old])
             v = v.at[:, new].set(v[:, old])
+            if ks is not None:
+                # a private copy is only faithful with its scale row —
+                # payload bits mean nothing under another page's scale
+                ks = ks.at[:, new].set(ks[:, old])
+                vs = vs.at[:, new].set(vs[:, old])
             if sharded:
                 pt = pt.at[:, j % n_shards, slot, j // n_shards].set(new)
             else:
                 pt = pt.at[:, slot, j].set(new)
-        out.append({"k": k, "v": v, "pt": pt})
+        entry = {"k": k, "v": v, "pt": pt}
+        if ks is not None:
+            entry["ks"], entry["vs"] = ks, vs
+        out.append(entry)
     return tuple(out), [r[0] for r in remaps]
 
 
 def alloc_doc_caches(cfg, batch: int, capacity: int, dtype=jnp.float32,
                      page_size: Optional[int] = None,
-                     n_shards: int = 1) -> Tuple:
+                     n_shards: int = 1, kv_dtype: str = "fp32") -> Tuple:
     """Zero decode-format doc caches for chunked prefill.
 
     One dict per block-pattern slot, leaves stacked on a leading
@@ -1199,7 +1326,10 @@ def alloc_doc_caches(cfg, batch: int, capacity: int, dtype=jnp.float32,
     "pt" (blocks, B, P), P = pages_for(capacity) — chunk KV is then
     scattered page-by-page by ``append_doc_chunk``.  ``n_shards > 1``
     lays the pool out mesh-sharded (round-robin logical striding, tables
-    (blocks, S, B, P) of global ids, P the per-shard width)."""
+    (blocks, S, B, P) of global ids, P the per-shard width).  A
+    quantized ``kv_dtype`` (paged only) stores the payload quantized
+    with all-ones fp32 scale leaves "ks"/"vs" (blocks, B*P, KV)."""
+    quantized = quant.is_quantized(kv_dtype)
     out = []
     nb = cfg.num_blocks
     for kind in cfg.block_pattern:
@@ -1209,9 +1339,19 @@ def alloc_doc_caches(cfg, batch: int, capacity: int, dtype=jnp.float32,
                 shape = (nb, n_shards * batch * p, page_size,
                          cfg.num_kv_heads, cfg.head_dim)
                 pt = _identity_tables(nb, batch, p, n_shards)
-                out.append({"k": jnp.zeros(shape, dtype),
-                            "v": jnp.zeros(shape, dtype), "pt": pt})
+                pdt = quant.pool_dtype(kv_dtype) if quantized else dtype
+                entry = {"k": jnp.zeros(shape, pdt),
+                         "v": jnp.zeros(shape, pdt), "pt": pt}
+                if quantized:
+                    sshape = shape[:2] + (cfg.num_kv_heads,)
+                    entry["ks"] = jnp.ones(sshape, jnp.float32)
+                    entry["vs"] = jnp.ones(sshape, jnp.float32)
+                out.append(entry)
                 continue
+            if quantized:
+                raise ValueError(
+                    "quantized kv_dtype requires the paged layout "
+                    "(page_size set) — dense doc caches are fp32-only")
             shape = (nb, batch, capacity, cfg.num_kv_heads, cfg.head_dim)
             out.append({"k": jnp.zeros(shape, dtype),
                         "v": jnp.zeros(shape, dtype)})
@@ -1244,14 +1384,34 @@ def append_doc_chunk(caches, updates, doc_len, writable=None) -> Tuple:
     rows whose table entry resolves to a non-writable physical page are
     dropped instead of written (the COW-aware scatter).  Prefix-resumed
     sessions pass ``warm_writable_mask`` so cache-seeded pages stay
-    immutable by construction."""
+    immutable by construction — on a quantized pool the dropped page's
+    *scale* row is equally untouched (payload and scale move as one).
+
+    Quantized pools ("ks" present) route through the requantizing
+    scatters (``core.decode.paged_scatter_quant``): touched pages are
+    dequantized, spliced, and requantized whole, so straddled pages see
+    a second quantization per chunk — chunked admission is bit-equal to
+    monolithic only at fp32; at int8/fp8 the contract is the documented
+    error bound."""
     write = jax.vmap(dec.write_tail_at, in_axes=(0, 0, None))
     scatter = jax.vmap(dec.paged_scatter, in_axes=(0, 0, 0, None, None))
     scatter_sh = jax.vmap(dec.paged_scatter_sharded,
                           in_axes=(0, 0, 0, None, None))
+    scatter_q = jax.vmap(dec.paged_scatter_quant,
+                         in_axes=(0, 0, 0, 0, None, None))
+    scatter_qsh = jax.vmap(dec.paged_scatter_sharded_quant,
+                           in_axes=(0, 0, 0, 0, None, None))
     out = []
     for c, u in zip(caches, updates):
-        if "k" in u and "pt" in c:
+        if "k" in u and "pt" in c and "ks" in c:
+            sc = scatter_qsh if c["pt"].ndim == 4 else scatter_q
+            nk, nks = sc(c["k"], c["ks"], u["k"], c["pt"], doc_len,
+                         writable)
+            nv, nvs = sc(c["v"], c["vs"], u["v"], c["pt"], doc_len,
+                         writable)
+            out.append({"k": nk, "v": nv, "ks": nks, "vs": nvs,
+                        "pt": c["pt"]})
+        elif "k" in u and "pt" in c:
             sc = scatter_sh if c["pt"].ndim == 4 else scatter
             out.append({"k": sc(c["k"], u["k"], c["pt"], doc_len, writable),
                         "v": sc(c["v"], u["v"], c["pt"], doc_len, writable),

@@ -58,6 +58,11 @@ class ServeConfig:
       * ``page_size`` — rows per page for the paged layout.
       * ``paged_impl`` — paged read path: ``"kernel"`` (fused Pallas
         paged attention) or ``"gather"`` (dense-view oracle).
+      * ``kv_dtype`` — paged-pool storage format: ``"fp32"`` (exact,
+        the greedy-token oracle), ``"int8"`` or ``"fp8"`` (per-page
+        per-kv-head symmetric quantization; dequant is fused into the
+        paged kernel, and the gather oracle dequantizes the same way).
+        Quantized formats require ``cache_layout="paged"``.
 
     Scheduler-owned fields:
       * ``n_slots`` — fixed decode-batch width.
@@ -86,6 +91,7 @@ class ServeConfig:
     cache_layout: str = "dense"
     page_size: int = 64
     paged_impl: str = "kernel"
+    kv_dtype: str = "fp32"
     n_slots: int = 2
     decode_chunk: int = 8
     prefill_chunk: Optional[int] = None
@@ -109,6 +115,12 @@ class ServeConfig:
         if self.page_size < 1:
             raise ValueError(
                 f"page_size must be >= 1, got {self.page_size}")
+        from repro.core import quant
+        if quant.is_quantized(self.kv_dtype) and \
+                self.cache_layout != "paged":
+            raise ValueError(
+                f"kv_dtype={self.kv_dtype!r} quantizes the paged pool; "
+                f"it requires cache_layout='paged'")
         if self.n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {self.n_slots}")
         if self.decode_chunk < 1:

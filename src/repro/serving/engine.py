@@ -86,6 +86,15 @@ class Engine:
     page tables, interpret-mode on CPU); ``"gather"`` materialises the
     dense per-slot view first — the oracle the kernel is benchmarked
     and tested against.
+
+    ``kv_dtype`` (``"fp32"`` default / ``"int8"`` / ``"fp8"``) picks
+    the paged pool's storage format: quantized pools store per-page
+    per-kv-head fp32 scale leaves "ks"/"vs" next to the payload, the
+    kernel dequantizes on the fly off scalar prefetch, and the gather
+    oracle dequantizes the identical product — kernel==gather parity
+    holds at every format, while exact-greedy-token equality with the
+    dense oracle is an fp32-format property (quantized formats carry a
+    documented error bound instead; tests/test_kv_quant.py).
     """
 
     def __init__(self, cfg, params, rctx: RunCtx, jit: bool = True,
@@ -103,6 +112,7 @@ class Engine:
         cache_layout = config.cache_layout
         page_size = config.page_size
         paged_impl = config.paged_impl
+        kv_dtype = config.kv_dtype
         if cache_layout == "paged":
             if cfg.is_encoder_decoder:
                 raise ValueError(
@@ -122,6 +132,7 @@ class Engine:
         self.config = config
         self.cache_layout = cache_layout
         self.page_size = page_size
+        self.kv_dtype = kv_dtype
         self.model = model_lib.build(cfg)
         # augmented engines (star/apb with a multi-host layout) serve two
         # request populations: documents matching the layout geometry go
@@ -680,7 +691,8 @@ class Engine:
                 # (identity tables — a pad+reshape, bit-preserving; on a
                 # mesh, logical pages stripe across the cache shards)
                 caches = self._place_paged(cache_lib.dense_to_paged(
-                    caches, self.page_size, n_shards=self.cache_shards))
+                    caches, self.page_size, n_shards=self.cache_shards,
+                    kv_dtype=self.kv_dtype))
         logits0 = jax.block_until_ready(logits0)
         t_prefill = time.perf_counter() - t0
 
@@ -950,7 +962,8 @@ class ChunkedPrefill:
             engine.cfg, self.batch, cap,
             dtype=engine.params["embed"].dtype,
             page_size=engine.page_size if engine.paged else None,
-            n_shards=engine.cache_shards if engine.paged else 1)
+            n_shards=engine.cache_shards if engine.paged else 1,
+            kv_dtype=engine.kv_dtype if engine.paged else "fp32")
         if engine.paged:
             self.caches = engine._place_paged(self.caches)
         elif engine.cache_shards > 1:

@@ -430,22 +430,29 @@ class Scheduler:
         those inputs are digested into the seed — two admissions share a
         page only when everything that shaped its bits matches.  The
         chunk size rides along too: one scheduler's plans all use one
-        ladder, and cross-decomposition reuse is never assumed exact."""
+        ladder, and cross-decomposition reuse is never assumed exact.
+        So does the pool's ``kv_dtype``: page *bits* are format-relative
+        (int8 payloads mean nothing without their scales, and fp32 pages
+        hold different bytes than fp8 ones), so an int8-warmed page must
+        never answer an fp32 admission or vice versa — the format is
+        part of the identity, not a detail of the encoding."""
         eng = self.engine
         lq = int(req.query.shape[-1])
         cs = -1 if self.prefill_chunk is None else self.prefill_chunk
+        fmt = eng.kv_dtype
         doc_b = _doc_batched(req.doc)
         query_b = req.query if req.query.ndim == 2 else req.query[None]
         aug = (eng._aug_layout
                and not eng._plain_request(doc_b, query_b))
         if not aug:
-            return cache_lib.prefix_hash_seed(b"plain", lq, cs), False
+            return cache_lib.prefix_hash_seed(b"plain", lq, cs, fmt), False
         lay = eng.rctx.layout
         lp_eff = (min(lay.lp, lay.lb)
                   if eng.rctx.strategy == "apb" else 0)
         seed = cache_lib.prefix_hash_seed(
             b"aug", eng.rctx.strategy, lay.n_doc, lay.lq, lay.n_hosts,
-            lay.la, lay.lb, lp_eff, cs, np.asarray(query_b).reshape(-1))
+            lay.la, lay.lb, lp_eff, cs, fmt,
+            np.asarray(query_b).reshape(-1))
         return seed, True
 
     def _prefix_plan(self, req: Request) -> Optional[dict]:
@@ -670,7 +677,8 @@ class Scheduler:
                 cache_lib.table_width(self.doc_capacity,
                                       self.engine.page_size,
                                       self._shards),
-                widen, n_shards=self._shards)
+                widen, n_shards=self._shards,
+                kv_dtype=self.engine.kv_dtype)
             caches = self.engine._place_paged(caches)
         else:
             caches = jax.tree.map(widen, req_caches)

@@ -352,6 +352,23 @@ def main():
               sch._allocator.free_pages == sch.num_pages
               and sch.num_pages % engp.cache_shards == 0)
 
+    # quantized pool twin: the mesh-sharded int8 pool (scale leaves
+    # placed page-aligned by paged_scale_spec, dequant fused in the
+    # sharded kernel) must reproduce the single-host int8 engine
+    # bit-exactly — quantization is deterministic, so sharding may
+    # change placement but never bits
+    from repro.serving.config import ServeConfig
+    for impl in ("kernel", "gather"):
+        scfg_q = ServeConfig(cache_layout="paged", page_size=16,
+                             paged_impl=impl, kv_dtype="int8")
+        ref_q = Engine(cfg10, params, RunCtx(strategy="full"),
+                       config=scfg_q).generate(
+            doc, qry, max_new_tokens=6).tokens
+        out_q = Engine(cfg10, params, rctx10, config=scfg_q).generate(
+            doc, qry, max_new_tokens=6).tokens
+        check(f"mesh int8 paged[{impl}] greedy == single-host int8",
+              bool(np.array_equal(out_q, np.asarray(ref_q))))
+
     # augmented (apb) mesh engine admits paged requests: the sharded
     # local-block doc cache pages into the strided pool like any dense
     # cache; dense mesh apb is the oracle (apb itself is approximate)

@@ -1,0 +1,303 @@
+"""Quantized paged KV (kv_dtype="int8"/"fp8"): format plumbing, the
+fused-dequant kernel's parity with the dequantized-gather oracle, and
+the accuracy contract of the quantized formats.
+
+The oracle chain here has two links (docs/architecture.md):
+  * quantized kernel == dequantized gather — *parity*, float tolerance,
+    at every kv_dtype (the kernel's in-tile dequant must compute the
+    same product the gather oracle applies per row);
+  * int8/fp8 == fp32 *within a bound* — quantization error against the
+    exact format, pinned as max attention-output error on random KV and
+    as a greedy-token flip budget on real tiny models; kv_dtype="fp32"
+    itself stays greedy-bit-exact against the dense engine, anchoring
+    the chain.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import decode as dec
+from repro.core import quant
+from repro.kernels import resolve_interpret
+from repro.models import model as model_lib
+from repro.models.transformer import RunCtx
+from repro.serving import cache as cache_lib
+from repro.serving.config import ServeConfig
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Request, Scheduler
+
+KV_DTYPES = ["fp32", "int8", "fp8"]
+QUANT_DTYPES = ["int8", "fp8"]
+
+# max |out - out_fp32| budgets for paged attention over standard-normal
+# KV (measured ~0.015 / ~0.08; pinned with ~3x headroom)
+OUT_ERR_BOUND = {"int8": 0.05, "fp8": 0.25}
+# greedy-token flip budget vs the fp32-format engine on real tiny
+# models, over a short (4-token) horizon so one early flip's greedy
+# drift can't dominate the rate (measured 0.0-0.19; ~2.5x headroom)
+FLIP_BUDGET = {"int8": 0.25, "fp8": 0.5}
+
+
+def _paged_engine(cfg, params, kv_dtype, impl="kernel", page_size=16,
+                  **kw):
+    return Engine(cfg, params, RunCtx(strategy="full"),
+                  config=ServeConfig(cache_layout="paged",
+                                     page_size=page_size,
+                                     paged_impl=impl, kv_dtype=kv_dtype,
+                                     **kw))
+
+
+def _tiny(key, arch):
+    cfg = get_config(arch).reduced()
+    params = model_lib.build(cfg).init(key)
+    return cfg, params
+
+
+def _mk_req(cfg, n, lq, seed):
+    r = np.random.default_rng(seed)
+    return (jnp.asarray(r.integers(0, cfg.vocab_size, (1, n)), jnp.int32),
+            jnp.asarray(r.integers(0, cfg.vocab_size, (1, lq)), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Config + format arithmetic
+# ---------------------------------------------------------------------------
+
+def test_kv_dtype_config_validation():
+    """Unknown formats and quantized-dense combinations are rejected at
+    config build; valid combinations pass."""
+    with pytest.raises(ValueError, match="kv_dtype"):
+        ServeConfig(kv_dtype="int4")
+    for kv_dtype in QUANT_DTYPES:
+        with pytest.raises(ValueError, match="paged"):
+            ServeConfig(cache_layout="dense", kv_dtype=kv_dtype)
+        cfg = ServeConfig(cache_layout="paged", kv_dtype=kv_dtype)
+        assert cfg.kv_dtype == kv_dtype
+    assert ServeConfig().kv_dtype == "fp32"
+
+
+@pytest.mark.parametrize("kv_dtype", QUANT_DTYPES)
+def test_quantize_roundtrip_error_bound(kv_dtype):
+    """Per-page symmetric quantization round-trips every element within
+    its page's resolution: |x - dq(q(x))| <= scale/2 for int8 (round)
+    and <= scale (one fp8 mantissa step at qmax) for fp8; an all-zero
+    page stays exactly zero."""
+    rng = np.random.default_rng(0)
+    dtype = quant.pool_dtype(kv_dtype)
+    pages = jnp.asarray(rng.normal(size=(6, 8, 2, 16)) * 3, jnp.float32)
+    payload, scales = quant.quantize_pages(pages, dtype)
+    assert payload.dtype == dtype and scales.dtype == jnp.float32
+    back = np.asarray(quant.dequantize(payload, scales))
+    bound = np.asarray(scales)[:, None, :, None]
+    bound = bound * (0.5 if kv_dtype == "int8" else 32.0)
+    assert (np.abs(back - np.asarray(pages)) <= bound + 1e-7).all()
+    zp, zs = quant.quantize_pages(jnp.zeros((2, 8, 2, 16)), dtype)
+    np.testing.assert_array_equal(
+        np.asarray(quant.dequantize(zp, zs)), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Kernel == gather parity at every format (the tentpole's parity oracle)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", KV_DTYPES)
+def test_quant_kernel_matches_dequant_gather(kv_dtype):
+    """The fused kernel (dequant in-tile, scales off scalar prefetch)
+    and the dequantized-gather oracle must agree to float tolerance on
+    (out, lse) across window/softcap/stride combinations — including
+    fully-masked slots — at every kv_dtype."""
+    rng = np.random.default_rng(3)
+    b, t, h, kv, d = 3, 4, 4, 2, 16
+    npool, ps, p = 12, 8, 3
+    q = jnp.asarray(rng.standard_normal((b, t, h, d)), jnp.float32)
+    fk = jnp.asarray(rng.standard_normal((npool, ps, kv, d)), jnp.float32)
+    fv = jnp.asarray(rng.standard_normal((npool, ps, kv, d)), jnp.float32)
+    if kv_dtype == "fp32":
+        pk, pv, ks, vs = fk, fv, None, None
+    else:
+        dtype = quant.pool_dtype(kv_dtype)
+        pk, ks = quant.quantize_pages(fk, dtype)
+        pv, vs = quant.quantize_pages(fv, dtype)
+    pt = jnp.asarray(rng.integers(0, npool, (b, p)), jnp.int32)
+    vl = jnp.asarray([0, 10, 24], jnp.int32)
+    st = jnp.asarray([0, 3, 0], jnp.int32)
+    for stride, offset in [(1, 0), (4, 2)]:
+        for window in (0, 7):
+            for softcap in (None, 20.0):
+                outs = [dec.paged_partial_lse(
+                    q, pk, pv, pt, valid_len=vl, row_base=vl, start=st,
+                    window=window, softcap=softcap, page_stride=stride,
+                    page_offset=offset, impl=impl,
+                    k_scale=ks, v_scale=vs)
+                    for impl in ("kernel", "gather")]
+                np.testing.assert_allclose(
+                    np.asarray(outs[0][0]), np.asarray(outs[1][0]),
+                    atol=2e-5)
+                np.testing.assert_allclose(
+                    np.minimum(np.asarray(outs[0][1]), 1e9),
+                    np.minimum(np.asarray(outs[1][1]), 1e9), atol=2e-5)
+
+
+@pytest.mark.parametrize("kv_dtype", QUANT_DTYPES)
+def test_quant_attention_error_bound_vs_fp32_pool(kv_dtype):
+    """Attention outputs read through a quantized pool stay within a
+    pinned error budget of the same rows read at fp32 — the logit-level
+    half of the quantized accuracy contract (both read impls)."""
+    rng = np.random.default_rng(7)
+    b, t, h, kv, d = 3, 4, 4, 2, 16
+    npool, ps, p = 12, 8, 3
+    q = jnp.asarray(rng.standard_normal((b, t, h, d)), jnp.float32)
+    fk = jnp.asarray(rng.standard_normal((npool, ps, kv, d)), jnp.float32)
+    fv = jnp.asarray(rng.standard_normal((npool, ps, kv, d)), jnp.float32)
+    dtype = quant.pool_dtype(kv_dtype)
+    pk, ks = quant.quantize_pages(fk, dtype)
+    pv, vs = quant.quantize_pages(fv, dtype)
+    pt = jnp.asarray(rng.integers(0, npool, (b, p)), jnp.int32)
+    vl = jnp.asarray([5, 10, 24], jnp.int32)
+    st = jnp.asarray([0, 3, 0], jnp.int32)
+    ref, _ = dec.paged_partial_lse(q, fk, fv, pt, valid_len=vl,
+                                   row_base=vl, start=st, impl="gather")
+    for impl in ("kernel", "gather"):
+        out, _ = dec.paged_partial_lse(q, pk, pv, pt, valid_len=vl,
+                                       row_base=vl, start=st, impl=impl,
+                                       k_scale=ks, v_scale=vs)
+        err = float(np.max(np.abs(np.asarray(out) - np.asarray(ref))))
+        assert err <= OUT_ERR_BOUND[kv_dtype], (impl, err)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level contract on real tiny models
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["kernel", "gather"])
+def test_fp32_format_stays_exact_oracle(key, impl):
+    """kv_dtype="fp32" is a storage no-op: the paged engine stays
+    greedy-bit-exact against the dense engine through both read impls
+    and both admission paths — the exactness anchor the quantized
+    formats are bounded against."""
+    cfg, params = _tiny(key, "llama3-8b")
+    dense = Engine(cfg, params, RunCtx(strategy="full"))
+    eng = _paged_engine(cfg, params, "fp32", impl=impl)
+    r = np.random.default_rng(0)
+    doc = jnp.asarray(r.integers(0, cfg.vocab_size, (2, 50)), jnp.int32)
+    query = jnp.asarray(r.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    ref = dense.generate(doc, query, max_new_tokens=6).tokens
+    np.testing.assert_array_equal(
+        eng.generate(doc, query, max_new_tokens=6).tokens, ref)
+    np.testing.assert_array_equal(
+        eng.generate(doc, query, max_new_tokens=6,
+                     prefill_chunk=16).tokens, ref)
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "granite-3-2b"])
+@pytest.mark.parametrize("kv_dtype", QUANT_DTYPES)
+def test_quant_engine_error_bound_vs_fp32(key, arch, kv_dtype):
+    """Real tiny models served through a quantized pool stay within the
+    greedy-token flip budget of the fp32-format engine — the end-to-end
+    half of the accuracy contract.  (Flips are legitimate — quantization
+    perturbs logits — but a budget blowout means the format plumbing is
+    broken, not just noisy.)"""
+    cfg, params = _tiny(key, arch)
+    ref_eng = _paged_engine(cfg, params, "fp32")
+    eng = _paged_engine(cfg, params, kv_dtype)
+    r = np.random.default_rng(1)
+    doc = jnp.asarray(r.integers(0, cfg.vocab_size, (4, 50)), jnp.int32)
+    query = jnp.asarray(r.integers(0, cfg.vocab_size, (4, 8)), jnp.int32)
+    ref = np.asarray(ref_eng.generate(doc, query, max_new_tokens=4).tokens)
+    out = np.asarray(eng.generate(doc, query, max_new_tokens=4).tokens)
+    assert out.shape == ref.shape
+    flip_rate = float((out != ref).mean())
+    assert flip_rate <= FLIP_BUDGET[kv_dtype], flip_rate
+    # the first decoded token sees quantization error exactly once (no
+    # greedy drift) — it must survive the perturbation outright here
+    first_flips = float((out[:, 0] != ref[:, 0]).mean())
+    assert first_flips <= 0.25, first_flips
+
+
+# ---------------------------------------------------------------------------
+# Pool bookkeeping: scales ride with their pages
+# ---------------------------------------------------------------------------
+
+def test_write_doc_pages_quantizes_and_preserves_untouched_scales(key):
+    """The admission paste into a quantized pool writes payload + scale
+    rows together: granted pages dequantize back to the request rows
+    within quantization resolution, and every non-granted page keeps its
+    all-ones allocation scale and zero payload (conservation — a paste
+    may only touch its reservation)."""
+    rng = np.random.default_rng(5)
+    blocks, kvh, d, ps, m = 2, 2, 8, 4, 10
+    num_pages, n_slots = 8, 2
+    rows = jnp.asarray(rng.normal(size=(blocks, 1, m, kvh, d)),
+                       jnp.float32)
+    req = ({"k": rows, "v": rows * 0.5},)
+    caches = cache_lib.alloc_paged_slots(
+        req, n_slots, num_pages, ps, 3, lambda leaf: leaf,
+        kv_dtype="int8")
+    c = caches[0]
+    assert c["k"].dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(c["ks"]), 1.0)
+    grant = [5, 1, 6]
+    out = cache_lib.write_doc_pages(caches, req, 0, grant, ps)[0]
+    # granted pages round-trip the request rows
+    back = np.asarray(quant.dequantize(out["k"], out["ks"]))
+    sc = np.asarray(out["ks"])
+    padded = np.zeros((blocks, len(grant) * ps, kvh, d), np.float32)
+    padded[:, :m] = np.asarray(rows)[:, 0]
+    for j, pg in enumerate(grant):
+        exp = padded[:, j * ps:(j + 1) * ps]
+        bound = sc[:, pg][:, None, :, None] * 0.5 + 1e-7
+        assert (np.abs(back[:, pg] - exp) <= bound).all()
+    # untouched pages: zero payload, allocation scales intact
+    untouched = [p for p in range(num_pages) if p not in grant]
+    np.testing.assert_array_equal(
+        np.asarray(out["k"])[:, untouched], 0)
+    np.testing.assert_array_equal(sc[:, untouched], 1.0)
+    assert (np.asarray(out["pt"])[:, 0, :3]
+            == np.asarray(grant, np.int32)).all()
+
+
+@pytest.mark.parametrize("prefill_chunk", [None, 16])
+def test_paged_scheduler_int8_serves_end_to_end(key, prefill_chunk):
+    """The continuous-batching Scheduler serves mixed-length requests
+    over an int8 pool end to end — monolithic and chunked admissions.
+    Quantization is deterministic, so sharing the pool must not change
+    tokens: each request matches the same request generated alone
+    through an int8 engine bit-exactly (accuracy vs fp32 is pinned
+    separately — this pins the quantized pool *plumbing*)."""
+    cfg, params = _tiny(key, "granite-3-2b")
+    serve_cfg = ServeConfig(cache_layout="paged", page_size=16,
+                            kv_dtype="int8", n_slots=2, decode_chunk=3,
+                            prefill_chunk=prefill_chunk)
+    eng = Engine(cfg, params, RunCtx(strategy="full"), config=serve_cfg)
+    d1, q1 = _mk_req(cfg, 64, 8, 1)
+    d2, q2 = _mk_req(cfg, 24, 4, 2)
+    ref1 = np.asarray(eng.generate(d1, q1, max_new_tokens=10,
+                                   prefill_chunk=prefill_chunk).tokens[0])
+    ref2 = np.asarray(eng.generate(d2, q2, max_new_tokens=4,
+                                   prefill_chunk=prefill_chunk).tokens[0])
+    sch = Scheduler(eng, config=serve_cfg)
+    sch.submit(Request("long", d1, q1, max_new_tokens=10))
+    sch.submit(Request("short", d2, q2, max_new_tokens=4))
+    res = sch.run()
+    np.testing.assert_array_equal(np.asarray(res["long"].tokens), ref1)
+    np.testing.assert_array_equal(np.asarray(res["short"].tokens), ref2)
+
+
+# ---------------------------------------------------------------------------
+# interpret-contract (bugfix): one platform choice for every kernel
+# ---------------------------------------------------------------------------
+
+def test_resolve_interpret_cpu_default():
+    """``interpret=None`` resolves to interpret-mode exactly when the
+    backend is CPU — the single platform choice every kernel entry point
+    defers to; explicit booleans pass through untouched."""
+    on_cpu = jax.default_backend() == "cpu"
+    assert resolve_interpret(None) is on_cpu
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    # CI runs these tests on CPU, where the contract must pick interpret
+    if on_cpu:
+        assert resolve_interpret(None) is True

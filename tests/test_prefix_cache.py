@@ -231,6 +231,78 @@ def test_fuzz_sharing_on_off_bit_identical(key, seed):
 
 
 # ---------------------------------------------------------------------------
+# Format identity: kv_dtype is part of the page-hash seed
+# ---------------------------------------------------------------------------
+
+def test_prefix_seed_binds_kv_dtype(key):
+    """Page bits are format-relative: an int8-warmed prefix must miss
+    an fp32 admission's lookup and vice versa (and both must miss fp8),
+    so the pool's kv_dtype is digested into the hash seed on BOTH the
+    plain and the augmented arm.  Within one format the seed stays
+    stable — warm reuse is unaffected."""
+    cfg, params = _build(key)
+    rng = np.random.default_rng(7)
+    d, q = _docs(cfg, rng, 64), _docs(cfg, rng, 8)
+    req = Request("r", d, q, max_new_tokens=4)
+
+    def seeds(rctx, **kw):
+        out = {}
+        for fmt in ("fp32", "int8", "fp8"):
+            scfg = _scfg(prefix_cache="on", prefill_chunk=16,
+                         kv_dtype=fmt, **kw)
+            eng = Engine(cfg, params, rctx, config=scfg)
+            sch = Scheduler(eng, config=scfg)
+            out[fmt] = sch._prefix_seed(req)
+        return out
+
+    for rctx, kw in [(RunCtx(strategy="full"), {}),
+                     (RunCtx(strategy="apb",
+                             layout=make_layout(256, 8, 4,
+                                                anchor_frac=0.375,
+                                                passing_frac=0.125)),
+                      {"num_pages": 48})]:
+        by_fmt = seeds(rctx, **kw)
+        vals = [s for s, _ in by_fmt.values()]
+        assert len(set(vals)) == 3, "formats must hash apart"
+        again = seeds(rctx, **kw)
+        assert {f: s for f, (s, _) in by_fmt.items()} \
+            == {f: s for f, (s, _) in again.items()}
+    # the aug arm actually took the aug path (seed carries the layout)
+    aug_rctx = RunCtx(strategy="apb",
+                      layout=make_layout(256, 8, 4, anchor_frac=0.375,
+                                         passing_frac=0.125))
+    d_a = _docs(cfg, rng, 256)
+    scfg = _scfg(prefix_cache="on", prefill_chunk=16, kv_dtype="int8",
+                 num_pages=48)
+    eng = Engine(cfg, params, aug_rctx, config=scfg)
+    sch = Scheduler(eng, config=scfg)
+    _, aug = sch._prefix_seed(Request("a", d_a, q, max_new_tokens=4))
+    assert aug
+
+
+def test_int8_warm_reuse_still_skips_chunks(key):
+    """Binding the format into the seed must not break *same-format*
+    sharing: a repeated int8 admission maps the resident pages, skips
+    every prefill chunk, and stays bit-identical to the sharing-off
+    int8 scheduler."""
+    cfg, params = _build(key)
+    rng = np.random.default_rng(8)
+    d0, q = _docs(cfg, rng, 64), _docs(cfg, rng, 8)
+    reqs = [("c0", d0, q, 5), ("c1", d0, q, 5)]
+    scfg = _scfg(prefix_cache="on", prefill_chunk=16, num_pages=32,
+                 kv_dtype="int8")
+    rctx = RunCtx(strategy="full")
+    sch_on, _, on = _run(cfg, params, rctx, scfg, reqs)
+    _, _, off = _run(cfg, params, rctx, _off(scfg), reqs)
+    for rid in ("c0", "c1"):
+        np.testing.assert_array_equal(on[rid].tokens, off[rid].tokens)
+    assert on["c1"].prefill_waves == 0
+    assert sch_on.prefix_hits == 1
+    assert sch_on.prefill_chunks_skipped == 4
+    assert _conserved(sch_on)
+
+
+# ---------------------------------------------------------------------------
 # Allocator hardening: release misuse corrupts nothing, loudly
 # ---------------------------------------------------------------------------
 

@@ -314,6 +314,54 @@ def test_cow_scatter_never_mutates_protected_pages(ps, npages, start, t,
     np.testing.assert_array_equal(out, exp)
 
 
+@given(st.integers(1, 4), st.integers(2, 6), st.integers(0, 12),
+       st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_cow_quant_scatter_drops_scale_with_payload(ps, npages, start, t,
+                                                    seed):
+    """The quantized COW scatter's protection invariant covers the scale
+    arrays: a page dropped by the ``writable`` mask (or merely untouched
+    by the write window) keeps its payload AND its scale row bit-exactly
+    — a mutated scale under a frozen payload would silently rescale
+    shared prefix content.  Touched writable pages must hold the new
+    rows to quantization tolerance under their *new* scales."""
+    from repro.core import decode as dec
+    from repro.core import quant
+    rng = np.random.default_rng(seed)
+    kv, d = 2, 3
+    cap = npages * ps
+    start = min(start, cap - 1)
+    t = min(t, cap - start)
+    fp = rng.normal(size=(npages, ps, kv, d)).astype(np.float32)
+    pool, scales = quant.quantize_pages(jnp.asarray(fp), jnp.int8)
+    new = rng.normal(size=(1, t, kv, d)).astype(np.float32)
+    perm = rng.permutation(npages).astype(np.int32)
+    writable = rng.integers(0, 2, npages).astype(bool)
+    out_pool, out_sc = dec.paged_scatter_quant(
+        pool, scales, jnp.asarray(new), jnp.asarray(perm[None, :]),
+        jnp.asarray([start], jnp.int32), jnp.asarray(writable))
+    out_pool, out_sc = np.asarray(out_pool), np.asarray(out_sc)
+    pool, scales = np.asarray(pool), np.asarray(scales)
+    j0, j1 = start // ps, (start + t - 1) // ps
+    touched_phys = {int(perm[j]) for j in range(j0, j1 + 1)}
+    exp_rows = np.asarray(quant.dequantize(jnp.asarray(pool),
+                                           jnp.asarray(scales))).copy()
+    for r in range(t):
+        phys = int(perm[(start + r) // ps])
+        if writable[phys]:
+            exp_rows[phys, (start + r) % ps] = new[0, r]
+    for p in range(npages):
+        if p not in touched_phys or not writable[p]:
+            # frozen page: payload and scale both bit-identical
+            np.testing.assert_array_equal(out_pool[p], pool[p])
+            np.testing.assert_array_equal(out_sc[p], scales[p])
+        else:
+            got = np.asarray(quant.dequantize(
+                jnp.asarray(out_pool[p]), jnp.asarray(out_sc[p])))
+            # int8 round-trip: |err| <= scale/2 per (kv head)
+            bound = out_sc[p][None, :, None] * 0.5 + 1e-7
+            assert (np.abs(got - exp_rows[p]) <= bound).all()
+
+
 # ---------------------------------------------------------------------------
 # select_topk: the lp > L clamp across random shapes
 # ---------------------------------------------------------------------------
