@@ -70,6 +70,7 @@ def _child() -> None:
     from repro.models.transformer import RunCtx
     from repro.serving.engine import Engine
     from repro.serving.scheduler import Request, Scheduler
+    from repro.serving.config import ServeConfig
 
     assert len(jax.devices()) == HOSTS, jax.devices()
     n_long = tiny(4096, 512)           # 8 hosts x (512 | 64) local block
@@ -109,8 +110,9 @@ def _child() -> None:
         return reqs
 
     def run_sched(prefill_chunk):
-        sch = Scheduler(engine, n_slots=n_slots, decode_chunk=4,
-                        prefill_chunk=prefill_chunk)
+        sch = Scheduler(engine, config=ServeConfig(
+            n_slots=n_slots, decode_chunk=4,
+            prefill_chunk=prefill_chunk))
         for req in requests():                  # long submitted first
             sch.submit(req)
         return sch.run()

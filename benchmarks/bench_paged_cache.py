@@ -45,6 +45,7 @@ from repro.models import model as model_lib
 from repro.models.transformer import RunCtx
 from repro.serving.cache import PageAllocator, pages_for
 from repro.serving.engine import Engine
+from repro.serving.config import ServeConfig
 from repro.serving.scheduler import Request, Scheduler
 
 ARCH = "granite-3-2b"
@@ -156,8 +157,9 @@ def _requests(cfg):
 
 
 def _run_sched(engine, cfg, **kw):
-    sch = Scheduler(engine, decode_chunk=4, doc_capacity=E2E_DOC_CAPACITY,
-                    tail_capacity=LQ + MAX_NEW, **kw)
+    sch = Scheduler(engine, config=ServeConfig(
+        decode_chunk=4, doc_capacity=E2E_DOC_CAPACITY,
+        tail_capacity=LQ + MAX_NEW, **kw))
     for req in _requests(cfg):
         sch.submit(req)
     t0 = time.perf_counter()
@@ -173,15 +175,19 @@ def run():
     params = model.init(jax.random.PRNGKey(0))
     dense_eng = Engine(cfg, params, RunCtx(strategy="full"))
     paged_eng = Engine(cfg, params, RunCtx(strategy="full"),
-                       cache_layout="paged", page_size=E2E_PAGE)
+                       config=ServeConfig(cache_layout="paged",
+                                          page_size=E2E_PAGE))
 
     dense_slots = E2E_BUDGET_ROWS // E2E_DOC_CAPACITY
     num_pages = E2E_BUDGET_ROWS // E2E_PAGE
     # warm both paths, then measure
     _run_sched(dense_eng, cfg, n_slots=dense_slots)
-    _run_sched(paged_eng, cfg, n_slots=E2E_SLOTS_PAGED, num_pages=num_pages)
+    _run_sched(paged_eng, cfg, cache_layout="paged", page_size=E2E_PAGE,
+               n_slots=E2E_SLOTS_PAGED, num_pages=num_pages)
     res_d, sch_d, t_d = _run_sched(dense_eng, cfg, n_slots=dense_slots)
     res_p, sch_p, t_p = _run_sched(paged_eng, cfg,
+                                   cache_layout="paged",
+                                   page_size=E2E_PAGE,
                                    n_slots=E2E_SLOTS_PAGED,
                                    num_pages=num_pages)
 
@@ -199,8 +205,9 @@ def run():
     krn_tokens = {}
     for impl in ("gather", "kernel"):
         eng = Engine(cfg, params, RunCtx(strategy="full"),
-                     cache_layout="paged", page_size=E2E_PAGE,
-                     paged_impl=impl)
+                     config=ServeConfig(cache_layout="paged",
+                                        page_size=E2E_PAGE,
+                                        paged_impl=impl))
         eng.generate(kdoc, kqry, max_new_tokens=KRN_MAX_NEW)    # warm
         res = eng.generate(kdoc, kqry, max_new_tokens=KRN_MAX_NEW)
         krn_tokens[impl] = res.tokens

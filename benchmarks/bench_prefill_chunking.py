@@ -32,6 +32,7 @@ from repro.configs import get_config
 from repro.models import model as model_lib
 from repro.models.transformer import RunCtx
 from repro.serving.engine import Engine
+from repro.serving.config import ServeConfig
 from repro.serving.scheduler import Request, Scheduler
 
 ARCH = "granite-3-2b"
@@ -64,8 +65,8 @@ def _requests(cfg):
 
 
 def _run_sched(engine, cfg, prefill_chunk):
-    sch = Scheduler(engine, n_slots=N_SLOTS, decode_chunk=4,
-                    prefill_chunk=prefill_chunk)
+    sch = Scheduler(engine, config=ServeConfig(
+        n_slots=N_SLOTS, decode_chunk=4, prefill_chunk=prefill_chunk))
     for req in _requests(cfg):                  # long submitted first
         sch.submit(req)
     return sch.run()

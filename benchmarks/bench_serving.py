@@ -14,6 +14,21 @@ isolate the decode-loop mechanics rather than mesh bandwidth):
   * ``serve_scheduler``   — continuous batching: mixed-length requests
     through the slot scheduler, measuring end-to-end requests/s.
 
+A trace-replay section drives a heavy-tailed length mix (long documents
+salting both slots, then Poisson-arriving shorts with tight TTFT SLOs)
+through the scheduler under both scheduling policies — ``srpt`` (the
+bit-exactness oracle) and ``deadline`` (EDF + chunk-boundary preemption)
+— on the *same* trace, reporting p50/p99 TTFT, p99 TPOT and
+goodput-under-SLO per policy (``replay_srpt`` / ``replay_deadline``
+records carry the shared ``repro.serving.metrics.GOODPUT_KEYS`` schema,
+validated by ``tools/check_bench_results.py``).  The short-request SLO is
+calibrated from an unloaded SRPT pass so the comparison is
+machine-independent.  A compile-count probe (``Engine.prefill_shapes``)
+pins the AOT bucket warmup: zero new prefill shapes may appear after
+``Scheduler.warm()`` (the ``replay_recompiles_after_warmup`` record must
+be 0).  A final section measures batch-concat prefill grouping
+(``prefill_batch_max``) against sequential singleton admissions.
+
 Emits the standard ``name,us_per_call,derived`` CSV rows *and* writes
 ``results/bench_serving.json`` (common.emit_json) so the decode-throughput
 trajectory is machine-trackable from this PR onward.
@@ -31,12 +46,81 @@ from benchmarks.common import emit, emit_json, tiny
 from repro.configs import get_config
 from repro.models import model as model_lib
 from repro.models.transformer import RunCtx
+from repro.serving import metrics as metrics_lib
+from repro.serving.config import ServeConfig
 from repro.serving.engine import Engine
 from repro.serving.scheduler import Request, Scheduler
 
 ARCH = "granite-3-2b"
 B, N_DOC, LQ = 2, tiny(256, 64), 8
 MAX_NEW = tiny(32, 8)
+CHUNK = tiny(64, 16)                     # replay prefill chunk size
+N_SHORT = tiny(12, 6)                    # Poisson-arriving shorts
+REPLAY_SEED = 7
+
+
+def _mk_trace(cfg):
+    """Heavy-tailed replay trace: two long documents at t=0 (no SLO)
+    that salt both slots, then Poisson-arriving shorts.  Returns a list
+    of dicts; ``ttft_slo_s`` is filled in after SLO calibration."""
+    rng = np.random.default_rng(REPLAY_SEED)
+    trace = []
+    for i in range(2):
+        trace.append({
+            "rid": f"long{i}", "n": N_DOC, "lq": LQ,
+            "max_new": MAX_NEW, "arrival_s": 0.0, "ttft_slo_s": None,
+            "doc": jnp.asarray(rng.integers(10, cfg.vocab_size,
+                                            (1, N_DOC)), jnp.int32),
+            "query": jnp.asarray(rng.integers(10, cfg.vocab_size,
+                                              (1, LQ)), jnp.int32)})
+    t = 0.0
+    for i in range(N_SHORT):
+        t += float(rng.exponential(0.003))
+        n = N_DOC // 4
+        trace.append({
+            "rid": f"short{i}", "n": n, "lq": LQ,
+            "max_new": max(2, MAX_NEW // 4), "arrival_s": t,
+            "ttft_slo_s": None,
+            "doc": jnp.asarray(rng.integers(10, cfg.vocab_size,
+                                            (1, n)), jnp.int32),
+            "query": jnp.asarray(rng.integers(10, cfg.vocab_size,
+                                              (1, LQ)), jnp.int32)})
+    return trace
+
+
+def _replay(engine, serve_cfg, trace, policy):
+    """Drive one trace through a fresh Scheduler under ``policy``:
+    arrivals submit when the run clock reaches their stamp.  Returns
+    (results, aggregate-record, new prefill shapes after warmup)."""
+    sch = Scheduler(engine,
+                    config=serve_cfg.replace(scheduling_policy=policy))
+    sch.warm(doc_lens=[t["n"] for t in trace],
+             lqs=[t["lq"] for t in trace])
+    shapes0 = set(engine.prefill_shapes)
+    order = sorted(trace, key=lambda t: t["arrival_s"])
+    i = 0
+    sch.begin()
+    while i < len(order) or sch.has_work:
+        now = sch._now()
+        while i < len(order) and order[i]["arrival_s"] <= now:
+            t = order[i]
+            sch.submit(Request(t["rid"], t["doc"], t["query"],
+                               max_new_tokens=t["max_new"],
+                               arrival_s=t["arrival_s"],
+                               ttft_slo_s=t["ttft_slo_s"]))
+            i += 1
+        if not sch.has_work:
+            time.sleep(max(0.0, order[i]["arrival_s"] - sch._now()))
+            continue
+        sch.step()
+    agg = metrics_lib.aggregate(sch.results, sch._now())
+    return sch.results, agg, set(engine.prefill_shapes) - shapes0
+
+
+def _p99_short_ttft(results) -> float:
+    ttfts = [r.ttft_s for rid, r in results.items()
+             if rid.startswith("short")]
+    return float(np.percentile(np.asarray(ttfts, np.float64), 99))
 
 
 def _decode_tok_per_s(res, batch: int) -> float:
@@ -111,12 +195,12 @@ def run():
             max_new_tokens=new))
 
     # warm the chunk compile with a throwaway scheduler, then measure
-    warm = Scheduler(engine, n_slots=2, decode_chunk=8)
+    warm = Scheduler(engine, config=ServeConfig(n_slots=2, decode_chunk=8))
     for r in reqs:
         warm.submit(r)
     warm.run()
 
-    sch = Scheduler(engine, n_slots=2, decode_chunk=8)
+    sch = Scheduler(engine, config=ServeConfig(n_slots=2, decode_chunk=8))
     for r in reqs:
         sch.submit(r)
     t0 = time.perf_counter()
@@ -129,11 +213,114 @@ def run():
          "requests_per_s": rps, "tok_per_s": n_tok / wall,
          "derived": f"requests_s={rps:.2f};tok_s={n_tok / wall:.1f}"})
 
+    # ---- trace replay: srpt vs deadline on one SLO'd trace ---------------
+    trace = _mk_trace(cfg)
+    replay_cfg = ServeConfig(n_slots=2, decode_chunk=4,
+                             prefill_chunk=CHUNK,
+                             doc_capacity=N_DOC,
+                             tail_capacity=LQ + MAX_NEW)
+    # SLO calibration: an unloaded SRPT pass measures what the machine
+    # can do; shorts then demand half their SRPT p99 TTFT, which the
+    # deadline policy can only reach by preempting a long admission
+    cal_results, _, _ = _replay(engine, replay_cfg, trace, "srpt")
+    slo = max(1e-3, 0.5 * _p99_short_ttft(cal_results))
+    for t in trace:
+        if t["rid"].startswith("short"):
+            t["ttft_slo_s"] = slo
+
+    new_shapes = set()
+    replay = {}
+    for pol in ("srpt", "deadline"):
+        results, agg, fresh = _replay(engine, replay_cfg, trace, pol)
+        new_shapes |= fresh
+        agg["p99_short_ttft_s"] = _p99_short_ttft(results)
+        replay[pol] = agg
+        records.append(
+            {"name": f"replay_{pol}", "us_per_call": agg["wall_s"] * 1e6,
+             **agg,
+             "ttft_slo_s": slo,
+             "derived": (f"goodput={agg['goodput_per_s']:.2f}/s;"
+                         f"attainment={agg['slo_attainment']:.2f};"
+                         f"p99_ttft={agg['p99_ttft_s'] * 1e3:.1f}ms")})
+    gp_ratio = (replay["deadline"]["goodput_per_s"]
+                / max(replay["srpt"]["goodput_per_s"], 1e-9))
+    ttft_ratio = (replay["deadline"]["p99_short_ttft_s"]
+                  / max(replay["srpt"]["p99_short_ttft_s"], 1e-9))
+    if gp_ratio < 1.0:
+        print(f"# warning: deadline goodput below srpt "
+              f"({gp_ratio:.2f}x)", file=sys.stderr)
+    if ttft_ratio >= 1.0:
+        print(f"# warning: deadline p99 short TTFT not better than srpt "
+              f"({ttft_ratio:.2f}x)", file=sys.stderr)
+    records.append(
+        {"name": "replay_deadline_vs_srpt", "us_per_call": 0.0,
+         "goodput_ratio": gp_ratio, "p99_short_ttft_ratio": ttft_ratio,
+         "preemptions": replay["deadline"]["preemptions"],
+         "derived": (f"goodput={gp_ratio:.2f}x;"
+                     f"short_p99_ttft={ttft_ratio:.2f}x;"
+                     f"preempt={replay['deadline']['preemptions']}")})
+    # compile-count probe: the AOT bucket warmup must cover every shape
+    # the replay produces — zero recompiles after warm() is the contract
+    if new_shapes:
+        print(f"# warning: {len(new_shapes)} prefill shapes compiled "
+              f"after warmup: {sorted(new_shapes)}", file=sys.stderr)
+    records.append(
+        {"name": "replay_recompiles_after_warmup", "us_per_call": 0.0,
+         "recompiles_after_warmup": len(new_shapes),
+         "derived": f"new_shapes={len(new_shapes)}"})
+
+    # ---- batch-concat prefill grouping vs singleton admissions -----------
+    n_b = N_DOC // 4
+    breqs = []
+    for i in range(4):
+        r = np.random.default_rng(300 + i)
+        breqs.append((
+            f"b{i}",
+            jnp.asarray(r.integers(10, cfg.vocab_size, (1, n_b)),
+                        jnp.int32),
+            jnp.asarray(r.integers(10, cfg.vocab_size, (1, LQ)),
+                        jnp.int32)))
+
+    def _batched_run(batch_max):
+        scfg = ServeConfig(n_slots=4, decode_chunk=4,
+                           prefill_chunk=CHUNK,
+                           doc_capacity=N_DOC,
+                           tail_capacity=LQ + MAX_NEW,
+                           prefill_batch_max=batch_max)
+        sch = Scheduler(engine, config=scfg)
+        sch.warm(doc_lens=[n_b], lqs=[LQ])
+        for rid, d, q in breqs:
+            sch.submit(Request(rid, d, q,
+                               max_new_tokens=max(2, MAX_NEW // 4)))
+        t0 = time.perf_counter()
+        res = sch.run()
+        return res, time.perf_counter() - t0
+
+    _batched_run(1)                               # warm both paths
+    _batched_run(4)
+    res_one, t_one = _batched_run(1)
+    res_grp, t_grp = _batched_run(4)
+    agree = all(np.array_equal(res_one[r].tokens, res_grp[r].tokens)
+                for r in res_one)
+    if not agree:
+        print("# warning: batched vs singleton prefill token mismatch",
+              file=sys.stderr)
+    b_speedup = t_one / max(t_grp, 1e-9)
+    if b_speedup < 1.0:
+        print(f"# warning: batch-concat prefill slower than singletons "
+              f"({b_speedup:.2f}x)", file=sys.stderr)
+    records.append(
+        {"name": "prefill_batch_concat", "us_per_call": t_grp * 1e6,
+         "speedup_vs_singleton": b_speedup,
+         "token_agreement": float(agree),
+         "derived": f"vs_singleton={b_speedup:.2f}x;agree={agree}"})
+
     for r in records:                       # CSV and JSON from one source
         emit(r["name"], r["us_per_call"], r["derived"])
     emit_json("bench_serving", records,
               meta={"arch": ARCH, "batch": B, "n_doc": N_DOC, "lq": LQ,
                     "max_new_tokens": MAX_NEW, "n_requests": len(reqs),
+                    "replay_chunk": CHUNK, "replay_shorts": N_SHORT,
                     "device": jax.devices()[0].platform})
 
 

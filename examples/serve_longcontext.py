@@ -29,6 +29,7 @@ from repro.launch.mesh import make_test_mesh
 from repro.models import model as model_lib
 from repro.models.transformer import RunCtx
 from repro.serving.engine import Engine
+from repro.serving.config import ServeConfig
 from repro.serving.scheduler import Request, Scheduler
 
 HOSTS = 8
@@ -78,7 +79,7 @@ def main():
     # ---- continuous batching: mixed-length requests, shared slots -------
     print("\ncontinuous batching (full strategy, 2 slots, chunk=4):")
     eng = Engine(cfg, params, RunCtx(strategy="full"))
-    sch = Scheduler(eng, n_slots=2, decode_chunk=4)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=2, decode_chunk=4))
     for i, (n, lq, new) in enumerate([(512, 16, 12), (128, 8, 5),
                                       (256, 16, 8)]):
         r = np.random.default_rng(10 + i)
@@ -94,7 +95,8 @@ def main():
 
     # ---- chunked prefill: a long admission no longer stalls the shorts --
     print("\nchunked prefill (prefill_chunk=128, SRPT admissions):")
-    sch = Scheduler(eng, n_slots=2, decode_chunk=4, prefill_chunk=128)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=2, decode_chunk=4,
+                                            prefill_chunk=128))
     for i, (n, lq, new) in enumerate([(1024, 16, 8), (128, 8, 5)]):
         r = np.random.default_rng(10 + i)
         sch.submit(Request(
@@ -112,9 +114,12 @@ def main():
     # fits anyway because short requests only reserve their own pages
     print("\npaged doc cache (page_size=64, pool = 2 max-doc slots):")
     paged_eng = Engine(cfg, params, RunCtx(strategy="full"),
-                       cache_layout="paged", page_size=64)
-    sch = Scheduler(paged_eng, n_slots=6, decode_chunk=4, doc_capacity=512,
-                    num_pages=2 * 512 // 64)
+                       config=ServeConfig(cache_layout="paged",
+                                          page_size=64))
+    sch = Scheduler(paged_eng, config=ServeConfig(
+        cache_layout="paged", page_size=64,
+        n_slots=6, decode_chunk=4, doc_capacity=512,
+        num_pages=2 * 512 // 64))
     for i, n in enumerate([512, 64, 128, 64, 128, 64]):
         r = np.random.default_rng(20 + i)
         sch.submit(Request(

@@ -179,6 +179,25 @@ SEAMS: Tuple[Seam, ...] = (
                      "quantized chain"),
         )),
     Seam(
+        name="scheduling_policy",
+        arms='scheduling_policy="deadline" (EDF admissions, chunk-'
+             'boundary preemption, measured cost model) vs "srpt" '
+             "(shortest-remaining-first, the bit-exactness oracle; "
+             "deadline with no SLOs degenerates to it)",
+        dispatch_path="src/repro/serving/policy.py",
+        dispatch_pattern=r'if name == "deadline":',
+        evidence=(
+            Evidence("tests/test_policy.py",
+                     r"def test_deadline_without_slos_matches_srpt_"
+                     r"tokens",
+                     "deadline policy with no SLOs serves greedy tokens "
+                     "bit-identical to srpt"),
+            Evidence("tests/test_policy.py",
+                     r"def test_deadline_no_slo_decisions_match_srpt",
+                     "property: snapshot-level decisions degenerate to "
+                     "srpt's keys when no SLOs are set"),
+        )),
+    Seam(
         name="fused_decode_loop",
         arms="jitted lax.scan decode loop vs stepwise host loop",
         dispatch_path="src/repro/core/decode.py",

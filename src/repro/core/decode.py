@@ -728,7 +728,11 @@ def decode_loop(serve_fn: Callable, fold_fn: Callable, sample_fn: Callable,
     splits each slot's key independently, so the sampled stream a slot
     consumes depends only on its own chain — not on which requests share
     the batch or where decode-chunk boundaries fall (the scheduler seeds
-    a slot's chain from its request id at admission).
+    a slot's chain from its request id at admission).  This slot
+    isolation is what lets the scheduling policy (serving.policy) vary
+    the decode interleave per tick and preempt admissions at chunk
+    boundaries without perturbing anyone's tokens — the policy
+    bit-exactness oracle (tests/test_policy.py) rests on it.
 
     Per-slot stop handling: a slot whose sampled token equals its stop id
     (or whose budget runs out) is marked done; done slots emit

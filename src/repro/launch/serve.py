@@ -83,6 +83,34 @@ def main() -> None:
                          "how many refcount-0 pages stay addressable in "
                          "the prefix index instead of returning to the "
                          "free list (default: the whole pool)")
+    ap.add_argument("--scheduling-policy", default="srpt",
+                    choices=["srpt", "deadline"],
+                    help="Scheduler admission/prefill policy: 'srpt' "
+                         "(shortest-remaining-first, the bit-exactness "
+                         "oracle) or 'deadline' (EDF against per-request "
+                         "TTFT/TPOT SLOs with chunk-boundary preemption "
+                         "and a measured cost model; degenerates to "
+                         "srpt's schedule when no SLOs are set)")
+    ap.add_argument("--ttft-slo", type=float, default=None,
+                    help="per-request time-to-first-token SLO in "
+                         "seconds, attached to every submitted request "
+                         "(Scheduler path); feeds the deadline policy "
+                         "and the goodput stats")
+    ap.add_argument("--tpot-slo", type=float, default=None,
+                    help="per-request p99 time-per-output-token SLO in "
+                         "seconds (Scheduler path)")
+    ap.add_argument("--prefill-batch", type=int, default=1,
+                    help="power-of-two cap on batch-concat prefill "
+                         "grouping: pending short requests with the "
+                         "same query length and pow2 doc bucket admit "
+                         "as one device call (requires --prefill-chunk; "
+                         "plain-layout token docs only; default 1: no "
+                         "grouping)")
+    ap.add_argument("--aot-warmup", action="store_true",
+                    help="AOT-warm the per-bucket jitted prefill chunk "
+                         "steps at scheduler start (MaxText-style) so "
+                         "steady-state admissions hit zero recompiles; "
+                         "requires --prefill-chunk")
     ap.add_argument("--prefix-reuse", type=float, default=0.0,
                     help="fraction of batch rows (beyond the first) that "
                          "repeat row 0's generated document and query, "
@@ -158,7 +186,10 @@ def main() -> None:
                                 num_pages=args.num_pages,
                                 prefix_cache=args.prefix_cache,
                                 prefix_cache_pages=args.prefix_cache_pages,
-                                max_new=args.new_tokens)
+                                max_new=args.new_tokens,
+                                scheduling_policy=args.scheduling_policy,
+                                prefill_batch_max=args.prefill_batch,
+                                aot_warmup=args.aot_warmup)
     except ValueError as e:
         raise SystemExit(str(e)) from e
     engine = Engine(cfg, params, rctx, config=serve_cfg)
@@ -187,31 +218,47 @@ def main() -> None:
             f"monolithic; drop the flag (mesh star/apb streams through "
             f"the pipelined wave schedule, so it no longer needs to)")
     n_in = args.n_doc + args.lq
-    if args.num_pages is not None:
-        # explicit pool sizing: drive the continuous-batching scheduler
-        # (one Request per batch row) so pool pressure is observable —
-        # the end-of-run stats surface deferrals and peak concurrency
+    if (args.num_pages is not None or args.scheduling_policy != "srpt"
+            or args.ttft_slo is not None or args.tpot_slo is not None
+            or args.prefill_batch > 1 or args.aot_warmup):
+        # explicit pool sizing or any scheduling-policy knob: drive the
+        # continuous-batching scheduler (one Request per batch row) so
+        # pool pressure / SLO attainment are observable — the end-of-run
+        # stats surface deferrals, peak concurrency and the goodput line
         import time
 
         from repro.serving.scheduler import Request, Scheduler
+
+        from repro.serving import metrics as metrics_lib
 
         sch = Scheduler(engine, config=serve_cfg,
                         sampling=sampling,
                         rng=jax.random.PRNGKey(args.seed))
         for i in range(args.batch):
             sch.submit(Request(f"r{i}", doc[i], query[i],
-                               max_new_tokens=serve_cfg.max_new))
+                               max_new_tokens=serve_cfg.max_new,
+                               ttft_slo_s=args.ttft_slo,
+                               tpot_slo_s=args.tpot_slo))
         t0 = time.perf_counter()
         results = sch.run()
         wall = time.perf_counter() - t0
         toks = sum(len(r.tokens) for r in results.values())
         waves = sum(r.prefill_waves for r in results.values())
+        # the shared serving-metrics schema (also bench_serving's JSON)
+        agg = metrics_lib.aggregate(results, wall)
         print(f"strategy={args.strategy} hosts={hosts} "
+              f"policy={sch.policy.name} "
               f"requests={args.batch} num_pages={sch.num_pages} "
               f"wall={wall*1e3:.1f}ms "
               f"speed={(args.batch * n_in + toks) / max(wall, 1e-9):.0f} "
               f"tok/s admission_deferrals={sch.admission_deferrals} "
               f"peak_active={sch.peak_active} prefill_waves={waves}")
+        print(f"slo: p50_ttft={agg['p50_ttft_s']*1e3:.1f}ms "
+              f"p99_ttft={agg['p99_ttft_s']*1e3:.1f}ms "
+              f"p99_tpot={agg['p99_tpot_s']*1e3:.2f}ms "
+              f"goodput={agg['goodput_per_s']:.2f}/s "
+              f"attainment={agg['slo_attainment']:.2f} "
+              f"preemptions={agg['preemptions']}")
         if args.prefix_cache == "on":
             print(f"prefix_cache: queries={sch.prefix_queries} "
                   f"hits={sch.prefix_hits} "

@@ -114,6 +114,30 @@ def chunk_plan(n: int, chunk_size: int):
     return plan
 
 
+def bucket_ladder(chunk_size: int, min_chunk: int = None):
+    """Pow2 ladder of candidate prefill chunk sizes ``min_chunk ..
+    chunk_size`` (ascending) — the shapes the deadline policy may pick
+    per admission and the shapes ``Engine.warm_prefill_buckets`` AOT-
+    warms.  ``min_chunk`` defaults to ``chunk_size // 8`` (floored at 1)
+    so the ladder stays small; both ends must be powers of two."""
+    if chunk_size < 1 or pow2_bucket(chunk_size) != chunk_size:
+        raise ValueError(
+            f"prefill chunk size must be a power of two >= 1, got "
+            f"{chunk_size}")
+    if min_chunk is None:
+        min_chunk = max(1, chunk_size // 8)
+    if (min_chunk < 1 or pow2_bucket(min_chunk) != min_chunk
+            or min_chunk > chunk_size):
+        raise ValueError(
+            f"min_chunk must be a power of two in [1, {chunk_size}], "
+            f"got {min_chunk}")
+    sizes, b = [], min_chunk
+    while b <= chunk_size:
+        sizes.append(b)
+        b *= 2
+    return tuple(sizes)
+
+
 def check_tail_capacity(capacity: int, lq: int, budget: int,
                         context: str = "request") -> None:
     """Admission/generate-time guard for the preallocated tail buffers.
@@ -1039,18 +1063,24 @@ def write_doc_pages(caches, req_caches, slot: int, pages,
             pages_arr = jnp.asarray(pages, jnp.int32)
             npg = len(pages)
         if "pt" in c and "pt" in rc:
-            if rc["k"].shape[1] != npg or rc["k"].shape[2] != page_size:
+            # a bucketed session's mini-pool may hold *more* pages than
+            # the reservation (capacity rounded up to a pow2 shape
+            # bucket); the document's rows live in the first npg — the
+            # identity table writes logical pages in order — so copy
+            # exactly the reserved prefix
+            if rc["k"].shape[1] < npg or rc["k"].shape[2] != page_size:
                 raise ValueError(
                     f"request mini-pool holds {rc['k'].shape[1]} pages of "
                     f"{rc['k'].shape[2]} rows but {npg} pages of "
                     f"{page_size} were reserved")
             pt = c["pt"].at[:, slot, :].set(0)
             pt = pt.at[:, slot, :npg].set(pages_arr)
-            pk, pv = rc["k"], rc["v"]
+            pk, pv = rc["k"][:, :npg], rc["v"][:, :npg]
             entry = {"pt": pt}
             if "ks" in c:
                 if "ks" in rc:     # same format: pages copy verbatim
-                    sk, sv = rc["ks"], rc["vs"]
+                    sk = rc["ks"][:, :npg]
+                    sv = rc["vs"][:, :npg]
                 else:              # fp32 request into a quantized pool
                     pk, sk = quant.quantize_pages(pk, c["k"].dtype)
                     pv, sv = quant.quantize_pages(pv, c["v"].dtype)

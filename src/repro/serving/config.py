@@ -6,9 +6,10 @@ through three layers — ``Engine(cache_layout=, page_size=, paged_impl=)``,
 num_pages=, doc_capacity=, tail_capacity=)`` and eight ``launch.serve``
 flags — each re-validating its own slice.  ``ServeConfig`` collects them
 with the validation in one place; ``Engine(config=...)`` and
-``Scheduler(config=...)`` consume the fields they own (legacy keyword
-arguments still work through a thin deprecation shim), and
-``launch.serve`` builds exactly one from its flags.
+``Scheduler(config=...)`` consume the fields they own, and
+``launch.serve`` builds exactly one from its flags.  The PR-6 legacy
+keyword shim has graduated: pre-``ServeConfig`` keyword knobs now raise
+``TypeError`` naming the replacement field (see ``resolve_config``).
 
 ``PrefillCapabilities`` is the redesigned chunked-prefill gate: instead
 of a bare boolean, the engine reports *why* a configuration can or
@@ -83,6 +84,25 @@ class ServeConfig:
       * ``prefix_cache_pages`` — LRU retention budget in pages (how many
         refcount-0 pages may stay addressable instead of freeing); None
         = the whole pool may be retained.
+      * ``scheduling_policy`` — ``"srpt"`` (static shortest-remaining-
+        prefill-first, the bit-exactness oracle) or ``"deadline"``
+        (SLO-aware EDF with a measured cost model, per-admission chunk
+        sizing, adaptive interleave and starvation-free preemption; see
+        ``repro.serving.policy``).
+      * ``prefill_bucket_min`` — smallest pow2 chunk size the deadline
+        policy may shrink an admission to (the bucket ladder runs
+        ``prefill_bucket_min .. prefill_chunk``; None = a built-in
+        ``prefill_chunk // 8`` floor).  Requires ``prefill_chunk``.
+      * ``prefill_batch_max`` — batch-concat up to this many short
+        same-bucket plain admissions into one device call per chunk
+        (group sizes snap down to powers of two so warmed shapes stay
+        O(log)).  1 (default) disables batching and stays the oracle;
+        > 1 requires ``prefill_chunk`` and ``prefix_cache="off"``
+        (batched members bypass the prefix index).
+      * ``aot_warmup`` — AOT-warm the per-bucket jitted chunk steps once
+        at ``Scheduler.run()`` start (MaxText-style per-bucket
+        precompilation) so steady-state admissions hit zero recompiles.
+        Requires ``prefill_chunk``.
 
     Launcher-owned field:
       * ``max_new`` — default per-request token budget.
@@ -101,6 +121,10 @@ class ServeConfig:
     tail_capacity: Optional[int] = None
     prefix_cache: str = "off"
     prefix_cache_pages: Optional[int] = None
+    scheduling_policy: str = "srpt"
+    prefill_bucket_min: Optional[int] = None
+    prefill_batch_max: int = 1
+    aot_warmup: bool = False
     max_new: int = 8
 
     def __post_init__(self) -> None:
@@ -165,6 +189,38 @@ class ServeConfig:
                 raise ValueError(
                     f"prefix_cache_pages must be >= 0, got "
                     f"{self.prefix_cache_pages}")
+        if self.scheduling_policy not in ("srpt", "deadline"):
+            raise ValueError(
+                f"scheduling_policy must be 'srpt' or 'deadline', got "
+                f"{self.scheduling_policy!r}")
+        if self.prefill_bucket_min is not None:
+            if self.prefill_chunk is None:
+                raise ValueError(
+                    "prefill_bucket_min bounds the chunk bucket ladder; "
+                    "it requires prefill_chunk")
+            if not _is_pow2(self.prefill_bucket_min) or \
+                    self.prefill_bucket_min > self.prefill_chunk:
+                raise ValueError(
+                    f"prefill_bucket_min must be a power of two <= "
+                    f"prefill_chunk ({self.prefill_chunk}), got "
+                    f"{self.prefill_bucket_min}")
+        if not _is_pow2(self.prefill_batch_max):
+            raise ValueError(
+                f"prefill_batch_max must be a power of two >= 1, got "
+                f"{self.prefill_batch_max}")
+        if self.prefill_batch_max > 1:
+            if self.prefill_chunk is None:
+                raise ValueError(
+                    "prefill_batch_max > 1 batch-concats chunked "
+                    "admissions; it requires prefill_chunk")
+            if self.prefix_cache == "on":
+                raise ValueError(
+                    "prefill_batch_max > 1 bypasses the prefix index; "
+                    "it requires prefix_cache='off'")
+        if self.aot_warmup and self.prefill_chunk is None:
+            raise ValueError(
+                "aot_warmup precompiles per-bucket chunk steps; it "
+                "requires prefill_chunk")
         if self.max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {self.max_new}")
 
@@ -175,27 +231,31 @@ class ServeConfig:
 
 def resolve_config(config: Optional[ServeConfig], legacy: dict,
                    warn_context: str) -> ServeConfig:
-    """Merge a ``config=`` argument with legacy keyword arguments.
+    """Reject graduated legacy keyword arguments, return the config.
 
     ``legacy`` maps field name -> explicitly passed value (None entries
-    mean "not passed").  Passing both a config and a legacy kwarg for
-    the same call is a conflict (which one wins would be silent);
-    legacy-only calls keep working but raise a ``DeprecationWarning``
-    pointing at ``ServeConfig``.
+    mean "not passed").  The PR-6 shim accepted legacy keywords with a
+    ``DeprecationWarning``; that path has graduated to a hard error —
+    every knob travels through ``config=ServeConfig(...)``:
+
+    * legacy keywords alongside ``config=`` raise ``ValueError`` naming
+      each conflicting keyword (which one wins would be silent);
+    * legacy keywords alone raise ``TypeError`` naming the replacement
+      ``ServeConfig`` field for each.
     """
     passed = {k: v for k, v in legacy.items() if v is not None}
+    if config is not None and passed:
+        names = ", ".join(sorted(passed))
+        raise ValueError(
+            f"{warn_context}: legacy keyword(s) conflict with config= "
+            f"(got both config= and {names}); set the field(s) on the "
+            f"ServeConfig instead")
     if config is not None:
-        if passed:
-            raise ValueError(
-                f"{warn_context}: pass knobs through config=ServeConfig("
-                f"...) or as legacy keywords, not both (got config= and "
-                f"{sorted(passed)})")
         return config
     if passed:
-        import warnings
-        warnings.warn(
-            f"{warn_context}: keyword knobs ({sorted(passed)}) are "
-            f"deprecated; build a repro.serving.config.ServeConfig and "
-            f"pass config=",
-            DeprecationWarning, stacklevel=3)
-    return ServeConfig(**passed)
+        fields = ", ".join(f"{k}=..." for k in sorted(passed))
+        raise TypeError(
+            f"{warn_context}: keyword knob(s) {sorted(passed)} were "
+            f"removed; pass config=repro.serving.config.ServeConfig("
+            f"{fields}) instead")
+    return ServeConfig()

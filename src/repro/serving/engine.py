@@ -103,8 +103,9 @@ class Engine:
                  cache_layout: Optional[str] = None,
                  page_size: Optional[int] = None,
                  paged_impl: Optional[str] = None):
-        # one validated knob bundle (serving.config); the keyword form
-        # survives as a deprecation shim that builds the same config
+        # one validated knob bundle (serving.config); the legacy keyword
+        # form is a graduated hard error (resolve_config raises naming
+        # the ServeConfig fields to set)
         config = resolve_config(config, {"cache_layout": cache_layout,
                                          "page_size": page_size,
                                          "paged_impl": paged_impl},
@@ -166,6 +167,15 @@ class Engine:
         self._passing_cache: "OrderedDict[bytes, tuple]" = OrderedDict()
         self.passing_cache_hits = 0
         self.passing_cache_stores = 0
+        # compile-count probe: every (kind, batch, len, capacity, layout)
+        # signature the chunked-prefill jit cache has been asked for —
+        # jit keys on argument shapes, so a signature seen once never
+        # recompiles and a *new* entry after warmup is exactly a
+        # recompile.  warm_prefill_buckets populates it ahead of traffic;
+        # prefill_warmups counts warmup invocations (the scheduler must
+        # warm once per run, not once per admission).
+        self.prefill_shapes: set = set()
+        self.prefill_warmups = 0
         if jit:
             self._prefill = jax.jit(
                 lambda p, d, q: self.model.prefill_step(p, d, q, rctx))
@@ -633,6 +643,73 @@ class Engine:
             cp.step(sync=False)        # pipeline dispatches; finish() blocks
         return cp.finish()
 
+    def start_batched_prefill(self, docs, queries, chunk_size: int,
+                              doc_capacity: Optional[int] = None
+                              ) -> "BatchedPrefill":
+        """Batch-concat several short plain-layout prefills into one
+        chunked session (one device call per chunk instead of one per
+        request).  See :class:`BatchedPrefill` for the contract."""
+        return BatchedPrefill(self, docs, queries, chunk_size,
+                              doc_capacity=doc_capacity)
+
+    def _log_prefill_shape(self, kind: str, batch: int, t: int, cap: int,
+                           paged: bool) -> None:
+        """Record one jitted prefill-call signature.  ``jax.jit`` keys
+        its cache on argument shapes, so a signature that first appears
+        *after* warmup is exactly a recompile — ``prefill_shapes`` is the
+        compile-count probe ``bench_serving`` and the warmup tests
+        assert stays flat in steady state."""
+        self.prefill_shapes.add((kind, int(batch), int(t), int(cap),
+                                 bool(paged)))
+
+    def warm_prefill_buckets(self, chunk_size: int, caps, lqs,
+                             batch_sizes=(1,)) -> int:
+        """AOT-warm the jitted chunk/query steps for every (capacity,
+        query-length, batch) bucket (MaxText-style per-bucket
+        precompilation) so steady-state admissions hit zero recompiles.
+
+        A chunk step's jit signature depends only on (chunk length,
+        capacity, batch), and ``cache_lib.chunk_plan`` only ever emits
+        power-of-two chunk lengths ``<= min(cap, chunk_size)``.  So for
+        singleton sessions one single-chunk throwaway session per pow2
+        length covers every chunk signature a real document in the
+        bucket can produce — including non-pow2 capacities, whose real
+        plans mix ladder rungs a full-length warm doc would miss.
+        Batched groups (``batch_sizes`` entries > 1) always run
+        full-bucket documents (one chunk signature,
+        ``min(cap, chunk_size)``), so one full-length session per group
+        size suffices.  Returns the number of sessions run;
+        ``prefill_warmups`` counts *invocations* so tests can assert
+        warmup happens once per scheduler run, not per admission."""
+        self.prefill_warmups += 1
+        runs = 0
+        for cap in sorted(set(int(c) for c in caps)):
+            for lq in sorted(set(int(q) for q in lqs)):
+                for k in sorted(set(int(b) for b in batch_sizes)):
+                    if k > 1:
+                        lens = [cap]
+                    else:
+                        lens, p = [], 1
+                        while p <= min(cap, chunk_size):
+                            lens.append(p)
+                            p *= 2
+                    for n in lens:
+                        doc = jnp.zeros((1, n), jnp.int32)
+                        query = jnp.zeros((1, lq), jnp.int32)
+                        if k == 1:
+                            cp = self.start_prefill(
+                                doc, query, chunk_size=chunk_size,
+                                doc_capacity=cap)
+                        else:
+                            cp = self.start_batched_prefill(
+                                [doc] * k, [query] * k, chunk_size,
+                                doc_capacity=cap)
+                        while cp.chunks_left:
+                            cp.step(sync=False)
+                        cp.finish()
+                        runs += 1
+        return runs
+
     # ------------------------------------------------------------------
     def generate(self, doc, query, max_new_tokens: int = 8,
                  stop_token: Optional[int] = None,
@@ -903,7 +980,18 @@ class ChunkedPrefill:
     then returns *paged* caches; ``cache_lib.paged_to_dense`` recovers
     the dense view when a caller needs it (the scheduler copies the
     pages into its shared pool instead).
+
+    ``doc_capacity`` may exceed the document length: the scheduler
+    rounds a paged session's capacity up to a pow2 bucket so the jitted
+    chunk step compiles O(log) cache shapes instead of one per document
+    length — rows past the document are never valid (``doc_len`` masks
+    them) and the pool paste copies only the reserved pages.
     """
+
+    _force_dense = False     # BatchedPrefill overrides: dense caches
+                             # even on a paged engine (rows are sliced
+                             # per member and pasted like a monolithic
+                             # admission)
 
     def __init__(self, engine: Engine, doc, query, chunk_size: int,
                  doc_capacity: Optional[int] = None,
@@ -925,6 +1013,8 @@ class ChunkedPrefill:
         if cap < self.n:
             raise ValueError(
                 f"doc capacity {cap} < document length {self.n}")
+        self.cap = cap
+        self._session_paged = engine.paged and not self._force_dense
         self._prefix = prefix
         self.resumed_rows = prefix.rows if prefix is not None else 0
         if self.resumed_rows:
@@ -958,13 +1048,14 @@ class ChunkedPrefill:
         self.chunks_skipped = len(full) - len(self._plan)
         self._next = 0
         self.doc_len = self.resumed_rows
+        paged = self._session_paged
         self.caches = cache_lib.alloc_doc_caches(
             engine.cfg, self.batch, cap,
             dtype=engine.params["embed"].dtype,
-            page_size=engine.page_size if engine.paged else None,
-            n_shards=engine.cache_shards if engine.paged else 1,
-            kv_dtype=engine.kv_dtype if engine.paged else "fp32")
-        if engine.paged:
+            page_size=engine.page_size if paged else None,
+            n_shards=engine.cache_shards if paged else 1,
+            kv_dtype=engine.kv_dtype if paged else "fp32")
+        if paged:
             self.caches = engine._place_paged(self.caches)
         elif engine.cache_shards > 1:
             self.caches = engine._place_dense(self.caches)
@@ -986,6 +1077,13 @@ class ChunkedPrefill:
         return len(self._plan) - self._next
 
     @property
+    def next_chunk_len(self) -> int:
+        """Length of the chunk the next ``step()`` will run (0 when the
+        plan is exhausted) — the scheduler's cost model keys its EWMA on
+        this before timing the step."""
+        return self._plan[self._next][1] if self.chunks_left else 0
+
+    @property
     def waves_done(self) -> int:
         """Prefill progress for RequestResult accounting: completed
         chunk steps here; MeshChunkedPrefill overrides with completed
@@ -1003,6 +1101,8 @@ class ChunkedPrefill:
         off, t = self._plan[self._next]
         t0 = time.perf_counter()
         chunk = self.doc[:, off:off + t]
+        self.engine._log_prefill_shape("chunk", self.batch, t, self.cap,
+                                       self._session_paged)
         positions = (self.lq + off + jnp.arange(t))[None]
         doc_len = jnp.full((self.batch,), self.doc_len, jnp.int32)
         self.caches = self.engine._prefill_chunk(
@@ -1022,6 +1122,8 @@ class ChunkedPrefill:
             raise ValueError(
                 f"{self.chunks_left} prefill chunks still pending")
         t0 = time.perf_counter()
+        self.engine._log_prefill_shape("query", self.batch, self.lq,
+                                       self.cap, self._session_paged)
         positions = (self.lq + self.n + jnp.arange(self.lq))[None]
         doc_len = jnp.full((self.batch,), self.doc_len, jnp.int32)
         logits0, q_tails = self.engine._chunk_query(
@@ -1030,6 +1132,104 @@ class ChunkedPrefill:
         caches = cache_lib.absorb_query_states(self.caches, q_tails)
         self.prefill_time_s += time.perf_counter() - t0
         return logits0, caches, q_tails
+
+
+class BatchedPrefill(ChunkedPrefill):
+    """Several short plain-layout prefills concatenated into one chunked
+    session: one device call per chunk for the whole group instead of
+    one per request.
+
+    Every member document is zero-padded to the group's shared pow2
+    bucket and stacked on the batch axis, so the group runs the *same*
+    chunk plan as a batch-1 document of the bucket length — one warmed
+    (batch, chunk, bucket) signature per group size.  Padding rows past
+    member *i*'s real length ``doc_lens[i]`` produce garbage KV, but the
+    per-row ``doc_len`` mask in the query pass / decode hides them, and
+    within the causal chunk step a real token only ever attends rows
+    ``< doc_lens[i]`` (its own earlier chunks plus its causal self-
+    prefix), so member outputs are bit-exact vs. running each request
+    through its own singleton session.
+
+    Member constraints (the scheduler's ``_can_batch`` gate enforces
+    them): token documents (no embeds), one shared query length,
+    attention-only configs (a mamba carry advances through padding rows
+    unmasked), and no prefix warm-start.  Session caches are *dense*
+    even on a paged engine (``_force_dense``): rows are sliced out per
+    member at activation (:meth:`row`) and pasted into the pool like a
+    monolithic admission.
+    """
+
+    _force_dense = True
+
+    def __init__(self, engine: Engine, docs, queries, chunk_size: int,
+                 doc_capacity: Optional[int] = None):
+        if len(docs) != len(queries) or not docs:
+            raise ValueError(
+                f"need matching non-empty docs/queries lists, got "
+                f"{len(docs)} docs / {len(queries)} queries")
+        if engine.cfg.has_mamba:
+            raise ValueError(
+                "batched prefill needs attention-only configs: a mamba "
+                "state carry advances through the padding rows unmasked")
+        for d in docs:
+            if d.ndim != 2:
+                raise ValueError(
+                    "batched prefill takes token documents (B=1, n); "
+                    "embedded docs are served through singleton sessions")
+        lqs = {q.shape[1] for q in queries}
+        if len(lqs) != 1:
+            raise ValueError(
+                f"batched members must share one query length, got "
+                f"{sorted(lqs)}")
+        lens = [int(d.shape[1]) for d in docs]
+        bucket = (doc_capacity if doc_capacity is not None
+                  else cache_lib.pow2_bucket(max(lens)))
+        if bucket < max(lens):
+            raise ValueError(
+                f"bucket capacity {bucket} < longest member {max(lens)}")
+        doc = jnp.concatenate(
+            [jnp.pad(d, ((0, 0), (0, bucket - d.shape[1]))) for d in docs],
+            axis=0)
+        query = jnp.concatenate(list(queries), axis=0)
+        super().__init__(engine, doc, query, chunk_size,
+                         doc_capacity=bucket)
+        self.doc_lens = lens
+
+    def finish(self):
+        """Query pass with *per-member* positions and valid lengths:
+        member i's query sits at positions ``lq + doc_lens[i] ..`` and
+        attends only its own real document rows."""
+        if self.chunks_left:
+            raise ValueError(
+                f"{self.chunks_left} prefill chunks still pending")
+        t0 = time.perf_counter()
+        self.engine._log_prefill_shape("query", self.batch, self.lq,
+                                       self.cap, self._session_paged)
+        lens = jnp.asarray(self.doc_lens, jnp.int32)
+        positions = (self.lq + lens)[:, None] + jnp.arange(self.lq)[None]
+        logits0, q_tails = self.engine._chunk_query(
+            self.engine.params, self.query, positions, self.caches, lens)
+        logits0 = jax.block_until_ready(logits0)
+        caches = cache_lib.absorb_query_states(self.caches, q_tails)
+        self.prefill_time_s += time.perf_counter() - t0
+        return logits0, caches, q_tails
+
+    def row(self, i: int, logits0, caches, q_tails, clip_rows: bool = False):
+        """Slice member ``i`` out of the batched ``finish()`` result as a
+        batch-1 (logits0, caches, q_tails) triple.  ``clip_rows=True``
+        additionally clips the doc caches' sequence axis to the member's
+        real length: the paged install grants ``pages_for(doc_lens[i])``
+        pages so bucket-pad rows must not be pasted, and the dense
+        install re-pads the clipped rows to its own slot capacity
+        (which the group bucket may exceed)."""
+        row_caches = jax.tree.map(lambda a: a[:, i:i + 1], caches)
+        row_tails = jax.tree.map(lambda a: a[:, i:i + 1], q_tails)
+        if clip_rows:
+            n = self.doc_lens[i]
+            row_caches = tuple(
+                {"k": c["k"][:, :, :n], "v": c["v"][:, :, :n]}
+                if "k" in c else c for c in row_caches)
+        return logits0[i:i + 1], row_caches, row_tails
 
 
 class AugmentedChunkedPrefill(ChunkedPrefill):
@@ -1185,6 +1385,18 @@ class AugmentedChunkedPrefill(ChunkedPrefill):
                             e[kk].astype(cur[kk].dtype))
             new.append(cur)
         self._passing = tuple(new)
+
+    @property
+    def next_chunk_len(self) -> int:
+        """Augmented plan entries are ``("anchor",)`` or ``("local", h,
+        off, t, last)`` — the anchor tick costs one anchor-slot pass,
+        a local entry one ``t``-token chunk."""
+        if not self.chunks_left:
+            return 0
+        entry = self._plan[self._next]
+        if entry[0] == "anchor":
+            return int(self._anchor_inputs.shape[1])
+        return int(entry[3])
 
     def _capture_passing(self, h: int) -> None:
         """Cold block ``h`` just finalized: capture its compressed rows

@@ -1,0 +1,81 @@
+"""Shared serving-metrics schema: one helper for the `launch.serve`
+stats line and the `bench_serving` JSON records.
+
+`RequestResult` carries per-request latency/SLO fields; this module
+turns them into records (`result_record`) and fleet summaries
+(`aggregate`) so the launcher and the benchmark emit the same keys —
+`tools/check_bench_results.py` validates the replay records against
+`GOODPUT_KEYS` (mirrored there as a stdlib-only constant;
+`tests/test_policy.py` asserts the two stay in sync).
+
+Goodput definition: a request counts toward goodput when every SLO it
+declared is met — TTFT (`ttft_s <= ttft_slo_s`) and TPOT
+(`tpot_p99_s <= tpot_slo_s`).  Requests with no SLOs are vacuously
+met, so `goodput_per_s == requests / wall` for SLO-free traffic and
+`slo_attainment == 1.0`.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+# The replay-summary keys a bench record must carry; mirrored (stdlib-
+# only) in tools/check_bench_results.py — keep the two tuples identical.
+GOODPUT_KEYS = ("requests", "p50_ttft_s", "p99_ttft_s", "p99_tpot_s",
+                "goodput_per_s", "slo_attainment")
+
+
+def _p(vals, q: float) -> float:
+    return float(np.percentile(np.asarray(vals, np.float64), q)) \
+        if len(vals) else 0.0
+
+
+def slo_met(res) -> bool:
+    """True when every SLO the request declared is met (vacuously true
+    for SLO-free requests)."""
+    if res.ttft_slo_met is False:
+        return False
+    if res.tpot_slo_s is not None and res.tpot_p99_s > res.tpot_slo_s:
+        return False
+    return True
+
+
+def result_record(res) -> dict:
+    """One per-request record (shared launcher/bench schema)."""
+    return {
+        "rid": res.rid,
+        "tokens": int(len(res.tokens)),
+        "stopped": bool(res.stopped),
+        "ttft_s": float(res.ttft_s),
+        "prefill_time_s": float(res.prefill_time_s),
+        "tpot_p99_s": float(res.tpot_p99_s),
+        "deadline_s": (None if res.deadline_s is None
+                       else float(res.deadline_s)),
+        "ttft_slo_met": res.ttft_slo_met,
+        "slo_met": slo_met(res),
+        "preemptions": int(res.preemptions),
+        "prefill_bucket": int(res.prefill_bucket),
+        "prefill_waves": int(res.prefill_waves),
+    }
+
+
+def aggregate(results: Dict[str, object], wall_s: float) -> dict:
+    """Fleet summary over a finished run: TTFT/TPOT percentiles and
+    goodput-under-SLO.  Keys are a superset of ``GOODPUT_KEYS``."""
+    rs = list(results.values())
+    ttfts = [r.ttft_s for r in rs]
+    tpots = [r.tpot_p99_s for r in rs if len(r.tokens) > 1]
+    met = sum(1 for r in rs if slo_met(r))
+    wall = max(wall_s, 1e-9)
+    return {
+        "requests": len(rs),
+        "p50_ttft_s": _p(ttfts, 50),
+        "p99_ttft_s": _p(ttfts, 99),
+        "p99_tpot_s": _p(tpots, 99),
+        "goodput_per_s": met / wall,
+        "slo_attainment": (met / len(rs)) if rs else 1.0,
+        "preemptions": sum(r.preemptions for r in rs),
+        "tokens": sum(len(r.tokens) for r in rs),
+        "wall_s": wall_s,
+    }

@@ -1,0 +1,435 @@
+"""Pluggable scheduling policies for the continuous-batching Scheduler.
+
+The Scheduler's admission / prefill-ordering / decode-interleave decisions
+are extracted behind a small protocol: each tick the Scheduler builds an
+immutable :class:`QueueSnapshot` of queue state and asks the configured
+:class:`SchedulingPolicy` for a typed :class:`ScheduleAction`.  Two stages
+per tick, each with a fresh snapshot:
+
+* ``stage="admission"`` — the policy orders parked (preempted) admissions
+  for resumption, orders pending requests for admission, and may name one
+  in-flight admission to preempt.  The Scheduler applies preempt, then
+  resume, then admit (stopping at the first page-pool deferral, so a big
+  request at the head of the order cannot be starved by small ones
+  slipping past it).
+* ``stage="prefill"`` — the policy names which in-flight admission gets
+  the next prefill chunk and how many decode chunks to interleave.
+
+Two policies ship:
+
+* :class:`SrptPolicy` (``scheduling_policy="srpt"``) — the bit-exactness
+  oracle.  FIFO admission, shortest-remaining-prefill-first chunk
+  ordering, the static ``decode_per_prefill`` interleave, no preemption:
+  exactly the fixed policy the Scheduler ran before this module existed.
+* :class:`DeadlinePolicy` (``scheduling_policy="deadline"``) — Medha-style
+  SLO-aware scheduling.  Requests may carry ``ttft_slo_s`` / ``tpot_slo_s``
+  targets; the policy runs earliest-deadline-first admission and prefill
+  ordering against a measured :class:`CostModel` (EWMA seconds per pow2
+  chunk bucket and per decode step, updated online by the Scheduler),
+  shrinks a new admission's prefill chunk size down the pow2 bucket
+  ladder when a co-scheduled request's slack cannot absorb a full-chunk
+  stall, boosts the decode interleave when an active request's TPOT is
+  at risk, and preempts the laxest in-flight admission at a chunk
+  boundary when a deadline-critical request finds no free slot.
+
+Degeneration contract (the oracle seam, enforced by
+``analysis/static/oracle.py`` and ``tests/test_policy.py``): when *no*
+request carries an SLO, every ``DeadlinePolicy`` decision is identical
+to ``SrptPolicy`` — all deadlines are ``+inf``, so EDF ties break on
+exactly the SRPT keys, the chunk size stays ``prefill_chunk``, the
+interleave stays ``decode_per_prefill``, and nothing is ever preempted.
+Greedy tokens are therefore bit-identical between the two policies.
+
+Preemption contract (starvation-free resumption): a preempted admission
+**keeps its page reservation and its in-flight session caches** and
+**releases only its slot**.  Resumption never re-reserves pages, so a
+parked request can never deadlock against the pool; parked admissions
+are ordered *ahead of* new admissions in every resume/admit cycle, and a
+per-request preemption cap (``DeadlinePolicy(max_preemptions=...)``)
+bounds churn — once capped, an admission is never preempted again, so it
+finishes.  Batched prefill groups (``prefill_batch_max > 1``) are not
+preemptible (``AdmissionView.preemptible`` is False).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
+
+from repro.serving.cache import chunk_plan, pow2_bucket
+
+# ---------------------------------------------------------------------------
+# Snapshot / action types
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PendingView:
+    """One not-yet-admitted request, as the policy sees it."""
+    rid: str
+    doc_len: int
+    lq: int
+    max_new_tokens: int
+    order: int                       # submission order (FIFO position)
+    arrival_s: float = 0.0           # run-clock arrival time
+    ttft_slo_s: Optional[float] = None
+    tpot_slo_s: Optional[float] = None
+
+
+@dataclass(frozen=True)
+class AdmissionView:
+    """One in-flight (or parked) prefill admission."""
+    rid: str
+    slot: int                        # -1 when parked (preempted)
+    chunks_left: int
+    doc_len: int
+    order: int                       # admission order
+    chunk_size: Optional[int] = None
+    preemptions: int = 0
+    preemptible: bool = True
+    arrival_s: float = 0.0
+    ttft_slo_s: Optional[float] = None
+    tpot_slo_s: Optional[float] = None
+
+
+@dataclass(frozen=True)
+class ActiveView:
+    """One decoding slot."""
+    rid: str
+    slot: int
+    remaining: int                   # decode-token budget left
+    last_token_s: float              # run-clock time of the newest token
+    tpot_slo_s: Optional[float] = None
+
+
+@dataclass(frozen=True)
+class QueueSnapshot:
+    """Immutable queue state handed to ``SchedulingPolicy.decide``.
+
+    ``stage`` is ``"admission"`` (decide resume/admit/preempt) or
+    ``"prefill"`` (decide the prefill target and decode interleave).
+    ``interleave`` is the configured decode-chunks-per-prefill-tick (0
+    when prefill is monolithic), ``bucket_ladder`` the pow2 chunk sizes
+    the policy may pick from (empty when chunking is off).
+    """
+    stage: str
+    now_s: float
+    free_slots: int
+    pending: Tuple[PendingView, ...] = ()
+    admissions: Tuple[AdmissionView, ...] = ()
+    parked: Tuple[AdmissionView, ...] = ()
+    active: Tuple[ActiveView, ...] = ()
+    default_chunk: Optional[int] = None
+    decode_chunk: int = 8
+    interleave: int = 1
+    bucket_ladder: Tuple[int, ...] = ()
+
+
+@dataclass(frozen=True)
+class ScheduleAction:
+    """Typed policy decision.  Admission stage reads ``resume`` (parked
+    rids to rebind, in order), ``admit`` (pending rids, in order) and
+    ``preempt`` (one in-flight rid to park, or None); prefill stage reads
+    ``prefill`` (the admission rid to step, or None) and
+    ``decode_chunks`` (how many decode chunks to run this tick)."""
+    resume: Tuple[str, ...] = ()
+    admit: Tuple[str, ...] = ()
+    preempt: Optional[str] = None
+    prefill: Optional[str] = None
+    decode_chunks: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CostModel:
+    """Online EWMA of measured step costs, keyed by pow2 chunk bucket.
+
+    The Scheduler feeds it wall-clock observations (`observe_prefill`
+    after each chunk step, `observe_decode` after each decode chunk);
+    the policy projects deadlines with it.  Unmeasured buckets
+    extrapolate linearly-in-tokens from the nearest measured bucket and
+    return 0.0 when nothing has been measured yet — a cold model is
+    deliberately optimistic, so the first decisions match SRPT until
+    real costs arrive.
+    """
+    alpha: float = 0.25
+    _prefill_s: Dict[int, float] = field(default_factory=dict)
+    _decode_step_s: Optional[float] = None
+
+    def observe_prefill(self, chunk_len: int, seconds: float) -> None:
+        if chunk_len <= 0 or seconds < 0:
+            return
+        bucket = pow2_bucket(chunk_len)
+        prev = self._prefill_s.get(bucket)
+        self._prefill_s[bucket] = (seconds if prev is None else
+                                   (1 - self.alpha) * prev
+                                   + self.alpha * seconds)
+
+    def observe_decode(self, steps: int, seconds: float) -> None:
+        if steps <= 0 or seconds < 0:
+            return
+        per = seconds / steps
+        prev = self._decode_step_s
+        self._decode_step_s = (per if prev is None else
+                               (1 - self.alpha) * prev + self.alpha * per)
+
+    def chunk_seconds(self, chunk_len: int) -> float:
+        """Projected seconds for one prefill chunk of ``chunk_len``."""
+        if chunk_len <= 0:
+            return 0.0
+        if not self._prefill_s:
+            return 0.0
+        bucket = pow2_bucket(chunk_len)
+        if bucket in self._prefill_s:
+            return self._prefill_s[bucket]
+        near = min(self._prefill_s, key=lambda b: abs(b - bucket))
+        return self._prefill_s[near] * (bucket / near)
+
+    def prefill_seconds(self, doc_len: int,
+                        chunk_size: Optional[int]) -> float:
+        """Projected seconds to prefill ``doc_len`` tokens."""
+        if doc_len <= 0:
+            return 0.0
+        if not chunk_size:
+            return self.chunk_seconds(doc_len)
+        return sum(self.chunk_seconds(t)
+                   for _, t in chunk_plan(doc_len, chunk_size))
+
+    def decode_seconds(self, steps: int) -> float:
+        if self._decode_step_s is None:
+            return 0.0
+        return self._decode_step_s * max(steps, 0)
+
+
+# ---------------------------------------------------------------------------
+# Policy protocol
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class SchedulingPolicy(Protocol):
+    """What the Scheduler requires of a policy object.
+
+    ``decide`` is called twice per tick (admission stage, then prefill
+    stage) with a fresh snapshot each time.  ``chunk_size`` is called
+    once per admission, before the prefill session is created; returning
+    None means "the config default".  The ``observe_*`` hooks feed the
+    measured cost model (no-ops for policies that don't keep one).
+    """
+    name: str
+
+    def decide(self, snap: QueueSnapshot) -> ScheduleAction: ...
+
+    def chunk_size(self, req: PendingView,
+                   snap: QueueSnapshot) -> Optional[int]: ...
+
+    def observe_prefill(self, chunk_len: int, seconds: float) -> None: ...
+
+    def observe_decode(self, steps: int, seconds: float) -> None: ...
+
+
+def _deadline(view) -> float:
+    """Absolute run-clock TTFT deadline of a pending/admitted request."""
+    if view.ttft_slo_s is None:
+        return math.inf
+    return view.arrival_s + view.ttft_slo_s
+
+
+def _any_slos(snap: QueueSnapshot) -> bool:
+    for v in snap.pending + snap.admissions + snap.parked:
+        if v.ttft_slo_s is not None or v.tpot_slo_s is not None:
+            return True
+    return any(a.tpot_slo_s is not None for a in snap.active)
+
+
+# ---------------------------------------------------------------------------
+# SRPT (the oracle)
+# ---------------------------------------------------------------------------
+
+
+class SrptPolicy:
+    """Static shortest-remaining-prefill-first — the pre-policy Scheduler
+    behaviour, bit for bit: FIFO admission into free slots, the in-flight
+    admission with the fewest chunks left (admission order breaking ties)
+    gets the next chunk, ``decode_per_prefill`` decode chunks ride along
+    each prefill tick (one decode chunk per tick once prefill is idle),
+    and nothing is ever preempted."""
+
+    name = "srpt"
+
+    def decide(self, snap: QueueSnapshot) -> ScheduleAction:
+        if snap.stage == "admission":
+            return ScheduleAction(
+                resume=tuple(a.rid for a in snap.parked),
+                admit=tuple(p.rid for p in snap.pending))
+        if snap.admissions:
+            target = min(snap.admissions,
+                         key=lambda a: (a.chunks_left, a.order))
+            return ScheduleAction(prefill=target.rid,
+                                  decode_chunks=snap.interleave)
+        return ScheduleAction(decode_chunks=1 if snap.active else 0)
+
+    def chunk_size(self, req: PendingView,
+                   snap: QueueSnapshot) -> Optional[int]:
+        return snap.default_chunk
+
+    def observe_prefill(self, chunk_len: int, seconds: float) -> None:
+        pass
+
+    def observe_decode(self, steps: int, seconds: float) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Deadline (SLO-aware)
+# ---------------------------------------------------------------------------
+
+
+class DeadlinePolicy:
+    """Earliest-deadline-first scheduling against a measured cost model.
+
+    See the module docstring for the decision rules and the degeneration
+    / preemption contracts.  ``max_preemptions`` caps how many times one
+    admission may be parked (starvation bound); ``slack_margin_s`` pads
+    every deadline projection (absorbs cost-model noise).
+    """
+
+    name = "deadline"
+
+    def __init__(self, max_preemptions: int = 2,
+                 slack_margin_s: float = 0.0,
+                 cost: Optional[CostModel] = None):
+        self.max_preemptions = max_preemptions
+        self.slack_margin_s = slack_margin_s
+        self.cost = cost if cost is not None else CostModel()
+
+    # -- observation hooks ---------------------------------------------
+    def observe_prefill(self, chunk_len: int, seconds: float) -> None:
+        self.cost.observe_prefill(chunk_len, seconds)
+
+    def observe_decode(self, steps: int, seconds: float) -> None:
+        self.cost.observe_decode(steps, seconds)
+
+    # -- projections ---------------------------------------------------
+    def _remaining_prefill_s(self, adm: AdmissionView) -> float:
+        cs = adm.chunk_size
+        if not cs:
+            return self.cost.prefill_seconds(adm.doc_len, None)
+        return adm.chunks_left * self.cost.chunk_seconds(cs)
+
+    def _slack(self, view, remaining_s: float, now_s: float) -> float:
+        return _deadline(view) - now_s - remaining_s - self.slack_margin_s
+
+    # -- decisions -----------------------------------------------------
+    def decide(self, snap: QueueSnapshot) -> ScheduleAction:
+        if snap.stage == "admission":
+            return self._decide_admission(snap)
+        return self._decide_prefill(snap)
+
+    def _decide_admission(self, snap: QueueSnapshot) -> ScheduleAction:
+        # Parked admissions resume in EDF order (ahead of new admits —
+        # the Scheduler applies resume before admit).
+        resume = tuple(a.rid for a in sorted(
+            snap.parked, key=lambda a: (_deadline(a), a.order)))
+        # Tie-break on submission order, not doc length: with every
+        # deadline at +inf this sort is exactly SRPT's FIFO admission
+        # (the degeneration contract).
+        admit = tuple(p.rid for p in sorted(
+            snap.pending, key=lambda p: (_deadline(p), p.order)))
+        preempt = self._pick_victim(snap) if admit or resume else None
+        return ScheduleAction(resume=resume, admit=admit, preempt=preempt)
+
+    def _pick_victim(self, snap: QueueSnapshot) -> Optional[str]:
+        """Park the laxest in-flight admission when a deadline-critical
+        request has no free slot to admit into."""
+        if snap.free_slots > 0:
+            return None
+        waiters = [v for v in (snap.pending + snap.parked)
+                   if _deadline(v) < math.inf]
+        if not waiters:
+            return None
+        head = min(waiters, key=lambda v: (_deadline(v), v.order))
+        cs = snap.default_chunk
+        need_s = self.cost.prefill_seconds(getattr(head, "doc_len", 0), cs)
+        if self._slack(head, need_s, snap.now_s) >= 0 and \
+                self.cost.chunk_seconds(cs or 1) > 0:
+            return None        # head still has slack — don't churn
+        victims = [a for a in snap.admissions
+                   if a.preemptible and a.preemptions < self.max_preemptions
+                   and _deadline(a) > _deadline(head)]
+        if not victims:
+            return None
+        return max(victims,
+                   key=lambda a: (_deadline(a), a.chunks_left, -a.order)).rid
+
+    def _decide_prefill(self, snap: QueueSnapshot) -> ScheduleAction:
+        if not snap.admissions:
+            return ScheduleAction(
+                decode_chunks=1 if snap.active else 0)
+        # EDF over in-flight admissions; infinite deadlines tie-break on
+        # exactly the SRPT keys, so no-SLO traffic degenerates to SRPT.
+        target = min(snap.admissions,
+                     key=lambda a: (_deadline(a), a.chunks_left, a.order))
+        decode_chunks = snap.interleave
+        if _any_slos(snap):
+            decode_cost = self.cost.decode_seconds(snap.decode_chunk)
+            tpot_risk = any(
+                a.tpot_slo_s is not None
+                and snap.now_s + decode_cost - a.last_token_s > a.tpot_slo_s
+                for a in snap.active)
+            if tpot_risk:
+                decode_chunks = snap.interleave + 1
+            elif self._slack(target, self._remaining_prefill_s(target),
+                             snap.now_s) < snap.interleave * decode_cost:
+                decode_chunks = 0   # target is tight: prefill greedily
+        return ScheduleAction(prefill=target.rid,
+                              decode_chunks=decode_chunks)
+
+    def chunk_size(self, req: PendingView,
+                   snap: QueueSnapshot) -> Optional[int]:
+        """Largest bucket whose stall the tightest co-scheduled deadline
+        can absorb; the config default when nothing is under pressure
+        (and always the default when no SLOs are set — the degenerate
+        case)."""
+        if snap.default_chunk is None:
+            return None
+        if not snap.bucket_ladder or not _any_slos(snap):
+            return snap.default_chunk
+        tolerances = []
+        for v in snap.pending + snap.admissions + snap.parked:
+            if v is req or getattr(v, "rid", None) == req.rid:
+                continue
+            d = _deadline(v)
+            if d < math.inf:
+                tolerances.append(max(d - snap.now_s, 0.0))
+        for a in snap.active:
+            if a.tpot_slo_s is not None:
+                tolerances.append(
+                    max(a.tpot_slo_s - (snap.now_s - a.last_token_s), 0.0))
+        if not tolerances:
+            return snap.default_chunk
+        tau = min(tolerances)
+        for bucket in sorted(snap.bucket_ladder, reverse=True):
+            if self.cost.chunk_seconds(bucket) <= tau:
+                return bucket
+        return snap.bucket_ladder[0] if snap.bucket_ladder else \
+            snap.default_chunk
+
+
+# ---------------------------------------------------------------------------
+# Factory (the oracle-seam dispatch point)
+# ---------------------------------------------------------------------------
+
+
+def build_policy(name: str) -> SchedulingPolicy:
+    """Resolve ``ServeConfig.scheduling_policy`` to a policy object."""
+    if name == "deadline":
+        return DeadlinePolicy()
+    if name == "srpt":
+        return SrptPolicy()
+    raise ValueError(
+        f"scheduling_policy must be 'srpt' or 'deadline', got {name!r}")

@@ -27,22 +27,48 @@ Every admission is a **prefill session** from ``Engine.start_prefill``
     admissions stream chunk-by-chunk like everything else — they no
     longer fall back to a blocking monolithic pass.
 
-With ``prefill_chunk`` set, every scheduler tick processes one chunk of
-the in-flight admission with the fewest chunks remaining
-(shortest-remaining-first, so a short request's admission is never stuck
-behind a long document — the Medha head-of-line problem), then runs up to
-``decode_per_prefill`` decode chunks so live slots keep generating while
-the long admission streams in.  A monolithic 100k-token prefill stall
-becomes a sequence of bounded per-chunk stalls.  Requests whose geometry
-does not match an augmented engine's layout are served through the exact
-plain path — both orderings fall out of the one SRPT tiebreak on chunks
-remaining.  ``Engine.prefill_capabilities`` (serving.config) reports
-which streaming path a configuration gets, or the machine-readable
-reason it cannot stream.
+With ``prefill_chunk`` set, every scheduler tick consults the active
+**scheduling policy** (serving.policy) twice — once to pick which
+pending requests to admit / resume / preempt, once to pick which
+in-flight admission advances by one chunk and how many decode chunks to
+interleave after it.  The default ``"srpt"`` policy reproduces the
+historical static schedule exactly: FIFO admission, then the admission
+with the fewest chunks remaining steps (shortest-remaining-first, so a
+short request is never stuck behind a long document — the Medha
+head-of-line problem), then ``decode_per_prefill`` decode chunks.  A
+monolithic 100k-token prefill stall becomes a sequence of bounded
+per-chunk stalls.  The ``"deadline"`` policy (SLO-aware EDF over a
+measured cost model) additionally sizes each admission's chunk from the
+bucket ladder, adapts the interleave to TPOT risk, and may **preempt**
+a long admission at a chunk boundary when a tight-deadline arrival
+would otherwise miss: the victim keeps its page reservation and its
+in-flight session caches (only its slot is released), parks in a
+starvation-free queue, and resumes ahead of new admits — with no SLOs
+set the deadline policy degenerates to SRPT and greedy tokens are
+bit-identical.  Requests whose geometry does not match an augmented
+engine's layout are served through the exact plain path — both
+orderings fall out of the one tiebreak on chunks remaining.
+``Engine.prefill_capabilities`` (serving.config) reports which
+streaming path a configuration gets, or the machine-readable reason it
+cannot stream.
+
+With ``prefill_batch_max > 1``, consecutive admit picks that share a
+query length and a pow2 document bucket are **batch-concatenated** into
+one :class:`~repro.serving.engine.BatchedPrefill` session — one device
+call per chunk for the whole group (group sizes snap down to powers of
+two so warmed shapes stay O(log)).  Batched members activate together,
+each row sliced back out as if it had run alone; member outputs are
+bit-exact vs. singleton sessions.  Paged chunked singletons round their
+session capacity up to a pow2 bucket for the same reason (prefix mode
+keeps exact capacities — warm-page accounting is row-exact), and
+``aot_warmup`` precompiles every bucket signature once at ``run()``
+start so steady-state admissions perform **zero recompiles**
+(``Engine.prefill_shapes`` is the probe).
 
 Knobs arrive through one validated ``serving.config.ServeConfig``
-(``Scheduler(engine, config=ServeConfig(...))``); the individual keyword
-arguments still work behind a deprecation shim.
+(``Scheduler(engine, config=ServeConfig(...))``); the PR-6 legacy
+keyword shim has graduated — pre-config keywords now raise ``TypeError``
+naming the replacement field.
 
 Capacities are static: ``doc_capacity`` bounds the per-request document
 cache length, ``tail_capacity`` bounds query + generated tokens.  Both
@@ -123,6 +149,7 @@ import numpy as np
 
 from repro.core import decode as dec
 from repro.serving import cache as cache_lib
+from repro.serving import policy as policy_lib
 from repro.serving import sampling as sampling_lib
 from repro.serving.config import ServeConfig, resolve_config
 from repro.serving.engine import Engine
@@ -131,13 +158,25 @@ from repro.serving.engine import Engine
 @dataclasses.dataclass
 class Request:
     """One generation request.  doc: (n,) or (1, n) ints, or (n, d) /
-    (1, n, d) embeds (VLM/audio frontends); query: (lq,) or (1, lq) ints."""
+    (1, n, d) embeds (VLM/audio frontends); query: (lq,) or (1, lq) ints.
+
+    ``ttft_slo_s`` / ``tpot_slo_s`` are optional service-level
+    objectives the deadline policy schedules against (and every policy
+    reports against in ``RequestResult``): first token within
+    ``ttft_slo_s`` of the request's arrival, p99 inter-token gap at most
+    ``tpot_slo_s``.  ``arrival_s`` is the arrival offset relative to
+    ``run()`` start (0 = present from the beginning); trace-replay
+    drivers stamp it so TTFT and deadlines measure from arrival, not
+    from run start."""
 
     rid: str
     doc: jnp.ndarray
     query: jnp.ndarray
     max_new_tokens: int = 8
     stop_token: Optional[int] = None
+    ttft_slo_s: Optional[float] = None
+    tpot_slo_s: Optional[float] = None
+    arrival_s: float = 0.0
 
 
 def _doc_is_tokens(doc) -> bool:
@@ -163,20 +202,30 @@ class RequestResult:
     prefill_time_s: float
     admitted_at_chunk: int
     finished_at_chunk: int
-    ttft_s: float = 0.0           # run() start -> first token available
+    ttft_s: float = 0.0           # request arrival -> first token
     admitted_after_prefill_chunks: int = 0   # global prefill ticks before
                                              # this admission completed
     prefill_waves: int = 0        # session progress units this admission
                                   # took: host waves on the pipelined
                                   # mesh path, chunk ticks elsewhere
                                   # (1 for a monolithic admission)
+    deadline_s: Optional[float] = None    # arrival + TTFT SLO (run-relative;
+                                          # None = no TTFT SLO declared)
+    ttft_slo_met: Optional[bool] = None   # None = no TTFT SLO declared
+    tpot_slo_s: Optional[float] = None    # the declared TPOT SLO (echoed
+                                          # so metrics.slo_met needs only
+                                          # the result)
+    tpot_p99_s: float = 0.0       # p99 inter-token gap (0 for <2 tokens)
+    preemptions: int = 0          # times this admission was parked
+    prefill_bucket: int = 0       # session doc capacity it compiled at
 
 
 class _SlotInfo:
     def __init__(self, req: Request, first_token: int, prefill_s: float,
                  chunk: int, ttft_s: float = 0.0,
                  prefill_chunks_before: int = 0,
-                 prefill_waves: int = 0):
+                 prefill_waves: int = 0, first_token_s: float = 0.0,
+                 preemptions: int = 0, prefill_bucket: int = 0):
         self.req = req
         self.tokens: List[int] = [first_token]
         self.stopped = (req.stop_token is not None
@@ -186,6 +235,13 @@ class _SlotInfo:
         self.ttft_s = ttft_s
         self.prefill_chunks_before = prefill_chunks_before
         self.prefill_waves = prefill_waves
+        # run-relative timestamps of every emitted token (first token at
+        # install, then one shared stamp per decode-chunk sync — the
+        # granularity the host actually observes); TPOT percentiles are
+        # diffs of consecutive stamps
+        self.token_times: List[float] = [first_token_s]
+        self.preemptions = preemptions
+        self.prefill_bucket = prefill_bucket
 
     @property
     def remaining(self) -> int:
@@ -196,15 +252,32 @@ class _SlotInfo:
 
 class _Admission:
     """One in-flight chunked admission bound to a reserved slot (and, on
-    a paged engine, to its reserved pool pages)."""
+    a paged engine, to its reserved pool pages).
+
+    A *preempted* admission moves to the scheduler's parked queue: it
+    keeps ``pages`` (its pool reservation) and ``cp`` (its in-flight
+    session caches) so resuming never re-runs prefill compute — only
+    its batch slot is released.  ``row``/``group`` bind batched members
+    to their shared :class:`~repro.serving.engine.BatchedPrefill`
+    session (``group`` lists every member admission; batched groups are
+    not preemptible — their session is one fused device call)."""
 
     def __init__(self, req: Request, cp, order: int, pages=None,
-                 prefix=None):
+                 prefix=None, chunk_size: Optional[int] = None,
+                 row: int = 0, group: Optional[list] = None):
         self.req = req
-        self.cp = cp                   # engine.ChunkedPrefill
-        self.order = order             # FIFO tiebreak for SRPT
+        self.cp = cp                   # engine prefill session
+        self.order = order             # submission-order tiebreak
         self.pages = pages             # reserved pool pages (paged only)
         self.prefix = prefix           # prefix-sharing plan (dict) or None
+        self.chunk_size = chunk_size   # policy-chosen chunk size
+        self.row = row                 # batch row inside a group session
+        self.group = group             # member admissions (None=singleton)
+        self.preemptions = 0
+
+    @property
+    def preemptible(self) -> bool:
+        return self.group is None
 
 
 class Scheduler:
@@ -217,10 +290,11 @@ class Scheduler:
                  prefill_chunk: Optional[int] = None,
                  decode_per_prefill: Optional[int] = None,
                  num_pages: Optional[int] = None,
-                 config: Optional[ServeConfig] = None):
+                 config: Optional[ServeConfig] = None,
+                 policy: Optional[policy_lib.SchedulingPolicy] = None):
         """Knobs come in one validated ``ServeConfig`` (``config=``);
-        the individual keyword arguments still work behind a deprecation
-        shim (passing both is an error).  ``prefill_chunk``: power-of-two
+        the graduated legacy keyword arguments raise ``TypeError``
+        naming the replacement field.  ``prefill_chunk``: power-of-two
         document chunk size enabling streamed admissions (None =
         monolithic prefill, the oracle — served through the same session
         loop).  ``decode_per_prefill``: decode chunks run after each
@@ -229,7 +303,9 @@ class Scheduler:
         only between admissions).  ``num_pages`` sizes the paged
         engine's global page pool (default: dense-equivalent
         n_slots * pages(doc_capacity)); rejected for a dense engine.
-        ``sampling`` / ``rng`` are runtime objects, not config fields."""
+        ``sampling`` / ``rng`` / ``policy`` are runtime objects, not
+        config fields — ``policy`` (any ``serving.policy.
+        SchedulingPolicy``) overrides ``config.scheduling_policy``."""
         if engine.cfg.is_encoder_decoder:
             # encdec self-attention tails grow by concat inside
             # decode_tokens — not representable in the static-shape
@@ -247,10 +323,6 @@ class Scheduler:
             "decode_per_prefill": decode_per_prefill,
             "num_pages": num_pages,
         }
-        if num_pages is not None and engine.paged:
-            # legacy callers pass num_pages alone; ServeConfig ties it
-            # to the paged layout, so carry the engine's over
-            legacy["cache_layout"] = "paged"
         config = resolve_config(config, legacy, "Scheduler")
         if config.prefill_chunk is not None:
             caps = engine.prefill_capabilities
@@ -270,6 +342,15 @@ class Scheduler:
         self.prefill_chunk = config.prefill_chunk
         self.decode_per_prefill = config.decode_per_prefill
         self.num_pages = config.num_pages
+        self.policy = (policy if policy is not None
+                       else policy_lib.build_policy(
+                           config.scheduling_policy))
+        # pow2 chunk ladder the deadline policy sizes chunks from (and
+        # the AOT warmup precompiles); empty for monolithic serving
+        self._ladder = (cache_lib.bucket_ladder(config.prefill_chunk,
+                                                config.prefill_bucket_min)
+                        if config.prefill_chunk is not None else ())
+        self.prefill_batch_max = config.prefill_batch_max
         # decode ticks interleaved per prefill tick: monolithic sessions
         # reproduce the historical admit-everything-then-decode ordering
         # with an interleave of 0 (their one "chunk" is the whole doc —
@@ -279,6 +360,10 @@ class Scheduler:
         self.pending: deque = deque()
         self.active: Dict[int, _SlotInfo] = {}
         self.admissions: Dict[int, _Admission] = {}
+        # preempted admissions, rid-keyed: slot released, pages + session
+        # caches held (the preemption contract); resumed ahead of admits
+        self._parked: Dict[str, _Admission] = {}
+        self.preemptions = 0
         self.results: Dict[str, RequestResult] = {}
         self.state: Optional[dec.DecodeState] = None
         self.chunks_run = 0
@@ -315,7 +400,9 @@ class Scheduler:
         self.prefix_hit_pages = 0
         self.prefill_chunks_skipped = 0
         self._submitted = 0
+        self._seq: Dict[str, int] = {}     # rid -> submission order
         self._run_t0: Optional[float] = None
+        self._warmed = False
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -333,6 +420,17 @@ class Scheduler:
                 f"((n,)/(1, n) tokens or (n, d)/(1, n, d) embeds), got "
                 f"batch {req.doc.shape[0]} — submit one Request per "
                 f"sequence")
+        for name in ("ttft_slo_s", "tpot_slo_s"):
+            v = getattr(req, name)
+            if v is not None and v <= 0:
+                raise ValueError(
+                    f"request {req.rid}: {name} must be > 0, got {v}")
+        if req.arrival_s < 0:
+            raise ValueError(
+                f"request {req.rid}: arrival_s must be >= 0, got "
+                f"{req.arrival_s}")
+        self._seq[req.rid] = self._submitted
+        self._submitted += 1
         self.pending.append(req)
 
     # ------------------------------------------------------------------
@@ -420,8 +518,14 @@ class Scheduler:
             self.admission_deferrals += 1
         return pages
 
+    def _cs_of(self, cs: Optional[int]) -> Optional[int]:
+        """Effective chunk size for one admission: the policy's choice,
+        falling back to the configured default (None = monolithic)."""
+        return cs if cs is not None else self.prefill_chunk
+
     # ------------------------------------------------- prefix sharing
-    def _prefix_seed(self, req: Request) -> Tuple[bytes, bool]:
+    def _prefix_seed(self, req: Request,
+                     chunk_size: Optional[int] = None) -> Tuple[bytes, bool]:
         """Hash-chain seed for a request's page content.  The KV bits a
         page holds are a function of more than the doc tokens: the plain
         path folds in the query length (positions start at lq) and the
@@ -438,7 +542,8 @@ class Scheduler:
         part of the identity, not a detail of the encoding."""
         eng = self.engine
         lq = int(req.query.shape[-1])
-        cs = -1 if self.prefill_chunk is None else self.prefill_chunk
+        eff = self._cs_of(chunk_size)
+        cs = -1 if eff is None else eff
         fmt = eng.kv_dtype
         doc_b = _doc_batched(req.doc)
         query_b = req.query if req.query.ndim == 2 else req.query[None]
@@ -455,7 +560,8 @@ class Scheduler:
             np.asarray(query_b).reshape(-1))
         return seed, True
 
-    def _prefix_plan(self, req: Request) -> Optional[dict]:
+    def _prefix_plan(self, req: Request,
+                     chunk_size: Optional[int] = None) -> Optional[dict]:
         """Plan one admission against the prefix index: hash the doc's
         full pages (rolling chain), walk consecutive index hits from
         logical page 0, and decide how many rows the prefill session may
@@ -470,7 +576,7 @@ class Scheduler:
         doc = np.asarray(_doc_batched(req.doc)).reshape(-1)
         n = doc.shape[0]
         logical = cache_lib.pages_for(n, ps)
-        seed, aug = self._prefix_seed(req)
+        seed, aug = self._prefix_seed(req, chunk_size)
         full = n // ps
         hashes: List[Optional[bytes]] = list(cache_lib.token_hash_cuts(
             doc, seed, [(j + 1) * ps for j in range(full)]))
@@ -500,12 +606,13 @@ class Scheduler:
             if warm_phys and len(warm_phys) * ps < lay.la_doc:
                 warm_phys = []
         skip = self._prefix_skip_rows(req, len(warm_phys), aug,
-                                      block_keys, n)
+                                      block_keys, n, chunk_size)
         return {"phys": warm_phys, "hashes": hashes, "skip": skip,
                 "pages": logical, "block_keys": block_keys}
 
     def _prefix_skip_rows(self, req: Request, warm_pages: int, aug: bool,
-                          block_keys, n: int) -> int:
+                          block_keys, n: int,
+                          chunk_size: Optional[int] = None) -> int:
         """Rows the prefill session may resume past, given ``warm_pages``
         consecutive index hits.  Monolithic sessions and Mamba stacks
         never skip (the whole pass / the SSM carry is indivisible —
@@ -517,12 +624,13 @@ class Scheduler:
         host attends all earlier hosts' blocks)."""
         eng = self.engine
         ps = eng.page_size
-        if self.prefill_chunk is None or eng.cfg.has_mamba:
+        cs = self._cs_of(chunk_size)
+        if cs is None or eng.cfg.has_mamba:
             return 0
         warm_rows = warm_pages * ps
         if not aug:
             bounds = [0] + [off + t for off, t in cache_lib.chunk_plan(
-                n, self.prefill_chunk)]
+                n, cs)]
             return max(b for b in bounds
                        if b <= warm_rows and b % ps == 0)
         lay = eng.rctx.layout
@@ -560,14 +668,15 @@ class Scheduler:
                  if j % self._shards == s]
                 for s in range(self._shards)]
 
-    def _reserve_prefix(self, req: Request):
+    def _reserve_prefix(self, req: Request,
+                        chunk_size: Optional[int] = None):
         """Prefix-sharing admission reservation: pin the warm pages with
         an extra reference *first* (``share``), then reserve only the
         cold tail — ``reserve_tail`` may evict LRU pages to top up its
         free list, and the pin is what stops it from reclaiming this
         very admission's warm prefix.  Returns ``(grant, plan, hints)``;
         an exhausted pool un-shares the pins and defers as usual."""
-        rec = self._prefix_plan(req)
+        rec = self._prefix_plan(req, chunk_size)
         if rec is None:              # embed doc: nothing to hash
             return self._reserve_pages(req), None, None
         warm_phys = rec["phys"]
@@ -594,15 +703,18 @@ class Scheduler:
         if warm:
             self.prefix_hits += 1
             self.prefix_hit_pages += warm
-        return self._grant_of(phys), rec, self._prefix_hints(rec)
+        return (self._grant_of(phys), rec,
+                self._prefix_hints(rec, chunk_size))
 
-    def _prefix_hints(self, rec: dict) -> Optional[cache_lib.PrefixHints]:
+    def _prefix_hints(self, rec: dict,
+                      chunk_size: Optional[int] = None
+                      ) -> Optional[cache_lib.PrefixHints]:
         """Session warm-start hints for a planned admission: the warm
         pages' KV gathered out of the shared pool, plus any cached
         compressed passing blocks for the skipped hosts.  Cold augmented
         admissions still get their ``block_keys`` — that is how their
         freshly finalized blocks are captured for the next admission."""
-        if self.prefill_chunk is None:
+        if self._cs_of(chunk_size) is None:
             return None              # monolithic sessions take no hints
         skip = rec["skip"]
         if not skip:
@@ -699,7 +811,8 @@ class Scheduler:
     def _install(self, req: Request, slot: int, logits0, caches, tails,
                  tail_fill: int, doc_len: int, t_prefill: float,
                  pages: Optional[PageGrant] = None,
-                 waves: int = 0, prefix: Optional[dict] = None) -> None:
+                 waves: int = 0, prefix: Optional[dict] = None,
+                 preemptions: int = 0, bucket: int = 0) -> None:
         """Paste one prefilled request (dense request caches + tail
         buffers) into ``slot`` and sample its first token — shared by the
         monolithic and chunked admission paths.  ``pages`` is the paged
@@ -716,12 +829,15 @@ class Scheduler:
         chain, sub = jax.random.split(chain)
         tok0 = int(sampling_lib.sample_batch(logits0, sub[None],
                                              self.sampling)[0])
-        ttft = (time.perf_counter() - self._run_t0
-                if self._run_t0 is not None else 0.0)
+        now = self._now()
+        # TTFT is arrival-relative: a replayed request that arrived late
+        # is not charged for the time before it existed
+        ttft = max(0.0, now - req.arrival_s)
         info = _SlotInfo(req, tok0, t_prefill, self.chunks_run,
                          ttft_s=ttft,
                          prefill_chunks_before=self.prefill_chunks_done,
-                         prefill_waves=waves)
+                         prefill_waves=waves, first_token_s=now,
+                         preemptions=preemptions, prefill_bucket=bucket)
         pos0 = cache_lib.first_decode_position(_doc_seq_len(req.doc),
                                                req.query.shape[-1])
         done = info.remaining == 0
@@ -754,87 +870,297 @@ class Scheduler:
         if done:
             self._finish(slot)
 
-    # ------------------------------------------------- admission sessions
-    def _start_admissions(self) -> None:
-        """Bind pending requests to free slots as in-flight prefill
-        sessions (``Engine.start_prefill`` — monolithic, plain chunked,
-        augmented host-loop or pipelined mesh; the engine picks).  On a
-        paged engine the pool pages are reserved here — before any
-        prefill compute is spent — and a streaming session's buffer is
-        exact-length (O(doc len)), not doc_capacity."""
-        for slot in range(self.n_slots):
-            if not self.pending:
-                break
-            if slot in self.active or slot in self.admissions:
-                continue
-            req = self.pending[0]
-            self._validate_request(req)       # raises before the pop
-            pages = None
-            prefix_rec = None
-            hints = None
-            if self._paged:
-                if self._prefix:
-                    pages, prefix_rec, hints = self._reserve_prefix(req)
-                else:
-                    pages = self._reserve_pages(req)
-                if pages is None:
-                    break          # pool exhausted: wait for retirements
-            self.pending.popleft()
-            try:
-                cp = self.engine.start_prefill(
-                    _doc_batched(req.doc),
-                    req.query if req.query.ndim == 2 else req.query[None],
-                    chunk_size=self.prefill_chunk,
-                    doc_capacity=(None if self._paged
-                                  else self.doc_capacity),
-                    prefix=hints)
-            except Exception:
-                if pages is not None:
-                    self._allocator.release(pages)
-                raise
-            self.prefill_chunks_skipped += getattr(cp, "chunks_skipped",
-                                                   0)
-            self.admissions[slot] = _Admission(req, cp, self._submitted,
-                                               pages=pages,
-                                               prefix=prefix_rec)
-            self._submitted += 1
+    # ------------------------------------------------- policy snapshots
+    def _now(self) -> float:
+        """Run-relative clock (0.0 before ``begin()``)."""
+        return (time.perf_counter() - self._run_t0
+                if self._run_t0 is not None else 0.0)
 
-    def _prefill_tick(self) -> bool:
-        """Advance the in-flight session with the fewest chunks left
-        (shortest-remaining-first; FIFO tiebreak) by one step — one
-        document chunk, or the whole document for a monolithic session;
-        activate it when its document is fully streamed in.  Returns
-        False when no session is in flight."""
-        if not self.admissions:
-            return False
-        slot = min(self.admissions,
-                   key=lambda s: (self.admissions[s].cp.chunks_left,
-                                  self.admissions[s].order))
+    def _free_slot(self) -> Optional[int]:
+        for slot in range(self.n_slots):
+            if slot not in self.active and slot not in self.admissions:
+                return slot
+        return None
+
+    def _free_slot_count(self) -> int:
+        return self.n_slots - len(self.active) - len(self.admissions)
+
+    def _pending_view(self, req: Request) -> policy_lib.PendingView:
+        return policy_lib.PendingView(
+            rid=req.rid, doc_len=_doc_seq_len(req.doc),
+            lq=int(req.query.shape[-1]),
+            max_new_tokens=req.max_new_tokens,
+            order=self._seq[req.rid], arrival_s=req.arrival_s,
+            ttft_slo_s=req.ttft_slo_s, tpot_slo_s=req.tpot_slo_s)
+
+    def _admission_view(self, adm: _Admission,
+                        slot: int) -> policy_lib.AdmissionView:
+        return policy_lib.AdmissionView(
+            rid=adm.req.rid, slot=slot, chunks_left=adm.cp.chunks_left,
+            doc_len=_doc_seq_len(adm.req.doc), order=adm.order,
+            chunk_size=adm.chunk_size, preemptions=adm.preemptions,
+            preemptible=adm.preemptible, arrival_s=adm.req.arrival_s,
+            ttft_slo_s=adm.req.ttft_slo_s, tpot_slo_s=adm.req.tpot_slo_s)
+
+    def _snapshot(self, stage: str) -> policy_lib.QueueSnapshot:
+        return policy_lib.QueueSnapshot(
+            stage=stage, now_s=self._now(),
+            free_slots=self._free_slot_count(),
+            pending=tuple(self._pending_view(r) for r in self.pending),
+            admissions=tuple(self._admission_view(a, s)
+                             for s, a in self.admissions.items()),
+            parked=tuple(self._admission_view(a, -1)
+                         for a in self._parked.values()),
+            active=tuple(policy_lib.ActiveView(
+                rid=i.req.rid, slot=s, remaining=i.remaining,
+                last_token_s=i.token_times[-1],
+                tpot_slo_s=i.req.tpot_slo_s)
+                for s, i in self.active.items()),
+            default_chunk=self.prefill_chunk,
+            decode_chunk=self.decode_chunk,
+            interleave=self._interleave,
+            bucket_ladder=self._ladder)
+
+    # ------------------------------------------------- admission sessions
+    def _preempt(self, rid: str) -> None:
+        """Park one in-flight admission at a chunk boundary: its slot is
+        released, its page reservation and session caches are kept (the
+        preemption contract — resumption never re-reserves, so a parked
+        request can never deadlock against the pool)."""
+        slot = next((s for s, a in self.admissions.items()
+                     if a.req.rid == rid), None)
+        if slot is None:
+            return
         adm = self.admissions[slot]
-        if adm.cp.chunks_left:
+        if not adm.preemptible:
+            return                    # batched groups never park
+        self.admissions.pop(slot)
+        adm.preemptions += 1
+        self.preemptions += 1
+        self._parked[rid] = adm
+
+    def _apply_admission(self, action: policy_lib.ScheduleAction,
+                         snap: policy_lib.QueueSnapshot) -> None:
+        """Apply one admission-stage decision: preempt, then resume
+        parked admissions (ahead of new admits — starvation-free), then
+        bind pending requests to free slots as prefill sessions,
+        stopping at the first page-pool deferral so the policy's head
+        pick cannot be starved by smaller requests slipping past it."""
+        if action.preempt is not None:
+            self._preempt(action.preempt)
+        for rid in action.resume:
+            adm = self._parked.get(rid)
+            if adm is None:
+                continue
+            slot = self._free_slot()
+            if slot is None:
+                break
+            self._parked.pop(rid)
+            self.admissions[slot] = adm
+        by_rid = {r.rid: r for r in self.pending}
+        queue = [rid for rid in action.admit if rid in by_rid]
+        while queue and self._free_slot() is not None:
+            req = by_rid[queue[0]]
+            self._validate_request(req)     # raises before any state move
+            cs = self.policy.chunk_size(self._pending_view(req), snap)
+            group = self._collect_group(queue, by_rid, cs, snap)
+            if len(group) > 1:
+                ok = self._admit_group([by_rid[r] for r in group], cs)
+            else:
+                ok = self._admit_one(req, cs)
+            if not ok:
+                break          # pool exhausted: wait for retirements
+            queue = [rid for rid in queue if rid not in group]
+
+    def _can_batch(self, req: Request, cs: Optional[int]) -> bool:
+        """May this request join a batch-concat prefill group?  Token
+        docs on the plain chunked path only: mamba carries state through
+        padding rows unmasked, augmented sessions fuse the whole layout,
+        prefix sharing is row-exact, and embeds have no shared pad
+        token."""
+        if self.prefill_batch_max <= 1 or cs is None or self._prefix:
+            return False
+        if self.engine.cfg.has_mamba or not _doc_is_tokens(req.doc):
+            return False
+        if self.engine._aug_layout and not self.engine._plain_request(
+                _doc_batched(req.doc),
+                req.query if req.query.ndim == 2 else req.query[None]):
+            return False
+        return True
+
+    def _collect_group(self, queue: List[str], by_rid: Dict[str, Request],
+                       cs: Optional[int],
+                       snap: policy_lib.QueueSnapshot) -> List[str]:
+        """Scan the admit order for requests batchable with its head:
+        same query length, same pow2 doc bucket, same policy chunk size.
+        Group sizes snap *down* to a power of two (capped by free slots
+        and ``prefill_batch_max``) so warmed shapes stay O(log);
+        leftovers stay at the front of the queue for the next pick."""
+        head = by_rid[queue[0]]
+        if not self._can_batch(head, cs):
+            return [queue[0]]
+        key = (int(head.query.shape[-1]),
+               cache_lib.pow2_bucket(_doc_seq_len(head.doc)))
+        limit = min(self.prefill_batch_max, self._free_slot_count())
+        members = [queue[0]]
+        for rid in queue[1:]:
+            if len(members) >= limit:
+                break
+            r = by_rid[rid]
+            if not self._can_batch(r, cs):
+                continue
+            if (int(r.query.shape[-1]),
+                    cache_lib.pow2_bucket(_doc_seq_len(r.doc))) != key:
+                continue
+            if self.policy.chunk_size(self._pending_view(r), snap) != cs:
+                continue
+            members.append(rid)
+        k = 1
+        while k * 2 <= len(members):
+            k *= 2
+        return members[:k] if k >= 2 else [queue[0]]
+
+    def _bucketed_cap(self, req: Request,
+                      cs: Optional[int]) -> Optional[int]:
+        """Session doc capacity for one singleton admission.  Dense
+        engines keep the shared slot capacity (the session returns
+        already-padded caches); paged chunked *plain* sessions round up
+        to a pow2 bucket so the jitted chunk step compiles O(log) cache
+        shapes instead of one per document length.  Prefix mode keeps
+        exact capacities (warm-page accounting is row-exact), as do
+        augmented sessions (their geometry is the layout's)."""
+        if not self._paged:
+            return self.doc_capacity
+        if cs is None or self._prefix:
+            return None
+        doc_b = _doc_batched(req.doc)
+        query_b = req.query if req.query.ndim == 2 else req.query[None]
+        if self.engine._aug_layout and not self.engine._plain_request(
+                doc_b, query_b):
+            return None
+        return cache_lib.pow2_bucket(_doc_seq_len(req.doc))
+
+    def _admit_one(self, req: Request, cs: Optional[int]) -> bool:
+        """Bind one pending request to a free slot as a singleton prefill
+        session.  On a paged engine the pool pages are reserved here —
+        before any prefill compute is spent.  Returns False on a pool
+        deferral (the request stays pending)."""
+        slot = self._free_slot()
+        pages = None
+        prefix_rec = None
+        hints = None
+        if self._paged:
+            if self._prefix:
+                pages, prefix_rec, hints = self._reserve_prefix(req, cs)
+            else:
+                pages = self._reserve_pages(req)
+            if pages is None:
+                return False
+        self.pending.remove(req)
+        try:
+            cp = self.engine.start_prefill(
+                _doc_batched(req.doc),
+                req.query if req.query.ndim == 2 else req.query[None],
+                chunk_size=cs,
+                doc_capacity=self._bucketed_cap(req, cs),
+                prefix=hints)
+        except Exception:
+            if pages is not None:
+                self._allocator.release(pages)
+            raise
+        self.prefill_chunks_skipped += getattr(cp, "chunks_skipped", 0)
+        self.admissions[slot] = _Admission(
+            req, cp, self._seq[req.rid], pages=pages, prefix=prefix_rec,
+            chunk_size=cs)
+        return True
+
+    def _admit_group(self, reqs: List[Request],
+                     cs: Optional[int]) -> bool:
+        """Bind a batchable group to free slots behind one shared
+        :class:`~repro.serving.engine.BatchedPrefill` session.  Page
+        reservations are per member and all-or-nothing: a partial grant
+        releases what it took and defers the whole group."""
+        grants: List[Optional[PageGrant]] = []
+        if self._paged:
+            for r in reqs:
+                g = self._reserve_pages(r)
+                if g is None:
+                    for got in grants:
+                        self._allocator.release(got)
+                    return False
+                grants.append(g)
+        else:
+            grants = [None] * len(reqs)
+        for r in reqs:
+            self.pending.remove(r)
+        docs = [_doc_batched(r.doc) for r in reqs]
+        queries = [r.query if r.query.ndim == 2 else r.query[None]
+                   for r in reqs]
+        try:
+            cp = self.engine.start_batched_prefill(docs, queries, cs)
+        except Exception:
+            for g in grants:
+                if g is not None:
+                    self._allocator.release(g)
+            raise
+        group: List[_Admission] = []
+        for i, r in enumerate(reqs):
+            adm = _Admission(r, cp, self._seq[r.rid], pages=grants[i],
+                             chunk_size=cs, row=i, group=group)
+            group.append(adm)
+            self.admissions[self._free_slot()] = adm
+        return True
+
+    def _drop_admission(self, adm: _Admission) -> None:
+        """A failed session never retires through ``_finish`` — give its
+        (whole group's) pages back so the pool is not leaked."""
+        members = adm.group if adm.group is not None else [adm]
+        for m in members:
+            for s, a in list(self.admissions.items()):
+                if a is m:
+                    self.admissions.pop(s)
+            if m.pages is not None:
+                self._allocator.release(m.pages)
+
+    def _prefill_step(self, rid: str) -> bool:
+        """Advance the named in-flight session by one step — one
+        document chunk, or the whole document for a monolithic session —
+        and activate it when its document is fully streamed in.  Chunk
+        wall time feeds the policy's cost model.  Returns False when the
+        rid names no in-flight admission (stale policy pick)."""
+        slot = next((s for s, a in self.admissions.items()
+                     if a.req.rid == rid), None)
+        if slot is None:
+            return False
+        adm = self.admissions[slot]
+        cp = adm.cp
+        if cp.chunks_left:
+            t = getattr(cp, "next_chunk_len", 0)
+            t0 = time.perf_counter()
             try:
-                adm.cp.step()
+                cp.step()
             except Exception:
-                # a failed session never retires through _finish — give
-                # its pages back so the pool is not leaked
-                self.admissions.pop(slot)
-                if adm.pages is not None:
-                    self._allocator.release(adm.pages)
+                self._drop_admission(adm)
                 raise
+            if t:
+                self.policy.observe_prefill(t, time.perf_counter() - t0)
             self.prefill_chunks_done += 1
-        if not adm.cp.chunks_left:
-            self._activate(slot)
+        if not cp.chunks_left:
+            if adm.group is not None:
+                self._activate_group(adm.group)
+            else:
+                self._activate(slot)
         return True
 
     def _activate(self, slot: int) -> None:
         """Query pass + slot installation for a fully-prefilled
-        session."""
+        singleton session."""
         adm = self.admissions.pop(slot)
         req, cp = adm.req, adm.cp
         logits0, caches, q_tails = cp.finish()
         doc_len = cp.n if cache_lib.has_attn_cache(caches) else 0
-        # paged: a streaming session's exact-length mini-pool pages (or
-        # a monolithic session's dense rows) copy into the shared pool
+        # paged: a streaming session's mini-pool pages (or a monolithic
+        # session's dense rows) copy into the shared pool
         # (write_doc_pages); dense: the session returned the doc caches
         # at doc_capacity already — only the tail buffers remain
         tails, tail_len = cache_lib.make_tail_buffers(
@@ -842,7 +1168,34 @@ class Scheduler:
         self._install(req, slot, logits0, caches, tails,
                       int(tail_len[0]), doc_len, cp.prefill_time_s,
                       pages=adm.pages, waves=cp.waves_done,
-                      prefix=adm.prefix)
+                      prefix=adm.prefix, preemptions=adm.preemptions,
+                      bucket=int(getattr(cp, "cap", 0) or 0))
+
+    def _activate_group(self, group: List[_Admission]) -> None:
+        """Activate every member of a batched group: one shared query
+        pass, then each row sliced back out, clipped to its real length
+        (bucket-pad rows are masked garbage — the paged grant holds
+        exactly ``pages_for(doc_len)`` pages, and the group bucket may
+        exceed the dense slot capacity) and installed as if it had run
+        alone (dense members pad back up to the shared slot capacity)."""
+        cp = group[0].cp
+        logits0, caches, q_tails = cp.finish()
+        for adm in group:
+            slot = next(s for s, a in self.admissions.items() if a is adm)
+            self.admissions.pop(slot)
+            lg, row_caches, row_tails = cp.row(
+                adm.row, logits0, caches, q_tails, clip_rows=True)
+            n_i = cp.doc_lens[adm.row]
+            if not self._paged:
+                row_caches = cache_lib.pad_doc_caches(
+                    row_caches, self.doc_capacity)
+            doc_len = n_i if cache_lib.has_attn_cache(row_caches) else 0
+            tails, tail_len = cache_lib.make_tail_buffers(
+                row_tails, self.tail_capacity)
+            self._install(adm.req, slot, lg, row_caches, tails,
+                          int(tail_len[0]), doc_len, cp.prefill_time_s,
+                          pages=adm.pages, waves=cp.waves_done,
+                          bucket=int(cp.cap))
 
     # ------------------------------------------------------------------
     def _finish(self, slot: int) -> None:
@@ -852,8 +1205,11 @@ class Scheduler:
             # release-on-completion: stop token, budget exhaustion and
             # degenerate 1-token admissions all come through here
             self._allocator.release(pages)
-        self.results[info.req.rid] = RequestResult(
-            rid=info.req.rid,
+        req = info.req
+        gaps = np.diff(np.asarray(info.token_times, np.float64))
+        tpot99 = float(np.percentile(gaps, 99)) if gaps.size else 0.0
+        self.results[req.rid] = RequestResult(
+            rid=req.rid,
             tokens=np.asarray(info.tokens, np.int32),
             stopped=info.stopped,
             prefill_time_s=info.prefill_s,
@@ -861,7 +1217,15 @@ class Scheduler:
             finished_at_chunk=self.chunks_run,
             ttft_s=info.ttft_s,
             admitted_after_prefill_chunks=info.prefill_chunks_before,
-            prefill_waves=info.prefill_waves)
+            prefill_waves=info.prefill_waves,
+            deadline_s=(req.arrival_s + req.ttft_slo_s
+                        if req.ttft_slo_s is not None else None),
+            ttft_slo_met=(None if req.ttft_slo_s is None
+                          else bool(info.ttft_s <= req.ttft_slo_s)),
+            tpot_slo_s=req.tpot_slo_s,
+            tpot_p99_s=tpot99,
+            preemptions=info.preemptions,
+            prefill_bucket=info.prefill_bucket)
 
     def _decode_chunk(self) -> None:
         # don't run wasted pad steps past the longest remaining budget —
@@ -872,9 +1236,12 @@ class Scheduler:
         # extra compiles exact-length chunks would cost.
         need = max(1, max(i.remaining for i in self.active.values()))
         steps = min(self.decode_chunk, cache_lib.pow2_bucket(need))
+        t0 = time.perf_counter()
         out, self.state = self.engine.decode_chunk(
             self.state, steps, sampling=self.sampling)
         out_np = np.asarray(out)                 # one host sync per chunk
+        self.policy.observe_decode(steps, time.perf_counter() - t0)
+        now = self._now()
         self.chunks_run += 1
         for slot in list(self.active):
             info = self.active[slot]
@@ -882,6 +1249,7 @@ class Scheduler:
                 if info.remaining <= 0:
                     break
                 info.tokens.append(int(tok))
+                info.token_times.append(now)
                 if (info.req.stop_token is not None
                         and int(tok) == info.req.stop_token):
                     info.stopped = True
@@ -889,39 +1257,117 @@ class Scheduler:
             if info.remaining <= 0:
                 self._finish(slot)
 
+    # ------------------------------------------------- bucket warmup
+    def warm(self, doc_lens=None, lqs=None) -> None:
+        """AOT-warm the per-bucket jitted chunk steps before serving
+        (``Engine.warm_prefill_buckets``).  Defaults derive from the
+        currently pending requests; trace-replay drivers that submit
+        over time pass the trace's lengths explicitly.  No-op for
+        monolithic serving."""
+        self._warm_buckets(doc_lens, lqs)
+        self._warmed = True
+
+    def _warm_buckets(self, doc_lens=None, lqs=None) -> None:
+        if self.prefill_chunk is None:
+            return
+        reqs = list(self.pending)
+        if doc_lens is None:
+            doc_lens = [_doc_seq_len(r.doc) for r in reqs]
+        if lqs is None:
+            lqs = [int(r.query.shape[-1]) for r in reqs]
+        if not doc_lens or not lqs:
+            return
+        eng = self.engine
+        if self._paged and not self._prefix:
+            caps = sorted({cache_lib.pow2_bucket(int(n))
+                           for n in doc_lens})
+        else:
+            if self.doc_capacity is None:
+                if self.pending:
+                    self._resolve_capacities()
+                else:
+                    raise ValueError(
+                        "warm() before any submissions needs an explicit "
+                        "config.doc_capacity (dense sessions compile at "
+                        "the shared slot capacity)")
+            caps = [self.doc_capacity]
+        eng.warm_prefill_buckets(self.prefill_chunk, caps, lqs, (1,))
+        if self.prefill_batch_max > 1 and not eng.cfg.has_mamba:
+            buckets = sorted({cache_lib.pow2_bucket(int(n))
+                              for n in doc_lens})
+            ks, k = [], 2
+            while k <= self.prefill_batch_max:
+                ks.append(k)
+                k *= 2
+            eng.warm_prefill_buckets(self.prefill_chunk, buckets, lqs,
+                                     ks)
+
     # ------------------------------------------------------------------
-    def run(self) -> Dict[str, RequestResult]:
-        """Drive all submitted requests to completion; returns
-        rid -> RequestResult."""
-        if not self.pending and not self.active and not self.admissions:
-            return self.results
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending or self.admissions or self._parked
+                    or self.active)
+
+    def begin(self) -> None:
+        """Start (or restart) the run clock and resolve capacities;
+        AOT-warms the bucketed chunk steps once when
+        ``config.aot_warmup`` is set.  ``run()`` calls this; trace-replay
+        drivers call it directly and then ``step()`` as arrivals land."""
         # per-cycle TTFT origin: a request admitted in a later run()
         # cycle is measured from that cycle's start, not the first one's
         self._run_t0 = time.perf_counter()
         if self.pending:
             self._resolve_capacities()
+        if self.config.aot_warmup and not self._warmed:
+            self._warm_buckets()
+            self._warmed = True
+
+    def step(self) -> None:
+        """One scheduler tick: consult the policy for admissions (apply
+        preempt → resume → admit), then for prefill progress and the
+        decode interleave.  A tick with live slots always makes progress
+        — if the policy declines both stages, one decode chunk is
+        forced so the loop can never spin."""
+        if self.pending and (self.doc_capacity is None
+                             or self.tail_capacity is None
+                             or (self._paged and self._allocator is None)):
+            # late submissions (trace replay): resolve lazily from what
+            # has arrived; explicit config capacities always win
+            self._resolve_capacities()
+        snap = self._snapshot("admission")
+        self._apply_admission(self.policy.decide(snap), snap)
+        snap = self._snapshot("prefill")
+        act = self.policy.decide(snap)
+        progressed = False
+        if act.prefill is not None and self._prefill_step(act.prefill):
+            progressed = True
+        for _ in range(act.decode_chunks):
+            if not self.active:
+                break
+            self._decode_chunk()
+            progressed = True
+        if not progressed and self.active:
+            self._decode_chunk()
+            progressed = True
+        if not progressed and (self.pending or self._parked):
+            # unreachable by construction: with nothing active or in
+            # flight every page is free, so the head either admits or
+            # fails validation — guard against a silent spin if that
+            # invariant ever breaks
+            raise RuntimeError(
+                "scheduler stalled: pending requests but nothing "
+                "active or admissible")
+
+    def run(self) -> Dict[str, RequestResult]:
+        """Drive all submitted requests to completion; returns
+        rid -> RequestResult."""
+        if not self.has_work:
+            return self.results
+        self.begin()
         # one loop for every admission shape: monolithic sessions take a
         # single tick with no decode interleave (self._interleave == 0),
         # which reproduces the historical admit-then-decode ordering;
         # streaming sessions interleave bounded decode progress per tick
-        while self.pending or self.admissions or self.active:
-            self._start_admissions()
-            prefilling = self._prefill_tick()
-            if prefilling:
-                # interleave: bounded decode progress per prefill chunk
-                for _ in range(self._interleave):
-                    if not self.active:
-                        break
-                    self._decode_chunk()
-            elif self.active:
-                # nothing streaming in (or all slots busy): pure decode
-                self._decode_chunk()
-            elif self.pending:
-                # unreachable by construction: with nothing active or
-                # in flight every page is free, so the head either
-                # admits or fails validation — guard against a silent
-                # spin if that invariant ever breaks
-                raise RuntimeError(
-                    "scheduler stalled: pending requests but nothing "
-                    "active or admissible")
+        while self.has_work:
+            self.step()
         return self.results

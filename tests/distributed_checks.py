@@ -309,6 +309,7 @@ def main():
 
     # ------------- 10: mesh-sharded paged cache == dense mesh == single
     from repro.serving.scheduler import Request, Scheduler
+    from repro.serving.config import ServeConfig
     cfg10 = cfg4                     # granite reduced, params from check 4
     eng_single = Engine(cfg10, params, RunCtx(strategy="full"))
     ref10 = eng_single.generate(doc, qry, max_new_tokens=6).tokens
@@ -318,8 +319,8 @@ def main():
     check("mesh dense greedy == single-host",
           bool(np.array_equal(out_md, ref10)))
     for impl in ("kernel", "gather"):
-        engp = Engine(cfg10, params, rctx10, cache_layout="paged",
-                      page_size=16, paged_impl=impl)
+        engp = Engine(cfg10, params, rctx10, config=ServeConfig(
+            cache_layout="paged", page_size=16, paged_impl=impl))
         outp = engp.generate(doc, qry, max_new_tokens=6).tokens
         check(f"mesh paged[{impl}] greedy == single-host oracle",
               bool(np.array_equal(outp, ref10)))
@@ -338,9 +339,10 @@ def main():
     ref_a = eng_single.generate(d1, q1, max_new_tokens=8).tokens[0]
     ref_b = eng_single.generate(d2, q2, max_new_tokens=4).tokens[0]
     for pc in (None, 16):
-        engp = Engine(cfg10, params, rctx10, cache_layout="paged",
-                      page_size=16)
-        sch = Scheduler(engp, n_slots=2, decode_chunk=3, prefill_chunk=pc)
+        engp = Engine(cfg10, params, rctx10, config=ServeConfig(
+            cache_layout="paged", page_size=16))
+        sch = Scheduler(engp, config=ServeConfig(
+            n_slots=2, decode_chunk=3, prefill_chunk=pc))
         sch.submit(Request("a", d1, q1, max_new_tokens=8))
         sch.submit(Request("b", d2, q2, max_new_tokens=4))
         res = sch.run()
@@ -375,8 +377,10 @@ def main():
     eng_apb_d = Engine(cfg7, p7, r7)
     ref_apb = eng_apb_d.generate(doc7[0:1], qry[0:1],
                                  max_new_tokens=6).tokens[0]
-    eng_apb_p = Engine(cfg7, p7, r7, cache_layout="paged", page_size=32)
-    schp = Scheduler(eng_apb_p, n_slots=2, decode_chunk=3)
+    eng_apb_p = Engine(cfg7, p7, r7, config=ServeConfig(
+        cache_layout="paged", page_size=32))
+    schp = Scheduler(eng_apb_p, config=ServeConfig(n_slots=2,
+                                                    decode_chunk=3))
     schp.submit(Request("apb", doc7[0:1], qry[0:1], max_new_tokens=6))
     resp = schp.run()
     check("apb mesh engine admits paged requests == dense mesh apb",
@@ -425,8 +429,8 @@ def main():
     # plain traffic rides the same session loop
     ref_short = Engine(cfg7, p7, RunCtx(strategy="full")).generate(
         d2, q2, max_new_tokens=4).tokens[0]
-    sch11 = Scheduler(eng_apb_d, n_slots=2, decode_chunk=3,
-                      prefill_chunk=64)
+    sch11 = Scheduler(eng_apb_d, config=ServeConfig(
+        n_slots=2, decode_chunk=3, prefill_chunk=64))
     sch11.submit(Request("apb", doc7[0:1], qry[0:1], max_new_tokens=6))
     sch11.submit(Request("short", d2, q2, max_new_tokens=4))
     res11 = sch11.run()

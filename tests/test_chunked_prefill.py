@@ -25,6 +25,7 @@ from repro.models import model as model_lib
 from repro.models.transformer import RunCtx
 from repro.serving import cache as cache_lib
 from repro.serving.engine import Engine
+from repro.serving.config import ServeConfig
 from repro.serving.scheduler import Request, Scheduler
 
 
@@ -163,7 +164,7 @@ def test_chunked_prefill_gate_exclusions(key):
     with pytest.raises(ValueError):
         eng_rand.prefill_chunked(doc, query, 16)
     with pytest.raises(ValueError):
-        Scheduler(eng_rand, prefill_chunk=16)
+        Scheduler(eng_rand, config=ServeConfig(prefill_chunk=16))
     # augmented mamba needs the mesh seq axis — no host-loop oracle to
     # chunk against
     cfg_m = get_config("jamba-1.5-large-398b").reduced()
@@ -187,7 +188,7 @@ def test_aug_chunked_matches_monolithic(arch, window, cache_layout, key):
     augmented prefill's greedy tokens — dense and paged doc caches, a
     dense arch and a sliding-window one (gemma2 windows shrunk below the
     block length so the windowed chunk masking actually fires)."""
-    kw = ({"cache_layout": "paged", "page_size": 8}
+    kw = ({"config": ServeConfig(cache_layout="paged", page_size=8)}
           if cache_layout == "paged" else {})
     cfg, eng = _mk_aug_engine(key, arch, 64, 8, 4, window=window, **kw)
     assert eng.supports_chunked_prefill
@@ -261,7 +262,8 @@ def test_scheduler_chunked_augmented_and_plain_mix(key):
     d_short, q_short = _mk_req(cfg, 16, 4, 6)
     ref_long = eng.generate(d_long, q_long, max_new_tokens=8).tokens[0]
     ref_short = eng.generate(d_short, q_short, max_new_tokens=4).tokens[0]
-    sch = Scheduler(eng, n_slots=2, decode_chunk=3, prefill_chunk=8)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=2, decode_chunk=3,
+                                            prefill_chunk=8))
     sch.submit(Request("long", d_long, q_long, max_new_tokens=8))
     sch.submit(Request("short", d_short, q_short, max_new_tokens=4))
     res = sch.run()
@@ -321,7 +323,8 @@ def test_scheduler_chunked_matches_single_requests(key):
     ref2 = eng.generate(d2, q2, max_new_tokens=4).tokens[0]
     ref3 = eng.generate(d3, q3, max_new_tokens=9).tokens[0]
 
-    sch = Scheduler(eng, n_slots=2, decode_chunk=3, prefill_chunk=16)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=2, decode_chunk=3,
+                                            prefill_chunk=16))
     sch.submit(Request("long", d1, q1, max_new_tokens=10))
     sch.submit(Request("short", d2, q2, max_new_tokens=4))
     sch.submit(Request("r3", d3, q3, max_new_tokens=9))
@@ -338,7 +341,8 @@ def test_scheduler_chunked_ssm_and_hybrid(arch, key):
     cfg, eng = _mk_engine(key, arch)
     doc, query = _mk_req(cfg, 37, 8, 5)      # 32+4+1: exercises t < w-1
     ref = eng.generate(doc, query, max_new_tokens=6).tokens[0]
-    sch = Scheduler(eng, n_slots=2, decode_chunk=4, prefill_chunk=32)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=2, decode_chunk=4,
+                                            prefill_chunk=32))
     sch.submit(Request("solo", doc, query, max_new_tokens=6))
     res = sch.run()
     np.testing.assert_array_equal(res["solo"].tokens, np.asarray(ref))
@@ -354,7 +358,8 @@ def test_short_request_not_blocked_behind_long_admission(key):
     d_long, q_long = _mk_req(cfg, 128, 8, 1)     # 8 chunks of 16
     d_short, q_short = _mk_req(cfg, 16, 4, 2)    # 1 chunk
 
-    sch = Scheduler(eng, n_slots=2, decode_chunk=4, prefill_chunk=16)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=2, decode_chunk=4,
+                                            prefill_chunk=16))
     sch.submit(Request("long", d_long, q_long, max_new_tokens=8))
     sch.submit(Request("short", d_short, q_short, max_new_tokens=4))
     res = sch.run()
@@ -374,8 +379,9 @@ def test_decode_interleaves_with_prefill(key):
     cfg, eng = _mk_engine(key)
     d1, q1 = _mk_req(cfg, 16, 4, 1)
     d2, q2 = _mk_req(cfg, 128, 8, 2)
-    sch = Scheduler(eng, n_slots=2, decode_chunk=2, prefill_chunk=16,
-                    decode_per_prefill=1)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=2, decode_chunk=2,
+                                            prefill_chunk=16,
+                                            decode_per_prefill=1))
     sch.submit(Request("first", d1, q1, max_new_tokens=6))
     sch.submit(Request("long", d2, q2, max_new_tokens=4))
     res = sch.run()
@@ -393,7 +399,8 @@ def test_scheduler_chunked_sampling_reproducible(key):
     sp = SamplingParams(temperature=0.8, top_k=50)
 
     def run_once():
-        sch = Scheduler(eng, n_slots=2, decode_chunk=3, prefill_chunk=16,
+        sch = Scheduler(eng, config=ServeConfig(n_slots=2, decode_chunk=3,
+                                                prefill_chunk=16),
                         sampling=sp, rng=jax.random.PRNGKey(11))
         sch.submit(Request("a", doc, query, max_new_tokens=8))
         return sch.run()["a"].tokens
@@ -412,8 +419,9 @@ def test_tail_overflow_rejected_at_admission(key, prefill_chunk):
     clips and would otherwise silently overwrite the last tail rows."""
     cfg, eng = _mk_engine(key)
     doc, query = _mk_req(cfg, 24, 4, 3)
-    sch = Scheduler(eng, n_slots=1, decode_chunk=2, tail_capacity=6,
-                    prefill_chunk=prefill_chunk)
+    sch = Scheduler(eng, config=ServeConfig(
+        n_slots=1, decode_chunk=2, tail_capacity=6,
+        prefill_chunk=prefill_chunk))
     sch.submit(Request("big", doc, query, max_new_tokens=8))
     with pytest.raises(ValueError, match="tail"):
         sch.run()

@@ -23,6 +23,7 @@ from repro.serving import cache as cache_lib
 from repro.serving.cache import (PageAllocator, ShardedPageAllocator,
                                  pages_for, shard_pages_for)
 from repro.serving.engine import Engine
+from repro.serving.config import ServeConfig
 from repro.serving.scheduler import Request, Scheduler
 
 ARCHS = ["granite-3-2b", "jamba-1.5-large-398b", "llama3-8b"]
@@ -40,7 +41,8 @@ def _mk_engines(key, arch, paged_impl="kernel", **kw):
     params = model.init(key)
     dense = Engine(cfg, params, RunCtx(strategy="full"))
     paged = Engine(cfg, params, RunCtx(strategy="full"),
-                   cache_layout="paged", paged_impl=paged_impl, **kw)
+                   config=ServeConfig(cache_layout="paged",
+                                      paged_impl=paged_impl, **kw))
     return cfg, dense, paged
 
 
@@ -106,22 +108,24 @@ def test_paged_cache_layout_validation(key):
     model = model_lib.build(cfg)
     params = model.init(key)
     with pytest.raises(ValueError, match="cache_layout"):
-        Engine(cfg, params, RunCtx(strategy="full"), cache_layout="sparse")
+        ServeConfig(cache_layout="sparse")
     with pytest.raises(ValueError, match="page_size"):
-        Engine(cfg, params, RunCtx(strategy="full"), cache_layout="paged",
-               page_size=0)
+        ServeConfig(cache_layout="paged", page_size=0)
     with pytest.raises(ValueError, match="need a mesh"):
         # cache axes without a mesh: nothing to shard_map the pool over
         Engine(cfg, params, RunCtx(strategy="full", cache_axes=("model",)),
-               cache_layout="paged")
+               config=ServeConfig(cache_layout="paged"))
     with pytest.raises(ValueError, match="paged_impl"):
-        Engine(cfg, params, RunCtx(strategy="full"), cache_layout="paged",
-               paged_impl="dense-view")
+        ServeConfig(cache_layout="paged", paged_impl="dense-view")
+    # graduated PR-6 shim: the old keyword spelling is a hard TypeError
+    # naming the replacement field
+    with pytest.raises(TypeError, match="cache_layout"):
+        Engine(cfg, params, RunCtx(strategy="full"), cache_layout="paged")
     whisper = get_config("whisper-tiny").reduced()
     wparams = model_lib.build(whisper).init(key)
     with pytest.raises(ValueError, match="decoder-only"):
         Engine(whisper, wparams, RunCtx(strategy="full"),
-               cache_layout="paged")
+               config=ServeConfig(cache_layout="paged"))
 
 
 # ---------------------------------------------------------------------------
@@ -285,8 +289,8 @@ def test_paged_scheduler_matches_single_requests(key, prefill_chunk):
     d2, q2 = _mk_req(cfg, 24, 4, 2)
     ref1 = dense.generate(d1, q1, max_new_tokens=10).tokens[0]
     ref2 = dense.generate(d2, q2, max_new_tokens=4).tokens[0]
-    sch = Scheduler(paged, n_slots=2, decode_chunk=3,
-                    prefill_chunk=prefill_chunk)
+    sch = Scheduler(paged, config=ServeConfig(
+        n_slots=2, decode_chunk=3, prefill_chunk=prefill_chunk))
     sch.submit(Request("long", d1, q1, max_new_tokens=10))
     sch.submit(Request("short", d2, q2, max_new_tokens=4))
     res = sch.run()
@@ -306,8 +310,10 @@ def test_pool_exhaustion_queues_and_recovers(key, prefill_chunk):
     refs = {"a": dense.generate(d1, q1, max_new_tokens=6).tokens[0],
             "b": dense.generate(d2, q2, max_new_tokens=6).tokens[0],
             "c": dense.generate(d3, q3, max_new_tokens=4).tokens[0]}
-    sch = Scheduler(paged, n_slots=3, decode_chunk=2, num_pages=5,
-                    prefill_chunk=prefill_chunk)
+    sch = Scheduler(paged, config=ServeConfig(
+        cache_layout="paged", page_size=16,
+        n_slots=3, decode_chunk=2, num_pages=5,
+        prefill_chunk=prefill_chunk))
     sch.submit(Request("a", d1, q1, max_new_tokens=6))
     sch.submit(Request("b", d2, q2, max_new_tokens=6))
     sch.submit(Request("c", d3, q3, max_new_tokens=4))
@@ -323,8 +329,11 @@ def test_request_larger_than_pool_rejected(key):
     validation (queueing it forever would deadlock the scheduler)."""
     cfg, dense, paged = _mk_engines(key, "granite-3-2b", page_size=16)
     doc, query = _mk_req(cfg, 64, 8, 1)          # needs 4 pages
-    sch = Scheduler(paged, n_slots=2, decode_chunk=2, num_pages=2,
-                    doc_capacity=64)
+    sch = Scheduler(paged, config=ServeConfig(cache_layout="paged",
+                                              page_size=16,
+                                              n_slots=2, decode_chunk=2,
+                                              num_pages=2,
+                                              doc_capacity=64))
     sch.submit(Request("big", doc, query, max_new_tokens=4))
     with pytest.raises(ValueError, match="pool holds 2"):
         sch.run()
@@ -342,7 +351,10 @@ def test_pages_released_on_early_stop(key):
     ref2 = dense.generate(d2, q2, max_new_tokens=4).tokens[0]
     # pool fits exactly one 64-token doc: the second admission *requires*
     # the first one's early release
-    sch = Scheduler(paged, n_slots=2, decode_chunk=4, num_pages=4)
+    sch = Scheduler(paged, config=ServeConfig(cache_layout="paged",
+                                              page_size=16,
+                                              n_slots=2, decode_chunk=4,
+                                              num_pages=4))
     sch.submit(Request("stopper", doc, query, max_new_tokens=8,
                        stop_token=stop))
     sch.submit(Request("next", d2, q2, max_new_tokens=4))
@@ -364,12 +376,12 @@ def test_paged_scheduler_with_apb_prefill(key):
                       passing_frac=cfg.passing_frac)
     dense = Engine(cfg, params, RunCtx(strategy="apb", layout=lay))
     paged = Engine(cfg, params, RunCtx(strategy="apb", layout=lay),
-                   cache_layout="paged", page_size=16)
+                   config=ServeConfig(cache_layout="paged", page_size=16))
     r = np.random.default_rng(1)
     doc = jnp.asarray(r.integers(0, cfg.vocab_size, (1, n)), jnp.int32)
     query = jnp.asarray(r.integers(0, cfg.vocab_size, (1, lq)), jnp.int32)
     ref = dense.generate(doc, query, max_new_tokens=6).tokens[0]
-    sch = Scheduler(paged, n_slots=2, decode_chunk=3)
+    sch = Scheduler(paged, config=ServeConfig(n_slots=2, decode_chunk=3))
     sch.submit(Request("apb", doc, query, max_new_tokens=6))
     res = sch.run()
     np.testing.assert_array_equal(res["apb"].tokens, np.asarray(ref))
@@ -382,7 +394,8 @@ def test_paged_scheduler_hybrid_ssm(key):
                                     page_size=16)
     doc, query = _mk_req(cfg, 32, 8, 5)
     ref = dense.generate(doc, query, max_new_tokens=6).tokens[0]
-    sch = Scheduler(paged, n_slots=3, decode_chunk=4)   # 2 idle slots
+    sch = Scheduler(paged, config=ServeConfig(n_slots=3,
+                                              decode_chunk=4))  # 2 idle
     sch.submit(Request("solo", doc, query, max_new_tokens=6))
     res = sch.run()
     np.testing.assert_array_equal(res["solo"].tokens, np.asarray(ref))

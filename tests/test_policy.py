@@ -1,0 +1,546 @@
+"""Scheduling-policy API: SRPT/deadline decisions, the cost model, the
+degeneration and preemption contracts, bucketed prefill batching, and
+the AOT bucket warmup.
+
+The exactness oracle is ``scheduling_policy="srpt"`` — the pre-policy
+Scheduler behaviour.  The deadline policy must degenerate to it
+bit-for-bit when no request carries an SLO (the ``scheduling_policy``
+seam in ``analysis/static/oracle.py`` points here), and its preemption
+machinery must conserve slots and pool pages.  Property-style invariants
+run as seeded sweeps so they hold in environments without ``hypothesis``
+(the randomized-trace analogues live in ``tests/test_properties.py``
+style files, which importorskip it).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.models.transformer import RunCtx
+from repro.serving import cache as cache_lib
+from repro.serving import metrics as metrics_lib
+from repro.serving.config import ServeConfig
+from repro.serving.engine import Engine
+from repro.serving.policy import (ActiveView, AdmissionView, CostModel,
+                                  DeadlinePolicy, PendingView,
+                                  QueueSnapshot, SchedulingPolicy,
+                                  SrptPolicy, build_policy)
+from repro.serving.scheduler import Request, Scheduler
+
+
+def _mk_engine(key, arch="granite-3-2b", **kw):
+    cfg = get_config(arch).reduced()
+    if cfg.has_moe:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    model = model_lib.build(cfg)
+    params = model.init(key)
+    return cfg, Engine(cfg, params, RunCtx(strategy="full"), **kw)
+
+
+def _mk_req(cfg, n, lq, seed):
+    r = np.random.default_rng(seed)
+    return (jnp.asarray(r.integers(0, cfg.vocab_size, (1, n)), jnp.int32),
+            jnp.asarray(r.integers(0, cfg.vocab_size, (1, lq)), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Schema / factory
+# ---------------------------------------------------------------------------
+
+def test_goodput_keys_in_sync_with_checker():
+    """The stdlib-only mirror in tools/check_bench_results.py must stay
+    identical to the source-of-truth tuple in repro.serving.metrics."""
+    import importlib.util
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "tools",
+                        "check_bench_results.py")
+    spec = importlib.util.spec_from_file_location("cbr", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert tuple(mod.GOODPUT_KEYS) == tuple(metrics_lib.GOODPUT_KEYS)
+
+
+def test_build_policy_dispatch():
+    assert isinstance(build_policy("srpt"), SrptPolicy)
+    assert isinstance(build_policy("deadline"), DeadlinePolicy)
+    assert isinstance(build_policy("srpt"), SchedulingPolicy)
+    assert isinstance(build_policy("deadline"), SchedulingPolicy)
+    with pytest.raises(ValueError, match="scheduling_policy"):
+        build_policy("fifo")
+
+
+def test_serve_config_policy_knobs():
+    cfg = ServeConfig(scheduling_policy="deadline", prefill_chunk=8,
+                      prefill_batch_max=4, aot_warmup=True)
+    assert cfg.prefill_batch_max == 4
+    with pytest.raises(ValueError, match="scheduling_policy"):
+        ServeConfig(scheduling_policy="edf")
+    with pytest.raises(ValueError, match="power of two"):
+        ServeConfig(prefill_chunk=8, prefill_batch_max=3)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeConfig(aot_warmup=True)          # warmup needs chunking
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeConfig(prefill_batch_max=2)      # batching needs chunking
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+def test_cost_model_ewma_and_extrapolation():
+    cm = CostModel(alpha=0.5)
+    assert cm.chunk_seconds(8) == 0.0          # cold: optimistic
+    assert cm.decode_seconds(4) == 0.0
+    cm.observe_prefill(8, 1.0)
+    assert cm.chunk_seconds(8) == pytest.approx(1.0)
+    cm.observe_prefill(8, 3.0)                 # EWMA, not replacement
+    assert cm.chunk_seconds(8) == pytest.approx(2.0)
+    # unmeasured buckets extrapolate linearly in tokens from the
+    # nearest measured bucket
+    assert cm.chunk_seconds(16) == pytest.approx(4.0)
+    assert cm.chunk_seconds(4) == pytest.approx(1.0)
+    cm.observe_decode(4, 0.4)
+    assert cm.decode_seconds(8) == pytest.approx(0.8)
+    # a full-document projection sums the chunk plan
+    assert cm.prefill_seconds(24, 8) == pytest.approx(3 * 2.0)
+
+
+# ---------------------------------------------------------------------------
+# Policy decisions (unit, hand-built snapshots)
+# ---------------------------------------------------------------------------
+
+def _snap(stage="admission", **kw):
+    kw.setdefault("now_s", 0.0)
+    kw.setdefault("free_slots", 1)
+    return QueueSnapshot(stage=stage, **kw)
+
+
+def test_srpt_decisions():
+    pol = SrptPolicy()
+    pend = (PendingView("a", 64, 8, 4, order=0),
+            PendingView("b", 16, 8, 4, order=1))
+    act = pol.decide(_snap(pending=pend))
+    assert act.admit == ("a", "b") and act.preempt is None   # FIFO
+    adms = (AdmissionView("x", 0, chunks_left=3, doc_len=48, order=0),
+            AdmissionView("y", 1, chunks_left=1, doc_len=16, order=1))
+    act = pol.decide(_snap("prefill", admissions=adms, interleave=2))
+    assert act.prefill == "y" and act.decode_chunks == 2   # SRPT
+    act = pol.decide(_snap("prefill",
+                           active=(ActiveView("z", 0, 4, 0.0),)))
+    assert act.prefill is None and act.decode_chunks == 1
+
+
+def test_deadline_edf_admission_and_resume_order():
+    pol = DeadlinePolicy()
+    pend = (PendingView("late", 16, 8, 4, order=0, arrival_s=0.0,
+                        ttft_slo_s=9.0),
+            PendingView("soon", 16, 8, 4, order=1, arrival_s=0.0,
+                        ttft_slo_s=1.0),
+            PendingView("none", 16, 8, 4, order=2))
+    parked = (AdmissionView("p1", -1, 2, 32, order=3, ttft_slo_s=5.0),
+              AdmissionView("p0", -1, 2, 32, order=4, ttft_slo_s=0.5))
+    act = pol.decide(_snap(pending=pend, parked=parked))
+    assert act.admit == ("soon", "late", "none")       # EDF, inf last
+    assert act.resume == ("p0", "p1")
+
+
+def test_deadline_preempts_only_laxer_inflight():
+    pol = DeadlinePolicy()
+    pend = (PendingView("hot", 16, 8, 4, order=5, arrival_s=0.0,
+                        ttft_slo_s=1e-6),)
+    long_adm = AdmissionView("long", 0, chunks_left=7, doc_len=64,
+                             order=0, chunk_size=8)
+    act = pol.decide(_snap(pending=pend, admissions=(long_adm,),
+                           free_slots=0, default_chunk=8))
+    assert act.preempt == "long"                  # laxer (inf deadline)
+    # a free slot means no preemption is needed
+    act = pol.decide(_snap(pending=pend, admissions=(long_adm,),
+                           free_slots=1, default_chunk=8))
+    assert act.preempt is None
+    # no preemptible victim (batched group)
+    grp = dataclasses.replace(long_adm, preemptible=False)
+    act = pol.decide(_snap(pending=pend, admissions=(grp,),
+                           free_slots=0, default_chunk=8))
+    assert act.preempt is None
+    # preemption cap reached: the victim is never parked again
+    capped = dataclasses.replace(long_adm, preemptions=2)
+    act = pol.decide(_snap(pending=pend, admissions=(capped,),
+                           free_slots=0, default_chunk=8))
+    assert act.preempt is None
+    # an earlier-deadline in-flight admission is not a victim
+    tight = dataclasses.replace(long_adm, ttft_slo_s=1e-9)
+    act = pol.decide(_snap(pending=pend, admissions=(tight,),
+                           free_slots=0, default_chunk=8))
+    assert act.preempt is None
+
+
+def test_deadline_chunk_size_shrinks_under_pressure():
+    pol = DeadlinePolicy()
+    for b, s in [(2, 0.01), (4, 0.02), (8, 0.04)]:
+        pol.cost.observe_prefill(b, s)
+    req = PendingView("big", 64, 8, 4, order=0)
+    ladder = (2, 4, 8)
+    # no SLOs anywhere: always the config default (degeneration)
+    snap = _snap(default_chunk=8, bucket_ladder=ladder)
+    assert pol.chunk_size(req, snap) == 8
+    # a co-scheduled active request with a tight TPOT budget tolerates
+    # only the smallest chunk stall
+    act = (ActiveView("t", 0, 4, last_token_s=0.0, tpot_slo_s=0.012),)
+    snap = _snap(default_chunk=8, bucket_ladder=ladder, active=act)
+    assert pol.chunk_size(req, snap) == 2
+    # a laxer budget admits a bigger chunk
+    act = (ActiveView("t", 0, 4, last_token_s=0.0, tpot_slo_s=0.025),)
+    snap = _snap(default_chunk=8, bucket_ladder=ladder, active=act)
+    assert pol.chunk_size(req, snap) == 4
+
+
+def test_deadline_interleave_reacts_to_tpot_risk():
+    pol = DeadlinePolicy()
+    pol.cost.observe_decode(4, 0.4)              # 0.1 s / step
+    adm = (AdmissionView("a", 0, chunks_left=2, doc_len=16, order=0,
+                         chunk_size=8),)
+    # an active request one decode-chunk away from missing its TPOT SLO
+    act = (ActiveView("t", 1, 4, last_token_s=0.0, tpot_slo_s=0.2),)
+    snap = _snap("prefill", admissions=adm, active=act, interleave=1,
+                 decode_chunk=4, now_s=0.0)
+    assert pol.decide(snap).decode_chunks == 2   # boosted
+    # no SLOs: the static interleave, untouched
+    act0 = (ActiveView("t", 1, 4, last_token_s=0.0),)
+    snap = _snap("prefill", admissions=adm, active=act0, interleave=1)
+    assert pol.decide(snap).decode_chunks == 1
+
+
+# ---------------------------------------------------------------------------
+# Degeneration contract (seeded property sweep)
+# ---------------------------------------------------------------------------
+
+def test_deadline_no_slo_decisions_match_srpt():
+    """Property: on ANY snapshot with no SLOs set, the deadline policy's
+    decision equals SRPT's — both stages, including chunk_size."""
+    rng = np.random.default_rng(0)
+    srpt, ddl = SrptPolicy(), DeadlinePolicy()
+    # a warmed cost model must not change the degenerate decisions
+    ddl.cost.observe_prefill(8, 0.02)
+    ddl.cost.observe_decode(4, 0.01)
+    for trial in range(200):
+        n_p, n_a, n_k, n_x = rng.integers(0, 4, size=4)
+        pend = tuple(
+            PendingView(f"p{i}", int(rng.integers(1, 100)), 8,
+                        int(rng.integers(1, 16)), order=i)
+            for i in range(n_p))
+        adms = tuple(
+            AdmissionView(f"a{i}", i, int(rng.integers(1, 9)),
+                          int(rng.integers(1, 100)), order=10 + i,
+                          chunk_size=8)
+            for i in range(n_a))
+        parked = tuple(
+            AdmissionView(f"k{i}", -1, int(rng.integers(1, 9)),
+                          int(rng.integers(1, 100)), order=20 + i)
+            for i in range(n_k))
+        act = tuple(
+            ActiveView(f"x{i}", 8 + i, int(rng.integers(1, 8)),
+                       float(rng.random()))
+            for i in range(n_x))
+        for stage in ("admission", "prefill"):
+            snap = _snap(stage, pending=pend, admissions=adms,
+                         parked=parked, active=act,
+                         free_slots=int(rng.integers(0, 3)),
+                         default_chunk=8, interleave=1,
+                         bucket_ladder=(2, 4, 8),
+                         now_s=float(rng.random()))
+            assert ddl.decide(snap) == srpt.decide(snap), (trial, stage)
+            for p in pend:
+                assert ddl.chunk_size(p, snap) == srpt.chunk_size(p, snap)
+
+
+# ---------------------------------------------------------------------------
+# Bucket ladder / chunk-plan coverage (seeded property sweep)
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder_is_pow2_and_bounded():
+    assert cache_lib.bucket_ladder(16) == (2, 4, 8, 16)
+    assert cache_lib.bucket_ladder(16, 4) == (4, 8, 16)
+    for cs in (1, 2, 8, 64):
+        ladder = cache_lib.bucket_ladder(cs)
+        assert ladder and ladder[-1] == cs
+        assert all(b & (b - 1) == 0 for b in ladder)
+
+
+def test_chunk_plans_cover_doc_and_warm_lens():
+    """Property: a chunk plan covers exactly the document (contiguous,
+    no overlap, no gap), every chunk length is a power of two <=
+    chunk_size, and every length appears in the warmup set {pow2 p <=
+    min(cap, chunk_size)} — the zero-recompile warmup contract."""
+    rng = np.random.default_rng(1)
+    for _ in range(300):
+        n = int(rng.integers(1, 200))
+        cs = int(2 ** rng.integers(0, 7))
+        plan = cache_lib.chunk_plan(n, cs)
+        offs, lens = zip(*plan)
+        assert sum(lens) == n
+        assert offs == tuple(np.cumsum((0,) + lens[:-1]))
+        assert all(t & (t - 1) == 0 and t <= cs for t in lens)
+        cap = int(rng.integers(n, 2 * n + 1))       # any capacity >= n
+        warm = {p for p in (2 ** k for k in range(12))
+                if p <= min(cap, cs)}
+        assert set(lens) <= warm, (n, cs, cap)
+
+
+# ---------------------------------------------------------------------------
+# Degeneration: bit-exact tokens across archs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,chunk", [("granite-3-2b", 8),
+                                        ("jamba-1.5-large-398b", None)])
+def test_deadline_without_slos_matches_srpt_tokens(arch, chunk, key):
+    """With no SLOs set, the deadline policy serves greedy tokens
+    bit-identical to the SRPT oracle — attention-only chunked and
+    hybrid-mamba monolithic admissions alike."""
+    cfg, eng = _mk_engine(key, arch)
+    reqs = [(f"r{i}", *_mk_req(cfg, n, lq, i), new)
+            for i, (n, lq, new) in enumerate(
+                [(48, 8, 6), (16, 4, 4), (32, 8, 5)])]
+    outs = {}
+    for pol in ("srpt", "deadline"):
+        sch = Scheduler(eng, config=ServeConfig(
+            n_slots=2, decode_chunk=3, prefill_chunk=chunk,
+            scheduling_policy=pol))
+        for rid, d, q, new in reqs:
+            sch.submit(Request(rid, d, q, max_new_tokens=new))
+        outs[pol] = sch.run()
+        assert sch.preemptions == 0            # nothing to preempt for
+    for rid, _, _, _ in reqs:
+        np.testing.assert_array_equal(outs["srpt"][rid].tokens,
+                                      outs["deadline"][rid].tokens)
+
+
+# ---------------------------------------------------------------------------
+# Preemption: conserves slots + pages, starvation-free
+# ---------------------------------------------------------------------------
+
+def _paged_sched(eng, **kw):
+    return Scheduler(eng, config=ServeConfig(
+        cache_layout="paged", page_size=8, scheduling_policy="deadline",
+        **kw))
+
+
+def test_preemption_conserves_slots_and_pages(key):
+    """A deadline-critical short preempts the in-flight long at a chunk
+    boundary; the long keeps its pages while parked, resumes, and both
+    serve their solo-oracle tokens; every page returns to the pool."""
+    cfg, eng = _mk_engine(key, config=ServeConfig(cache_layout="paged",
+                                                  page_size=8))
+    d1, q1 = _mk_req(cfg, 64, 8, 1)
+    d2, q2 = _mk_req(cfg, 16, 4, 2)
+    ref1 = eng.generate(d1, q1, max_new_tokens=6).tokens[0]
+    ref2 = eng.generate(d2, q2, max_new_tokens=4).tokens[0]
+    sch = _paged_sched(eng, n_slots=1, decode_chunk=2, prefill_chunk=8,
+                       num_pages=10, doc_capacity=64,
+                       tail_capacity=16)
+    sch.submit(Request("long", d1, q1, max_new_tokens=6))
+    sch.begin()
+    sch.step()                                  # long admitted, 1 chunk
+    assert len(sch.admissions) == 1
+    used_before = sch._allocator.free_pages
+    sch.submit(Request("short", d2, q2, max_new_tokens=4,
+                       ttft_slo_s=1e-6))        # already past deadline
+    sch.step()                                  # preempt long, admit short
+    assert sch.preemptions == 1
+    assert "long" in sch._parked
+    # the preemption contract: the parked long HOLDS its pages (no
+    # re-reservation on resume), only its slot was released
+    assert len(sch.admissions) + len(sch.active) <= sch.n_slots
+    assert sch._allocator.free_pages == used_before - cache_lib.pages_for(
+        16, sch.engine.page_size)
+    while sch.has_work:
+        sch.step()
+    res = sch.results
+    np.testing.assert_array_equal(res["long"].tokens, np.asarray(ref1))
+    np.testing.assert_array_equal(res["short"].tokens, np.asarray(ref2))
+    assert res["long"].preemptions == 1
+    assert res["short"].preemptions == 0
+    assert sch._allocator.free_pages == sch.num_pages   # all released
+
+
+def test_preempted_long_is_starvation_free(key):
+    """A stream of deadline-critical shorts may park the long at most
+    ``max_preemptions`` times; parked admissions resume ahead of new
+    admits, so the long always completes."""
+    cfg, eng = _mk_engine(key, config=ServeConfig(cache_layout="paged",
+                                                  page_size=8))
+    d1, q1 = _mk_req(cfg, 64, 8, 1)
+    ref1 = eng.generate(d1, q1, max_new_tokens=4).tokens[0]
+    shorts = [(f"s{i}", *_mk_req(cfg, 16, 4, 10 + i)) for i in range(4)]
+    refs = {rid: eng.generate(d, q, max_new_tokens=2).tokens[0]
+            for rid, d, q in shorts}
+    sch = _paged_sched(eng, n_slots=1, decode_chunk=2, prefill_chunk=8,
+                       num_pages=12, doc_capacity=64, tail_capacity=16)
+    sch.submit(Request("long", d1, q1, max_new_tokens=4))
+    sch.begin()
+    sch.step()
+    for rid, d, q in shorts:                   # arrive mid-prefill
+        sch.submit(Request(rid, d, q, max_new_tokens=2, ttft_slo_s=1e-6))
+        sch.step()
+    while sch.has_work:
+        sch.step()
+    res = sch.results
+    assert set(res) == {"long", "s0", "s1", "s2", "s3"}
+    assert res["long"].preemptions <= 2        # DeadlinePolicy default cap
+    np.testing.assert_array_equal(res["long"].tokens, np.asarray(ref1))
+    for rid, _, _ in shorts:
+        np.testing.assert_array_equal(res[rid].tokens,
+                                      np.asarray(refs[rid]))
+    assert sch._allocator.free_pages == sch.num_pages
+
+
+# ---------------------------------------------------------------------------
+# Batched prefill: bit-exact vs singleton admissions
+# ---------------------------------------------------------------------------
+
+def test_batched_prefill_matches_sequential(key):
+    """Batch-concat admission groups must serve the same greedy tokens
+    as singleton admissions of the same requests."""
+    cfg, eng = _mk_engine(key)
+    reqs = [(f"r{i}", *_mk_req(cfg, 13, 8, 20 + i)) for i in range(4)]
+    outs = {}
+    for batch_max in (1, 4):
+        sch = Scheduler(eng, config=ServeConfig(
+            n_slots=4, decode_chunk=3, prefill_chunk=8,
+            prefill_batch_max=batch_max))
+        for rid, d, q in reqs:
+            sch.submit(Request(rid, d, q, max_new_tokens=4))
+        outs[batch_max] = sch.run()
+    for rid, _, _ in reqs:
+        np.testing.assert_array_equal(outs[1][rid].tokens,
+                                      outs[4][rid].tokens)
+    # the grouped run really batched: a batch-4 chunk signature ran
+    assert any(kind == "chunk" and b == 4
+               for kind, b, t, cap, paged in eng.prefill_shapes)
+    assert all(outs[4][rid].prefill_bucket == cache_lib.pow2_bucket(13)
+               for rid, _, _ in reqs)
+
+
+def test_batched_prefill_groups_snap_to_pow2(key):
+    """3 batchable shorts: the group snaps down to 2, the leftover
+    admits as a singleton — tokens identical to singleton serving."""
+    cfg, eng = _mk_engine(key)
+    reqs = [(f"r{i}", *_mk_req(cfg, 16, 8, 30 + i)) for i in range(3)]
+    outs = {}
+    for batch_max in (1, 4):
+        sch = Scheduler(eng, config=ServeConfig(
+            n_slots=4, decode_chunk=3, prefill_chunk=8,
+            prefill_batch_max=batch_max))
+        for rid, d, q in reqs:
+            sch.submit(Request(rid, d, q, max_new_tokens=4))
+        outs[batch_max] = sch.run()
+    for rid, _, _ in reqs:
+        np.testing.assert_array_equal(outs[1][rid].tokens,
+                                      outs[4][rid].tokens)
+    assert any(kind == "chunk" and b == 2
+               for kind, b, t, cap, paged in eng.prefill_shapes)
+
+
+# ---------------------------------------------------------------------------
+# AOT bucket warmup: once per scheduler, zero recompiles after
+# ---------------------------------------------------------------------------
+
+def test_warmup_once_and_zero_new_shapes(key):
+    """``warm()`` runs the per-bucket warmup exactly once (not per
+    admission) and covers every prefill shape the run produces — the
+    compile-count probe that pins the zero-recompile contract."""
+    cfg, eng = _mk_engine(key, config=ServeConfig(cache_layout="paged",
+                                                  page_size=8))
+    sch = _paged_sched(eng, n_slots=2, decode_chunk=2, prefill_chunk=8,
+                       num_pages=16, aot_warmup=True)
+    # mixed lengths incl. a non-pow2 doc whose plan mixes ladder rungs
+    for i, n in enumerate([13, 16, 24]):
+        d, q = _mk_req(cfg, n, 8, 40 + i)
+        sch.submit(Request(f"r{i}", d, q, max_new_tokens=3))
+    sch.begin()                                # aot_warmup fires here
+    assert eng.prefill_warmups == 1
+    shapes_after_warm = set(eng.prefill_shapes)
+    while sch.has_work:
+        sch.step()
+    assert eng.prefill_warmups == 1            # never re-warmed
+    assert set(eng.prefill_shapes) == shapes_after_warm   # 0 recompiles
+    # a second cycle through the same scheduler stays warm too
+    d, q = _mk_req(cfg, 13, 8, 50)
+    sch.submit(Request("again", d, q, max_new_tokens=3))
+    sch.run()
+    assert eng.prefill_warmups == 1
+    assert set(eng.prefill_shapes) == shapes_after_warm
+
+
+# ---------------------------------------------------------------------------
+# Result metrics / shared schema
+# ---------------------------------------------------------------------------
+
+def test_result_slo_fields_and_metrics_schema(key):
+    cfg, eng = _mk_engine(key)
+    d, q = _mk_req(cfg, 16, 4, 3)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=1, decode_chunk=2,
+                                            prefill_chunk=8))
+    sch.submit(Request("slo", d, q, max_new_tokens=4, ttft_slo_s=60.0,
+                       tpot_slo_s=60.0))
+    sch.submit(Request("free", d, q, max_new_tokens=4))
+    results = sch.run()
+    r = results["slo"]
+    assert r.deadline_s == pytest.approx(60.0)
+    assert r.ttft_slo_met is True              # a minute is generous
+    assert r.tpot_p99_s >= 0.0 and r.preemptions == 0
+    f = results["free"]
+    assert f.deadline_s is None and f.ttft_slo_met is None
+    assert metrics_lib.slo_met(r) and metrics_lib.slo_met(f)
+    rec = metrics_lib.result_record(r)
+    assert rec["rid"] == "slo" and rec["slo_met"] is True
+    agg = metrics_lib.aggregate(results, wall_s=1.0)
+    for k in metrics_lib.GOODPUT_KEYS:
+        assert k in agg
+    assert agg["requests"] == 2
+    assert agg["slo_attainment"] == pytest.approx(1.0)
+    assert agg["goodput_per_s"] == pytest.approx(2.0)
+
+
+def test_submit_validates_slo_fields(key):
+    cfg, eng = _mk_engine(key)
+    d, q = _mk_req(cfg, 16, 4, 4)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=1))
+    with pytest.raises(ValueError, match="ttft_slo_s"):
+        sch.submit(Request("bad", d, q, max_new_tokens=2,
+                           ttft_slo_s=0.0))
+    with pytest.raises(ValueError, match="tpot_slo_s"):
+        sch.submit(Request("bad", d, q, max_new_tokens=2,
+                           tpot_slo_s=-1.0))
+    with pytest.raises(ValueError, match="arrival_s"):
+        sch.submit(Request("bad", d, q, max_new_tokens=2,
+                           arrival_s=-0.5))
+
+
+def test_scheduler_accepts_policy_object(key):
+    """A runtime policy object overrides config.scheduling_policy — the
+    pluggable seam for out-of-tree policies."""
+    cfg, eng = _mk_engine(key)
+    d, q = _mk_req(cfg, 16, 4, 5)
+    ref = eng.generate(d, q, max_new_tokens=4).tokens[0]
+
+    class CountingSrpt(SrptPolicy):
+        name = "counting"
+
+        def __init__(self):
+            self.calls = 0
+
+        def decide(self, snap):
+            self.calls += 1
+            return super().decide(snap)
+
+    pol = CountingSrpt()
+    sch = Scheduler(eng, config=ServeConfig(n_slots=1, decode_chunk=2),
+                    policy=pol)
+    assert sch.policy is pol
+    sch.submit(Request("a", d, q, max_new_tokens=4))
+    res = sch.run()
+    np.testing.assert_array_equal(res["a"].tokens, np.asarray(ref))
+    assert pol.calls > 0

@@ -3,8 +3,9 @@
 The unified serving config is the one place knobs are validated; the
 capability report is the one gate the scheduler and launcher read; the
 session factory (``Engine.start_prefill``) is the one prefill entry
-point.  These tests pin all three: validation messages, the legacy
-keyword shim (deprecation + conflict), per-configuration capability
+point.  These tests pin all three: validation messages, the graduated
+legacy-keyword errors (TypeError naming the replacement field;
+ValueError on config= conflicts), per-configuration capability
 reasons, the wave-schedule invariants of the pipelined mesh prefill,
 and monolithic-session parity with ``Engine.prefill``.
 """
@@ -81,14 +82,13 @@ def test_serve_config_replace_revalidates():
         cfg.replace(prefill_chunk=3)
 
 
-def test_resolve_config_conflict_and_deprecation():
-    # config= plus a legacy knob for the same call is ambiguous
-    with pytest.raises(ValueError, match="not both"):
+def test_resolve_config_rejects_graduated_legacy_kwargs():
+    # config= plus a legacy knob for the same call names the conflict
+    with pytest.raises(ValueError, match="config= and page_size"):
         resolve_config(ServeConfig(), {"page_size": 8}, "Engine")
-    # legacy-only keeps working, but warns toward ServeConfig
-    with pytest.warns(DeprecationWarning, match="ServeConfig"):
-        out = resolve_config(None, {"page_size": 8}, "Engine")
-    assert out.page_size == 8
+    # legacy-only is a hard TypeError naming the replacement spelling
+    with pytest.raises(TypeError, match=r"ServeConfig\(page_size=\.\.\.\)"):
+        resolve_config(None, {"page_size": 8}, "Engine")
     # nothing passed: clean defaults, no warning
     with warnings.catch_warnings():
         warnings.simplefilter("error")
@@ -100,22 +100,21 @@ def test_resolve_config_conflict_and_deprecation():
 # Engine / Scheduler adopt the config (legacy kwargs shimmed)
 # ---------------------------------------------------------------------------
 
-def test_engine_accepts_config_and_legacy_kwargs(key):
+def test_engine_accepts_config_rejects_legacy_kwargs(key):
     cfg, eng = _mk_engine(
         key, config=ServeConfig(cache_layout="paged", page_size=8))
     assert eng.paged and eng.page_size == 8
     model = model_lib.build(cfg)
     params = model.init(jax.random.fold_in(key, 1))
-    with pytest.warns(DeprecationWarning, match="ServeConfig"):
-        eng2 = Engine(cfg, params, RunCtx(strategy="full"),
-                      cache_layout="paged", page_size=8)
-    assert eng2.paged and eng2.page_size == 8
-    with pytest.raises(ValueError, match="not both"):
+    with pytest.raises(TypeError, match="cache_layout.*page_size"):
+        Engine(cfg, params, RunCtx(strategy="full"),
+               cache_layout="paged", page_size=8)
+    with pytest.raises(ValueError, match="config= and cache_layout"):
         Engine(cfg, params, RunCtx(strategy="full"),
                config=ServeConfig(), cache_layout="paged")
 
 
-def test_scheduler_accepts_config_and_legacy_kwargs(key):
+def test_scheduler_accepts_config_rejects_legacy_kwargs(key):
     cfg, eng = _mk_engine(key)
     doc, query = _mk_req(cfg, 24, 4, 0)
     ref = eng.generate(doc, query, max_new_tokens=4).tokens[0]
@@ -123,12 +122,11 @@ def test_scheduler_accepts_config_and_legacy_kwargs(key):
                                             prefill_chunk=8))
     sch.submit(Request("a", doc, query, max_new_tokens=4))
     np.testing.assert_array_equal(sch.run()["a"].tokens, np.asarray(ref))
-    # the legacy spelling serves the same tokens, with a warning
-    with pytest.warns(DeprecationWarning, match="ServeConfig"):
-        sch2 = Scheduler(eng, n_slots=2, decode_chunk=3, prefill_chunk=8)
-    sch2.submit(Request("a", doc, query, max_new_tokens=4))
-    np.testing.assert_array_equal(sch2.run()["a"].tokens, np.asarray(ref))
-    with pytest.raises(ValueError, match="not both"):
+    # the legacy spelling is gone: TypeError names the replacement field
+    with pytest.raises(TypeError,
+                       match=r"ServeConfig\(.*n_slots=\.\.\."):
+        Scheduler(eng, n_slots=2, decode_chunk=3, prefill_chunk=8)
+    with pytest.raises(ValueError, match="config= and n_slots"):
         Scheduler(eng, config=ServeConfig(), n_slots=2)
 
 

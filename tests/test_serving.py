@@ -18,6 +18,7 @@ from repro.models import model as model_lib
 from repro.models.transformer import RunCtx
 from repro.serving import cache as cache_lib
 from repro.serving.engine import Engine
+from repro.serving.config import ServeConfig
 from repro.serving.sampling import SamplingParams, sample
 from repro.serving.scheduler import Request, Scheduler
 
@@ -145,7 +146,7 @@ def test_scheduler_mixed_lengths_match_single_requests(key):
     ref1 = eng.generate(d1, q1, max_new_tokens=10).tokens[0]
     ref2 = eng.generate(d2, q2, max_new_tokens=4).tokens[0]
 
-    sch = Scheduler(eng, n_slots=2, decode_chunk=3)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=2, decode_chunk=3))
     sch.submit(Request("long", d1, q1, max_new_tokens=10))
     sch.submit(Request("short", d2, q2, max_new_tokens=4))
     res = sch.run()
@@ -172,7 +173,7 @@ def test_scheduler_admits_mid_decode_with_per_slot_stops(key):
     ref3 = eng.generate(d3, q3, max_new_tokens=9).tokens[0]
     stop1 = int(ref1[5])                     # long doc stops after 6 tokens
 
-    sch = Scheduler(eng, n_slots=2, decode_chunk=4)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=2, decode_chunk=4))
     sch.submit(Request("r1", d1, q1, max_new_tokens=12, stop_token=stop1))
     sch.submit(Request("r2", d2, q2, max_new_tokens=5))
     sch.submit(Request("r3", d3, q3, max_new_tokens=9))
@@ -197,7 +198,7 @@ def test_scheduler_hybrid_ssm_with_idle_slots(arch, key):
     doc = jnp.asarray(r.integers(0, cfg.vocab_size, (1, 32)), jnp.int32)
     query = jnp.asarray(r.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
     ref = eng.generate(doc, query, max_new_tokens=6).tokens[0]
-    sch = Scheduler(eng, n_slots=3, decode_chunk=4)   # 2 slots stay idle
+    sch = Scheduler(eng, config=ServeConfig(n_slots=3, decode_chunk=4))   # 2 slots stay idle
     sch.submit(Request("solo", doc, query, max_new_tokens=6))
     res = sch.run()
     np.testing.assert_array_equal(res["solo"].tokens, np.asarray(ref))
@@ -212,7 +213,7 @@ def test_scheduler_embedding_docs(key):
     query = jax.random.randint(jax.random.fold_in(key, 1), (1, lq), 0,
                                cfg.vocab_size)
     ref = eng.generate(doc, query, max_new_tokens=6).tokens[0]
-    sch = Scheduler(eng, n_slots=2, decode_chunk=3)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=2, decode_chunk=3))
     sch.submit(Request("batched", doc, query, max_new_tokens=6))
     sch.submit(Request("unbatched", doc[0], query[0], max_new_tokens=6))
     res = sch.run()
@@ -244,7 +245,7 @@ def test_scheduler_with_apb_prefill(key):
     d2, q2 = mk(2)
     ref1 = eng.generate(d1, q1, max_new_tokens=6).tokens[0]
     ref2 = eng.generate(d2, q2, max_new_tokens=4).tokens[0]
-    sch = Scheduler(eng, n_slots=2, decode_chunk=3)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=2, decode_chunk=3))
     sch.submit(Request("a", d1, q1, max_new_tokens=6))
     sch.submit(Request("b", d2, q2, max_new_tokens=4))
     res = sch.run()
@@ -291,10 +292,10 @@ def test_sampled_request_reproducible_regardless_of_coscheduling(key):
     reqR = lambda: Request("R", dR, qR, max_new_tokens=8)   # noqa: E731
 
     def run(reqs, prefill_chunk=None):
-        sch = Scheduler(eng, n_slots=2, decode_chunk=3, sampling=sp,
-                        rng=jax.random.PRNGKey(11),
-                        prefill_chunk=prefill_chunk,
-                        doc_capacity=64, tail_capacity=20)
+        sch = Scheduler(eng, config=ServeConfig(
+            n_slots=2, decode_chunk=3, prefill_chunk=prefill_chunk,
+            doc_capacity=64, tail_capacity=20),
+                        sampling=sp, rng=jax.random.PRNGKey(11))
         for r in reqs:
             sch.submit(r)
         return sch.run()["R"].tokens
@@ -310,9 +311,10 @@ def test_sampled_request_reproducible_regardless_of_coscheduling(key):
     np.testing.assert_array_equal(alone, reordered)
     np.testing.assert_array_equal(alone, chunked)
     # a different base seed still changes the stream
-    sch = Scheduler(eng, n_slots=2, decode_chunk=3, sampling=sp,
-                    rng=jax.random.PRNGKey(12), doc_capacity=64,
-                    tail_capacity=20)
+    sch = Scheduler(eng, config=ServeConfig(n_slots=2, decode_chunk=3,
+                                            doc_capacity=64,
+                                            tail_capacity=20),
+                    sampling=sp, rng=jax.random.PRNGKey(12))
     sch.submit(reqR())
     assert not np.array_equal(alone, sch.run()["R"].tokens)
 

@@ -16,6 +16,15 @@ Default NAMEs derive from ``benchmarks.run.TINY_MODULES`` (each module
 writes ``results/bench_<module>.json``), so adding a benchmark to the
 tiny sweep automatically puts its artifact under validation.  Reports
 through the shared tools/reporting.py conventions.
+
+``bench_serving`` gets extra scrutiny: its ``replay_srpt`` /
+``replay_deadline`` trace-replay records must carry the goodput schema
+(``GOODPUT_KEYS``, mirrored stdlib-only from
+``repro.serving.metrics.GOODPUT_KEYS`` — ``tests/test_policy.py`` pins
+the two tuples identical), and ``replay_recompiles_after_warmup`` must
+report exactly zero shapes compiled after the AOT bucket warmup — the
+compile-count probe is deterministic, so any nonzero value is a warmup
+coverage regression, not noise.
 """
 from __future__ import annotations
 
@@ -30,6 +39,37 @@ except ImportError:                          # run as a bare script
     import reporting
 
 REQUIRED_RECORD_KEYS = ("name", "us_per_call", "derived")
+
+# stdlib-only mirror of repro.serving.metrics.GOODPUT_KEYS (this script
+# must run without jax/numpy importable) — keep the tuples identical
+GOODPUT_KEYS = ("requests", "p50_ttft_s", "p99_ttft_s", "p99_tpot_s",
+                "goodput_per_s", "slo_attainment")
+REPLAY_RECORDS = ("replay_srpt", "replay_deadline")
+
+
+def check_serving_replay(path: str, records) -> list:
+    """bench_serving-specific checks: goodput schema on the replay
+    records, zero recompiles after the AOT bucket warmup."""
+    errors = []
+    by_name = {r.get("name"): r for r in records if isinstance(r, dict)}
+    for name in REPLAY_RECORDS:
+        rec = by_name.get(name)
+        if rec is None:
+            errors.append(f"{path}: missing replay record {name!r}")
+            continue
+        for key in GOODPUT_KEYS:
+            if key not in rec:
+                errors.append(f"{path}: {name} lacks goodput key {key!r}")
+    probe = by_name.get("replay_recompiles_after_warmup")
+    if probe is None:
+        errors.append(f"{path}: missing record "
+                      f"'replay_recompiles_after_warmup'")
+    elif probe.get("recompiles_after_warmup") != 0:
+        errors.append(
+            f"{path}: {probe.get('recompiles_after_warmup')} prefill "
+            f"shape(s) compiled after warmup (AOT bucket warmup must "
+            f"cover every replay shape)")
+    return errors
 
 
 def default_names() -> list:
@@ -63,6 +103,8 @@ def check_one(path: str) -> list:
                 errors.append(f"{path}: records[{i}] lacks {key!r}")
     if "benchmark" not in doc:
         errors.append(f"{path}: missing 'benchmark' field")
+    if doc.get("benchmark") == "bench_serving":
+        errors += check_serving_replay(path, records)
     return errors
 
 
